@@ -1,0 +1,57 @@
+//! Long-context session demo: fill most of the context window through the
+//! PJRT runtime, plant a fact early, and check the model can still retrieve
+//! it — while reporting the KV-cache bytes each method would hold resident.
+//! This is the paper's motivating workload (§1: long-context inference is
+//! KV-cache-bound).
+//!
+//!     cargo run --release --example longcontext_chat -- [variant]
+
+use anyhow::Result;
+use rap::kvcache::CacheShape;
+use rap::manifest::Manifest;
+use rap::model::argmax;
+use rap::runtime::{session::Session, PjrtContext, PjrtEngine};
+
+fn main() -> Result<()> {
+    let variant = std::env::args().nth(1).unwrap_or_else(|| "rap_r30".into());
+    let model = "tinyllama";
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.model(model)?;
+    let ctx = PjrtContext::cpu()?;
+    let engine = PjrtEngine::load(&ctx, &manifest, model, &variant)?;
+    let shape = CacheShape::of(&entry.config, &entry.variants[&variant].spec);
+
+    // Long prompt: planted fact + corpus filler up to most of s_max.
+    let corpus = manifest.eval_corpus()?;
+    let fact = b"the zq is k. ";
+    let target_len = engine.s_max - 48;
+    let mut prompt = fact.to_vec();
+    prompt.extend_from_slice(&corpus[..target_len - prompt.len() - 12]);
+    prompt.extend_from_slice(b" the zq is ");
+
+    println!(
+        "{model}/{variant}: context {} tokens, resident KV = {} KiB ({:.0}% of baseline)",
+        prompt.len(),
+        prompt.len() * shape.bytes_per_token() / 1024,
+        100.0 * entry.variants[&variant].spec.kv_retained(&entry.config),
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut session = Session::new(&ctx, &engine)?;
+    session.prefill(&prompt)?;
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let answer = argmax(&session.last_logits) as u8;
+    println!(
+        "prefill {prefill_s:.2}s | needle query \"the zq is\" -> {:?} (planted: 'k')",
+        answer as char
+    );
+
+    let t0 = std::time::Instant::now();
+    let cont = session.generate(24)?;
+    println!(
+        "continuation at full context ({:.2} ms/token): {:?}",
+        t0.elapsed().as_secs_f64() * 1e3 / cont.len().max(1) as f64,
+        String::from_utf8_lossy(&cont)
+    );
+    Ok(())
+}

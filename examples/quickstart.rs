@@ -1,0 +1,52 @@
+//! Quickstart: load the RAP-compressed tiny model through the PJRT runtime,
+//! prefill a prompt, generate a continuation, and compare the KV-cache
+//! footprint against the uncompressed baseline.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (Run `make artifacts` first.)
+
+use anyhow::Result;
+use rap::kvcache::CacheShape;
+use rap::manifest::Manifest;
+use rap::runtime::{session::Session, PjrtContext, PjrtEngine};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load_default()?;
+    let ctx = PjrtContext::cpu()?;
+    println!("PJRT platform: {}", ctx.client.platform_name());
+
+    let model = "tinyllama";
+    for variant in ["baseline_r00", "rap_r30"] {
+        let engine = PjrtEngine::load(&ctx, &manifest, model, variant)?;
+        println!(
+            "\n== {model}/{variant}: graphs {:?}, k_rank {:?}, v_rank {:?}",
+            engine.graph_names(),
+            engine.k_rank,
+            engine.v_rank
+        );
+
+        let entry = manifest.model(model)?;
+        let spec = &entry.variants[variant].spec;
+        let shape = CacheShape::of(&entry.config, spec);
+        println!(
+            "KV cache: {} bytes/token ({}% of baseline)",
+            shape.bytes_per_token(),
+            (100.0 * spec.kv_retained(&entry.config)).round()
+        );
+
+        let prompt = b"the quick brown fox ";
+        let mut session = Session::new(&ctx, &engine)?;
+        let t0 = std::time::Instant::now();
+        session.prefill(prompt)?;
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = std::time::Instant::now();
+        let gen = session.generate(32)?;
+        let decode_ms = t0.elapsed().as_secs_f64() * 1e3 / 32.0;
+        println!(
+            "prefill {prefill_ms:.1} ms, decode {decode_ms:.2} ms/token\ngenerated: {:?}",
+            String::from_utf8_lossy(&gen)
+        );
+    }
+    Ok(())
+}

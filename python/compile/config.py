@@ -1,0 +1,220 @@
+"""Model and pipeline configuration for the RAP reproduction.
+
+Two tiny decoder-only models stand in for LLaMA-3-8B and Mistral-7B (see
+DESIGN.md §Substitutions): ``tinyllama`` (GQA 8q/4kv, "half" RoPE pairing,
+LLaMA-style) and ``tinymistral`` (GQA 8q/2kv, interleaved pairing,
+different width/MLP ratio).  All of RAP's structural machinery — RoPE-pair
+grouping, Fisher scoring, adaptive budgets, B-absorption — is
+dimension-generic, so a trained tiny model exercises every code path the
+paper's 7–8B models do while remaining tractable on one CPU core.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+PAIRING_HALF = "half"  # (j, j + D/2)  — LLaMA/HF style
+PAIRING_INTERLEAVED = "interleaved"  # (2j, 2j+1) — original RoFormer style
+
+METHODS = ("baseline", "svd", "palu", "rap")
+
+# Compression ratios evaluated in the paper (rho = 1 - r).
+RATIOS = (0.10, 0.20, 0.30, 0.40, 0.50)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters of a decoder-only transformer."""
+
+    name: str
+    vocab: int = 256  # byte-level
+    d_model: int = 192
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 24
+    mlp_hidden: int = 512
+    max_seq: int = 640
+    rope_theta: float = 10000.0
+    pairing: str = PAIRING_HALF
+    norm_eps: float = 1e-5
+
+    @property
+    def n_pairs(self) -> int:
+        assert self.head_dim % 2 == 0, "RoPE requires an even head dim"
+        return self.head_dim // 2
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group_size(self) -> int:
+        """Query heads per KV head (GQA group size)."""
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        d, m = self.d_model, self.mlp_hidden
+        per_layer = (
+            d * self.q_dim  # wq
+            + 2 * d * self.kv_dim  # wk, wv
+            + self.q_dim * d  # wo
+            + 3 * d * m  # gate, up, down
+            + 2 * d  # norms
+        )
+        return self.vocab * d + self.n_layers * per_layer + d
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Pre-training configuration for the tiny models."""
+
+    steps: int = 400
+    batch: int = 8
+    seq: int = 192
+    lr: float = 3e-3
+    warmup: int = 40
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    seed: int = 42
+
+
+@dataclass(frozen=True)
+class KDConfig:
+    """Knowledge-distillation recovery (paper §4.4, Table 15)."""
+
+    steps: int = 60
+    batch: int = 8
+    seq: int = 192
+    lr: float = 1e-4
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    alpha_ce: float = 0.4
+    alpha_kd: float = 0.6
+    temperature: float = 2.0
+    seed: int = 42
+
+
+@dataclass(frozen=True)
+class FisherConfig:
+    """Fisher-information calibration (paper §6.1: N=32 windows of L=2048;
+    scaled to the tiny corpus: 32 windows of 192 tokens)."""
+
+    windows: int = 32
+    seq: int = 192
+    batch: int = 8
+    seed: int = 42
+
+
+TINYLLAMA = ModelConfig(
+    name="tinyllama",
+    d_model=192,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=24,
+    mlp_hidden=512,
+    pairing=PAIRING_HALF,
+)
+
+TINYMISTRAL = ModelConfig(
+    name="tinymistral",
+    d_model=160,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=20,
+    mlp_hidden=448,
+    pairing=PAIRING_INTERLEAVED,
+)
+
+MODELS: Dict[str, ModelConfig] = {m.name: m for m in (TINYLLAMA, TINYMISTRAL)}
+
+
+def rope_pairs(cfg: ModelConfig) -> List[tuple]:
+    """Column-index pairs (j, j') rotated together, per pairing strategy."""
+    p = cfg.n_pairs
+    if cfg.pairing == PAIRING_HALF:
+        return [(j, j + p) for j in range(p)]
+    if cfg.pairing == PAIRING_INTERLEAVED:
+        return [(2 * j, 2 * j + 1) for j in range(p)]
+    raise ValueError(f"unknown pairing strategy {cfg.pairing!r}")
+
+
+@dataclass
+class VariantSpec:
+    """A compressed model variant: method + per-layer latent widths.
+
+    ``k_rank[l]``: latent K width per kv head at layer l (2m for RAP — the
+    retained pairs are stored pre-expanded — or the SVD rank for
+    SVD/PaLU).  ``v_rank[l]``: latent V width per kv head.
+    ``k_pairs[l]``: for RAP, retained pair indices per kv head,
+    shape [n_kv_heads, m]; empty for other methods.
+    """
+
+    method: str
+    ratio: float
+    model: str
+    tag: str = ""  # distinguishes ablation variants, e.g. "MU", "noKD"
+    k_rank: List[int] = field(default_factory=list)
+    v_rank: List[int] = field(default_factory=list)
+    k_pairs: List[List[List[int]]] = field(default_factory=list)
+
+    @property
+    def key(self) -> str:
+        base = f"{self.method}_r{int(round(self.ratio * 100)):02d}"
+        return f"{base}_{self.tag}" if self.tag else base
+
+    def to_json(self) -> Dict:
+        return {
+            "method": self.method,
+            "ratio": self.ratio,
+            "model": self.model,
+            "tag": self.tag,
+            "key": self.key,
+            "k_rank": self.k_rank,
+            "v_rank": self.v_rank,
+            "k_pairs": self.k_pairs,
+        }
+
+    @staticmethod
+    def from_json(d: Dict) -> "VariantSpec":
+        return VariantSpec(
+            method=d["method"],
+            ratio=d["ratio"],
+            model=d["model"],
+            tag=d.get("tag", ""),
+            k_rank=d["k_rank"],
+            v_rank=d["v_rank"],
+            k_pairs=d.get("k_pairs", []),
+        )
+
+
+def baseline_spec(cfg: ModelConfig) -> VariantSpec:
+    return VariantSpec(
+        method="baseline",
+        ratio=0.0,
+        model=cfg.name,
+        k_rank=[cfg.head_dim] * cfg.n_layers,
+        v_rank=[cfg.head_dim] * cfg.n_layers,
+        k_pairs=[
+            [list(range(cfg.n_pairs)) for _ in range(cfg.n_kv_heads)]
+            for _ in range(cfg.n_layers)
+        ],
+    )
+
+
+def dump_json(path, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)

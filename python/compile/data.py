@@ -1,0 +1,121 @@
+"""Synthetic Markov-Zipf byte corpus — the WikiText-2 stand-in.
+
+The paper calibrates Fisher scores and runs KD on a few thousand WikiText-2
+tokens and reports WikiText-2 perplexity.  We have no network access, so we
+generate a *structured* corpus with the statistics that make those
+measurements meaningful:
+
+- a Zipf-distributed vocabulary of pseudo-words (so frequent vs. rare-token
+  behaviour diverges, which the probe tasks measure),
+- a first-order Markov chain over words (so context actually lowers PPL),
+- sentence and paragraph structure with punctuation,
+- named "entities" that repeat far apart (long-range recall signal for the
+  LongBench-analog tasks).
+
+Byte-level tokenisation (vocab 256) keeps the tokenizer trivial and
+identical between python and rust.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+CORPUS_SEED = 42
+N_WORDS = 800
+N_ENTITIES = 24
+ALPHA = 1.2  # Zipf exponent
+
+
+def _make_words(rng: np.random.Generator, n: int) -> list:
+    letters = "abcdefghijklmnopqrstuvwxyz"
+    words = set()
+    while len(words) < n:
+        ln = int(rng.integers(2, 9))
+        words.add("".join(letters[i] for i in rng.integers(0, 26, ln)))
+    return sorted(words)
+
+
+def _make_entities(rng: np.random.Generator, n: int) -> list:
+    consonants = "bcdfghjklmnprstvwz"
+    vowels = "aeiou"
+    out = []
+    for _ in range(n):
+        syll = int(rng.integers(2, 4))
+        name = ""
+        for _ in range(syll):
+            name += consonants[rng.integers(0, len(consonants))]
+            name += vowels[rng.integers(0, len(vowels))]
+        out.append(name.capitalize())
+    return out
+
+
+def generate_corpus(n_bytes: int = 1 << 21, seed: int = CORPUS_SEED) -> bytes:
+    """Deterministically generate ``n_bytes`` of structured text."""
+    rng = np.random.default_rng(seed)
+    words = _make_words(rng, N_WORDS)
+    entities = _make_entities(rng, N_ENTITIES)
+
+    # Zipf unigram distribution over words.
+    ranks = np.arange(1, N_WORDS + 1, dtype=np.float64)
+    unigram = ranks ** (-ALPHA)
+    unigram /= unigram.sum()
+
+    # Sparse first-order Markov chain: each word prefers ~12 successors.
+    n_succ = 12
+    succ = rng.integers(0, N_WORDS, size=(N_WORDS, n_succ))
+    succ_w = rng.dirichlet(np.ones(n_succ) * 0.6, size=N_WORDS)
+
+    out = bytearray()
+    w = int(rng.choice(N_WORDS, p=unigram))
+    sent_len = 0
+    para_len = 0
+    entity = entities[int(rng.integers(0, N_ENTITIES))]
+    while len(out) < n_bytes:
+        # 4% of tokens are the current paragraph's entity (long-range repeat).
+        if rng.random() < 0.04:
+            token = entity
+        else:
+            if rng.random() < 0.75:
+                w = int(succ[w, rng.choice(n_succ, p=succ_w[w])])
+            else:
+                w = int(rng.choice(N_WORDS, p=unigram))
+            token = words[w]
+        out += token.encode()
+        sent_len += 1
+        if sent_len >= int(rng.integers(6, 16)):
+            out += b". " if rng.random() < 0.8 else b"? "
+            sent_len = 0
+            para_len += 1
+            if para_len >= int(rng.integers(4, 9)):
+                out += b"\n\n"
+                para_len = 0
+                entity = entities[int(rng.integers(0, N_ENTITIES))]
+        else:
+            out += b" "
+    return bytes(out[:n_bytes])
+
+
+def train_eval_split(corpus: bytes, eval_frac: float = 0.1):
+    cut = int(len(corpus) * (1.0 - eval_frac))
+    return corpus[:cut], corpus[cut:]
+
+
+def batches(data: bytes, batch: int, seq: int, steps: int, seed: int):
+    """Yield (inputs, targets) uint8 arrays of shape [batch, seq]."""
+    arr = np.frombuffer(data, dtype=np.uint8)
+    rng = np.random.default_rng(seed)
+    hi = len(arr) - seq - 1
+    for _ in range(steps):
+        idx = rng.integers(0, hi, size=batch)
+        x = np.stack([arr[i : i + seq] for i in idx])
+        y = np.stack([arr[i + 1 : i + seq + 1] for i in idx])
+        yield x.astype(np.int32), y.astype(np.int32)
+
+
+def eval_windows(data: bytes, seq: int, max_windows: int = 64):
+    """Contiguous non-overlapping eval windows for PPL."""
+    arr = np.frombuffer(data, dtype=np.uint8)
+    n = min(max_windows, (len(arr) - 1) // seq)
+    xs = np.stack([arr[i * seq : i * seq + seq] for i in range(n)])
+    ys = np.stack([arr[i * seq + 1 : i * seq + seq + 1] for i in range(n)])
+    return xs.astype(np.int32), ys.astype(np.int32)

@@ -1,0 +1,155 @@
+"""Knowledge-distillation recovery with LoRA (paper §4.4, Eq. 11–13).
+
+The pruned student's attention weights are frozen; low-rank adapters are
+trained on a combined CE + KL loss against the unpruned teacher
+(alpha_CE=0.4, alpha_KD=0.6, T=2.0 — Table 15), then merged back into the
+base weights so deployment carries zero adapter overhead (Alg. 1 line 11).
+
+Adapters attach to the method's actual attention matrices: for RAP that is
+the *absorbed* wq_t / a_k / a_v / wo_t, for PaLU wq / a_k / a_v / wo_t —
+i.e. KD happens in the compressed geometry, exactly as a practitioner would
+run it.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import KDConfig, ModelConfig, VariantSpec, baseline_spec
+from .model import cross_entropy, forward_full
+from .train import adamw_init, adamw_update, clip_by_global_norm
+
+# Which per-layer matrices receive adapters, by method.
+LORA_TARGETS = {
+    "rap": ["wq_t", "a_k", "a_v", "wo_t"],
+    "palu": ["wq", "a_k", "a_v", "wo_t"],
+    "svd": ["wq", "a_k", "a_v", "wo"],
+    "baseline": ["wq", "wk", "wv", "wo"],
+}
+
+
+def lora_init(
+    cfg: ModelConfig, spec: VariantSpec, weights: Dict, kcfg: KDConfig
+) -> List[Dict]:
+    """Per-layer {name: (down [din,r], up [r,dout])} adapters."""
+    key = jax.random.PRNGKey(kcfg.seed)
+    targets = LORA_TARGETS[spec.method]
+    adapters = []
+    for lw in weights["layers"]:
+        layer_ad = {}
+        for name in targets:
+            w = lw[name]
+            if w.ndim != 2:
+                continue
+            din, dout = w.shape
+            key, sub = jax.random.split(key)
+            down = (jax.random.normal(sub, (din, kcfg.lora_rank)) / np.sqrt(din)).astype(jnp.float32)
+            up = jnp.zeros((kcfg.lora_rank, dout), jnp.float32)
+            layer_ad[name] = {"down": down, "up": up}
+        adapters.append(layer_ad)
+    return adapters
+
+
+def merge_lora(
+    weights: Dict, adapters: List[Dict], scale: float
+) -> Dict:
+    """W' = W + scale * down @ up (Eq. 11), returning merged weights."""
+    layers = []
+    for lw, ad in zip(weights["layers"], adapters):
+        new = dict(lw)
+        for name, a in ad.items():
+            new[name] = lw[name] + scale * (a["down"] @ a["up"])
+        layers.append(new)
+    return {**weights, "layers": layers}
+
+
+def lora_param_fraction(adapters: List[Dict], weights: Dict) -> float:
+    n_ad = sum(
+        int(a["down"].size + a["up"].size)
+        for layer in adapters
+        for a in layer.values()
+    )
+    n_w = sum(int(np.asarray(x).size) for x in jax.tree_util.tree_leaves(weights))
+    return n_ad / max(n_w, 1)
+
+
+def kd_loss(
+    cfg: ModelConfig,
+    spec: VariantSpec,
+    kcfg: KDConfig,
+    student_logits: jnp.ndarray,
+    teacher_logits: jnp.ndarray,
+    targets: jnp.ndarray,
+) -> jnp.ndarray:
+    """alpha_CE * CE(student, y) + alpha_KD * T^2 * KL(teacher || student)."""
+    ce = cross_entropy(student_logits, targets)
+    t = kcfg.temperature
+    p_t = jax.nn.softmax(teacher_logits / t, axis=-1)
+    logp_s = jax.nn.log_softmax(student_logits / t, axis=-1)
+    logp_t = jax.nn.log_softmax(teacher_logits / t, axis=-1)
+    kl = jnp.sum(p_t * (logp_t - logp_s), axis=-1).mean() * (t * t)
+    return kcfg.alpha_ce * ce + kcfg.alpha_kd * kl
+
+
+def distill(
+    cfg: ModelConfig,
+    spec: VariantSpec,
+    student: Dict,
+    teacher: Dict,
+    kcfg: KDConfig,
+    batch_iter: Iterable[Tuple[np.ndarray, np.ndarray]],
+    eval_fn=None,
+    eval_every: int = 10,
+) -> Tuple[Dict, List[Dict]]:
+    """Run KD; returns (merged student weights, curve log).
+
+    ``eval_fn(weights) -> ppl`` is called every ``eval_every`` steps to
+    record the Fig. 15 recovery curve.
+    """
+    base_spec = baseline_spec(cfg)
+    scale = kcfg.lora_alpha / kcfg.lora_rank
+    adapters = lora_init(cfg, spec, student, kcfg)
+
+    @jax.jit
+    def teacher_fwd(x):
+        return forward_full(cfg, base_spec, teacher, x)
+
+    @jax.jit
+    def step_fn(ad, opt, x, y, t_logits):
+        def lf(ad_):
+            merged = merge_lora(student, ad_, scale)
+            s_logits = forward_full(cfg, spec, merged, x)
+            return kd_loss(cfg, spec, kcfg, s_logits, t_logits, y)
+
+        loss, grads = jax.value_and_grad(lf)(ad)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        ad, opt = adamw_update(ad, grads, opt, kcfg.lr, 0.0)
+        return ad, opt, loss
+
+    opt = adamw_init(adapters)
+    log: List[Dict] = []
+    t0 = time.time()
+    for step, (x, y) in enumerate(batch_iter):
+        xj, yj = jnp.asarray(x), jnp.asarray(y)
+        t_logits = teacher_fwd(xj)
+        adapters, opt, loss = step_fn(adapters, opt, xj, yj, t_logits)
+        if step % eval_every == 0 or step == kcfg.steps - 1:
+            entry = {"step": step, "loss": float(loss), "sec": time.time() - t0}
+            if eval_fn is not None:
+                entry["ppl"] = float(eval_fn(merge_lora(student, adapters, scale)))
+            log.append(entry)
+            print(
+                f"[kd {cfg.name}/{spec.key}] step {step:3d} "
+                f"loss {float(loss):.4f}"
+                + (f" ppl {entry['ppl']:.3f}" if "ppl" in entry else ""),
+                flush=True,
+            )
+    merged = merge_lora(student, adapters, scale)
+    merged_frac = lora_param_fraction(adapters, student)
+    log.append({"lora_param_fraction": merged_frac})
+    return merged, log

@@ -1,0 +1,14 @@
+"""L1 — Pallas kernels for RAP's compute hot-spots.
+
+``rope_pallas``: contiguous-baseline and index-aware (non-contiguous) RoPE.
+``attn_pallas``: fused latent-KV decode attention.
+``ref``: pure-jnp oracles used by pytest and by the L2 training path.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU performance is estimated from VMEM
+footprint + BlockSpec structure in DESIGN.md.
+"""
+
+from . import ref  # noqa: F401
+from .rope_pallas import rope_full_pallas, rope_latent_pallas  # noqa: F401
+from .attn_pallas import attn_decode_pallas  # noqa: F401

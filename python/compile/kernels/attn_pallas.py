@@ -1,0 +1,78 @@
+"""Fused latent-KV decode attention Pallas kernel (L1).
+
+One decode step over a (possibly RAP/SVD/PaLU-compressed) latent KV cache:
+for each query head, score against its GQA group's latent K cache, softmax
+with a position mask, and contract with the latent V cache.  The latent
+widths kr/vr are the per-layer values the pruning plan produced — the kernel
+is width-generic, which is exactly what makes RAP "drop-in" (§4.5): the
+computation graph is unchanged, only dimensions shrink.
+
+TPU mapping: grid over (batch, q-head); each step keeps the [Smax, kr] K
+block and [Smax, vr] V block of the head's KV group in VMEM (Smax=640,
+kr,vr<=64 -> <=320 KiB), computes the masked softmax on the VPU and the two
+contractions on the MXU.  The S axis could be tiled with an online-softmax
+accumulator for longer contexts; at our Smax a single block is optimal
+(fewer HBM round-trips).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(scale, pos_ref, q_ref, k_ref, v_ref, o_ref):
+    """Block shapes: q [1,1,kr], k [1,1,Smax,kr], v [1,1,Smax,vr], pos [1]
+    (this batch element's position) -> o [1,1,vr]."""
+    smax = k_ref.shape[-2]
+    q = q_ref[0, 0]  # [kr]
+    k = k_ref[0, 0]  # [Smax, kr]
+    v = v_ref[0, 0]  # [Smax, vr]
+    pos = pos_ref[0]
+    s = jnp.dot(k, q) * scale  # [Smax]
+    mask = jax.lax.iota(jnp.int32, smax) <= pos
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s)
+    w = jnp.exp(s - m)
+    w = w / jnp.sum(w)
+    o_ref[0, 0] = jnp.dot(w, v)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def attn_decode_pallas(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    scale: float,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-step decode attention.
+
+    q: [B, H, kr]; k_cache: [B, Hkv, Smax, kr]; v_cache: [B, Hkv, Smax, vr];
+    pos: scalar int32 or [B] int32 (per-sequence positions — continuous
+    batching mixes sequences at different offsets).  Returns [B, H, vr].
+    Query head h attends to KV head h // (H / Hkv).
+    """
+    bsz, h, kr = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    vr = v_cache.shape[3]
+    group = h // hkv
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (bsz,))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale),
+        grid=(bsz, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i: (b,)),
+            pl.BlockSpec((1, 1, kr), lambda b, i: (b, i, 0)),
+            # K/V blocks of the head's GQA group stay VMEM-resident.
+            pl.BlockSpec((1, 1, smax, kr), lambda b, i: (b, i // group, 0, 0)),
+            pl.BlockSpec((1, 1, smax, vr), lambda b, i: (b, i // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, vr), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, vr), q.dtype),
+        interpret=interpret,
+    )(pos_arr, q, k_cache, v_cache)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package is validated against these references in
+``python/tests`` (including hypothesis sweeps over shapes).  The rust engine
+(`rust/src/rope`, `rust/src/model`) implements the same math and is
+cross-checked against PJRT executions of these graphs.
+
+Layout conventions
+------------------
+*Full* (uncompressed) K/Q tensors use the model's native pairing strategy
+("half": pair (j, j+D/2); "interleaved": pair (2j, 2j+1)).
+
+*Latent* (RAP-pruned) tensors use the canonical **half layout**: a width-2m
+row is ``[a_0..a_{m-1}, b_0..b_{m-1}]`` where (a_i, b_i) is the i-th retained
+RoPE pair, ordered by ascending original pair index.  The per-head angular
+frequencies of exactly the retained pairs are precomputed into a small
+``theta_sel [H, m]`` table — the TPU adaptation of the paper's
+non-contiguous Triton kernel (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def thetas(n_pairs: int, head_dim: int, base: float) -> jnp.ndarray:
+    """Angular frequency per RoPE pair j: base^(-2j/D)."""
+    j = jnp.arange(n_pairs, dtype=jnp.float32)
+    return base ** (-2.0 * j / head_dim)
+
+
+def rope_full_ref(x: jnp.ndarray, pos: jnp.ndarray, base: float, pairing: str) -> jnp.ndarray:
+    """Standard RoPE on a full-dimension tensor.
+
+    x: [..., S, D] with D even; pos: [S] int32 positions.
+    """
+    d = x.shape[-1]
+    p = d // 2
+    th = thetas(p, d, base)
+    ang = pos.astype(jnp.float32)[:, None] * th[None, :]  # [S, p]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if pairing == "half":
+        a, b = x[..., :p], x[..., p:]
+        return jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+    if pairing == "interleaved":
+        a, b = x[..., 0::2], x[..., 1::2]
+        ra, rb = a * cos - b * sin, a * sin + b * cos
+        out = jnp.stack([ra, rb], axis=-1)
+        return out.reshape(x.shape)
+    raise ValueError(pairing)
+
+
+def rope_latent_ref(x: jnp.ndarray, pos: jnp.ndarray, theta_sel: jnp.ndarray) -> jnp.ndarray:
+    """Index-aware RoPE on a latent tensor (canonical half layout).
+
+    x: [B, H, S, 2m]; pos: [S]; theta_sel: [H, m] — per-head frequencies of
+    the retained pairs (original indices baked in at plan time).
+    """
+    m = theta_sel.shape[-1]
+    ang = pos.astype(jnp.float32)[None, :, None] * theta_sel[:, None, :]  # [H, S, m]
+    cos, sin = jnp.cos(ang)[None], jnp.sin(ang)[None]  # [1, H, S, m]
+    a, b = x[..., :m], x[..., m:]
+    return jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+
+
+def rope_gather_ref(
+    x: jnp.ndarray,
+    pos: jnp.ndarray,
+    base: float,
+    head_dim: int,
+    pair_idx: jnp.ndarray,
+) -> jnp.ndarray:
+    """The "PyTorch" variant the paper criticises (§4.5): materialise the full
+    cos/sin tables, then gather per-head retained columns.  Numerically equal
+    to ``rope_latent_ref`` when ``theta_sel = thetas(...)[pair_idx]``; only the
+    memory behaviour differs.
+
+    x: [B, H, S, 2m]; pair_idx: [H, m] int32 original pair indices.
+    """
+    p = head_dim // 2
+    th = thetas(p, head_dim, base)  # [p]
+    ang = pos.astype(jnp.float32)[:, None] * th[None, :]  # [S, p]
+    cos_full, sin_full = jnp.cos(ang), jnp.sin(ang)  # [S, p]
+    # Materialising gather: one [H, S, m] buffer per table.
+    cos = jnp.take(cos_full, pair_idx, axis=1).transpose(1, 0, 2)  # [H, S, m]
+    sin = jnp.take(sin_full, pair_idx, axis=1).transpose(1, 0, 2)
+    m = pair_idx.shape[-1]
+    a, b = x[..., :m], x[..., m:]
+    return jnp.concatenate(
+        [a * cos[None] - b * sin[None], a * sin[None] + b * cos[None]], axis=-1
+    )
+
+
+def attn_decode_ref(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    scale: float,
+) -> jnp.ndarray:
+    """Single-step decode attention over a (latent) KV cache.
+
+    q: [B, H, kr]; k_cache: [B, Hkv, Smax, kr]; v_cache: [B, Hkv, Smax, vr];
+    pos: scalar int32 or [B] int32 — the index of each sequence's current
+    token; entries at s > pos are masked out.  Returns [B, H, vr].
+    """
+    b, h, kr = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    kx = jnp.repeat(k_cache, group, axis=1)  # [B, H, Smax, kr]
+    vx = jnp.repeat(v_cache, group, axis=1)
+    s = jnp.einsum("bhk,bhsk->bhs", q, kx) * scale
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    mask = jnp.arange(smax)[None, None, :] <= posb[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    w = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsv->bhv", w, vx)

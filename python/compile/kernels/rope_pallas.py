@@ -1,0 +1,149 @@
+"""Pallas RoPE kernels (L1) — the paper's §4.5 non-contiguous kernel, TPU-style.
+
+The paper's Triton kernel avoids PyTorch's materialised gather of per-head
+cos/sin subsets by indexing inside the kernel.  On TPU the equivalent design
+(DESIGN.md §Hardware-Adaptation) precomputes, once per pruning plan, a tiny
+``theta_sel [H, m]`` table containing the angular frequencies of exactly the
+retained pairs of each head.  The kernel then
+
+  1. streams one (batch, head) activation block [S_tile, 2m] HBM->VMEM,
+  2. keeps the [m] theta row VMEM-resident across the whole S loop,
+  3. computes cos/sin *in-kernel* (VPU work) and applies the 2x2 rotations
+     with two fused multiply-adds per pair,
+  4. streams the rotated block back.
+
+No full-D cos/sin table ever exists, and no gather is performed: the
+"non-contiguity" was resolved at plan time.  This is why RAP's kernel cost is
+*below* the contiguous baseline (it touches 2m <= D lanes), mirroring the
+paper's Figure 16 / Table 11 result.
+
+Everything here runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); block shapes are still chosen as they would be on real TPU so
+the VMEM estimates in DESIGN.md are faithful.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# S tile used when the sequence axis is long enough to be worth tiling.
+# [S_TILE, 2m] fp32 at m=64 is 64 KiB — comfortably VMEM-resident together
+# with the [m] theta row and double-buffering headroom.
+S_TILE = 128
+
+
+def _latent_kernel(pos_ref, x_ref, theta_ref, o_ref):
+    """Rotate one (b, h, s-tile) latent block.
+
+    Block shapes: x_ref [1, 1, S_t, 2m], theta_ref [1, m], pos_ref [S_t].
+    """
+    m = theta_ref.shape[-1]
+    pos = pos_ref[...].astype(jnp.float32)  # [S_t]
+    theta = theta_ref[0]  # [m], VMEM-resident per-head retained freqs
+    ang = pos[:, None] * theta[None, :]  # [S_t, m]
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x = x_ref[0, 0]  # [S_t, 2m]
+    a = x[:, :m]
+    b = x[:, m:]
+    o_ref[0, 0, :, :m] = a * cos - b * sin
+    o_ref[0, 0, :, m:] = a * sin + b * cos
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rope_latent_pallas(
+    x: jnp.ndarray,
+    pos: jnp.ndarray,
+    theta_sel: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Index-aware RoPE on a latent tensor.
+
+    x: [B, H, S, 2m] canonical half layout; pos: [S] int32;
+    theta_sel: [H, m].  Returns the rotated tensor, same shape.
+    """
+    bsz, h, s, two_m = x.shape
+    m = two_m // 2
+    s_t = S_TILE if s % S_TILE == 0 and s > S_TILE else s
+    grid = (bsz, h, s // s_t)
+    return pl.pallas_call(
+        _latent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_t,), lambda b, i, j: (j,)),  # pos tile
+            pl.BlockSpec((1, 1, s_t, two_m), lambda b, i, j: (b, i, j, 0)),
+            pl.BlockSpec((1, m), lambda b, i, j: (i, 0)),  # per-head thetas
+        ],
+        out_specs=pl.BlockSpec((1, 1, s_t, two_m), lambda b, i, j: (b, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(pos, x, theta_sel)
+
+
+def _full_kernel_half(pos_ref, x_ref, theta_ref, o_ref):
+    """Contiguous baseline, half pairing.
+
+    Block shapes: x_ref [1, 1, S_t, D], theta_ref [D/2], pos_ref [S_t].
+    """
+    p = theta_ref.shape[0]
+    pos = pos_ref[...].astype(jnp.float32)
+    ang = pos[:, None] * theta_ref[...][None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x = x_ref[0, 0]
+    a = x[:, :p]
+    b = x[:, p:]
+    o_ref[0, 0, :, :p] = a * cos - b * sin
+    o_ref[0, 0, :, p:] = a * sin + b * cos
+
+
+def _full_kernel_interleaved(pos_ref, x_ref, theta_ref, o_ref):
+    """Contiguous baseline, interleaved pairing: pre-permute to half layout
+    in VMEM (free), rotate, permute back."""
+    pos = pos_ref[...].astype(jnp.float32)
+    ang = pos[:, None] * theta_ref[...][None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x = x_ref[0, 0]
+    a = x[:, 0::2]
+    b = x[:, 1::2]
+    ra = a * cos - b * sin
+    rb = a * sin + b * cos
+    o_ref[0, 0] = jnp.stack([ra, rb], axis=-1).reshape(x.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("base", "pairing", "interpret")
+)
+def rope_full_pallas(
+    x: jnp.ndarray,
+    pos: jnp.ndarray,
+    base: float,
+    pairing: str = "half",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Contiguous-baseline RoPE as a Pallas kernel.
+
+    x: [B, H, S, D]; pos: [S].  The theta table [D/2] is shared by all heads
+    (classic broadcastable case the paper's §4.5 calls "standard").
+    """
+    bsz, h, s, d = x.shape
+    p = d // 2
+    theta = (base ** (-2.0 * jnp.arange(p, dtype=jnp.float32) / d)).reshape(p)
+    kern = _full_kernel_half if pairing == "half" else _full_kernel_interleaved
+    s_t = S_TILE if s % S_TILE == 0 and s > S_TILE else s
+    grid = (bsz, h, s // s_t)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_t,), lambda b, i, j: (j,)),
+            pl.BlockSpec((1, 1, s_t, d), lambda b, i, j: (b, i, j, 0)),
+            pl.BlockSpec((p,), lambda b, i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s_t, d), lambda b, i, j: (b, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(pos, x, theta)

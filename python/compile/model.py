@@ -1,0 +1,427 @@
+"""L2 — JAX decoder-only transformer with compressed-attention variants.
+
+One forward implementation serves every method the paper evaluates:
+
+- ``baseline``  : full K/V, standard RoPE, full cache.
+- ``svd``       : per-head truncated SVD of W_k and W_v (Eq. 1).  The cache
+                  stores pre-RoPE latents; **both** K and V are reconstructed
+                  to full dimension at attention time (the Figure-1 overhead).
+- ``palu``      : whitened SVD; B_v absorbed into W_o, so only K is
+                  reconstructed.
+- ``rap``       : RoPE-aligned pair pruning of W_k with B_k absorbed into W_q
+                  (Eq. 9–10) + whitened-SVD V with B_v absorbed into W_o
+                  (the paper's default hybrid pipeline, §4.5).  Nothing is
+                  reconstructed: attention runs directly in latent widths.
+
+The per-layer latent widths come from a :class:`compile.config.VariantSpec`;
+the corresponding weights are produced by ``compile.rap``.  The Pallas
+kernels are used on the AOT/serving path (``use_pallas=True``); training and
+Fisher estimation use the pure-jnp path (identical numerics, asserted by
+``python/tests``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, VariantSpec
+from .kernels import ref
+from .kernels.attn_pallas import attn_decode_pallas
+from .kernels.rope_pallas import rope_full_pallas, rope_latent_pallas
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Weight initialisation (baseline model)
+# --------------------------------------------------------------------------
+
+
+def init_weights(cfg: ModelConfig, seed: int = 42) -> Dict:
+    """He-style init for the baseline model.  Embedding is tied to the
+    output head (standard for small LMs; keeps the parameter budget in the
+    attention/MLP stack where compression acts)."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, cfg.n_layers * 7 + 1)
+    d, q, kv, m = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.mlp_hidden
+
+    def dense(k, fan_in, shape):
+        return (jax.random.normal(k, shape) / np.sqrt(fan_in)).astype(jnp.float32)
+
+    layers = []
+    ki = iter(keys[:-1])
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                "attn_norm": jnp.ones((d,), jnp.float32),
+                "wq": dense(next(ki), d, (d, q)),
+                "wk": dense(next(ki), d, (d, kv)),
+                "wv": dense(next(ki), d, (d, kv)),
+                "wo": dense(next(ki), q, (q, d)),
+                "mlp_norm": jnp.ones((d,), jnp.float32),
+                "w_gate": dense(next(ki), d, (d, m)),
+                "w_up": dense(next(ki), d, (d, m)),
+                "w_down": dense(next(ki), m, (m, d)),
+            }
+        )
+    return {
+        "tok_emb": (jax.random.normal(keys[-1], (cfg.vocab, d)) * 0.02).astype(
+            jnp.float32
+        ),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def swiglu(h: jnp.ndarray, lw: Dict) -> jnp.ndarray:
+    g = h @ lw["w_gate"]
+    return (jax.nn.silu(g) * (h @ lw["w_up"])) @ lw["w_down"]
+
+
+# --------------------------------------------------------------------------
+# Per-method attention projections
+# --------------------------------------------------------------------------
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B, S, H*w] -> [B, H, S, w]."""
+    b, s, hw = x.shape
+    return x.reshape(b, s, n_heads, hw // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """[B, H, S, w] -> [B, S, H*w]."""
+    b, h, s, w = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * w)
+
+
+def _rope_q_full(cfg, q, pos, use_pallas):
+    if use_pallas:
+        return rope_full_pallas(q, pos, cfg.rope_theta, cfg.pairing)
+    return ref.rope_full_ref(q, pos, cfg.rope_theta, cfg.pairing)
+
+
+def _rope_latent(x, pos, theta_sel, use_pallas):
+    if use_pallas:
+        return rope_latent_pallas(x, pos, theta_sel)
+    return ref.rope_latent_ref(x, pos, theta_sel)
+
+
+def project_qkv(
+    cfg: ModelConfig,
+    spec: VariantSpec,
+    lw: Dict,
+    h: jnp.ndarray,
+    pos: jnp.ndarray,
+    layer: int,
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Project a normed hidden state into (q, k_cacheable, v_cacheable).
+
+    Returns q [B, H, S, qw], k [B, Hkv, S, kr], v [B, Hkv, S, vr] where
+    k/v are exactly what goes into the KV cache for this method:
+      baseline: post-RoPE K, full V;
+      svd/palu: pre-RoPE latent K, latent V;
+      rap:      post-index-aware-RoPE latent K, latent V.
+    """
+    method = spec.method
+    if method == "baseline":
+        q = _split_heads(h @ lw["wq"], cfg.n_heads)
+        k = _split_heads(h @ lw["wk"], cfg.n_kv_heads)
+        v = _split_heads(h @ lw["wv"], cfg.n_kv_heads)
+        q = _rope_q_full(cfg, q, pos, use_pallas)
+        k = _rope_q_full(cfg, k, pos, use_pallas)
+        return q, k, v
+    if method in ("svd", "palu"):
+        q = _split_heads(h @ lw["wq"], cfg.n_heads)
+        q = _rope_q_full(cfg, q, pos, use_pallas)
+        k_lat = _split_heads(h @ lw["a_k"], cfg.n_kv_heads)
+        v_lat = _split_heads(h @ lw["a_v"], cfg.n_kv_heads)
+        return q, k_lat, v_lat
+    if method == "rap":
+        # Absorbed query projection: width 2m per query head (Eq. 10).
+        q_lat = _split_heads(h @ lw["wq_t"], cfg.n_heads)
+        k_lat = _split_heads(h @ lw["a_k"], cfg.n_kv_heads)
+        theta_kv = lw["theta_sel"]  # [Hkv, m]
+        theta_q = jnp.repeat(theta_kv, cfg.group_size, axis=0)  # [H, m]
+        q_lat = _rope_latent(q_lat, pos, theta_q, use_pallas)
+        k_lat = _rope_latent(k_lat, pos, theta_kv, use_pallas)
+        v_lat = _split_heads(h @ lw["a_v"], cfg.n_kv_heads)
+        return q_lat, k_lat, v_lat
+    raise ValueError(method)
+
+
+def _project_qkv_norope(cfg: ModelConfig, spec: VariantSpec, lw: Dict, h: jnp.ndarray):
+    """Projections only (no positional rotation) — the decode step applies
+    RoPE per batch element afterwards.  Returns (q, k_cacheable_unrotated,
+    v_cacheable) with the same shapes as :func:`project_qkv`."""
+    if spec.method == "baseline":
+        return (
+            _split_heads(h @ lw["wq"], cfg.n_heads),
+            _split_heads(h @ lw["wk"], cfg.n_kv_heads),
+            _split_heads(h @ lw["wv"], cfg.n_kv_heads),
+        )
+    if spec.method in ("svd", "palu"):
+        return (
+            _split_heads(h @ lw["wq"], cfg.n_heads),
+            _split_heads(h @ lw["a_k"], cfg.n_kv_heads),
+            _split_heads(h @ lw["a_v"], cfg.n_kv_heads),
+        )
+    if spec.method == "rap":
+        return (
+            _split_heads(h @ lw["wq_t"], cfg.n_heads),
+            _split_heads(h @ lw["a_k"], cfg.n_kv_heads),
+            _split_heads(h @ lw["a_v"], cfg.n_kv_heads),
+        )
+    raise ValueError(spec.method)
+
+
+def attention_scores_inputs(
+    cfg: ModelConfig, spec: VariantSpec, lw: Dict, k_cache: jnp.ndarray, pos_kv: jnp.ndarray
+) -> jnp.ndarray:
+    """Turn the cached K into whatever Q is dotted against.
+
+    baseline/rap: identity (this is RAP's entire point — Eq. 10 holds and
+    the cache participates in attention directly).
+    svd/palu: reconstruct K = RoPE((X A_k) B_k) to full head dim — the
+    per-step overhead the paper eliminates.
+    """
+    if spec.method in ("baseline", "rap"):
+        return k_cache
+    # k_cache: [B, Hkv, S, rk]; b_k: [Hkv, rk, dh]
+    k_full = jnp.einsum("bhsr,hrd->bhsd", k_cache, lw["b_k"])
+    return ref.rope_full_ref(k_full, pos_kv, cfg.rope_theta, cfg.pairing)
+
+
+def values_inputs(spec: VariantSpec, lw: Dict, v_cache: jnp.ndarray) -> jnp.ndarray:
+    """svd reconstructs V; palu/rap consume latent V (B_v absorbed in W_o)."""
+    if spec.method == "svd":
+        return jnp.einsum("bhsr,hrd->bhsd", v_cache, lw["b_v"])
+    return v_cache
+
+
+def output_proj(spec: VariantSpec, lw: Dict, attn: jnp.ndarray) -> jnp.ndarray:
+    """attn: [B, H, S, vw] -> [B, S, D] through the (possibly absorbed) W_o."""
+    merged = _merge_heads(attn)
+    if spec.method in ("palu", "rap"):
+        return merged @ lw["wo_t"]
+    return merged @ lw["wo"]
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (training / PPL / prefill)
+# --------------------------------------------------------------------------
+
+
+def _causal_attend(cfg: ModelConfig, q, k, v) -> jnp.ndarray:
+    """q: [B,H,S,kw], k: [B,Hkv,S,kw], v: [B,Hkv,S,vw] -> [B,H,S,vw]."""
+    s = q.shape[2]
+    kx = jnp.repeat(k, cfg.group_size, axis=1)
+    vx = jnp.repeat(v, cfg.group_size, axis=1)
+    # The paper keeps the original 1/sqrt(D) scale (§3 Eq. 3); pruned dims
+    # simply contribute nothing to the dot product.
+    scores = jnp.einsum("bhqk,bhsk->bhqs", q, kx) / np.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqs,bhsv->bhqv", w, vx)
+
+
+def forward_full(
+    cfg: ModelConfig,
+    spec: VariantSpec,
+    weights: Dict,
+    tokens: jnp.ndarray,
+    use_pallas: bool = False,
+    return_hiddens: bool = False,
+):
+    """Full-sequence forward.  tokens: [B, S] int32 -> logits [B, S, V].
+
+    With ``return_hiddens=True`` also returns the per-layer *normed* inputs
+    to the attention projections (used for whitening covariance in
+    ``compile.rap.palu``)."""
+    b, s = tokens.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x = weights["tok_emb"][tokens]
+    hiddens: List[jnp.ndarray] = []
+    for layer, lw in enumerate(weights["layers"]):
+        h = rms_norm(x, lw["attn_norm"], cfg.norm_eps)
+        if return_hiddens:
+            hiddens.append(h)
+        q, kc, vc = project_qkv(cfg, spec, lw, h, pos, layer, use_pallas)
+        k = attention_scores_inputs(cfg, spec, lw, kc, pos)
+        v = values_inputs(spec, lw, vc)
+        attn = _causal_attend(cfg, q, k, v)
+        x = x + output_proj(spec, lw, attn)
+        x = x + swiglu(rms_norm(x, lw["mlp_norm"], cfg.norm_eps), lw)
+    x = rms_norm(x, weights["final_norm"], cfg.norm_eps)
+    logits = x @ weights["tok_emb"].T
+    if return_hiddens:
+        return logits, hiddens
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def loss_fn(cfg, spec, weights, tokens, targets, use_pallas: bool = False):
+    return cross_entropy(forward_full(cfg, spec, weights, tokens, use_pallas), targets)
+
+
+# --------------------------------------------------------------------------
+# Prefill with cache + single-token decode (the serving graphs)
+# --------------------------------------------------------------------------
+
+
+def prefill_with_cache(
+    cfg: ModelConfig,
+    spec: VariantSpec,
+    weights: Dict,
+    tokens: jnp.ndarray,
+    s_max: int,
+    use_pallas: bool = True,
+):
+    """Prefill: run the prompt, return last-position logits and the KV cache
+    padded to ``s_max``.  Cache layout per layer: k [B, Hkv, Smax, kr],
+    v [B, Hkv, Smax, vr] — *latent* widths for the compressed methods."""
+    b, s = tokens.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x = weights["tok_emb"][tokens]
+    k_caches, v_caches = [], []
+    for layer, lw in enumerate(weights["layers"]):
+        h = rms_norm(x, lw["attn_norm"], cfg.norm_eps)
+        q, kc, vc = project_qkv(cfg, spec, lw, h, pos, layer, use_pallas)
+        k = attention_scores_inputs(cfg, spec, lw, kc, pos)
+        v = values_inputs(spec, lw, vc)
+        attn = _causal_attend(cfg, q, k, v)
+        x = x + output_proj(spec, lw, attn)
+        x = x + swiglu(rms_norm(x, lw["mlp_norm"], cfg.norm_eps), lw)
+        pad = [(0, 0), (0, 0), (0, s_max - s), (0, 0)]
+        k_caches.append(jnp.pad(kc, pad))
+        v_caches.append(jnp.pad(vc, pad))
+    x = rms_norm(x, weights["final_norm"], cfg.norm_eps)
+    logits = x[:, -1, :] @ weights["tok_emb"].T
+    return logits, k_caches, v_caches
+
+
+def _rope_batched_positions(cfg, spec, lw, x, pos_b, use_pallas, is_query):
+    """RoPE a decode-step tensor [B, H, 1, w] where batch element b sits at
+    position pos_b[b].  Folds the batch axis into the per-row position axis
+    (RoPE is row-wise), so the same kernels serve continuous batching."""
+    bsz, h, _, w = x.shape
+    xt = jnp.transpose(x[:, :, 0, :], (1, 0, 2))[None]  # [1, H, B, w]
+    if spec.method == "rap":
+        theta = lw["theta_sel"]
+        if is_query:
+            theta = jnp.repeat(theta, cfg.group_size, axis=0)
+        rot = _rope_latent(xt, pos_b, theta, use_pallas)
+    else:
+        rot = _rope_q_full(cfg, xt, pos_b, use_pallas)
+    return jnp.transpose(rot[0], (1, 0, 2))[:, :, None, :]  # [B, H, 1, w]
+
+
+def decode_step(
+    cfg: ModelConfig,
+    spec: VariantSpec,
+    weights: Dict,
+    token: jnp.ndarray,
+    pos: jnp.ndarray,
+    k_caches: List[jnp.ndarray],
+    v_caches: List[jnp.ndarray],
+    use_pallas: bool = True,
+):
+    """One decode step.  token: [B] int32; pos: scalar int32 or [B] int32 —
+    each sequence's current position (continuous batching mixes offsets).
+    Returns (logits [B, V], updated caches).
+
+    For svd/palu this reconstructs the **entire** cached K (and V for svd)
+    to full dimension every step — faithfully reproducing the Figure-1
+    reconstruction overhead that RAP's absorbed graphs do not contain.
+    """
+    b = token.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    x = weights["tok_emb"][token][:, None, :]  # [B, 1, D]
+    new_k, new_v = [], []
+    s_max = k_caches[0].shape[2]
+    # One-hot position masks for the per-sequence cache scatter.
+    onehot = (jnp.arange(s_max, dtype=jnp.int32)[None, :] == pos_b[:, None])
+    oh = onehot[:, None, :, None]  # [B, 1, Smax, 1]
+    for layer, lw in enumerate(weights["layers"]):
+        h = rms_norm(x, lw["attn_norm"], cfg.norm_eps)
+        # Project WITHOUT rope (pos handled per batch element below).
+        q, kc, vc = _project_qkv_norope(cfg, spec, lw, h)
+        if spec.method in ("baseline", "rap"):
+            q = _rope_batched_positions(cfg, spec, lw, q, pos_b, use_pallas, True)
+            kc = _rope_batched_positions(cfg, spec, lw, kc, pos_b, use_pallas, False)
+        elif spec.method in ("svd", "palu"):
+            q = _rope_batched_positions(cfg, spec, lw, q, pos_b, use_pallas, True)
+        # Scatter this step's K/V at each sequence's position.
+        k_cache = jnp.where(oh, kc, k_caches[layer])
+        v_cache = jnp.where(oh, vc, v_caches[layer])
+        new_k.append(k_cache)
+        new_v.append(v_cache)
+        pos_kv = jnp.arange(s_max, dtype=jnp.int32)
+        k_all = attention_scores_inputs(cfg, spec, lw, k_cache, pos_kv)
+        v_all = values_inputs(spec, lw, v_cache)
+        scale = 1.0 / np.sqrt(cfg.head_dim)
+        if use_pallas and spec.method in ("baseline", "rap"):
+            # Fused latent decode-attention kernel on the no-reconstruction
+            # path (the hot path RAP optimises).
+            attn = attn_decode_pallas(q[:, :, 0, :], k_all, v_all, pos_b, scale)
+        else:
+            attn = ref.attn_decode_ref(q[:, :, 0, :], k_all, v_all, pos_b, scale)
+        x = x + output_proj(spec, lw, attn[:, :, None, :])
+        x = x + swiglu(rms_norm(x, lw["mlp_norm"], cfg.norm_eps), lw)
+    x = rms_norm(x, weights["final_norm"], cfg.norm_eps)
+    logits = x[:, 0, :] @ weights["tok_emb"].T
+    return logits, new_k, new_v
+
+
+# --------------------------------------------------------------------------
+# Weight flattening (interchange with rust)
+# --------------------------------------------------------------------------
+
+_BASE_KEYS = ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"]
+_METHOD_KEYS = {
+    "baseline": ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"],
+    "svd": ["attn_norm", "wq", "a_k", "b_k", "a_v", "b_v", "wo", "mlp_norm", "w_gate", "w_up", "w_down"],
+    "palu": ["attn_norm", "wq", "a_k", "b_k", "a_v", "wo_t", "mlp_norm", "w_gate", "w_up", "w_down"],
+    "rap": ["attn_norm", "wq_t", "a_k", "theta_sel", "a_v", "wo_t", "mlp_norm", "w_gate", "w_up", "w_down"],
+}
+
+
+def flatten_weights(spec: VariantSpec, weights: Dict) -> List[Tuple[str, np.ndarray]]:
+    """Deterministic (name, array) list — the order rust reads them in and
+    the order the AOT executables take them as leading parameters."""
+    out = [("tok_emb", np.asarray(weights["tok_emb"]))]
+    keys = _METHOD_KEYS[spec.method]
+    for i, lw in enumerate(weights["layers"]):
+        for k in keys:
+            out.append((f"layers.{i}.{k}", np.asarray(lw[k])))
+    out.append(("final_norm", np.asarray(weights["final_norm"])))
+    return out
+
+
+def unflatten_weights(spec: VariantSpec, n_layers: int, named: Dict[str, np.ndarray]) -> Dict:
+    keys = _METHOD_KEYS[spec.method]
+    return {
+        "tok_emb": jnp.asarray(named["tok_emb"]),
+        "layers": [
+            {k: jnp.asarray(named[f"layers.{i}.{k}"]) for k in keys}
+            for i in range(n_layers)
+        ],
+        "final_norm": jnp.asarray(named["final_norm"]),
+    }

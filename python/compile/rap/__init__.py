@@ -1,0 +1,12 @@
+"""The offline RAP pipeline (paper §4, Algorithms 1 & 2).
+
+``fisher``  — Fisher-information pair/column scoring (Eq. 6–7) + the
+              magnitude-scoring ablation.
+``budget``  — adaptive budget allocation across (layer, K/V) groups (Alg. 2).
+``prune``   — RoPE-pair selection, A/B construction (Eq. 8), absorption of
+              B_k into W_q (Eq. 9–10); assembles full RAP variants.
+``svd``     — per-head truncated SVD baseline (Eq. 1).
+``palu``    — whitened SVD with B_v absorbed into W_o.
+"""
+
+from . import budget, fisher, palu, prune, svd  # noqa: F401

@@ -1,0 +1,144 @@
+"""Adaptive budget allocation (paper Algorithm 2).
+
+Groups are (layer, K) and (layer, V) — 2L groups for an L-layer model (the
+paper's "64 groups for a 32-layer model").  Each group's raw compression
+ratio is anti-proportional to its aggregated Fisher mass, normalised so the
+mean equals the global target rho, then clamped to [0, 1] and re-projected
+onto mean rho by iterative water-filling.  Within a group the retained
+dimension is uniform across heads (efficient batched GEMM — §4.2 point 2).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..config import ModelConfig
+
+
+def allocate(
+    scores: List[Dict[str, np.ndarray]],
+    rho: float,
+    max_iter: int = 100,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Run Algorithm 2.  Returns (rho_k [L], rho_v [L]) group ratios."""
+    sig = []
+    for s in scores:
+        sig.append(float(np.sum(s["k_pairs"])))
+        sig.append(float(np.sum(s["v_cols"])))
+    sig = np.asarray(sig, np.float64)
+    n = len(sig)
+    sc = sig.sum()
+    if sc <= 0 or n <= 1:
+        flat = np.full(n, rho)
+    else:
+        # Alg. 2 line 6: rho_i = rho * (1 - sigma_i/SC) / (1 - 1/N)
+        flat = rho * (1.0 - sig / sc) / (1.0 - 1.0 / n)
+    flat = np.clip(flat, 0.0, 1.0)
+    flat = project_mean(flat, rho, max_iter=max_iter)
+    rho_k = flat[0::2]
+    rho_v = flat[1::2]
+    return rho_k, rho_v
+
+
+def project_mean(x: np.ndarray, target_mean: float, max_iter: int = 100) -> np.ndarray:
+    """Project x onto {y in [0,1]^n : mean(y) = target_mean} (Alg. 2 line 9).
+
+    Water-filling: repeatedly shift the unclamped coordinates by the residual
+    and re-clip.  Converges in O(n) iterations; exact when feasible
+    (0 <= target_mean <= 1)."""
+    target_mean = float(np.clip(target_mean, 0.0, 1.0))
+    y = np.clip(np.asarray(x, np.float64), 0.0, 1.0)
+    for _ in range(max_iter):
+        resid = target_mean - y.mean()
+        if abs(resid) < 1e-12:
+            break
+        if resid > 0:
+            free = y < 1.0
+        else:
+            free = y > 0.0
+        if not free.any():
+            break
+        y[free] = y[free] + resid * len(y) / free.sum()
+        y = np.clip(y, 0.0, 1.0)
+    return y
+
+
+def ranks_from_ratios(
+    cfg: ModelConfig, rho_k: np.ndarray, rho_v: np.ndarray
+) -> Tuple[List[int], List[int]]:
+    """Integerise group ratios into per-layer retained widths.
+
+    K: m_l retained *pairs* (latent width 2 m_l), at least one pair.
+    V: retained rank r_l, at least 1.
+    After rounding, greedily nudge the least-off layers so the global
+    achieved KV ratio matches the target as closely as integer widths allow.
+    """
+    p = cfg.n_pairs
+    dh = cfg.head_dim
+    m = [max(1, int(round((1.0 - r) * p))) for r in rho_k]
+    rv = [max(1, int(round((1.0 - r) * dh))) for r in rho_v]
+
+    target_keep = (1.0 - (np.concatenate([rho_k, rho_v]).mean())) * (
+        2 * dh * cfg.n_layers
+    )
+
+    def total(mm, rr):
+        return sum(2 * x for x in mm) + sum(rr)
+
+    # Greedy adjustment: move the width whose fractional error is largest.
+    for _ in range(4 * cfg.n_layers):
+        t = total(m, rv)
+        diff = target_keep - t
+        if abs(diff) < 1.0:
+            break
+        if diff > 0:
+            # add capacity where rounding cut the most
+            cand = [
+                ("k", i, (1.0 - rho_k[i]) * p - m[i])
+                for i in range(cfg.n_layers)
+                if m[i] < p
+            ] + [
+                ("v", i, (1.0 - rho_v[i]) * dh - rv[i])
+                for i in range(cfg.n_layers)
+                if rv[i] < dh
+            ]
+            if not cand:
+                break
+            kind, i, _ = max(cand, key=lambda c: c[2])
+            if kind == "k":
+                m[i] += 1
+            else:
+                rv[i] += 1
+        else:
+            cand = [
+                ("k", i, m[i] - (1.0 - rho_k[i]) * p)
+                for i in range(cfg.n_layers)
+                if m[i] > 1
+            ] + [
+                ("v", i, rv[i] - (1.0 - rho_v[i]) * dh)
+                for i in range(cfg.n_layers)
+                if rv[i] > 1
+            ]
+            if not cand:
+                break
+            kind, i, _ = max(cand, key=lambda c: c[2])
+            if kind == "k":
+                m[i] -= 1
+            else:
+                rv[i] -= 1
+    return m, rv
+
+
+def uniform_ranks(cfg: ModelConfig, rho: float) -> Tuple[List[int], List[int]]:
+    """The "Uniform" ablation arm (Fig. 13): same ratio everywhere."""
+    m = max(1, int(round((1.0 - rho) * cfg.n_pairs)))
+    rv = max(1, int(round((1.0 - rho) * cfg.head_dim)))
+    return [m] * cfg.n_layers, [rv] * cfg.n_layers
+
+
+def achieved_kv_ratio(cfg: ModelConfig, m: List[int], rv: List[int]) -> float:
+    """Fraction of baseline KV-cache retained by widths (m, rv)."""
+    kept = sum(2 * x for x in m) + sum(rv)
+    return kept / (2.0 * cfg.head_dim * cfg.n_layers)

@@ -1,0 +1,116 @@
+"""Fisher-information scoring of RoPE pairs and V columns (paper Eq. 6–7).
+
+F(W) = E[(dL/dW)^2] accumulated over a small calibration set; the score of a
+RoPE pair (j, j') of a K projection is the sum of the squared-gradient mass
+of both columns (Eq. 7).  V projections have no pair structure; their
+per-column scores feed the V side of the adaptive budget and the whitened-SVD
+rank split.
+
+Shapes: for each layer we return
+  k_pair_scores [Hkv, P]   (P = head_dim / 2 RoPE pairs)
+  v_col_scores  [Hkv, D_h]
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig, baseline_spec, rope_pairs
+from ..model import loss_fn
+
+
+def _zeros_like_kv(cfg: ModelConfig):
+    return [
+        {
+            "wk": np.zeros((cfg.d_model, cfg.kv_dim), np.float64),
+            "wv": np.zeros((cfg.d_model, cfg.kv_dim), np.float64),
+        }
+        for _ in range(cfg.n_layers)
+    ]
+
+
+def accumulate_fisher(
+    cfg: ModelConfig,
+    weights: Dict,
+    calib_batches: Iterable,
+) -> List[Dict[str, np.ndarray]]:
+    """Accumulate squared gradients of the K/V projections over calibration
+    batches.  Returns per-layer {"wk": [D, Hkv*dh], "wv": ...} float64."""
+    spec = baseline_spec(cfg)
+
+    def kv_loss(kv_params, weights, x, y):
+        w = dict(weights)
+        w["layers"] = [
+            {**lw, "wk": kvp["wk"], "wv": kvp["wv"]}
+            for lw, kvp in zip(weights["layers"], kv_params)
+        ]
+        return loss_fn(cfg, spec, w, x, y)
+
+    grad_fn = jax.jit(jax.grad(kv_loss))
+    acc = _zeros_like_kv(cfg)
+    n = 0
+    for x, y in calib_batches:
+        kv_params = [
+            {"wk": lw["wk"], "wv": lw["wv"]} for lw in weights["layers"]
+        ]
+        g = grad_fn(kv_params, weights, jnp.asarray(x), jnp.asarray(y))
+        for layer in range(cfg.n_layers):
+            acc[layer]["wk"] += np.square(np.asarray(g[layer]["wk"], np.float64))
+            acc[layer]["wv"] += np.square(np.asarray(g[layer]["wv"], np.float64))
+        n += 1
+    for layer in range(cfg.n_layers):
+        acc[layer]["wk"] /= max(n, 1)
+        acc[layer]["wv"] /= max(n, 1)
+    return acc
+
+
+def _per_head(cfg: ModelConfig, mat: np.ndarray) -> np.ndarray:
+    """[D, Hkv*dh] -> [Hkv, D, dh]."""
+    d = cfg.d_model
+    return mat.reshape(d, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+
+
+def pair_scores_from_fisher(
+    cfg: ModelConfig, fisher: List[Dict[str, np.ndarray]]
+) -> List[Dict[str, np.ndarray]]:
+    """Aggregate Fisher mass into pair scores (K) and column scores (V)."""
+    pairs = rope_pairs(cfg)
+    out = []
+    for layer in range(cfg.n_layers):
+        fk = _per_head(cfg, fisher[layer]["wk"])  # [Hkv, D, dh]
+        fv = _per_head(cfg, fisher[layer]["wv"])
+        col_k = fk.sum(axis=1)  # [Hkv, dh]
+        k_pair = np.stack(
+            [col_k[:, j] + col_k[:, jp] for (j, jp) in pairs], axis=1
+        )  # [Hkv, P]
+        out.append({"k_pairs": k_pair, "v_cols": fv.sum(axis=1)})
+    return out
+
+
+def magnitude_scores(
+    cfg: ModelConfig, weights: Dict
+) -> List[Dict[str, np.ndarray]]:
+    """The Fig.-13 "Magnitude" ablation: squared-L2 column mass of W itself
+    instead of its squared gradient."""
+    pairs = rope_pairs(cfg)
+    out = []
+    for lw in weights["layers"]:
+        wk = _per_head(cfg, np.asarray(lw["wk"], np.float64) ** 2)
+        wv = _per_head(cfg, np.asarray(lw["wv"], np.float64) ** 2)
+        col_k = wk.sum(axis=1)
+        k_pair = np.stack(
+            [col_k[:, j] + col_k[:, jp] for (j, jp) in pairs], axis=1
+        )
+        out.append({"k_pairs": k_pair, "v_cols": wv.sum(axis=1)})
+    return out
+
+
+def scores_to_json(scores: List[Dict[str, np.ndarray]]) -> list:
+    return [
+        {"k_pairs": s["k_pairs"].tolist(), "v_cols": s["v_cols"].tolist()}
+        for s in scores
+    ]

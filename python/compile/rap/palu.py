@@ -1,0 +1,88 @@
+"""PaLU baseline: whitened per-head SVD + B_v absorption into W_o.
+
+Per the paper's §6.1 configuration: on top of SVD, PaLU (i) whitens with the
+calibration activation covariance and (ii) absorbs B_v into W_o so V is
+served from its latent without reconstruction; K still carries its B_k and
+is reconstructed (then RoPE'd) every attention call — the residual overhead
+RAP removes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from ..config import ModelConfig, VariantSpec
+from .svd import whitened_svd_per_head
+
+
+def absorb_bv_into_wo(
+    cfg: ModelConfig, wo: np.ndarray, b_v: np.ndarray
+) -> np.ndarray:
+    """W_o: [H*dh, D]; b_v: [Hkv, rv, dh] -> W_o~: [H*rv, D].
+
+    Query head h consumes KV head g(h) = h // group's latent V, so its W_o
+    row block [dh, D] is left-multiplied by B_v[g(h)] (GQA-aware absorption).
+    """
+    d = wo.shape[1]
+    dh = cfg.head_dim
+    rv = b_v.shape[1]
+    rows = []
+    for h in range(cfg.n_heads):
+        g = h // cfg.group_size
+        rows.append(b_v[g] @ wo[h * dh : (h + 1) * dh, :])  # [rv, D]
+    return np.concatenate(rows, axis=0).astype(np.float32)  # [H*rv, D]
+
+
+def build_palu_variant(
+    cfg: ModelConfig,
+    weights: Dict,
+    covs: List[np.ndarray],
+    rank_k: List[int],
+    rank_v: List[int],
+    ratio: float,
+    tag: str = "",
+) -> Dict:
+    """Assemble a PaLU variant's weights + spec.
+
+    covs: per-layer activation covariance of the attention-norm output.
+    rank_k/rank_v: per-layer retained ranks per KV head.
+    """
+    layers = []
+    for li, lw in enumerate(weights["layers"]):
+        wk = np.asarray(lw["wk"])
+        wv = np.asarray(lw["wv"])
+        a_k, b_k = whitened_svd_per_head(wk, covs[li], cfg.n_kv_heads, rank_k[li])
+        a_v, b_v = whitened_svd_per_head(wv, covs[li], cfg.n_kv_heads, rank_v[li])
+        wo_t = absorb_bv_into_wo(cfg, np.asarray(lw["wo"]), b_v)
+        layers.append(
+            {
+                "attn_norm": lw["attn_norm"],
+                "wq": lw["wq"],
+                "a_k": a_k,
+                "b_k": b_k,
+                "a_v": a_v,
+                "wo_t": wo_t,
+                "mlp_norm": lw["mlp_norm"],
+                "w_gate": lw["w_gate"],
+                "w_up": lw["w_up"],
+                "w_down": lw["w_down"],
+            }
+        )
+    spec = VariantSpec(
+        method="palu",
+        ratio=ratio,
+        model=cfg.name,
+        tag=tag,
+        k_rank=list(map(int, rank_k)),
+        v_rank=list(map(int, rank_v)),
+    )
+    return {
+        "spec": spec,
+        "weights": {
+            "tok_emb": weights["tok_emb"],
+            "layers": layers,
+            "final_norm": weights["final_norm"],
+        },
+    }

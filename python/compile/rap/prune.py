@@ -1,0 +1,167 @@
+"""RAP construction (paper §4.3, Algorithm 1 lines 4–9).
+
+Given pair scores and per-layer budgets:
+
+1. select the top-m RoPE pairs per KV head (head-uniform m),
+2. gather the retained columns of W_k into A_k (canonical half layout:
+   first components then second components, ascending original pair index),
+3. build the binary expansion B_k implicitly as an index map (Eq. 8) and
+   absorb B_k^T into W_q (Eq. 9–10) — the gather of W_q's columns,
+4. precompute the per-head theta_sel table for the index-aware RoPE kernel,
+5. compress the V side with whitened SVD and absorb B_v into W_o (the
+   paper's default hybrid pipeline, §4.5).
+
+``build_rap_variant`` also supports uniform budgets and magnitude scores for
+the Fig.-13 ablation arms, and single-layer pruning for Fig. 4.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..config import ModelConfig, VariantSpec, rope_pairs
+from .palu import absorb_bv_into_wo
+from .svd import whitened_svd_per_head
+
+
+def select_pairs(scores: np.ndarray, m: int) -> np.ndarray:
+    """Top-m pair indices per head, ascending order.  scores: [Hkv, P]."""
+    hkv, p = scores.shape
+    sel = np.argsort(-scores, axis=1, kind="stable")[:, :m]
+    return np.sort(sel, axis=1)
+
+
+def gather_pair_columns(
+    cfg: ModelConfig, w: np.ndarray, n_heads: int, pair_idx: np.ndarray
+) -> np.ndarray:
+    """Gather retained RoPE-pair columns into canonical half layout.
+
+    w: [D, H*dh]; pair_idx: [H, m] -> [D, H*2m].  For head h the output
+    block is [cols of first pair components | cols of second components].
+    """
+    pairs = rope_pairs(cfg)
+    d = w.shape[0]
+    dh = cfg.head_dim
+    m = pair_idx.shape[1]
+    out = np.empty((d, n_heads * 2 * m), dtype=w.dtype)
+    for h in range(n_heads):
+        wh = w[:, h * dh : (h + 1) * dh]
+        first = [pairs[j][0] for j in pair_idx[h]]
+        second = [pairs[j][1] for j in pair_idx[h]]
+        out[:, h * 2 * m : h * 2 * m + m] = wh[:, first]
+        out[:, h * 2 * m + m : (h + 1) * 2 * m] = wh[:, second]
+    return out
+
+
+def absorb_bk_into_wq(
+    cfg: ModelConfig, wq: np.ndarray, pair_idx: np.ndarray
+) -> np.ndarray:
+    """W_q B_k^T (Eq. 10): since B is a binary expansion (Eq. 8), absorption
+    is the gather of W_q's columns at the *KV group's* retained pairs.
+
+    wq: [D, H*dh]; pair_idx: [Hkv, m] -> [D, H*2m].
+    """
+    q_idx = np.repeat(pair_idx, cfg.group_size, axis=0)  # [H, m]
+    return gather_pair_columns(cfg, wq, cfg.n_heads, q_idx)
+
+
+def theta_sel_table(cfg: ModelConfig, pair_idx: np.ndarray) -> np.ndarray:
+    """Per-head retained-pair frequencies [Hkv, m] — the VMEM table of the
+    index-aware kernel (DESIGN.md §Hardware-Adaptation)."""
+    p = cfg.n_pairs
+    j = np.arange(p, dtype=np.float64)
+    th = cfg.rope_theta ** (-2.0 * j / cfg.head_dim)
+    return th[pair_idx].astype(np.float32)
+
+
+def expansion_matrix(cfg: ModelConfig, pair_idx_h: np.ndarray) -> np.ndarray:
+    """The explicit binary B of Eq. 8 for one head, [2m, dh].  Only used by
+    tests (commutativity / reconstruction identities); the runtime never
+    materialises it — that is the point of the absorption."""
+    pairs = rope_pairs(cfg)
+    m = len(pair_idx_h)
+    b = np.zeros((2 * m, cfg.head_dim), np.float32)
+    for i, j in enumerate(pair_idx_h):
+        b[i, pairs[j][0]] = 1.0
+        b[m + i, pairs[j][1]] = 1.0
+    return b
+
+
+def build_rap_variant(
+    cfg: ModelConfig,
+    weights: Dict,
+    scores: List[Dict[str, np.ndarray]],
+    covs: List[np.ndarray],
+    m_pairs: List[int],
+    v_ranks: List[int],
+    ratio: float,
+    tag: str = "",
+) -> Dict:
+    """Assemble a RAP variant (hybrid: RAP-K + whitened-SVD-V, §4.5)."""
+    layers = []
+    k_pairs_all = []
+    for li, lw in enumerate(weights["layers"]):
+        pair_idx = select_pairs(scores[li]["k_pairs"], m_pairs[li])  # [Hkv, m]
+        k_pairs_all.append(pair_idx.tolist())
+        a_k = gather_pair_columns(
+            cfg, np.asarray(lw["wk"]), cfg.n_kv_heads, pair_idx
+        )
+        wq_t = absorb_bk_into_wq(cfg, np.asarray(lw["wq"]), pair_idx)
+        a_v, b_v = whitened_svd_per_head(
+            np.asarray(lw["wv"]), covs[li], cfg.n_kv_heads, v_ranks[li]
+        )
+        wo_t = absorb_bv_into_wo(cfg, np.asarray(lw["wo"]), b_v)
+        layers.append(
+            {
+                "attn_norm": lw["attn_norm"],
+                "wq_t": wq_t,
+                "a_k": a_k,
+                "theta_sel": theta_sel_table(cfg, pair_idx),
+                "a_v": a_v,
+                "wo_t": wo_t,
+                "mlp_norm": lw["mlp_norm"],
+                "w_gate": lw["w_gate"],
+                "w_up": lw["w_up"],
+                "w_down": lw["w_down"],
+            }
+        )
+    spec = VariantSpec(
+        method="rap",
+        ratio=ratio,
+        model=cfg.name,
+        tag=tag,
+        k_rank=[2 * m for m in m_pairs],
+        v_rank=list(map(int, v_ranks)),
+        k_pairs=k_pairs_all,
+    )
+    return {
+        "spec": spec,
+        "weights": {
+            "tok_emb": weights["tok_emb"],
+            "layers": layers,
+            "final_norm": weights["final_norm"],
+        },
+    }
+
+
+def build_single_layer_variant(
+    cfg: ModelConfig,
+    weights: Dict,
+    scores: List[Dict[str, np.ndarray]],
+    covs: List[np.ndarray],
+    layer: int,
+    rho: float,
+) -> Dict:
+    """Fig. 4: prune only ``layer`` at ratio rho, leave the rest untouched.
+
+    Implemented as a RAP variant whose other layers keep all pairs/full
+    V-rank (a full-width whitened SVD is exact up to float error)."""
+    m = [cfg.n_pairs] * cfg.n_layers
+    rv = [cfg.head_dim] * cfg.n_layers
+    m[layer] = max(1, int(round((1.0 - rho) * cfg.n_pairs)))
+    rv[layer] = max(1, int(round((1.0 - rho) * cfg.head_dim)))
+    return build_rap_variant(
+        cfg, weights, scores, covs, m, rv, rho, tag=f"layer{layer}"
+    )

@@ -1,0 +1,128 @@
+"""SVD-based factorization baselines (paper Eq. 1, §6.1 "SVD").
+
+Naive per-head truncated SVD of W_k and W_v: W ≈ A B with
+A = U_r Σ_r^{1/2}, B = Σ_r^{1/2} V_r^T.  No whitening, no adaptive budget,
+no RoPE absorption — the cache stores X A (pre-RoPE) and **both** K and V
+are reconstructed at attention time, exactly the configuration the paper
+evaluates as "SVD".
+
+Also provides the whitened variant used by PaLU and by RAP's hybrid V side:
+truncate S^T W where C = X^T X = S S^T (Cholesky), which minimises
+||X(W - Ŵ)||_F instead of ||W - Ŵ||_F.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def truncated_svd_per_head(
+    w: np.ndarray, n_heads: int, rank: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """w: [D, H*dh] -> (A [D, H*rank], B [H, rank, dh])."""
+    d, hd = w.shape
+    dh = hd // n_heads
+    a_heads, b_heads = [], []
+    for h in range(n_heads):
+        wh = w[:, h * dh : (h + 1) * dh].astype(np.float64)
+        u, s, vt = np.linalg.svd(wh, full_matrices=False)
+        sq = np.sqrt(s[:rank])
+        a_heads.append(u[:, :rank] * sq[None, :])
+        b_heads.append(sq[:, None] * vt[:rank])
+    a = np.concatenate(a_heads, axis=1).astype(np.float32)  # [D, H*rank]
+    b = np.stack(b_heads).astype(np.float32)  # [H, rank, dh]
+    return a, b
+
+
+def whitened_svd_per_head(
+    w: np.ndarray, cov: np.ndarray, n_heads: int, rank: int, damp: float = 1e-4
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Data-whitened truncated SVD (SVD-LLM / PaLU style).
+
+    cov: [D, D] accumulated X^T X of the layer's (normed) inputs.
+    Factor S^T W with C = S S^T; A = S^{-T} U_r Σ_r, B = V_r^T, so that
+    X A B ≈ X W with error measured in the activation geometry.
+    """
+    d, hd = w.shape
+    dh = hd // n_heads
+    c = cov.astype(np.float64)
+    # Damping keeps the Cholesky well-posed for near-singular activations.
+    c = c + damp * np.trace(c) / d * np.eye(d)
+    s_mat = np.linalg.cholesky(c)  # lower triangular, C = S S^T
+    a_heads, b_heads = [], []
+    for h in range(n_heads):
+        wh = w[:, h * dh : (h + 1) * dh].astype(np.float64)
+        wp = s_mat.T @ wh
+        u, s, vt = np.linalg.svd(wp, full_matrices=False)
+        ur = u[:, :rank] * s[:rank][None, :]
+        # A = S^{-T} (U_r Σ_r): solve S^T A = U_r Σ_r.
+        a_h = np.linalg.solve(s_mat.T, ur)
+        a_heads.append(a_h)
+        b_heads.append(vt[:rank])
+    a = np.concatenate(a_heads, axis=1).astype(np.float32)
+    b = np.stack(b_heads).astype(np.float32)
+    return a, b
+
+
+def build_svd_variant(cfg, weights, rank_k, rank_v, ratio: float, tag: str = ""):
+    """Assemble the naive per-head truncated-SVD variant (§6.1 "SVD"):
+    uniform ranks, no whitening, both K and V reconstructed at runtime."""
+    from ..config import VariantSpec
+
+    layers = []
+    for lw in weights["layers"]:
+        a_k, b_k = truncated_svd_per_head(
+            np.asarray(lw["wk"]), cfg.n_kv_heads, rank_k
+        )
+        a_v, b_v = truncated_svd_per_head(
+            np.asarray(lw["wv"]), cfg.n_kv_heads, rank_v
+        )
+        layers.append(
+            {
+                "attn_norm": lw["attn_norm"],
+                "wq": lw["wq"],
+                "a_k": a_k,
+                "b_k": b_k,
+                "a_v": a_v,
+                "b_v": b_v,
+                "wo": lw["wo"],
+                "mlp_norm": lw["mlp_norm"],
+                "w_gate": lw["w_gate"],
+                "w_up": lw["w_up"],
+                "w_down": lw["w_down"],
+            }
+        )
+    spec = VariantSpec(
+        method="svd",
+        ratio=ratio,
+        model=cfg.name,
+        tag=tag,
+        k_rank=[rank_k] * cfg.n_layers,
+        v_rank=[rank_v] * cfg.n_layers,
+    )
+    return {
+        "spec": spec,
+        "weights": {
+            "tok_emb": weights["tok_emb"],
+            "layers": layers,
+            "final_norm": weights["final_norm"],
+        },
+    }
+
+
+def reconstruction_error(
+    w: np.ndarray, a: np.ndarray, b: np.ndarray, n_heads: int
+) -> float:
+    """||W - A B||_F / ||W||_F, reassembling per-head blocks."""
+    d, hd = w.shape
+    dh = hd // n_heads
+    rank = a.shape[1] // n_heads
+    err = 0.0
+    base = float(np.linalg.norm(w) ** 2)
+    for h in range(n_heads):
+        wh = w[:, h * dh : (h + 1) * dh]
+        ah = a[:, h * rank : (h + 1) * rank]
+        err += float(np.linalg.norm(wh - ah @ b[h]) ** 2)
+    return float(np.sqrt(err / base))

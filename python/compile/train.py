@@ -1,0 +1,113 @@
+"""Tiny-model pre-training (build-time only).
+
+Hand-rolled AdamW + cosine schedule (no optax in this environment).  The
+trained baseline checkpoint is the "teacher" for KD and the substrate every
+compression method operates on; its quality determines whether Fisher
+scores, layer sensitivity (Fig. 4) and KD recovery carry real signal.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, TrainConfig, baseline_spec
+from .model import loss_fn
+
+
+def adamw_init(params) -> Dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": zeros, "t": 0}
+
+
+def adamw_update(params, grads, state, lr, wd, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1.0 - b1**t)
+    vhat_scale = 1.0 / (1.0 - b2**t)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+        return p - step - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def cosine_lr(step: int, cfg: TrainConfig) -> float:
+    if step < cfg.warmup:
+        return cfg.lr * (step + 1) / cfg.warmup
+    p = (step - cfg.warmup) / max(1, cfg.steps - cfg.warmup)
+    return cfg.lr * 0.5 * (1.0 + np.cos(np.pi * p))
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    weights: Dict,
+    batch_iter: Iterable[Tuple[np.ndarray, np.ndarray]],
+    log_every: int = 25,
+) -> Tuple[Dict, list]:
+    """Train in place; returns (weights, loss_log)."""
+    spec = baseline_spec(cfg)
+
+    @jax.jit
+    def step_fn(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, spec, p, x, y)
+        )(params)
+        grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt = adamw_update(params, grads, opt, lr, tcfg.weight_decay)
+        return params, opt, loss, gn
+
+    opt = adamw_init(weights)
+    log = []
+    t0 = time.time()
+    for step, (x, y) in enumerate(batch_iter):
+        lr = cosine_lr(step, tcfg)
+        weights, opt, loss, gn = step_fn(
+            weights, opt, jnp.asarray(x), jnp.asarray(y), jnp.float32(lr)
+        )
+        if step % log_every == 0 or step == tcfg.steps - 1:
+            loss_f = float(loss)
+            log.append({"step": step, "loss": loss_f, "lr": lr})
+            print(
+                f"[train {cfg.name}] step {step:4d} loss {loss_f:.4f} "
+                f"lr {lr:.2e} ({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return weights, log
+
+
+def eval_ppl(
+    cfg: ModelConfig, spec, weights: Dict, xs: np.ndarray, ys: np.ndarray, batch: int = 8
+) -> float:
+    """Perplexity over contiguous eval windows (matches rust eval::ppl)."""
+    total, count = 0.0, 0
+
+    @jax.jit
+    def nll(w, x, y):
+        return loss_fn(cfg, spec, w, x, y)
+
+    for i in range(0, len(xs), batch):
+        x = jnp.asarray(xs[i : i + batch])
+        y = jnp.asarray(ys[i : i + batch])
+        total += float(nll(weights, x, y)) * x.shape[0] * x.shape[1]
+        count += x.shape[0] * x.shape[1]
+    return float(np.exp(total / max(count, 1)))

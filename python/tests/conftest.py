@@ -1,0 +1,75 @@
+"""Shared fixtures: a micro model + calibration products, built once."""
+
+import sys, os
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.config import ModelConfig, baseline_spec
+from compile import data as data_mod
+from compile.model import init_weights, forward_full
+from compile.rap import fisher as fisher_mod, budget as budget_mod
+from compile.rap.prune import build_rap_variant
+
+
+@pytest.fixture(scope="session")
+def micro_cfg():
+    return ModelConfig(
+        name="micro", d_model=64, n_layers=2, n_heads=4, n_kv_heads=2,
+        head_dim=16, mlp_hidden=96, max_seq=128,
+    )
+
+
+@pytest.fixture(scope="session")
+def micro_cfg_interleaved():
+    return ModelConfig(
+        name="micro_il", d_model=48, n_layers=2, n_heads=4, n_kv_heads=4,
+        head_dim=12, mlp_hidden=64, max_seq=128, pairing="interleaved",
+    )
+
+
+@pytest.fixture(scope="session")
+def micro_weights(micro_cfg):
+    return init_weights(micro_cfg, seed=0)
+
+
+@pytest.fixture(scope="session")
+def micro_corpus():
+    return data_mod.generate_corpus(1 << 16)
+
+
+@pytest.fixture(scope="session")
+def micro_calib(micro_corpus):
+    tr, _ = data_mod.train_eval_split(micro_corpus)
+    return list(data_mod.batches(tr, 2, 64, 2, 0))
+
+
+@pytest.fixture(scope="session")
+def micro_scores(micro_cfg, micro_weights, micro_calib):
+    f = fisher_mod.accumulate_fisher(micro_cfg, micro_weights, micro_calib)
+    return fisher_mod.pair_scores_from_fisher(micro_cfg, f)
+
+
+@pytest.fixture(scope="session")
+def micro_covs(micro_cfg, micro_weights, micro_calib):
+    spec = baseline_spec(micro_cfg)
+    x, _ = micro_calib[0]
+    _, hid = forward_full(micro_cfg, spec, micro_weights, jnp.asarray(x), return_hiddens=True)
+    covs = []
+    for h in hid:
+        hm = np.asarray(h, np.float64).reshape(-1, micro_cfg.d_model)
+        covs.append(hm.T @ hm)
+    return covs
+
+
+@pytest.fixture(scope="session")
+def micro_rap(micro_cfg, micro_weights, micro_scores, micro_covs):
+    rho = 0.3
+    rk, rv_ = budget_mod.allocate(micro_scores, rho)
+    m, rv = budget_mod.ranks_from_ratios(micro_cfg, rk, rv_)
+    return build_rap_variant(
+        micro_cfg, micro_weights, micro_scores, micro_covs, m, rv, rho
+    )

@@ -1,0 +1,125 @@
+"""Algorithm 2 invariants: valid ratios, exact mean, sensitivity ordering."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import ModelConfig
+from compile.rap import budget
+
+
+def _scores(l, hkv, p, dh, rng):
+    return [
+        {
+            "k_pairs": rng.uniform(0.1, 10, (hkv, p)),
+            "v_cols": rng.uniform(0.1, 10, (hkv, dh)),
+        }
+        for _ in range(l)
+    ]
+
+
+CFG = ModelConfig(name="t", d_model=64, n_layers=4, n_heads=4, n_kv_heads=2,
+                  head_dim=16, mlp_hidden=64)
+
+
+class TestAllocate:
+    def test_mean_equals_rho(self):
+        rng = np.random.default_rng(0)
+        s = _scores(4, 2, 8, 16, rng)
+        for rho in (0.1, 0.3, 0.5, 0.9):
+            rk, rv = budget.allocate(s, rho)
+            flat = np.concatenate([rk, rv])
+            assert abs(flat.mean() - rho) < 1e-9
+            assert (flat >= 0).all() and (flat <= 1).all()
+
+    def test_sensitive_groups_pruned_less(self):
+        """A group with higher Fisher mass gets a lower compression ratio."""
+        rng = np.random.default_rng(1)
+        s = _scores(4, 2, 8, 16, rng)
+        # Make layer 0's K group vastly more sensitive than layer 3's.
+        s[0]["k_pairs"][:] = 100.0
+        s[3]["k_pairs"][:] = 0.001
+        rk, _ = budget.allocate(s, 0.3)
+        assert rk[0] < rk[3]
+
+    def test_equal_scores_give_uniform(self):
+        s = [
+            {"k_pairs": np.ones((2, 8)), "v_cols": np.ones((2, 16)) * 0.5}
+            for _ in range(4)
+        ]
+        # make all group totals identical
+        for e in s:
+            e["v_cols"] = np.ones((2, 16)) * (8 * 2 / (16 * 2))
+        rk, rv = budget.allocate(s, 0.25)
+        np.testing.assert_allclose(rk, 0.25, atol=1e-9)
+        np.testing.assert_allclose(rv, 0.25, atol=1e-9)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rho=st.floats(0.05, 0.95),
+        l=st.integers(1, 8),
+        seed=st.integers(0, 1000),
+    )
+    def test_hypothesis_valid(self, rho, l, seed):
+        rng = np.random.default_rng(seed)
+        s = _scores(l, 2, 8, 16, rng)
+        rk, rv = budget.allocate(s, rho)
+        flat = np.concatenate([rk, rv])
+        assert (flat >= -1e-12).all() and (flat <= 1 + 1e-12).all()
+        assert abs(flat.mean() - rho) < 1e-6
+
+
+class TestProjectMean:
+    def test_already_feasible_fixed_point(self):
+        x = np.array([0.2, 0.4])
+        y = budget.project_mean(x, 0.3)
+        np.testing.assert_allclose(y.mean(), 0.3)
+
+    def test_clipping_redistributes(self):
+        x = np.array([2.0, 0.0, 0.0, 0.0])  # clips to [1,0,0,0], mean .25
+        y = budget.project_mean(x, 0.5)
+        assert abs(y.mean() - 0.5) < 1e-9
+        assert y[0] == 1.0
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        n=st.integers(1, 30),
+        target=st.floats(0.0, 1.0),
+        seed=st.integers(0, 10_000),
+    )
+    def test_hypothesis(self, n, target, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(-1, 2, n)
+        y = budget.project_mean(x, target)
+        assert (y >= -1e-12).all() and (y <= 1 + 1e-12).all()
+        assert abs(y.mean() - target) < 1e-6
+
+
+class TestRanks:
+    def test_ranks_bounds(self):
+        rng = np.random.default_rng(2)
+        s = _scores(CFG.n_layers, CFG.n_kv_heads, CFG.n_pairs, CFG.head_dim, rng)
+        for rho in (0.1, 0.3, 0.5, 0.8):
+            rk, rv = budget.allocate(s, rho)
+            m, rvv = budget.ranks_from_ratios(CFG, rk, rv)
+            assert all(1 <= x <= CFG.n_pairs for x in m)
+            assert all(1 <= x <= CFG.head_dim for x in rvv)
+
+    def test_achieved_ratio_close_to_target(self):
+        rng = np.random.default_rng(3)
+        s = _scores(CFG.n_layers, CFG.n_kv_heads, CFG.n_pairs, CFG.head_dim, rng)
+        for rho in (0.2, 0.3, 0.4):
+            rk, rv = budget.allocate(s, rho)
+            m, rvv = budget.ranks_from_ratios(CFG, rk, rv)
+            achieved = budget.achieved_kv_ratio(CFG, m, rvv)
+            assert abs(achieved - (1 - rho)) < 0.05
+
+    def test_uniform_ranks(self):
+        m, rv = budget.uniform_ranks(CFG, 0.5)
+        assert m == [CFG.n_pairs // 2] * CFG.n_layers
+        assert rv == [CFG.head_dim // 2] * CFG.n_layers
+
+    def test_zero_rho_keeps_everything(self):
+        m, rv = budget.uniform_ranks(CFG, 0.0)
+        assert m == [CFG.n_pairs] * CFG.n_layers
+        assert rv == [CFG.head_dim] * CFG.n_layers

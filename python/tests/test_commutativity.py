@@ -1,0 +1,185 @@
+"""The paper's central structural claims (Definition 1.1, Eq. 5, Eq. 9–10).
+
+These tests prove, numerically, the three facts the whole method rests on:
+
+1. RAP's pair-preserving binary expansion B commutes with (index-aware)
+   RoPE: RoPE(XA)B == RoPE(XAB).
+2. Arbitrary (non-pair-aligned) column pruning does NOT commute — the
+   negative control that motivates RAP over plain structured pruning.
+3. After absorbing B_k into W_q, the attention scores over retained pairs
+   equal the full model's scores restricted to those pairs (Eq. 9–10), and
+   a no-op prune (keep everything) reproduces the baseline exactly.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import ModelConfig, rope_pairs
+from compile.kernels import ref
+from compile.rap.prune import (
+    absorb_bk_into_wq,
+    expansion_matrix,
+    gather_pair_columns,
+    select_pairs,
+    theta_sel_table,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _index_aware_rope_full(x_full, pos, cfg):
+    """RoPE on a full-D tensor using the model's native pairing."""
+    return ref.rope_full_ref(x_full, pos, cfg.rope_theta, cfg.pairing)
+
+
+def _cfg(pairing, head_dim=16):
+    return ModelConfig(
+        name="t", d_model=32, n_layers=1, n_heads=2, n_kv_heads=2,
+        head_dim=head_dim, mlp_hidden=32, pairing=pairing,
+    )
+
+
+@pytest.mark.parametrize("pairing", ["half", "interleaved"])
+class TestCommutativity:
+    def test_rope_commutes_with_pair_expansion(self, pairing):
+        """RoPE(XA) B == RoPE(X A B) for pair-preserving B (Eq. 5)."""
+        cfg = _cfg(pairing)
+        p = cfg.n_pairs
+        m = 5
+        pair_idx_h = np.sort(RNG.choice(p, m, replace=False))
+        b_mat = expansion_matrix(cfg, pair_idx_h)  # [2m, dh]
+        s = 9
+        xa = RNG.normal(size=(1, 1, s, 2 * m)).astype(np.float32)  # latent
+        pos = jnp.arange(s, dtype=jnp.int32)
+
+        theta_sel = theta_sel_table(cfg, pair_idx_h[None, :])  # [1, m]
+        # left side: index-aware RoPE in latent space, then expand
+        left = np.asarray(ref.rope_latent_ref(jnp.asarray(xa), pos, jnp.asarray(theta_sel)))
+        left = left @ b_mat  # [1,1,S,dh]
+        # right side: expand first, then full RoPE
+        right = np.asarray(
+            _index_aware_rope_full(jnp.asarray(xa @ b_mat), pos, cfg)
+        )
+        np.testing.assert_allclose(left, right, rtol=1e-5, atol=1e-5)
+
+    def test_arbitrary_column_pruning_does_not_commute(self, pairing):
+        """Negative control: breaking a rotation pair breaks commutativity."""
+        cfg = _cfg(pairing)
+        pairs = rope_pairs(cfg)
+        dh = cfg.head_dim
+        # Keep 2m arbitrary columns that split at least one pair:
+        # the two halves of pair 0 land in different 'pair slots'.
+        j0, j0p = pairs[0]
+        j1, j1p = pairs[1]
+        cols = [j0, j1]  # mixes components of two different pairs
+        b_bad = np.zeros((2, dh), np.float32)
+        b_bad[0, cols[0]] = 1.0
+        b_bad[1, cols[1]] = 1.0
+        s = 7
+        xa = RNG.normal(size=(1, 1, s, 2)).astype(np.float32)
+        pos = jnp.arange(s, dtype=jnp.int32)
+        # Treat the two kept columns as if they were one RoPE 'pair' — the
+        # only latent rotation available — and compare to the true result.
+        theta_fake = np.asarray([[ref.thetas(dh // 2, dh, cfg.rope_theta)[0]]], np.float32)
+        left = np.asarray(ref.rope_latent_ref(jnp.asarray(xa), pos, jnp.asarray(theta_fake)))
+        left = left @ b_bad
+        right = np.asarray(_index_aware_rope_full(jnp.asarray(xa @ b_bad), pos, cfg))
+        assert not np.allclose(left, right, rtol=1e-3, atol=1e-3)
+
+    def test_expansion_matrix_is_orthonormal_selector(self, pairing):
+        cfg = _cfg(pairing)
+        m = 4
+        pair_idx_h = np.sort(RNG.choice(cfg.n_pairs, m, replace=False))
+        b = expansion_matrix(cfg, pair_idx_h)
+        np.testing.assert_allclose(b @ b.T, np.eye(2 * m), atol=1e-7)
+        # every row has exactly one 1 (binary expansion, Eq. 8)
+        assert (b.sum(axis=1) == 1).all()
+        assert ((b == 0) | (b == 1)).all()
+
+    def test_gather_is_w_times_bt(self, pairing):
+        """A = W B^T: gathering pair columns equals multiplying by B^T."""
+        cfg = _cfg(pairing)
+        w = RNG.normal(size=(cfg.d_model, cfg.kv_dim)).astype(np.float32)
+        m = 3
+        pair_idx = np.stack(
+            [np.sort(RNG.choice(cfg.n_pairs, m, replace=False))
+             for _ in range(cfg.n_kv_heads)]
+        )
+        a = gather_pair_columns(cfg, w, cfg.n_kv_heads, pair_idx)
+        dh = cfg.head_dim
+        for h in range(cfg.n_kv_heads):
+            b = expansion_matrix(cfg, pair_idx[h])
+            wh = w[:, h * dh : (h + 1) * dh]
+            np.testing.assert_allclose(
+                a[:, h * 2 * m : (h + 1) * 2 * m], wh @ b.T, atol=1e-6
+            )
+
+
+@pytest.mark.parametrize("pairing", ["half", "interleaved"])
+def test_absorbed_scores_equal_restricted_full_scores(pairing):
+    """Eq. 9–10: RoPE(X W_q B^T) RoPE(X A_k)^T equals the full-dimension
+    scores computed with only the retained pairs' contributions."""
+    cfg = _cfg(pairing)
+    d, dh = cfg.d_model, cfg.head_dim
+    wq = RNG.normal(size=(d, cfg.q_dim)).astype(np.float32)
+    wk = RNG.normal(size=(d, cfg.kv_dim)).astype(np.float32)
+    m = 5
+    pair_idx = np.stack(
+        [np.sort(RNG.choice(cfg.n_pairs, m, replace=False))
+         for _ in range(cfg.n_kv_heads)]
+    )
+    s = 6
+    x = RNG.normal(size=(1, s, d)).astype(np.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    a_k = gather_pair_columns(cfg, wk, cfg.n_kv_heads, pair_idx)
+    wq_t = absorb_bk_into_wq(cfg, wq, pair_idx)
+    theta = theta_sel_table(cfg, pair_idx)
+
+    def split(t, n_heads):
+        return t.reshape(1, s, n_heads, -1).transpose(0, 2, 1, 3)
+
+    q_lat = ref.rope_latent_ref(
+        jnp.asarray(split(x @ wq_t, cfg.n_heads)), pos,
+        jnp.asarray(np.repeat(theta, cfg.group_size, axis=0)))
+    k_lat = ref.rope_latent_ref(
+        jnp.asarray(split(x @ a_k, cfg.n_kv_heads)), pos, jnp.asarray(theta))
+    scores_lat = np.einsum("bhqk,bhsk->bhqs", np.asarray(q_lat), np.asarray(k_lat))
+
+    # full path, then zero out removed pairs' contributions
+    q_full = ref.rope_full_ref(jnp.asarray(split(x @ wq, cfg.n_heads)), pos,
+                               cfg.rope_theta, cfg.pairing)
+    k_full = ref.rope_full_ref(jnp.asarray(split(x @ wk, cfg.n_kv_heads)), pos,
+                               cfg.rope_theta, cfg.pairing)
+    pairs = rope_pairs(cfg)
+    keep_mask = np.zeros((cfg.n_kv_heads, dh), np.float32)
+    for h in range(cfg.n_kv_heads):
+        for j in pair_idx[h]:
+            keep_mask[h, pairs[j][0]] = 1.0
+            keep_mask[h, pairs[j][1]] = 1.0
+    k_masked = np.asarray(k_full) * keep_mask[None, :, None, :]
+    scores_full = np.einsum("bhqk,bhsk->bhqs", np.asarray(q_full), k_masked)
+    np.testing.assert_allclose(scores_lat, scores_full, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    pairing=st.sampled_from(["half", "interleaved"]),
+    head_dim=st.sampled_from([8, 12, 16, 20]),
+    data=st.data(),
+)
+def test_commutativity_hypothesis(pairing, head_dim, data):
+    cfg = _cfg(pairing, head_dim=head_dim)
+    p = cfg.n_pairs
+    m = data.draw(st.integers(1, p))
+    pair_idx_h = np.sort(RNG.choice(p, m, replace=False))
+    b_mat = expansion_matrix(cfg, pair_idx_h)
+    s = data.draw(st.integers(1, 12))
+    xa = RNG.normal(size=(1, 1, s, 2 * m)).astype(np.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    theta_sel = theta_sel_table(cfg, pair_idx_h[None, :])
+    left = np.asarray(ref.rope_latent_ref(jnp.asarray(xa), pos, jnp.asarray(theta_sel))) @ b_mat
+    right = np.asarray(ref.rope_full_ref(jnp.asarray(xa @ b_mat), pos, cfg.rope_theta, cfg.pairing))
+    np.testing.assert_allclose(left, right, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,92 @@
+"""Corpus generator, batching, KD/LoRA machinery."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data as data_mod
+from compile.config import KDConfig, baseline_spec
+from compile.kd import lora_init, merge_lora, lora_param_fraction, kd_loss, distill
+from compile.model import forward_full
+
+
+class TestData:
+    def test_deterministic(self):
+        a = data_mod.generate_corpus(1 << 14, seed=1)
+        b = data_mod.generate_corpus(1 << 14, seed=1)
+        assert a == b
+
+    def test_seed_changes_output(self):
+        a = data_mod.generate_corpus(1 << 14, seed=1)
+        b = data_mod.generate_corpus(1 << 14, seed=2)
+        assert a != b
+
+    def test_structure(self):
+        c = data_mod.generate_corpus(1 << 16)
+        assert len(c) == 1 << 16
+        text = c.decode()
+        assert ". " in text and "\n\n" in text
+        # byte-level vocab constraint
+        assert max(c) < 256
+
+    def test_zipf_like_distribution(self):
+        """Frequent words should dominate: top-10 words cover far more mass
+        than a uniform distribution would."""
+        c = data_mod.generate_corpus(1 << 17).decode()
+        words = [w.strip(".?") for w in c.split() if w.strip(".?")]
+        from collections import Counter
+        counts = Counter(words)
+        top = sum(v for _, v in counts.most_common(10))
+        assert top / len(words) > 0.15
+
+    def test_batches_shapes_and_shift(self):
+        c = data_mod.generate_corpus(1 << 14)
+        tr, ev = data_mod.train_eval_split(c)
+        assert len(ev) == (1 << 14) - int((1 << 14) * 0.9)
+        for x, y in data_mod.batches(tr, 3, 32, 2, 0):
+            assert x.shape == (3, 32) and y.shape == (3, 32)
+            # y is x shifted by one
+            assert (x[:, 1:] == y[:, :-1]).all()
+
+    def test_eval_windows_nonoverlapping(self):
+        c = data_mod.generate_corpus(1 << 14)
+        xs, ys = data_mod.eval_windows(c, 64, 8)
+        assert xs.shape == (8, 64)
+        flat = np.frombuffer(c, np.uint8)
+        np.testing.assert_array_equal(xs[1], flat[64:128])
+
+
+class TestKD:
+    def test_zero_up_merge_is_identity(self, micro_cfg, micro_rap):
+        spec, w = micro_rap["spec"], micro_rap["weights"]
+        ad = lora_init(micro_cfg, spec, w, KDConfig())
+        merged = merge_lora(w, ad, 2.0)
+        t = jnp.asarray(np.arange(8, dtype=np.int32)[None])
+        np.testing.assert_allclose(
+            forward_full(micro_cfg, spec, w, t),
+            forward_full(micro_cfg, spec, merged, t),
+            atol=1e-6,
+        )
+
+    def test_lora_param_fraction_small(self, micro_cfg, micro_rap):
+        ad = lora_init(micro_cfg, micro_rap["spec"], micro_rap["weights"], KDConfig(lora_rank=2))
+        frac = lora_param_fraction(ad, micro_rap["weights"])
+        assert 0 < frac < 0.1
+
+    def test_kd_loss_zero_when_matched(self):
+        logits = jnp.asarray(np.random.default_rng(0).normal(size=(2, 4, 16)).astype(np.float32))
+        y = jnp.zeros((2, 4), jnp.int32)
+        kcfg = KDConfig(alpha_ce=0.0, alpha_kd=1.0)
+        val = float(kd_loss(None, None, kcfg, logits, logits, y))
+        assert abs(val) < 1e-5
+
+    def test_distill_reduces_kd_loss(self, micro_cfg, micro_weights, micro_rap, micro_corpus):
+        tr, _ = data_mod.train_eval_split(micro_corpus)
+        kcfg = KDConfig(steps=6, batch=2, seq=48, lr=3e-3)
+        batches = data_mod.batches(tr, kcfg.batch, kcfg.seq, kcfg.steps, 3)
+        merged, log = distill(
+            micro_cfg, micro_rap["spec"], micro_rap["weights"], micro_weights,
+            kcfg, batches, eval_fn=None, eval_every=100,
+        )
+        losses = [e["loss"] for e in log if "loss" in e]
+        assert losses[-1] <= losses[0] + 0.05

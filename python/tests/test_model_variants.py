@@ -1,0 +1,198 @@
+"""L2 model: shapes, method equivalences, decode/prefill consistency, and
+the paper's key runtime identities."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.config import ModelConfig, baseline_spec, VariantSpec
+from compile.model import (
+    decode_step,
+    flatten_weights,
+    forward_full,
+    init_weights,
+    loss_fn,
+    prefill_with_cache,
+    unflatten_weights,
+)
+from compile.rap import budget as budget_mod
+from compile.rap.prune import build_rap_variant
+from compile.rap.svd import build_svd_variant, reconstruction_error, truncated_svd_per_head
+from compile.rap.palu import build_palu_variant
+
+RNG = np.random.default_rng(99)
+
+
+def toks(b, s, vocab=256):
+    return jnp.asarray(RNG.integers(0, vocab, (b, s)).astype(np.int32))
+
+
+class TestForward:
+    def test_logits_shape(self, micro_cfg, micro_weights):
+        spec = baseline_spec(micro_cfg)
+        t = toks(2, 12)
+        out = forward_full(micro_cfg, spec, micro_weights, t)
+        assert out.shape == (2, 12, micro_cfg.vocab)
+
+    def test_causality(self, micro_cfg, micro_weights):
+        """Changing a future token must not affect earlier logits."""
+        spec = baseline_spec(micro_cfg)
+        t = np.asarray(toks(1, 10))
+        t2 = t.copy()
+        t2[0, -1] = (t2[0, -1] + 7) % 256
+        a = forward_full(micro_cfg, spec, micro_weights, jnp.asarray(t))
+        b = forward_full(micro_cfg, spec, micro_weights, jnp.asarray(t2))
+        np.testing.assert_allclose(a[:, :-1], b[:, :-1], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(a[:, -1], b[:, -1])
+
+    def test_noop_rap_equals_baseline(self, micro_cfg, micro_weights, micro_scores, micro_covs):
+        """Keeping all pairs and full V-rank must reproduce the baseline
+        (the binary expansion is a permutation; whitened full-rank SVD is
+        exact)."""
+        cfg = micro_cfg
+        m = [cfg.n_pairs] * cfg.n_layers
+        rv = [cfg.head_dim] * cfg.n_layers
+        v = build_rap_variant(cfg, micro_weights, micro_scores, micro_covs, m, rv, 0.0)
+        t = toks(1, 16)
+        a = forward_full(cfg, baseline_spec(cfg), micro_weights, t)
+        b = forward_full(cfg, v["spec"], v["weights"], t)
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+    def test_full_rank_svd_equals_baseline(self, micro_cfg, micro_weights):
+        cfg = micro_cfg
+        v = build_svd_variant(cfg, micro_weights, cfg.head_dim, cfg.head_dim, 0.0)
+        t = toks(1, 16)
+        a = forward_full(cfg, baseline_spec(cfg), micro_weights, t)
+        b = forward_full(cfg, v["spec"], v["weights"], t)
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+    def test_interleaved_model_runs(self, micro_cfg_interleaved):
+        cfg = micro_cfg_interleaved
+        w = init_weights(cfg, 1)
+        out = forward_full(cfg, baseline_spec(cfg), w, toks(1, 8))
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestDecodeConsistency:
+    @pytest.mark.parametrize("method", ["baseline", "svd", "palu", "rap"])
+    def test_prefill_plus_decode_matches_full(
+        self, method, micro_cfg, micro_weights, micro_scores, micro_covs, micro_rap
+    ):
+        cfg = micro_cfg
+        if method == "baseline":
+            spec, w = baseline_spec(cfg), micro_weights
+        elif method == "rap":
+            spec, w = micro_rap["spec"], micro_rap["weights"]
+        elif method == "svd":
+            v = build_svd_variant(cfg, micro_weights, 11, 11, 0.3)
+            spec, w = v["spec"], v["weights"]
+        else:
+            v = build_palu_variant(cfg, micro_weights, micro_covs, [11] * cfg.n_layers,
+                                   [11] * cfg.n_layers, 0.3)
+            spec, w = v["spec"], v["weights"]
+        t = toks(1, 12)
+        full = forward_full(cfg, spec, w, t)
+        logits, kc, vc = prefill_with_cache(cfg, spec, w, t[:, :8], 24, use_pallas=False)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[:, 7]), rtol=2e-4, atol=2e-4
+        )
+        for i in range(8, 12):
+            logits, kc, vc = decode_step(
+                cfg, spec, w, t[:, i], jnp.int32(i), kc, vc, use_pallas=False
+            )
+            np.testing.assert_allclose(
+                np.asarray(logits), np.asarray(full[:, i]), rtol=5e-4, atol=5e-4
+            )
+
+    def test_pallas_serving_path_matches_jnp(self, micro_cfg, micro_rap):
+        cfg, spec, w = micro_cfg, micro_rap["spec"], micro_rap["weights"]
+        t = toks(2, 9)
+        l1, kc1, vc1 = prefill_with_cache(cfg, spec, w, t, 16, use_pallas=False)
+        l2, kc2, vc2 = prefill_with_cache(cfg, spec, w, t, 16, use_pallas=True)
+        np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-4)
+        nt = toks(2, 1)[:, 0]
+        d1, _, _ = decode_step(cfg, spec, w, nt, jnp.int32(9), kc1, vc1, use_pallas=False)
+        d2, _, _ = decode_step(cfg, spec, w, nt, jnp.int32(9), kc2, vc2, use_pallas=True)
+        np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-4)
+
+    def test_cache_shapes_are_latent(self, micro_cfg, micro_rap):
+        """The cache must store the *compressed* widths — that is the claim."""
+        cfg, spec, w = micro_cfg, micro_rap["spec"], micro_rap["weights"]
+        _, kc, vc = prefill_with_cache(cfg, spec, w, toks(1, 8), 16, use_pallas=False)
+        for l in range(cfg.n_layers):
+            assert kc[l].shape == (1, cfg.n_kv_heads, 16, spec.k_rank[l])
+            assert vc[l].shape == (1, cfg.n_kv_heads, 16, spec.v_rank[l])
+            assert spec.k_rank[l] < cfg.head_dim  # actually compressed
+
+
+class TestSVD:
+    def test_error_decreases_with_rank(self, micro_cfg, micro_weights):
+        w = np.asarray(micro_weights["layers"][0]["wk"])
+        errs = []
+        for rank in (2, 4, 8, 16):
+            a, b = truncated_svd_per_head(w, micro_cfg.n_kv_heads, rank)
+            errs.append(reconstruction_error(w, a, b, micro_cfg.n_kv_heads))
+        assert errs == sorted(errs, reverse=True)
+        assert errs[-1] < 1e-5  # full rank is exact
+
+    def test_whitened_beats_plain_in_activation_norm(
+        self, micro_cfg, micro_weights, micro_covs, micro_calib
+    ):
+        """Whitening minimises ||X(W-Ŵ)||_F, so it should win in that norm."""
+        from compile.rap.svd import whitened_svd_per_head
+        cfg = micro_cfg
+        w = np.asarray(micro_weights["layers"][0]["wk"])
+        cov = micro_covs[0]
+        rank = 6
+        a1, b1 = truncated_svd_per_head(w, cfg.n_kv_heads, rank)
+        a2, b2 = whitened_svd_per_head(w, cov, cfg.n_kv_heads, rank)
+        # compare activation-space error via the covariance quadratic form
+        def act_err(a, b):
+            dh = cfg.head_dim
+            r = a.shape[1] // cfg.n_kv_heads
+            err = 0.0
+            for h in range(cfg.n_kv_heads):
+                wh = w[:, h * dh : (h + 1) * dh]
+                ah = a[:, h * r : (h + 1) * r]
+                dw = wh - ah @ b[h]
+                err += float(np.trace(dw.T @ cov @ dw))
+            return err
+        assert act_err(a2, b2) <= act_err(a1, b1) * 1.001
+
+
+class TestFlatten:
+    @pytest.mark.parametrize("method", ["baseline", "rap"])
+    def test_roundtrip(self, method, micro_cfg, micro_weights, micro_rap):
+        cfg = micro_cfg
+        if method == "baseline":
+            spec, w = baseline_spec(cfg), micro_weights
+        else:
+            spec, w = micro_rap["spec"], micro_rap["weights"]
+        flat = flatten_weights(spec, w)
+        names = {n: a for n, a in flat}
+        w2 = unflatten_weights(spec, cfg.n_layers, names)
+        t = toks(1, 6)
+        np.testing.assert_allclose(
+            forward_full(cfg, spec, w, t), forward_full(cfg, spec, w2, t),
+            atol=1e-6,
+        )
+
+    def test_deterministic_order(self, micro_cfg, micro_rap):
+        f1 = [n for n, _ in flatten_weights(micro_rap["spec"], micro_rap["weights"])]
+        f2 = [n for n, _ in flatten_weights(micro_rap["spec"], micro_rap["weights"])]
+        assert f1 == f2
+        assert f1[0] == "tok_emb" and f1[-1] == "final_norm"
+
+
+class TestCompressionQuality:
+    def test_rap_loss_reasonable_after_prune(
+        self, micro_cfg, micro_weights, micro_rap, micro_calib
+    ):
+        """On an untrained micro model the pruned loss should stay within a
+        modest factor of baseline (scores are still informative)."""
+        x, y = micro_calib[0]
+        base = float(loss_fn(micro_cfg, baseline_spec(micro_cfg), micro_weights,
+                             jnp.asarray(x), jnp.asarray(y)))
+        pruned = float(loss_fn(micro_cfg, micro_rap["spec"], micro_rap["weights"],
+                               jnp.asarray(x), jnp.asarray(y)))
+        assert pruned < base * 1.5

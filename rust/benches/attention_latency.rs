@@ -1,0 +1,64 @@
+//! Fig. 7 / Table 16 (prefill side): attention-path latency per variant.
+//!
+//! Times (a) PJRT prefill executables at the exported buckets and (b) the
+//! rust engine's prefill loop, per method at rho=30%, reporting ratios vs
+//! baseline — the paper's "attention latency relative to baseline" series.
+
+use rap::experiments::bench_support::{budgets, BenchReport};
+use rap::manifest::Manifest;
+use rap::model::load_engine;
+use rap::runtime::{PjrtContext, PjrtEngine};
+use rap::util::json::{num, s};
+use rap::util::stats::bench;
+
+fn main() {
+    let (warm, budget) = budgets();
+    let mut report = BenchReport::new("attention_latency");
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("no artifacts; run `make artifacts` first");
+        return;
+    };
+    let corpus = manifest.eval_corpus().unwrap();
+    let model = "tinyllama";
+    let keys = ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"];
+
+    // (a) PJRT prefill bucket 128.
+    if let Ok(pctx) = PjrtContext::cpu() {
+        let mut base = 0.0f64;
+        for key in keys {
+            let Ok(engine) = PjrtEngine::load(&pctx, &manifest, model, key) else { continue };
+            let tokens: Vec<i32> = corpus[..128].iter().map(|&b| b as i32).collect();
+            let st = bench(&format!("pjrt_prefill128/{key}"), warm, budget, || {
+                let _ = engine.prefill(&pctx, "prefill128", &tokens, 1).unwrap();
+            });
+            if key == "baseline_r00" {
+                base = st.mean_ns;
+            }
+            println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
+            report.record(
+                &st,
+                vec![("variant", s(key)), ("rel", num(st.mean_ns / base))],
+            );
+        }
+    }
+
+    // (b) Rust engine prefill of 128 tokens.
+    let mut base = 0.0f64;
+    for key in keys {
+        let Ok(engine) = load_engine(&manifest, model, key) else { continue };
+        let prompt = &corpus[..128];
+        let st = bench(&format!("engine_prefill128/{key}"), warm, budget, || {
+            let mut cache = engine.new_cache(160);
+            let _ = engine.prefill(prompt, &mut cache);
+        });
+        if key == "baseline_r00" {
+            base = st.mean_ns;
+        }
+        println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
+        report.record(
+            &st,
+            vec![("variant", s(key)), ("rel", num(st.mean_ns / base))],
+        );
+    }
+    report.finish();
+}

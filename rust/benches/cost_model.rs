@@ -1,0 +1,70 @@
+//! Bench + regeneration for Table 2 / Table 6 / Table 10 (analytic side):
+//! evaluates the closed-form cost model across the full (method, rho, H, D)
+//! grid and times it (the model itself is used inside the scheduler's
+//! admission accounting, so its speed matters a little; its *values* are
+//! the real deliverable and are printed for comparison with the paper).
+
+use rap::config::Method;
+use rap::cost::{head_cost, layer_kv_params, uniform_spec, variant_accounting, Granularity};
+use rap::config::ModelConfig;
+use rap::experiments::bench_support::{budgets, BenchReport};
+use rap::util::json::num;
+use rap::util::stats::{bench, black_box};
+
+fn main() {
+    let (warm, budget) = budgets();
+    let mut report = BenchReport::new("cost_model");
+
+    // Value regeneration (Table 6 row check).
+    let base = head_cost(Method::Baseline, 32, 128, 1, 1.0).flops;
+    println!("Table 6 @ rho=30%:");
+    for (m, paper) in [
+        (Method::Svd, 1.514),
+        (Method::Palu, 1.491),
+        (Method::Rap, 1.468),
+    ] {
+        let got = head_cost(m, 32, 128, 1, 0.7).flops / 1e6;
+        println!(
+            "  {:>8}: {:.3}M (paper {:.3}M, base {:.3}M)",
+            m.name(),
+            got,
+            paper,
+            base / 1e6
+        );
+        assert!((got - paper).abs() < 0.002);
+    }
+
+    let st = bench("head_cost_grid(3x5x3x4)", warm, budget, || {
+        let mut acc = 0.0f64;
+        for m in [Method::Svd, Method::Palu, Method::Rap] {
+            for rho in [0.1, 0.2, 0.3, 0.4, 0.5] {
+                for h in [1usize, 8, 32] {
+                    for d in [64usize, 96, 128, 256] {
+                        acc += head_cost(m, h, d, 1, 1.0 - rho).flops;
+                    }
+                }
+            }
+        }
+        black_box(acc);
+    });
+    report.record(&st, vec![("cases", num(180.0))]);
+
+    let cfg = ModelConfig::paper_llama();
+    let st = bench("variant_accounting(paper_llama)", warm, budget, || {
+        let spec = uniform_spec(&cfg, Method::Rap, 0.3);
+        black_box(variant_accounting(&cfg, &spec, 4096));
+    });
+    report.record(&st, vec![]);
+
+    let st = bench("granularity_bounds(paper_llama)", warm, budget, || {
+        let mut acc = 0.0;
+        for m in [Method::Svd, Method::Palu] {
+            for g in [Granularity::PerHead, Granularity::CrossHead] {
+                acc += layer_kv_params(&cfg, m, 0.7, g);
+            }
+        }
+        black_box(acc);
+    });
+    report.record(&st, vec![]);
+    report.finish();
+}

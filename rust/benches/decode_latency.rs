@@ -1,0 +1,83 @@
+//! Fig. 11 / Table 16 (decode side): per-token decode latency vs KV length,
+//! per method — the series where SVD/PaLU pay per-step reconstruction of
+//! the whole visible cache and RAP does not.
+
+use rap::experiments::bench_support::{budgets, BenchReport};
+use rap::manifest::Manifest;
+use rap::model::load_engine;
+use rap::runtime::{PjrtContext, PjrtEngine};
+use rap::util::json::{num, s};
+use rap::util::stats::bench;
+
+fn main() {
+    let (warm, budget) = budgets();
+    let mut report = BenchReport::new("decode_latency");
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("no artifacts; run `make artifacts` first");
+        return;
+    };
+    let corpus = manifest.eval_corpus().unwrap();
+    let model = "tinyllama";
+    let keys = ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"];
+
+    // (a) PJRT decode at mid-context.
+    if let Ok(pctx) = PjrtContext::cpu() {
+        let mut base = 0.0f64;
+        for key in keys {
+            let Ok(engine) = PjrtEngine::load(&pctx, &manifest, model, key) else { continue };
+            let mut caches = engine.empty_caches(1).unwrap();
+            for (i, &b) in corpus[..8].iter().enumerate() {
+                caches = engine
+                    .decode(&pctx, 1, &[b as i32], &[i as i32], &caches)
+                    .unwrap()
+                    .caches;
+            }
+            let pos = (engine.s_max / 2) as i32;
+            let st = bench(&format!("pjrt_decode/{key}"), warm, budget, || {
+                let _ = engine.decode(&pctx, 1, &[65], &[pos], &caches).unwrap();
+            });
+            if key == "baseline_r00" {
+                base = st.mean_ns;
+            }
+            println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
+            report.record(
+                &st,
+                vec![("variant", s(key)), ("rel", num(st.mean_ns / base)), ("kind", s("pjrt"))],
+            );
+        }
+    }
+
+    // (b) Rust engine decode step across KV lengths (the Fig. 11 sweep).
+    for ctx_len in [64usize, 192, 320] {
+        let mut base = 0.0f64;
+        for key in keys {
+            let Ok(engine) = load_engine(&manifest, model, key) else { continue };
+            let mut cache = engine.new_cache(ctx_len + 8);
+            for (i, &t) in corpus[..ctx_len].iter().enumerate() {
+                engine.step(t, i, &mut cache);
+            }
+            let st = bench(
+                &format!("engine_decode/ctx{ctx_len}/{key}"),
+                warm,
+                budget,
+                || {
+                    engine.step(corpus[ctx_len], ctx_len, &mut cache);
+                },
+            );
+            if key == "baseline_r00" {
+                base = st.mean_ns;
+            }
+            println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
+            report.record(
+                &st,
+                vec![
+                    ("variant", s(key)),
+                    ("ctx", num(ctx_len as f64)),
+                    ("rel", num(st.mean_ns / base)),
+                    ("kind", s("engine")),
+                ],
+            );
+        }
+    }
+    report.finish();
+}

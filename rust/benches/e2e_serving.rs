@@ -1,0 +1,83 @@
+//! Table 17 bench: end-to-end serving throughput through the coordinator
+//! (continuous batching + paged KV + PJRT) on the same seeded trace per
+//! variant.
+
+use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use rap::experiments::bench_support::BenchReport;
+use rap::kvcache::CacheShape;
+use rap::manifest::Manifest;
+use rap::runtime::backend::PjrtBackend;
+use rap::runtime::{PjrtContext, PjrtEngine};
+use rap::util::json::{num, s};
+use rap::util::stats::summarize;
+use rap::workload::{generate, WorkloadConfig};
+
+fn main() {
+    let mut report = BenchReport::new("e2e_serving");
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("no artifacts; run `make artifacts` first");
+        return;
+    };
+    let Ok(pctx) = PjrtContext::cpu() else { return };
+    let corpus = manifest.eval_corpus().unwrap();
+    let model = "tinyllama";
+    let fast = std::env::var("RAP_BENCH_FAST").is_ok();
+    let wl = WorkloadConfig {
+        n_requests: if fast { 6 } else { 16 },
+        arrival_rate: 100.0,
+        prompt_lens: vec![16, 32, 32],
+        min_new: 8,
+        max_new: if fast { 12 } else { 24 },
+        seed: 42,
+    };
+
+    let mut base_tps = 0.0f64;
+    for key in ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"] {
+        let entry = manifest.model(model).unwrap();
+        if !entry.hlo.contains_key(key) {
+            continue;
+        }
+        let engine = PjrtEngine::load(&pctx, &manifest, model, key).unwrap();
+        let backend = PjrtBackend::new(&pctx, &engine).unwrap();
+        let shape = CacheShape::of(&entry.config, &entry.variants[key].spec);
+        let mut coord = Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 4,
+                    buckets: engine.decode_batches(),
+                    max_queue: 128,
+                },
+                kv_budget_bytes: 32 << 20,
+            },
+        );
+        for tr in generate(&wl, &corpus) {
+            coord.submit(tr.request);
+        }
+        coord.run_to_completion().unwrap();
+        let m = &coord.metrics;
+        if key == "baseline_r00" {
+            base_tps = m.throughput_tps();
+        }
+        println!(
+            "{key:<14} {:>7.1} tok/s ({:>4.0}% of baseline)  ttft {:>6.1} ms  dec {:>5.2} ms/tok  occupancy {:.2}",
+            m.throughput_tps(),
+            100.0 * m.throughput_tps() / base_tps,
+            m.ttft.mean(),
+            m.decode_per_token.mean(),
+            m.decode_batch_occupancy.mean(),
+        );
+        let st = summarize(key, vec![m.wall.as_nanos() as f64]);
+        report.record(
+            &st,
+            vec![
+                ("variant", s(key)),
+                ("tps", num(m.throughput_tps())),
+                ("rel_tps", num(m.throughput_tps() / base_tps)),
+                ("ttft_ms", num(m.ttft.mean())),
+            ],
+        );
+    }
+    report.finish();
+}

@@ -1,0 +1,62 @@
+//! Fig. 6 / Table 12 bench: measured per-token FLOPs by method and rho,
+//! counted by the instrumented engine, printed as savings vs baseline
+//! (values regenerated; timing is incidental).
+
+use rap::experiments::bench_support::BenchReport;
+use rap::manifest::Manifest;
+use rap::model::load_engine;
+use rap::util::json::{num, s};
+use rap::util::stats::summarize;
+
+fn main() {
+    let mut report = BenchReport::new("flops");
+    let Ok(manifest) = Manifest::load_default() else {
+        println!("no artifacts; run `make artifacts` first");
+        return;
+    };
+    let corpus = manifest.eval_corpus().unwrap();
+    let model = "tinyllama";
+    let ctx_len = 192usize;
+    let mut base = 0u64;
+    for rho in [0usize, 10, 20, 30, 40, 50] {
+        for m in ["svd", "palu", "rap"] {
+            let key = if rho == 0 {
+                if m != "svd" {
+                    continue;
+                }
+                "baseline_r00".to_string()
+            } else {
+                format!("{m}_r{rho}")
+            };
+            let Ok(engine) = load_engine(&manifest, model, &key) else { continue };
+            let mut cache = engine.new_cache(ctx_len + 2);
+            for (i, &t) in corpus[..ctx_len].iter().enumerate() {
+                engine.step(t, i, &mut cache);
+            }
+            engine.flops.take();
+            let t0 = std::time::Instant::now();
+            engine.step(corpus[ctx_len], ctx_len, &mut cache);
+            let ns = t0.elapsed().as_nanos() as f64;
+            let step = engine.flops.take();
+            if key == "baseline_r00" {
+                base = step;
+            }
+            let saving = 1.0 - step as f64 / base as f64;
+            println!(
+                "{key:<14} step {:>10.3}M FLOPs  saving {:>6.1}%",
+                step as f64 / 1e6,
+                100.0 * saving
+            );
+            let st = summarize(&key, vec![ns]);
+            report.record(
+                &st,
+                vec![
+                    ("variant", s(key.clone())),
+                    ("flops", num(step as f64)),
+                    ("saving", num(saving)),
+                ],
+            );
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,56 @@
+//! KV-cache manager bench: allocator throughput, capacity gain under
+//! compression, and int4 quantization round-trip cost.
+
+use rap::experiments::bench_support::{budgets, BenchReport};
+use rap::kvcache::{quant, CacheShape, PagedKvCache, BLOCK_TOKENS};
+use rap::util::json::num;
+use rap::util::rng::Rng;
+use rap::util::stats::{bench, black_box};
+
+fn shape(k: usize, v: usize) -> CacheShape {
+    CacheShape {
+        n_layers: 4,
+        n_kv_heads: 4,
+        k_width: vec![k; 4],
+        v_width: vec![v; 4],
+    }
+}
+
+fn main() {
+    let (warm, budget) = budgets();
+    let mut report = BenchReport::new("kvcache");
+
+    // Capacity: tokens a 64 MiB budget holds, full vs rho=30% widths.
+    let full = PagedKvCache::new(shape(24, 24), 64 << 20);
+    let rap = PagedKvCache::new(shape(17, 17), 64 << 20);
+    println!(
+        "64MiB budget: baseline {} tokens, rap@30% {} tokens ({:.2}x)",
+        full.free_token_capacity(),
+        rap.free_token_capacity(),
+        rap.free_token_capacity() as f64 / full.free_token_capacity() as f64
+    );
+
+    let st = bench("reserve_release_cycle", warm, budget, || {
+        let mut c = PagedKvCache::new(shape(24, 24), 8 << 20);
+        for sess in 0..64u64 {
+            let _ = c.reserve(sess, BLOCK_TOKENS * 2);
+        }
+        for sess in 0..64u64 {
+            c.release(sess);
+        }
+        black_box(c.used_blocks());
+    });
+    report.record(&st, vec![("sessions", num(64.0))]);
+
+    // int4 quantization round-trip at latent row widths.
+    let mut rng = Rng::new(5);
+    for width in [16usize, 24, 48, 128] {
+        let row: Vec<f32> = (0..width).map(|_| rng.normal_f32()).collect();
+        let st = bench(&format!("int4_roundtrip/{width}"), warm, budget, || {
+            let mut r = row.clone();
+            quant::roundtrip(black_box(&mut r));
+        });
+        report.record(&st, vec![("width", num(width as f64))]);
+    }
+    report.finish();
+}

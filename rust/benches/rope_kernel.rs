@@ -1,0 +1,131 @@
+//! Fig. 16 / Tables 8 & 11 bench: RoPE application strategies.
+//!
+//! Level 1 — rust hot path: contiguous full-dim vs materialising gather
+//! ("PyTorch") vs fused per-head-table (`RopeTable::apply_fused`, the RAP
+//! kernel) across rho and S.
+//! Level 2 — compiled PJRT graphs from `artifacts/hlo/ropebench` (the
+//! Pallas kernels), when artifacts are present.
+
+use rap::config::Pairing;
+use rap::experiments::bench_support::{budgets, BenchReport};
+use rap::manifest::Manifest;
+use rap::rope::{apply_full, apply_gather, RopeTable};
+use rap::runtime::PjrtContext;
+use rap::util::json::{num, s};
+use rap::util::rng::Rng;
+use rap::util::stats::{bench, black_box};
+
+fn main() {
+    let (warm, budget) = budgets();
+    let mut report = BenchReport::new("rope_kernel");
+    let mut rng = Rng::new(11);
+    let head_dim = 128usize;
+    let h = 8usize;
+
+    for s_len in [1usize, 128, 512] {
+        // contiguous baseline (full dim, shared table)
+        let mut xs: Vec<Vec<f32>> = (0..h * s_len)
+            .map(|_| (0..head_dim).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let st = bench(&format!("contig/S{s_len}"), warm, budget, || {
+            for (i, row) in xs.iter_mut().enumerate() {
+                apply_full(row, i % s_len + 1, Pairing::Half, 10_000.0);
+            }
+        });
+        report.record(&st, vec![("impl", s("contig")), ("seq", num(s_len as f64))]);
+
+        for rho in [0.3f64, 0.5] {
+            let m = (((1.0 - rho) * (head_dim / 2) as f64).round()) as usize;
+            let idx: Vec<Vec<usize>> = (0..h)
+                .map(|_| rng.choose_distinct(head_dim / 2, m))
+                .collect();
+            let table = RopeTable::new(&idx, head_dim, 10_000.0);
+            let mut xs: Vec<Vec<f32>> = (0..h * s_len)
+                .map(|_| (0..2 * m).map(|_| rng.normal_f32()).collect())
+                .collect();
+
+            let st = bench(
+                &format!("gather/S{s_len}/rho{:.0}", rho * 100.0),
+                warm,
+                budget,
+                || {
+                    for (i, row) in xs.iter_mut().enumerate() {
+                        apply_gather(row, i % s_len + 1, &idx[i % h], head_dim, 10_000.0);
+                    }
+                },
+            );
+            report.record(
+                &st,
+                vec![("impl", s("gather")), ("seq", num(s_len as f64)), ("rho", num(rho))],
+            );
+
+            let st = bench(
+                &format!("fused/S{s_len}/rho{:.0}", rho * 100.0),
+                warm,
+                budget,
+                || {
+                    for (i, row) in xs.iter_mut().enumerate() {
+                        table.apply_fused(i % h, row, black_box(i % s_len + 1));
+                    }
+                },
+            );
+            report.record(
+                &st,
+                vec![("impl", s("fused")), ("seq", num(s_len as f64)), ("rho", num(rho))],
+            );
+        }
+    }
+
+    // Level 2: compiled Pallas/XLA graphs (skipped gracefully if artifacts
+    // are absent, e.g. bare `cargo bench` before `make artifacts`).
+    if let Ok(manifest) = Manifest::load_default() {
+        if let Ok(pctx) = PjrtContext::cpu() {
+            let mut done = 0;
+            for e in &manifest.rope_bench {
+                if !(e.batch == 1 && e.seq == 512 && matches!(e.impl_name.as_str(), "contig" | "gather" | "fused"))
+                {
+                    continue;
+                }
+                if e.impl_name != "contig" && (e.ratio - 0.3).abs() > 1e-6 {
+                    continue;
+                }
+                let Ok(exe) = pctx.compile_file(&manifest.root.join(&e.path)) else { continue };
+                let hh = 8usize;
+                let width = if e.impl_name == "contig" { 2 * e.m } else { 2 * e.m };
+                let n = e.batch * hh * e.seq * width;
+                let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let pos: Vec<i32> = (0..e.seq as i32).collect();
+                let device = pctx.client.devices().into_iter().next().unwrap();
+                let xb = pctx
+                    .client
+                    .buffer_from_host_buffer(&x, &[e.batch, hh, e.seq, width], Some(&device))
+                    .unwrap();
+                let pb = pctx
+                    .client
+                    .buffer_from_host_buffer(&pos, &[e.seq], Some(&device))
+                    .unwrap();
+                let st = bench(
+                    &format!("pjrt/{}/b{}s{}r{:.0}", e.impl_name, e.batch, e.seq, e.ratio * 100.0),
+                    warm,
+                    budget,
+                    || {
+                        let _ = exe.execute_b(&[&xb, &pb]).unwrap();
+                    },
+                );
+                report.record(
+                    &st,
+                    vec![
+                        ("impl", s(format!("pjrt_{}", e.impl_name))),
+                        ("seq", num(e.seq as f64)),
+                        ("rho", num(e.ratio)),
+                    ],
+                );
+                done += 1;
+            }
+            if done == 0 {
+                println!("(no matching rope-bench artifacts; run `make artifacts`)");
+            }
+        }
+    }
+    report.finish();
+}

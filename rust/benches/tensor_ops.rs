@@ -1,0 +1,62 @@
+//! Tensor-kernel microbench: the L3 hot-path primitives (matmul/vecmat/
+//! softmax/rms-norm) at the shapes the engine actually uses.  Baseline for
+//! the §Perf optimization log in EXPERIMENTS.md.
+
+use rap::experiments::bench_support::{budgets, BenchReport};
+use rap::tensor::ops::{matmul, rms_norm, softmax_inplace, vecmat};
+use rap::tensor::Tensor;
+use rap::util::json::num;
+use rap::util::rng::Rng;
+use rap::util::stats::{bench, black_box};
+
+fn main() {
+    let (warm, budget) = budgets();
+    let mut report = BenchReport::new("tensor_ops");
+    let mut rng = Rng::new(3);
+
+    // vecmat at the engine's projection shapes (d_model x q_dim etc.)
+    for (k, n) in [(192usize, 192usize), (192, 512), (512, 192), (192, 96)] {
+        let w = Tensor::randn(vec![k, n], 1.0, &mut rng);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+        let st = bench(&format!("vecmat/{k}x{n}"), warm, budget, || {
+            black_box(vecmat(&x, &w));
+        });
+        let flops = 2.0 * (k * n) as f64;
+        report.record(
+            &st,
+            vec![
+                ("k", num(k as f64)),
+                ("n", num(n as f64)),
+                ("gflops", num(flops / st.mean_ns)),
+            ],
+        );
+    }
+
+    // matmul at prefill shapes.
+    for (m, k, n) in [(32usize, 192usize, 192usize), (128, 192, 512)] {
+        let a = Tensor::randn(vec![m, k], 1.0, &mut rng);
+        let b = Tensor::randn(vec![k, n], 1.0, &mut rng);
+        let st = bench(&format!("matmul/{m}x{k}x{n}"), warm, budget, || {
+            black_box(matmul(&a, &b));
+        });
+        let flops = 2.0 * (m * k * n) as f64;
+        report.record(&st, vec![("gflops", num(flops / st.mean_ns))]);
+    }
+
+    // softmax + rms-norm at attention-row shapes.
+    for n in [128usize, 384, 1024] {
+        let mut x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let st = bench(&format!("softmax/{n}"), warm, budget, || {
+            softmax_inplace(black_box(&mut x));
+        });
+        report.record(&st, vec![("n", num(n as f64))]);
+    }
+    let w: Vec<f32> = (0..192).map(|_| 1.0).collect();
+    let x: Vec<f32> = (0..192).map(|_| rng.normal_f32()).collect();
+    let mut out = vec![0.0f32; 192];
+    let st = bench("rms_norm/192", warm, budget, || {
+        rms_norm(black_box(&x), &w, 1e-5, &mut out);
+    });
+    report.record(&st, vec![]);
+    report.finish();
+}

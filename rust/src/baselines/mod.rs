@@ -1,0 +1,10 @@
+//! Native implementations of the factorization baselines the paper
+//! compares against (§6.1): naive per-head truncated SVD (Eq. 1) and
+//! PaLU-style whitened SVD with B_v absorption.
+//!
+//! The shipped artifacts are produced by the Python pipeline; these native
+//! versions exist so the full comparison can also be constructed and
+//! property-tested in Rust (used by the `plan` CLI and unit suites).
+
+pub mod palu;
+pub mod svd;

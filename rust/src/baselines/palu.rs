@@ -1,0 +1,201 @@
+//! PaLU-style whitened SVD + B_v absorption (native mirror of
+//! `python/compile/rap/palu.py`).
+//!
+//! Whitening: with activation covariance C = S S^T (Cholesky), truncating
+//! the SVD of S^T W minimises ||X (W − Ŵ)||_F rather than ||W − Ŵ||_F —
+//! the same data-aware objective PaLU/SVD-LLM use.
+
+use crate::config::ModelConfig;
+use crate::tensor::linalg::{cholesky, solve_upper_from_lower, svd_thin};
+use crate::tensor::ops::matmul;
+use crate::tensor::Tensor;
+
+/// Whitened per-head truncated SVD.
+/// `w`: [D, H*dh]; `cov`: [D, D] accumulated X^T X; returns
+/// (A [D, H*rank], B per head [rank, dh]).
+pub fn whitened_svd_per_head(
+    w: &Tensor,
+    cov: &Tensor,
+    n_heads: usize,
+    rank: usize,
+    damp: f64,
+) -> (Tensor, Vec<Tensor>) {
+    let (d, hd) = w.dims2();
+    let dh = hd / n_heads;
+    // Damped covariance keeps Cholesky well-posed.
+    let mut c = cov.clone();
+    let trace: f64 = (0..d).map(|i| c.at2(i, i) as f64).sum();
+    let eps = (damp * trace / d as f64) as f32;
+    for i in 0..d {
+        c.data[i * d + i] += eps;
+    }
+    let s_mat = cholesky(&c); // lower L with C = L L^T
+
+    let mut a = Tensor::zeros(vec![d, n_heads * rank]);
+    let mut bs = Vec::with_capacity(n_heads);
+    for h in 0..n_heads {
+        let cols: Vec<usize> = (h * dh..(h + 1) * dh).collect();
+        let wh = w.gather_cols(&cols);
+        let wp = matmul(&s_mat.transpose2(), &wh); // S^T W
+        let (u, sv, v) = svd_thin(&wp);
+        // U_r Σ_r
+        let mut ur = Tensor::zeros(vec![d, rank]);
+        for i in 0..d {
+            for r in 0..rank {
+                ur.data[i * rank + r] = u.data[i * dh + r] * sv[r];
+            }
+        }
+        // A_h = S^{-T} U_r Σ_r : solve S^T A = U_r Σ_r.
+        let a_h = solve_upper_from_lower(&s_mat, &ur);
+        for i in 0..d {
+            for r in 0..rank {
+                a.data[i * (n_heads * rank) + h * rank + r] = a_h.data[i * rank + r];
+            }
+        }
+        let mut b = Tensor::zeros(vec![rank, dh]);
+        for r in 0..rank {
+            for j in 0..dh {
+                b.data[r * dh + j] = v.data[j * dh + r];
+            }
+        }
+        bs.push(b);
+    }
+    (a, bs)
+}
+
+/// Absorb B_v into W_o (GQA-aware): query head h consumes KV head
+/// g = h / group's latent V, so its [dh, D] row block of W_o becomes
+/// B_v[g] @ block, of shape [rv, D].
+pub fn absorb_bv_into_wo(cfg: &ModelConfig, wo: &Tensor, b_v: &[Tensor]) -> Tensor {
+    let (hd, d) = wo.dims2();
+    let dh = cfg.head_dim;
+    assert_eq!(hd, cfg.n_heads * dh);
+    let rv = b_v[0].dims2().0;
+    let mut out = Tensor::zeros(vec![cfg.n_heads * rv, d]);
+    for h in 0..cfg.n_heads {
+        let g = h / cfg.group_size();
+        let block = wo.slice_rows(h * dh, (h + 1) * dh); // [dh, D]
+        let absorbed = matmul(&b_v[g], &block); // [rv, D]
+        out.data[h * rv * d..(h + 1) * rv * d].copy_from_slice(&absorbed.data);
+    }
+    out
+}
+
+/// Activation-space reconstruction error tr((W−Ŵ)^T C (W−Ŵ)) for one head.
+pub fn activation_error(w_h: &Tensor, a_h: &Tensor, b_h: &Tensor, cov: &Tensor) -> f64 {
+    let rec = matmul(a_h, b_h);
+    let (d, dh) = w_h.dims2();
+    let mut dw = Tensor::zeros(vec![d, dh]);
+    for i in 0..d * dh {
+        dw.data[i] = w_h.data[i] - rec.data[i];
+    }
+    let cd = matmul(cov, &dw); // [D, dh]
+    let mut tr = 0.0f64;
+    for i in 0..d {
+        for j in 0..dh {
+            tr += dw.data[i * dh + j] as f64 * cd.data[i * dh + j] as f64;
+        }
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::svd::truncated_svd_per_head;
+    use crate::config::Pairing;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 16,
+            d_model: 20,
+            n_layers: 1,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 8,
+            mlp_hidden: 16,
+            max_seq: 32,
+            rope_theta: 10_000.0,
+            pairing: Pairing::Half,
+            norm_eps: 1e-5,
+        }
+    }
+
+    fn spd_cov(d: usize, rng: &mut Rng) -> Tensor {
+        let x = Tensor::randn(vec![4 * d, d], 1.0, rng);
+        matmul(&x.transpose2(), &x)
+    }
+
+    #[test]
+    fn whitened_full_rank_exact() {
+        let mut rng = Rng::new(1);
+        let c = cfg();
+        let w = Tensor::randn(vec![c.d_model, c.kv_dim()], 1.0, &mut rng);
+        let cov = spd_cov(c.d_model, &mut rng);
+        let (a, bs) = whitened_svd_per_head(&w, &cov, c.n_kv_heads, c.head_dim, 1e-8);
+        // reconstruct and compare
+        for h in 0..c.n_kv_heads {
+            let cols: Vec<usize> = (h * c.head_dim..(h + 1) * c.head_dim).collect();
+            let wh = w.gather_cols(&cols);
+            let rank = c.head_dim;
+            let acols: Vec<usize> = (h * rank..(h + 1) * rank).collect();
+            let ah = a.gather_cols(&acols);
+            let rec = matmul(&ah, &bs[h]);
+            assert!(wh.max_abs_diff(&rec) < 1e-2, "head {h}: {}", wh.max_abs_diff(&rec));
+        }
+    }
+
+    #[test]
+    fn whitened_beats_plain_in_activation_norm() {
+        let mut rng = Rng::new(2);
+        let c = cfg();
+        let w = Tensor::randn(vec![c.d_model, c.kv_dim()], 1.0, &mut rng);
+        // strongly anisotropic covariance so whitening matters
+        let mut cov = spd_cov(c.d_model, &mut rng);
+        for i in 0..c.d_model {
+            let scale = if i < 4 { 50.0 } else { 1.0 };
+            for j in 0..c.d_model {
+                cov.data[i * c.d_model + j] *= scale;
+                cov.data[j * c.d_model + i] *= scale;
+            }
+        }
+        let rank = 3;
+        let (a_w, b_w) = whitened_svd_per_head(&w, &cov, c.n_kv_heads, rank, 1e-6);
+        let (a_p, b_p) = truncated_svd_per_head(&w, c.n_kv_heads, rank);
+        for h in 0..c.n_kv_heads {
+            let cols: Vec<usize> = (h * c.head_dim..(h + 1) * c.head_dim).collect();
+            let wh = w.gather_cols(&cols);
+            let aw = a_w.gather_cols(&(h * rank..(h + 1) * rank).collect::<Vec<_>>());
+            let ap = a_p.gather_cols(&(h * rank..(h + 1) * rank).collect::<Vec<_>>());
+            let ew = activation_error(&wh, &aw, &b_w[h], &cov);
+            let ep = activation_error(&wh, &ap, &b_p[h], &cov);
+            assert!(ew <= ep * 1.01, "head {h}: whitened {ew} vs plain {ep}");
+        }
+    }
+
+    #[test]
+    fn absorb_bv_shapes_and_values() {
+        let mut rng = Rng::new(3);
+        let c = cfg();
+        let wo = Tensor::randn(vec![c.q_dim(), c.d_model], 1.0, &mut rng);
+        let rv = 3;
+        let b_v: Vec<Tensor> = (0..c.n_kv_heads)
+            .map(|_| Tensor::randn(vec![rv, c.head_dim], 1.0, &mut rng))
+            .collect();
+        let wo_t = absorb_bv_into_wo(&c, &wo, &b_v);
+        assert_eq!(wo_t.dims2(), (c.n_heads * rv, c.d_model));
+        // functional identity: (p @ B_v[g]) @ wo_block == p @ absorbed_block
+        let p = Tensor::randn(vec![1, rv], 1.0, &mut rng);
+        for h in 0..c.n_heads {
+            let g = h / c.group_size();
+            let full = matmul(
+                &matmul(&p, &b_v[g]),
+                &wo.slice_rows(h * c.head_dim, (h + 1) * c.head_dim),
+            );
+            let absorbed = matmul(&p, &wo_t.slice_rows(h * rv, (h + 1) * rv));
+            assert!(full.max_abs_diff(&absorbed) < 1e-4);
+        }
+    }
+}

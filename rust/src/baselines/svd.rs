@@ -1,0 +1,96 @@
+//! Per-head truncated SVD factorization (paper Eq. 1):
+//! W_h ≈ A_h B_h with A = U_r Σ_r^{1/2}, B = Σ_r^{1/2} V_r^T.
+
+use crate::tensor::{svd_thin, Tensor};
+
+/// Factorize each head block of `w` [D, H*dh] at `rank`; returns
+/// (A [D, H*rank], B per head [rank, dh]).
+pub fn truncated_svd_per_head(
+    w: &Tensor,
+    n_heads: usize,
+    rank: usize,
+) -> (Tensor, Vec<Tensor>) {
+    let (d, hd) = w.dims2();
+    let dh = hd / n_heads;
+    assert!(rank >= 1 && rank <= dh);
+    let mut a = Tensor::zeros(vec![d, n_heads * rank]);
+    let mut bs = Vec::with_capacity(n_heads);
+    for h in 0..n_heads {
+        let cols: Vec<usize> = (h * dh..(h + 1) * dh).collect();
+        let wh = w.gather_cols(&cols); // [D, dh]
+        let (u, s, v) = svd_thin(&wh);
+        let mut b = Tensor::zeros(vec![rank, dh]);
+        for r in 0..rank {
+            let sq = s[r].max(0.0).sqrt();
+            for i in 0..d {
+                a.data[i * (n_heads * rank) + h * rank + r] = u.data[i * dh + r] * sq;
+            }
+            for j in 0..dh {
+                b.data[r * dh + j] = sq * v.data[j * dh + r];
+            }
+        }
+        bs.push(b);
+    }
+    (a, bs)
+}
+
+/// Relative Frobenius reconstruction error over all heads.
+pub fn reconstruction_error(w: &Tensor, a: &Tensor, bs: &[Tensor], n_heads: usize) -> f64 {
+    let (d, hd) = w.dims2();
+    let dh = hd / n_heads;
+    let rank = a.shape[1] / n_heads;
+    let mut err = 0.0f64;
+    let mut base = 0.0f64;
+    for h in 0..n_heads {
+        for i in 0..d {
+            for j in 0..dh {
+                let mut rec = 0.0f64;
+                for r in 0..rank {
+                    rec += a.data[i * (n_heads * rank) + h * rank + r] as f64
+                        * bs[h].data[r * dh + j] as f64;
+                }
+                let orig = w.data[i * hd + h * dh + j] as f64;
+                err += (orig - rec) * (orig - rec);
+                base += orig * orig;
+            }
+        }
+    }
+    (err / base).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_rank_is_exact() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(vec![24, 16], 1.0, &mut rng); // 2 heads of dh=8
+        let (a, bs) = truncated_svd_per_head(&w, 2, 8);
+        assert!(reconstruction_error(&w, &a, &bs, 2) < 1e-4);
+    }
+
+    #[test]
+    fn error_monotone_in_rank() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(vec![32, 24], 1.0, &mut rng); // 2 heads of dh=12
+        let mut prev = f64::INFINITY;
+        for rank in [2, 4, 8, 12] {
+            let (a, bs) = truncated_svd_per_head(&w, 2, rank);
+            let e = reconstruction_error(&w, &a, &bs, 2);
+            assert!(e <= prev + 1e-9, "rank {rank}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(vec![16, 12], 1.0, &mut rng);
+        let (a, bs) = truncated_svd_per_head(&w, 3, 2);
+        assert_eq!(a.dims2(), (16, 6));
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[0].dims2(), (2, 4));
+    }
+}

@@ -1,0 +1,270 @@
+//! Model / variant configuration mirrored from `python/compile/config.py`.
+//!
+//! These are deserialized from `artifacts/manifest.json`, but can also be
+//! constructed directly (the cost model and the Rust pruning planner use
+//! synthetic configs, including the paper's H=32, D=128 architecture).
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pairing {
+    /// (j, j + D/2) — LLaMA/HF layout.
+    Half,
+    /// (2j, 2j + 1) — original RoFormer layout.
+    Interleaved,
+}
+
+impl Pairing {
+    pub fn from_str(s: &str) -> Pairing {
+        match s {
+            "half" => Pairing::Half,
+            "interleaved" => Pairing::Interleaved,
+            other => panic!("unknown pairing {other:?}"),
+        }
+    }
+
+    /// Column indices (j, j') of pair `p` for a head dimension `d`.
+    pub fn pair_cols(&self, p: usize, d: usize) -> (usize, usize) {
+        match self {
+            Pairing::Half => (p, p + d / 2),
+            Pairing::Interleaved => (2 * p, 2 * p + 1),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub mlp_hidden: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub pairing: Pairing,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn n_pairs(&self) -> usize {
+        self.head_dim / 2
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn from_json(v: &Value) -> ModelConfig {
+        ModelConfig {
+            name: v.req("name").as_str().unwrap().to_string(),
+            vocab: v.req("vocab").as_usize().unwrap(),
+            d_model: v.req("d_model").as_usize().unwrap(),
+            n_layers: v.req("n_layers").as_usize().unwrap(),
+            n_heads: v.req("n_heads").as_usize().unwrap(),
+            n_kv_heads: v.req("n_kv_heads").as_usize().unwrap(),
+            head_dim: v.req("head_dim").as_usize().unwrap(),
+            mlp_hidden: v.req("mlp_hidden").as_usize().unwrap(),
+            max_seq: v.req("max_seq").as_usize().unwrap(),
+            rope_theta: v.req("rope_theta").as_f64().unwrap(),
+            pairing: Pairing::from_str(v.req("pairing").as_str().unwrap()),
+            norm_eps: v.req("norm_eps").as_f64().unwrap() as f32,
+        }
+    }
+
+    /// The paper's evaluated architecture (LLaMA-3-8B attention geometry:
+    /// H=32 query heads, 8 KV heads, D=128) — used by the analytic cost
+    /// model to regenerate Table 2 / 6 / 10 / 12 at paper scale.
+    pub fn paper_llama() -> ModelConfig {
+        ModelConfig {
+            name: "llama3-8b".into(),
+            vocab: 128_256,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            mlp_hidden: 14336,
+            max_seq: 8192,
+            rope_theta: 500_000.0,
+            pairing: Pairing::Half,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Single-head worst case used in the paper's §3 break-even analysis.
+    pub fn single_head() -> ModelConfig {
+        ModelConfig {
+            name: "single-head".into(),
+            vocab: 32_000,
+            d_model: 128,
+            n_layers: 1,
+            n_heads: 1,
+            n_kv_heads: 1,
+            head_dim: 128,
+            mlp_hidden: 512,
+            max_seq: 4096,
+            rope_theta: 10_000.0,
+            pairing: Pairing::Half,
+            norm_eps: 1e-5,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Baseline,
+    Svd,
+    Palu,
+    Rap,
+}
+
+impl Method {
+    pub fn from_str(s: &str) -> Method {
+        match s {
+            "baseline" => Method::Baseline,
+            "svd" => Method::Svd,
+            "palu" => Method::Palu,
+            "rap" => Method::Rap,
+            other => panic!("unknown method {other:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Baseline => "baseline",
+            Method::Svd => "svd",
+            Method::Palu => "palu",
+            Method::Rap => "rap",
+        }
+    }
+
+    /// Does serving this method require reconstructing K to full dimension?
+    pub fn reconstructs_k(&self) -> bool {
+        matches!(self, Method::Svd | Method::Palu)
+    }
+
+    /// Does it require reconstructing V?
+    pub fn reconstructs_v(&self) -> bool {
+        matches!(self, Method::Svd)
+    }
+}
+
+/// A compressed variant: per-layer latent widths (+ retained pair indices
+/// for RAP).  Mirrors `compile.config.VariantSpec`.
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub method: Method,
+    pub ratio: f64,
+    pub model: String,
+    pub tag: String,
+    pub key: String,
+    /// Latent K width per KV head, per layer (2m for RAP, rank for SVD/PaLU,
+    /// head_dim for baseline).
+    pub k_rank: Vec<usize>,
+    /// Latent V width per KV head, per layer.
+    pub v_rank: Vec<usize>,
+    /// RAP only: retained pair indices `[layer][kv_head][m]`.
+    pub k_pairs: Vec<Vec<Vec<usize>>>,
+}
+
+impl VariantSpec {
+    pub fn from_json(v: &Value) -> VariantSpec {
+        let k_pairs = v
+            .get("k_pairs")
+            .and_then(|p| p.as_arr())
+            .map(|layers| {
+                layers
+                    .iter()
+                    .map(|heads| {
+                        heads
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(|h| h.usize_arr())
+                            .collect()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        VariantSpec {
+            method: Method::from_str(v.req("method").as_str().unwrap()),
+            ratio: v.req("ratio").as_f64().unwrap(),
+            model: v.req("model").as_str().unwrap().to_string(),
+            tag: v.get("tag").and_then(|t| t.as_str()).unwrap_or("").to_string(),
+            key: v.req("key").as_str().unwrap().to_string(),
+            k_rank: v.req("k_rank").usize_arr(),
+            v_rank: v.req("v_rank").usize_arr(),
+            k_pairs,
+        }
+    }
+
+    pub fn baseline(cfg: &ModelConfig) -> VariantSpec {
+        VariantSpec {
+            method: Method::Baseline,
+            ratio: 0.0,
+            model: cfg.name.clone(),
+            tag: String::new(),
+            key: "baseline".into(),
+            k_rank: vec![cfg.head_dim; cfg.n_layers],
+            v_rank: vec![cfg.head_dim; cfg.n_layers],
+            k_pairs: vec![vec![(0..cfg.n_pairs()).collect(); cfg.n_kv_heads]; cfg.n_layers],
+        }
+    }
+
+    /// Mean fraction of the baseline KV cache retained by this variant.
+    pub fn kv_retained(&self, cfg: &ModelConfig) -> f64 {
+        let kept: usize = self.k_rank.iter().sum::<usize>() + self.v_rank.iter().sum::<usize>();
+        kept as f64 / (2.0 * cfg.head_dim as f64 * cfg.n_layers as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn pairing_cols() {
+        assert_eq!(Pairing::Half.pair_cols(2, 8), (2, 6));
+        assert_eq!(Pairing::Interleaved.pair_cols(2, 8), (4, 5));
+    }
+
+    #[test]
+    fn spec_from_json() {
+        let v = json::parse(
+            r#"{"method":"rap","ratio":0.3,"model":"m","tag":"","key":"rap_r30",
+                "k_rank":[8,8],"v_rank":[12,10],
+                "k_pairs":[[[0,1,2,3],[1,2,3,4]],[[0,2,4,6],[1,3,5,7]]]}"#,
+        )
+        .unwrap();
+        let s = VariantSpec::from_json(&v);
+        assert_eq!(s.method, Method::Rap);
+        assert_eq!(s.k_rank, vec![8, 8]);
+        assert_eq!(s.k_pairs[1][0], vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn kv_retained_baseline_is_one() {
+        let cfg = ModelConfig::paper_llama();
+        let b = VariantSpec::baseline(&cfg);
+        assert!((b.kv_retained(&cfg) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn method_reconstruction_flags() {
+        assert!(Method::Svd.reconstructs_k() && Method::Svd.reconstructs_v());
+        assert!(Method::Palu.reconstructs_k() && !Method::Palu.reconstructs_v());
+        assert!(!Method::Rap.reconstructs_k() && !Method::Rap.reconstructs_v());
+    }
+}

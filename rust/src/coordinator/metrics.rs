@@ -1,0 +1,102 @@
+//! Serving metrics: per-request and aggregate (TTFT, per-token latency,
+//! throughput, KV pressure).
+
+use std::time::Duration;
+
+use crate::util::stats::Welford;
+
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    pub queue_ms: f64,
+    /// Time to first token (queue + prefill).
+    pub ttft_ms: f64,
+    pub decode_ms_per_token: f64,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub total_ms: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct AggregateMetrics {
+    pub requests: u64,
+    pub ttft: Welford,
+    pub decode_per_token: Welford,
+    pub queue: Welford,
+    pub total_tokens: u64,
+    pub wall: Duration,
+    pub peak_kv_blocks: usize,
+    pub rejected: u64,
+    pub decode_batches: u64,
+    pub decode_batch_occupancy: Welford,
+}
+
+impl AggregateMetrics {
+    pub fn record(&mut self, m: &RequestMetrics) {
+        self.requests += 1;
+        self.ttft.add(m.ttft_ms);
+        if m.generated_tokens > 0 {
+            self.decode_per_token.add(m.decode_ms_per_token);
+        }
+        self.queue.add(m.queue_ms);
+        self.total_tokens += (m.prompt_tokens + m.generated_tokens) as u64;
+    }
+
+    /// Generated tokens per second of wall time.
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.total_tokens as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} rejected={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
+             ttft: mean {:.1} ms (max {:.1})  decode: mean {:.2} ms/tok  queue: mean {:.1} ms\n\
+             decode batches={} mean occupancy={:.2}  peak kv blocks={}",
+            self.requests,
+            self.rejected,
+            self.total_tokens,
+            self.wall.as_secs_f64(),
+            self.throughput_tps(),
+            self.ttft.mean(),
+            self.ttft.max,
+            self.decode_per_token.mean(),
+            self.queue.mean(),
+            self.decode_batches,
+            self.decode_batch_occupancy.mean(),
+            self.peak_kv_blocks,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_accumulates() {
+        let mut a = AggregateMetrics::default();
+        a.record(&RequestMetrics {
+            queue_ms: 1.0,
+            ttft_ms: 10.0,
+            decode_ms_per_token: 2.0,
+            prompt_tokens: 5,
+            generated_tokens: 10,
+            total_ms: 30.0,
+        });
+        a.record(&RequestMetrics {
+            queue_ms: 3.0,
+            ttft_ms: 20.0,
+            decode_ms_per_token: 4.0,
+            prompt_tokens: 5,
+            generated_tokens: 10,
+            total_ms: 60.0,
+        });
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.total_tokens, 30);
+        assert!((a.ttft.mean() - 15.0).abs() < 1e-9);
+        a.wall = Duration::from_secs(3);
+        assert!((a.throughput_tps() - 10.0).abs() < 1e-9);
+    }
+}

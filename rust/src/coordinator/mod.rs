@@ -1,0 +1,17 @@
+//! L3 serving coordinator: admission, continuous batching, prefill/decode
+//! scheduling, latent-width-aware KV accounting, metrics.
+//!
+//! The coordinator is backend-agnostic: the same scheduler drives the PJRT
+//! runtime (`runtime::backend::PjrtBackend`, the production path) and the
+//! pure-Rust engine (`model::backend::RustBackend`, used for dense latency
+//! sweeps) — so every experiment exercises the identical batching logic.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::{AggregateMetrics, RequestMetrics};
+pub use request::{Request, RequestId, Response};
+pub use scheduler::{Backend, Coordinator, CoordinatorConfig};

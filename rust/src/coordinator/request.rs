@@ -1,0 +1,50 @@
+//! Request/response types for the serving layer.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Byte-level prompt (vocab 256).
+    pub prompt: Vec<u8>,
+    /// Number of tokens to generate.
+    pub max_new: usize,
+    /// Arrival timestamp (set by the coordinator on submit).
+    pub arrival: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: impl Into<Vec<u8>>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt: prompt.into(),
+            max_new,
+            arrival: None,
+        }
+    }
+
+    /// Total KV tokens this request will need at completion.
+    pub fn total_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub generated: Vec<u8>,
+    pub metrics: super::metrics::RequestMetrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_tokens() {
+        let r = Request::new(1, b"hello".to_vec(), 10);
+        assert_eq!(r.total_tokens(), 15);
+    }
+}

@@ -1,0 +1,326 @@
+//! The serve loop: admission → prefill → continuous decode, over an
+//! abstract `Backend` (PJRT or pure-Rust engine).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::metrics::{AggregateMetrics, RequestMetrics};
+use crate::coordinator::request::{Request, RequestId, Response};
+use crate::kvcache::{CacheShape, PagedKvCache};
+use crate::model::argmax;
+
+/// Model-execution backend.  Implementations own per-session KV state in
+/// whatever representation suits them (host vectors for the Rust engine,
+/// re-uploaded literals for PJRT).
+pub trait Backend {
+    /// Max cache length per session.
+    fn s_max(&self) -> usize;
+    /// Create session state and run the prompt; returns last-token logits.
+    fn prefill(&mut self, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>>;
+    /// One decode step for a batch of (session, token, position).
+    /// Returns logits per entry, in order.
+    fn decode_batch(&mut self, entries: &[(RequestId, u8, usize)]) -> Result<Vec<Vec<f32>>>;
+    /// Drop a finished session's state.
+    fn drop_session(&mut self, session: RequestId);
+}
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+    /// KV memory budget in bytes for the paged allocator.
+    pub kv_budget_bytes: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            batcher: BatcherConfig::default(),
+            kv_budget_bytes: 64 << 20,
+        }
+    }
+}
+
+struct Running {
+    req: Request,
+    generated: Vec<u8>,
+    next_token: u8,
+    pos: usize,
+    ttft_ms: f64,
+    queue_ms: f64,
+    decode_ms: f64,
+    started: Instant,
+}
+
+/// Synchronous coordinator: drives a backend over a stream of requests.
+/// The server wraps it in a thread; benches call `run_to_completion`.
+pub struct Coordinator<B: Backend> {
+    pub backend: B,
+    batcher: Batcher,
+    kv: PagedKvCache,
+    running: BTreeMap<RequestId, Running>,
+    pub metrics: AggregateMetrics,
+    finished: Vec<Response>,
+}
+
+impl<B: Backend> Coordinator<B> {
+    pub fn new(backend: B, shape: CacheShape, cfg: CoordinatorConfig) -> Coordinator<B> {
+        Coordinator {
+            backend,
+            batcher: Batcher::new(cfg.batcher),
+            kv: PagedKvCache::new(shape, cfg.kv_budget_bytes),
+            running: BTreeMap::new(),
+            metrics: AggregateMetrics::default(),
+            finished: Vec::new(),
+        }
+    }
+
+    /// Submit a request (returns false under queue backpressure).
+    pub fn submit(&mut self, mut req: Request) -> bool {
+        req.arrival = Some(Instant::now());
+        let ok = self.batcher.submit(req);
+        if !ok {
+            self.metrics.rejected += 1;
+        }
+        ok
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.queue_len() + self.running.len()
+    }
+
+    /// One scheduler tick: admit + prefill, then one decode round.
+    /// Returns responses completed during this tick.
+    pub fn tick(&mut self) -> Result<Vec<Response>> {
+        // 1. Admission + prefill.
+        for req in self.batcher.admit(&mut self.kv) {
+            let t0 = Instant::now();
+            let queue_ms = req
+                .arrival
+                .map(|a| a.elapsed().as_secs_f64() * 1e3)
+                .unwrap_or(0.0);
+            let logits = self.backend.prefill(req.id, &req.prompt)?;
+            let ttft_ms = queue_ms + t0.elapsed().as_secs_f64() * 1e3;
+            let next = argmax(&logits) as u8;
+            let pos = req.prompt.len();
+            self.running.insert(
+                req.id,
+                Running {
+                    generated: Vec::with_capacity(req.max_new),
+                    next_token: next,
+                    pos,
+                    ttft_ms,
+                    queue_ms,
+                    decode_ms: 0.0,
+                    started: t0,
+                    req,
+                },
+            );
+        }
+        self.metrics.peak_kv_blocks = self.metrics.peak_kv_blocks.max(self.kv.used_blocks());
+
+        // 2. Continuous decode round over all runnable sessions.
+        let runnable: Vec<RequestId> = self
+            .running
+            .iter()
+            .filter(|(_, r)| r.generated.len() < r.req.max_new && r.pos < self.backend.s_max())
+            .map(|(&id, _)| id)
+            .collect();
+        for group in self.batcher.decode_batches(&runnable) {
+            let entries: Vec<(RequestId, u8, usize)> = group
+                .iter()
+                .map(|id| {
+                    let r = &self.running[id];
+                    (*id, r.next_token, r.pos)
+                })
+                .collect();
+            let t0 = Instant::now();
+            let logits = self.backend.decode_batch(&entries)?;
+            let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.metrics.decode_batches += 1;
+            self.metrics.decode_batch_occupancy.add(entries.len() as f64);
+            for ((id, token, _), lg) in entries.iter().zip(logits) {
+                let r = self.running.get_mut(id).unwrap();
+                r.generated.push(*token);
+                r.next_token = argmax(&lg) as u8;
+                r.pos += 1;
+                r.decode_ms += step_ms / entries.len() as f64;
+            }
+        }
+
+        // 3. Collect completions.
+        let done: Vec<RequestId> = self
+            .running
+            .iter()
+            .filter(|(_, r)| r.generated.len() >= r.req.max_new || r.pos >= self.backend.s_max())
+            .map(|(&id, _)| id)
+            .collect();
+        let mut out = Vec::with_capacity(done.len());
+        for id in done {
+            let r = self.running.remove(&id).unwrap();
+            self.batcher.finish(id, &mut self.kv);
+            self.backend.drop_session(id);
+            let m = RequestMetrics {
+                queue_ms: r.queue_ms,
+                ttft_ms: r.ttft_ms,
+                decode_ms_per_token: if r.generated.is_empty() {
+                    0.0
+                } else {
+                    r.decode_ms / r.generated.len() as f64
+                },
+                prompt_tokens: r.req.prompt.len(),
+                generated_tokens: r.generated.len(),
+                total_ms: r.started.elapsed().as_secs_f64() * 1e3,
+            };
+            self.metrics.record(&m);
+            out.push(Response {
+                id,
+                generated: r.generated,
+                metrics: m,
+            });
+        }
+        self.finished.extend(out.clone());
+        Ok(out)
+    }
+
+    /// Drive until every submitted request has completed.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let t0 = Instant::now();
+        while self.pending() > 0 {
+            self.tick()?;
+        }
+        self.metrics.wall += t0.elapsed();
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    pub fn kv_used_blocks(&self) -> usize {
+        self.kv.used_blocks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic toy backend: logits always argmax to (token + 1) % 7.
+    struct ToyBackend {
+        s_max: usize,
+        sessions: std::collections::BTreeMap<RequestId, usize>,
+        decode_calls: usize,
+        batch_sizes: Vec<usize>,
+    }
+
+    impl ToyBackend {
+        fn new(s_max: usize) -> ToyBackend {
+            ToyBackend {
+                s_max,
+                sessions: Default::default(),
+                decode_calls: 0,
+                batch_sizes: vec![],
+            }
+        }
+
+        fn logits_for(token: u8) -> Vec<f32> {
+            let mut l = vec![0.0f32; 256];
+            l[((token as usize) + 1) % 7] = 1.0;
+            l
+        }
+    }
+
+    impl Backend for ToyBackend {
+        fn s_max(&self) -> usize {
+            self.s_max
+        }
+        fn prefill(&mut self, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
+            self.sessions.insert(session, prompt.len());
+            Ok(Self::logits_for(*prompt.last().unwrap_or(&0)))
+        }
+        fn decode_batch(
+            &mut self,
+            entries: &[(RequestId, u8, usize)],
+        ) -> Result<Vec<Vec<f32>>> {
+            self.decode_calls += 1;
+            self.batch_sizes.push(entries.len());
+            Ok(entries.iter().map(|&(_, t, _)| Self::logits_for(t)).collect())
+        }
+        fn drop_session(&mut self, session: RequestId) {
+            self.sessions.remove(&session);
+        }
+    }
+
+    fn coordinator(max_sessions: usize) -> Coordinator<ToyBackend> {
+        let shape = CacheShape {
+            n_layers: 2,
+            n_kv_heads: 2,
+            k_width: vec![8, 8],
+            v_width: vec![8, 8],
+        };
+        Coordinator::new(
+            ToyBackend::new(64),
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions,
+                    buckets: vec![1, 4],
+                    max_queue: 100,
+                },
+                kv_budget_bytes: 16 << 20,
+            },
+        )
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let mut c = coordinator(4);
+        for i in 0..10 {
+            assert!(c.submit(Request::new(i, vec![1, 2, 3], 5)));
+        }
+        let responses = c.run_to_completion().unwrap();
+        assert_eq!(responses.len(), 10);
+        for r in &responses {
+            assert_eq!(r.generated.len(), 5);
+            // deterministic chain: 3 -> 4 -> 5 -> 6 -> 0 -> 1
+            assert_eq!(r.generated, vec![4, 5, 6, 0, 1]);
+        }
+        assert_eq!(c.metrics.requests, 10);
+        assert_eq!(c.backend.sessions.len(), 0, "all sessions dropped");
+    }
+
+    #[test]
+    fn batches_fill_buckets() {
+        let mut c = coordinator(8);
+        for i in 0..8 {
+            c.submit(Request::new(i, vec![9], 3));
+        }
+        c.run_to_completion().unwrap();
+        // With 8 concurrent sessions and buckets [1,4], most decode rounds
+        // should use the 4-bucket.
+        let fours = c.backend.batch_sizes.iter().filter(|&&b| b == 4).count();
+        assert!(fours >= 4, "batch sizes: {:?}", c.backend.batch_sizes);
+        assert!(c.metrics.decode_batch_occupancy.mean() > 1.5);
+    }
+
+    #[test]
+    fn respects_s_max() {
+        let mut c = coordinator(2);
+        // prompt 60 + max_new 100 but s_max 64 -> generation truncated.
+        c.submit(Request::new(1, vec![0u8; 60], 100));
+        let responses = c.run_to_completion().unwrap();
+        assert_eq!(responses.len(), 1);
+        assert!(responses[0].generated.len() <= 4 + 1);
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let mut c = coordinator(2);
+        c.submit(Request::new(1, vec![1, 2], 4));
+        let r = c.run_to_completion().unwrap();
+        let m = &r[0].metrics;
+        assert_eq!(m.prompt_tokens, 2);
+        assert_eq!(m.generated_tokens, 4);
+        assert!(m.ttft_ms >= 0.0 && m.total_ms >= 0.0);
+        assert!(c.metrics.throughput_tps() > 0.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Long-context suite — the LongBench analog (Figs. 9/10).
+//!
+//! Eight synthetic tasks, each constructed so success requires *using the
+//! KV cache across a long span* (the capability LongBench measures and the
+//! one most sensitive to KV compression):
+//!
+//!   NEEDLE   recall a planted key-value fact from early context
+//!   PREFIX   copy a sentence seen at the start of the context
+//!   PATTERN  continue a periodic token pattern spanning the context
+//!   ENTITY   complete the paragraph's entity name (natural corpus text)
+//!   REPEAT   verbatim continuation of a repeated paragraph
+//!   TAIL_LM  plain LM accuracy at the far end of a long context
+//!   KVDIST   recall the value bound to the *first* of many keys
+//!   ALternating copy (ALT): continue an a/b alternation with distractors
+
+use anyhow::Result;
+
+use crate::model::{argmax, Engine};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LongCtxScore {
+    pub task: &'static str,
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl LongCtxScore {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+pub const TASKS: [&str; 8] = [
+    "NEEDLE", "PREFIX", "PATTERN", "ENTITY", "REPEAT", "TAIL_LM", "KVDIST", "ALT",
+];
+
+/// Score teacher-forced accuracy of `engine` on `target` given `prompt`.
+fn score_continuation(engine: &Engine, prompt: &[u8], target: &[u8], s_max: usize) -> usize {
+    let mut cache = engine.new_cache(s_max.max(prompt.len() + target.len() + 1));
+    let mut logits = Vec::new();
+    for (i, &t) in prompt.iter().enumerate() {
+        logits = engine.step(t, i, &mut cache);
+    }
+    let mut correct = 0;
+    let mut pos = prompt.len();
+    for &want in target {
+        if argmax(&logits) as u8 == want {
+            correct += 1;
+        }
+        logits = engine.step(want, pos, &mut cache);
+        pos += 1;
+    }
+    correct
+}
+
+/// Build + run the eight tasks at context length `ctx_len`.
+/// `corpus` supplies natural text for the corpus-based tasks.
+pub fn longctx_suite(
+    engine: &Engine,
+    corpus: &[u8],
+    ctx_len: usize,
+    cases_per_task: usize,
+    seed: u64,
+) -> Result<Vec<LongCtxScore>> {
+    let mut rng = Rng::new(seed);
+    let mut scores: Vec<LongCtxScore> = TASKS
+        .iter()
+        .map(|t| LongCtxScore {
+            task: t,
+            correct: 0,
+            total: 0,
+        })
+        .collect();
+    let s_max = ctx_len + 40;
+
+    for _ in 0..cases_per_task {
+        // -- NEEDLE: "key is X" early, filler, then query "key is".
+        {
+            let key = b"zq";
+            let val = (b'a' + rng.below(26) as u8) as u8;
+            let mut prompt = Vec::new();
+            prompt.extend_from_slice(b"the ");
+            prompt.extend_from_slice(key);
+            prompt.extend_from_slice(b" is ");
+            prompt.push(val);
+            prompt.extend_from_slice(b". ");
+            let fill_start = rng.below(corpus.len() - ctx_len - 1);
+            while prompt.len() < ctx_len - 10 {
+                prompt.push(corpus[fill_start + prompt.len() % (ctx_len / 2)]);
+            }
+            prompt.extend_from_slice(b" the ");
+            prompt.extend_from_slice(key);
+            prompt.extend_from_slice(b" is ");
+            let c = score_continuation(engine, &prompt, &[val], s_max);
+            scores[0].correct += c;
+            scores[0].total += 1;
+        }
+        // -- PREFIX: first 16 bytes repeated verbatim at the end.
+        {
+            let start = rng.below(corpus.len() - ctx_len - 40);
+            let sent = &corpus[start..start + 16];
+            let mut prompt = sent.to_vec();
+            prompt.extend_from_slice(&corpus[start + 16..start + ctx_len - 20]);
+            prompt.extend_from_slice(sent);
+            // model should continue the *original* continuation
+            let target = &corpus[start + 16..start + 16 + 8];
+            let c = score_continuation(engine, &prompt, target, s_max);
+            scores[1].correct += c;
+            scores[1].total += target.len();
+        }
+        // -- PATTERN: periodic word pattern filling the context.
+        {
+            let words: [&[u8]; 3] = [b"lun ", b"vex ", b"pom "];
+            let mut prompt = Vec::new();
+            while prompt.len() < ctx_len - 8 {
+                prompt.extend_from_slice(words[(prompt.len() / 4) % 3]);
+            }
+            // truncate to a whole number of words so the target aligns
+            let whole = (prompt.len() / 4) * 4;
+            prompt.truncate(whole);
+            let target = words[(whole / 4) % 3];
+            let c = score_continuation(engine, &prompt, target, s_max);
+            scores[2].correct += c;
+            scores[2].total += target.len();
+        }
+        // -- ENTITY: natural corpus window, predict entity completion.
+        {
+            let start = rng.below(corpus.len() - ctx_len - 1);
+            let window = &corpus[start..start + ctx_len];
+            // find a capitalised entity occurring at least twice
+            if let Some((pos, len)) = second_entity(window) {
+                let prompt = &window[..pos + 1]; // first byte of 2nd occurrence
+                let target = &window[pos + 1..(pos + len).min(window.len())];
+                if !target.is_empty() {
+                    let c = score_continuation(engine, prompt, target, s_max);
+                    scores[3].correct += c;
+                    scores[3].total += target.len();
+                }
+            }
+        }
+        // -- REPEAT: a paragraph shown twice; third showing must continue.
+        {
+            let start = rng.below(corpus.len() - ctx_len);
+            let para_len = (ctx_len / 2).saturating_sub(4).max(16);
+            let para = &corpus[start..start + para_len];
+            let mut prompt = para.to_vec();
+            prompt.extend_from_slice(b". ");
+            prompt.extend_from_slice(&para[..para_len / 2]);
+            let target = &para[para_len / 2..para_len / 2 + 8];
+            let c = score_continuation(engine, &prompt, target, s_max);
+            scores[4].correct += c;
+            scores[4].total += target.len();
+        }
+        // -- TAIL_LM: plain teacher-forced accuracy at the context tail.
+        {
+            let start = rng.below(corpus.len() - ctx_len - 16);
+            let prompt = &corpus[start..start + ctx_len];
+            let target = &corpus[start + ctx_len..start + ctx_len + 12];
+            let c = score_continuation(engine, prompt, target, s_max);
+            scores[5].correct += c;
+            scores[5].total += target.len();
+        }
+        // -- KVDIST: many key-value pairs; query the FIRST one.
+        {
+            let n_pairs = (ctx_len / 16).max(3).min(26);
+            let mut prompt = Vec::new();
+            let vals: Vec<u8> = (0..n_pairs)
+                .map(|_| b'a' + rng.below(26) as u8)
+                .collect();
+            for (i, &v) in vals.iter().enumerate() {
+                prompt.extend_from_slice(b"k");
+                prompt.push(b'a' + (i % 26) as u8);
+                prompt.extend_from_slice(b" is ");
+                prompt.push(v);
+                prompt.extend_from_slice(b". ");
+            }
+            prompt.extend_from_slice(b"ka is ");
+            let c = score_continuation(engine, &prompt, &[vals[0]], s_max.max(prompt.len() + 4));
+            scores[6].correct += c;
+            scores[6].total += 1;
+        }
+        // -- ALT: strict alternation with a distractor block in between.
+        {
+            let mut prompt = Vec::new();
+            while prompt.len() < ctx_len / 2 {
+                prompt.extend_from_slice(b"xy ");
+            }
+            let start = rng.below(corpus.len() - ctx_len);
+            prompt.extend_from_slice(&corpus[start..start + ctx_len / 4]);
+            prompt.extend_from_slice(b" xy xy x");
+            let target = b"y xy";
+            let c = score_continuation(engine, &prompt, target, s_max);
+            scores[7].correct += c;
+            scores[7].total += target.len();
+        }
+    }
+    Ok(scores)
+}
+
+/// Find the second occurrence of a capitalised entity: returns (position of
+/// its first byte, entity length).
+fn second_entity(window: &[u8]) -> Option<(usize, usize)> {
+    for i in 1..window.len() {
+        if window[i].is_ascii_uppercase() {
+            let mut end = i + 1;
+            while end < window.len() && window[end].is_ascii_lowercase() {
+                end += 1;
+            }
+            let ent = &window[i..end];
+            if ent.len() >= 4 && ent.len() <= 12 {
+                // appeared before?
+                if window[..i]
+                    .windows(ent.len())
+                    .any(|w| w == ent)
+                {
+                    return Some((i, ent.len()));
+                }
+            }
+        }
+    }
+    None
+}
+
+pub fn average_accuracy(scores: &[LongCtxScore]) -> f64 {
+    let with_data: Vec<&LongCtxScore> = scores.iter().filter(|s| s.total > 0).collect();
+    if with_data.is_empty() {
+        return 0.0;
+    }
+    with_data.iter().map(|s| s.accuracy()).sum::<f64>() / with_data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_entity_detection() {
+        let w = b"we saw Kavu at noon. later Kavu slept deeply";
+        let (pos, len) = second_entity(w).unwrap();
+        assert_eq!(&w[pos..pos + len], b"Kavu");
+        assert!(pos > 10);
+    }
+
+    #[test]
+    fn second_entity_none_when_unique() {
+        assert!(second_entity(b"only Kavu once here").is_none());
+    }
+}

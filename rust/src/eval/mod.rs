@@ -1,0 +1,11 @@
+//! Evaluation harnesses: perplexity, probe tasks (lm-eval analog),
+//! long-context suite (LongBench analog), and the int4-quantized variant
+//! of each (Fig. 12).
+
+pub mod longctx;
+pub mod ppl;
+pub mod tasks;
+
+pub use longctx::{longctx_suite, LongCtxScore};
+pub use ppl::{eval_ppl, eval_ppl_quantized};
+pub use tasks::{probe_suite, ProbeScore};

@@ -1,0 +1,90 @@
+//! Perplexity over the held-out corpus tail — the WikiText-2-PPL analog
+//! (Tables 4/5/7/13/14, Figs. 13–15).  Matches the python pipeline's
+//! windowing exactly so `ppl_python` in the manifest is directly
+//! comparable (cross-checked in integration tests).
+
+use anyhow::Result;
+
+use crate::model::Engine;
+
+/// Contiguous non-overlapping (input, target) windows, python
+/// `data.eval_windows` semantics.
+pub fn eval_windows(data: &[u8], seq: usize, max_windows: usize) -> Vec<(Vec<u8>, Vec<u8>)> {
+    let n = ((data.len().saturating_sub(1)) / seq).min(max_windows);
+    (0..n)
+        .map(|i| {
+            (
+                data[i * seq..i * seq + seq].to_vec(),
+                data[i * seq + 1..i * seq + seq + 1].to_vec(),
+            )
+        })
+        .collect()
+}
+
+/// exp(mean NLL) over windows.
+pub fn eval_ppl(engine: &Engine, data: &[u8], seq: usize, max_windows: usize) -> Result<f64> {
+    let windows = eval_windows(data, seq, max_windows);
+    anyhow::ensure!(!windows.is_empty(), "eval corpus too small for seq {seq}");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (x, y) in &windows {
+        total += engine.nll(x, y, seq) * x.len() as f64;
+        count += x.len();
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// PPL with the KV cache round-tripped through int4 after every write
+/// (Fig. 12: RAP + 4-bit KV-cache quantization).
+pub fn eval_ppl_quantized(
+    engine: &Engine,
+    data: &[u8],
+    seq: usize,
+    max_windows: usize,
+) -> Result<f64> {
+    let windows = eval_windows(data, seq, max_windows);
+    anyhow::ensure!(!windows.is_empty(), "eval corpus too small");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (x, y) in &windows {
+        let mut cache = engine.new_cache(seq);
+        for (i, (&t, &tgt)) in x.iter().zip(y.iter()).enumerate() {
+            let logits = engine.step(t, i, &mut cache);
+            // Quantize the rows just written, as the cache store would.
+            for lc in &mut cache.layers {
+                for h in 0..lc.n_kv_heads {
+                    crate::kvcache::quant::roundtrip(lc.k_row_mut(h, i));
+                    crate::kvcache::quant::roundtrip(lc.v_row_mut(h, i));
+                }
+            }
+            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 =
+                logits.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+            total += (lse - logits[tgt as usize]) as f64;
+            count += 1;
+        }
+    }
+    Ok((total / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_match_python_semantics() {
+        let data: Vec<u8> = (0..200u8).collect();
+        let w = eval_windows(&data, 64, 8);
+        assert_eq!(w.len(), 3); // (200-1)/64 = 3
+        assert_eq!(w[0].0[0], 0);
+        assert_eq!(w[0].1[0], 1); // shifted by one
+        assert_eq!(w[1].0[0], 64);
+        assert_eq!(w[1].0.len(), 64);
+    }
+
+    #[test]
+    fn windows_capped() {
+        let data: Vec<u8> = vec![0; 1000];
+        assert_eq!(eval_windows(&data, 10, 4).len(), 4);
+    }
+}

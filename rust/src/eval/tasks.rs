@@ -1,0 +1,190 @@
+//! Probe-task suite — the lm-eval-harness analog (Tables 4/9/13/14, Fig. 8).
+//!
+//! Six synthetic tasks measure *graded capability categories* of the tiny
+//! byte-level models, mirroring the role the paper's six commonsense tasks
+//! play: each task selects next-byte prediction sites of a distinct kind
+//! from the held-out corpus and scores top-1 accuracy there.
+//!
+//!   BI  bigram        — any mid-word position (local statistics)
+//!   FW  frequent-word — first byte after a space following a frequent word
+//!   RW  rare-word     — continuation inside rare (long) words
+//!   LR  long-range    — second occurrence of a capitalised entity
+//!   SB  boundary      — the space after a sentence-ending ". "
+//!   PU  punctuation   — predicting '.'/'?'/' ' at clause ends
+
+use anyhow::Result;
+
+use crate::model::{argmax, Engine};
+
+#[derive(Debug, Clone)]
+pub struct ProbeScore {
+    pub task: &'static str,
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl ProbeScore {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+pub const TASKS: [&str; 6] = ["BI", "FW", "RW", "LR", "SB", "PU"];
+
+/// Find prediction sites for each task in a context window.
+/// Returns (task_index, target_position) pairs; the model must predict
+/// byte at `target_position` given the prefix.
+fn find_sites(ctx: &[u8]) -> Vec<(usize, usize)> {
+    let mut sites = Vec::new();
+    let is_alpha = |b: u8| b.is_ascii_lowercase();
+    for i in 8..ctx.len() {
+        let prev = ctx[i - 1];
+        let cur = ctx[i];
+        // BI: inside a word (prev and cur lowercase).
+        if is_alpha(prev) && is_alpha(cur) && i % 7 == 0 {
+            sites.push((0, i));
+        }
+        // FW: first letter of a word following a short (frequent) word.
+        if prev == b' ' && is_alpha(cur) {
+            let wstart = ctx[..i - 1]
+                .iter()
+                .rposition(|&b| !b.is_ascii_lowercase())
+                .map(|p| p + 1)
+                .unwrap_or(0);
+            let wlen = (i - 1).saturating_sub(wstart);
+            if (2..=3).contains(&wlen) && i % 3 == 0 {
+                sites.push((1, i));
+            } else if wlen >= 7 && is_alpha(cur) {
+                // RW handled below via word length
+            }
+        }
+        // RW: 4th+ byte of a long word (rare words are long under our
+        // generator's Zipf construction).
+        if is_alpha(cur) && i >= 4 && ctx[i - 4..i].iter().all(|&b| is_alpha(b)) && i % 5 == 0 {
+            sites.push((2, i));
+        }
+        // LR: entity recall — capitalised token seen before in the window.
+        if cur.is_ascii_uppercase() {
+            // find end of entity
+            let mut end = i + 1;
+            while end < ctx.len() && ctx[end].is_ascii_lowercase() {
+                end += 1;
+            }
+            let ent = &ctx[i..end];
+            if ent.len() >= 4 {
+                if let Some(_first) = find_sub(&ctx[..i.saturating_sub(1)], ent) {
+                    // predict the entity's 2nd byte given its 1st (the
+                    // model must recall which entity this paragraph uses)
+                    if i + 1 < ctx.len() {
+                        sites.push((3, i + 1));
+                    }
+                }
+            }
+        }
+        // SB: after ". " predict next sentence start.
+        if i >= 2 && ctx[i - 2] == b'.' && prev == b' ' {
+            sites.push((4, i));
+        }
+        // PU: predict punctuation/space itself.
+        if (cur == b'.' || cur == b'?' || cur == b' ') && is_alpha(prev) && i % 4 == 0 {
+            sites.push((5, i));
+        }
+    }
+    sites
+}
+
+fn find_sub(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Run the probe suite: slide windows over the eval corpus, score each
+/// task's sites by teacher-forced top-1 accuracy.
+pub fn probe_suite(
+    engine: &Engine,
+    data: &[u8],
+    window: usize,
+    max_windows: usize,
+    max_sites_per_task: usize,
+) -> Result<Vec<ProbeScore>> {
+    let mut scores: Vec<ProbeScore> = TASKS
+        .iter()
+        .map(|t| ProbeScore {
+            task: t,
+            correct: 0,
+            total: 0,
+        })
+        .collect();
+    let n_windows = ((data.len() - 1) / window).min(max_windows);
+    for w in 0..n_windows {
+        let ctx = &data[w * window..(w + 1) * window];
+        let sites = find_sites(ctx);
+        if sites.is_empty() {
+            continue;
+        }
+        // One forward pass per window: predictions at every position.
+        let mut cache = engine.new_cache(window);
+        let mut preds = vec![0u8; ctx.len()];
+        for (i, &t) in ctx[..ctx.len() - 1].iter().enumerate() {
+            let logits = engine.step(t, i, &mut cache);
+            preds[i + 1] = argmax(&logits) as u8;
+        }
+        for (task, pos) in sites {
+            if scores[task].total >= max_sites_per_task {
+                continue;
+            }
+            scores[task].total += 1;
+            if preds[pos] == ctx[pos] {
+                scores[task].correct += 1;
+            }
+        }
+    }
+    Ok(scores)
+}
+
+pub fn average_accuracy(scores: &[ProbeScore]) -> f64 {
+    let with_data: Vec<&ProbeScore> = scores.iter().filter(|s| s.total > 0).collect();
+    if with_data.is_empty() {
+        return 0.0;
+    }
+    with_data.iter().map(|s| s.accuracy()).sum::<f64>() / with_data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sites_found_in_structured_text() {
+        let text = b"the quick wombat runs. Kavu said so. the small Kavu ran again? yes the end of it all. more words here";
+        let sites = find_sites(text);
+        assert!(!sites.is_empty());
+        // At least a boundary site (after ". ") exists.
+        assert!(sites.iter().any(|&(t, _)| t == 4));
+        // All positions are in range.
+        assert!(sites.iter().all(|&(_, p)| p < text.len()));
+    }
+
+    #[test]
+    fn find_sub_works() {
+        assert_eq!(find_sub(b"hello world", b"world"), Some(6));
+        assert_eq!(find_sub(b"hello", b"xyz"), None);
+        assert_eq!(find_sub(b"ab", b"abc"), None);
+    }
+
+    #[test]
+    fn accuracy_math() {
+        let s = ProbeScore {
+            task: "BI",
+            correct: 3,
+            total: 4,
+        };
+        assert!((s.accuracy() - 0.75).abs() < 1e-12);
+    }
+}

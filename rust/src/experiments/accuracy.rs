@@ -1,0 +1,184 @@
+//! Accuracy experiments: Fig. 4 (layer sensitivity), the Table 4/9/13/14 +
+//! Fig. 8 accuracy sweep, the LongBench analog (Figs. 9/10), and the 4-bit
+//! quantization compatibility check (Fig. 12).
+
+use anyhow::Result;
+
+use crate::eval::{
+    eval_ppl, eval_ppl_quantized, longctx_suite, probe_suite,
+};
+use crate::eval::longctx;
+use crate::eval::tasks;
+use crate::experiments::{print_table, ExpContext};
+use crate::model::load_engine;
+use crate::util::json::{arr, num, obj, s};
+
+const RATIO_KEYS: [(&str, f64); 5] = [
+    ("r10", 0.10),
+    ("r20", 0.20),
+    ("r30", 0.30),
+    ("r40", 0.40),
+    ("r50", 0.50),
+];
+
+/// Fig. 4: PPL after pruning one layer at a time at rho=30%.
+pub fn fig4_layer_sensitivity(ctx: &ExpContext) -> Result<()> {
+    let name = "tinyllama";
+    let entry = ctx.manifest.model(name)?;
+    let corpus = ctx.manifest.eval_corpus()?;
+    let windows = if ctx.quick { 4 } else { 12 };
+    let base = load_engine(&ctx.manifest, name, "baseline_r00")?;
+    let base_ppl = eval_ppl(&base, &corpus, ctx.manifest.eval_seq, windows)?;
+    println!("\nFig. 4 ({name}): PPL pruning one layer at a time (rho=30%), baseline {base_ppl:.3}");
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for l in 0..entry.config.n_layers {
+        let key = format!("rap_r30_layer{l}");
+        if !entry.variants.contains_key(&key) {
+            continue;
+        }
+        let engine = load_engine(&ctx.manifest, name, &key)?;
+        let ppl = eval_ppl(&engine, &corpus, ctx.manifest.eval_seq, windows)?;
+        rows.push(vec![format!("layer {l}"), format!("{ppl:.3}"), format!("+{:.1}%", 100.0 * (ppl / base_ppl - 1.0))]);
+        json_rows.push(obj(vec![("layer", num(l as f64)), ("ppl", num(ppl))]));
+    }
+    print_table(&["pruned layer", "PPL", "vs baseline"], &rows);
+    println!("(paper: front/back layers hurt most, middle least)");
+    ctx.write_json(
+        "fig4",
+        &obj(vec![("baseline_ppl", num(base_ppl)), ("layers", arr(json_rows))]),
+    )
+}
+
+/// Tables 4/9/13/14 + Figs. 8/20: PPL and probe-task accuracy across rho.
+pub fn accuracy_sweep(ctx: &ExpContext) -> Result<()> {
+    let corpus = ctx.manifest.eval_corpus()?;
+    let windows = if ctx.quick { 3 } else { 10 };
+    let probe_windows = if ctx.quick { 4 } else { 16 };
+    let mut json_models = Vec::new();
+    for (name, entry) in &ctx.manifest.models {
+        println!("\nAccuracy sweep ({name}): PPL (avg probe accuracy), cf. paper Table 4:");
+        let base = load_engine(&ctx.manifest, name, "baseline_r00")?;
+        let base_ppl = eval_ppl(&base, &corpus, ctx.manifest.eval_seq, windows)?;
+        let base_probe = probe_suite(&base, &corpus, ctx.manifest.eval_seq, probe_windows, 64)?;
+        let base_acc = tasks::average_accuracy(&base_probe);
+        let mut rows = Vec::new();
+        let mut json_rows = Vec::new();
+        for (tag, rho) in RATIO_KEYS {
+            let mut row = vec![format!("{:.0}%", rho * 100.0)];
+            row.push(format!("{base_ppl:.2} ({base_acc:.2})"));
+            for m in ["svd", "palu", "rap"] {
+                let key = format!("{m}_{tag}");
+                let Some(_) = entry.variants.get(&key) else {
+                    row.push("-".into());
+                    continue;
+                };
+                let engine = load_engine(&ctx.manifest, name, &key)?;
+                let ppl = eval_ppl(&engine, &corpus, ctx.manifest.eval_seq, windows)?;
+                let probe =
+                    probe_suite(&engine, &corpus, ctx.manifest.eval_seq, probe_windows, 64)?;
+                let acc = tasks::average_accuracy(&probe);
+                row.push(format!("{ppl:.2} ({acc:.2})"));
+                let per_task: Vec<_> = probe
+                    .iter()
+                    .map(|p| obj(vec![("task", s(p.task)), ("acc", num(p.accuracy()))]))
+                    .collect();
+                json_rows.push(obj(vec![
+                    ("rho", num(rho)),
+                    ("method", s(m)),
+                    ("ppl", num(ppl)),
+                    ("avg_acc", num(acc)),
+                    ("tasks", arr(per_task)),
+                ]));
+            }
+            rows.push(row);
+        }
+        print_table(&["rho", "Baseline", "SVD", "PaLU", "RAP"], &rows);
+        json_models.push(obj(vec![
+            ("model", s(name.clone())),
+            ("baseline_ppl", num(base_ppl)),
+            ("baseline_acc", num(base_acc)),
+            ("rows", arr(json_rows)),
+        ]));
+    }
+    ctx.write_json("accuracy", &arr(json_models))
+}
+
+/// Figs. 9/10: long-context suite vs rho + the parameter-matched
+/// comparison (RAP at the rho whose params match PaLU@30%).
+pub fn longbench(ctx: &ExpContext) -> Result<()> {
+    let corpus = ctx.manifest.eval_corpus()?;
+    let cases = if ctx.quick { 2 } else { 6 };
+    let ctx_len = if ctx.quick { 192 } else { 320 };
+    let mut json_models = Vec::new();
+    for (name, entry) in &ctx.manifest.models {
+        println!("\nLong-context suite ({name}, ctx={ctx_len}): avg accuracy vs rho (Fig. 9):");
+        let mut rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut keys = vec![("baseline".to_string(), "baseline_r00".to_string())];
+        for (tag, _) in RATIO_KEYS {
+            for m in ["svd", "palu", "rap"] {
+                keys.push((format!("{m}@{tag}"), format!("{m}_{tag}")));
+            }
+        }
+        for (label, key) in keys {
+            let Some(_) = entry.variants.get(&key) else { continue };
+            let engine = load_engine(&ctx.manifest, name, &key)?;
+            let scores = longctx_suite(&engine, &corpus, ctx_len, cases, 42)?;
+            let avg = longctx::average_accuracy(&scores);
+            rows.push(vec![label.clone(), format!("{avg:.3}")]);
+            let per_task: Vec<_> = scores
+                .iter()
+                .map(|sc| obj(vec![("task", s(sc.task)), ("acc", num(sc.accuracy()))]))
+                .collect();
+            json_rows.push(obj(vec![
+                ("variant", s(key.clone())),
+                ("avg", num(avg)),
+                ("tasks", arr(per_task)),
+            ]));
+        }
+        print_table(&["variant", "avg accuracy"], &rows);
+        json_models.push(obj(vec![("model", s(name.clone())), ("rows", arr(json_rows))]));
+        if ctx.quick {
+            break; // one model is enough for the quick pass
+        }
+    }
+    ctx.write_json("longbench", &arr(json_models))
+}
+
+/// Fig. 12: 4-bit KV quantization stacked on each method.
+pub fn quant(ctx: &ExpContext) -> Result<()> {
+    let corpus = ctx.manifest.eval_corpus()?;
+    let windows = if ctx.quick { 2 } else { 6 };
+    let name = "tinyllama";
+    let entry = ctx.manifest.model(name)?;
+    println!("\nFig. 12 ({name}): PPL with int4 KV cache (f32 PPL in parens):");
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let mut keys = vec!["baseline_r00".to_string()];
+    for (tag, _) in RATIO_KEYS {
+        keys.push(format!("rap_{tag}"));
+    }
+    for key in keys {
+        if !entry.variants.contains_key(&key) {
+            continue;
+        }
+        let engine = load_engine(&ctx.manifest, name, &key)?;
+        let f32_ppl = eval_ppl(&engine, &corpus, ctx.manifest.eval_seq, windows)?;
+        let q_ppl = eval_ppl_quantized(&engine, &corpus, ctx.manifest.eval_seq, windows)?;
+        rows.push(vec![
+            key.clone(),
+            format!("{q_ppl:.3}"),
+            format!("({f32_ppl:.3})"),
+            format!("+{:.2}%", 100.0 * (q_ppl / f32_ppl - 1.0)),
+        ]);
+        json_rows.push(obj(vec![
+            ("variant", s(key.clone())),
+            ("ppl_int4", num(q_ppl)),
+            ("ppl_f32", num(f32_ppl)),
+        ]));
+    }
+    print_table(&["variant", "int4 PPL", "f32 PPL", "delta"], &rows);
+    println!("(paper: 4-bit KV on top of RAP stays near baseline — orthogonality)");
+    ctx.write_json("quant", &arr(json_rows))
+}

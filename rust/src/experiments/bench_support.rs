@@ -1,0 +1,53 @@
+//! Shared plumbing for the `cargo bench` targets (harness = false; the
+//! in-tree `util::stats` harness replaces criterion in this offline
+//! environment).  Each bench prints one line per case and appends to
+//! `results/bench_<name>.json`.
+
+use std::time::Duration;
+
+use crate::util::json::{arr, obj, num, s, Value};
+use crate::util::stats::BenchStats;
+
+pub struct BenchReport {
+    name: String,
+    entries: Vec<Value>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        println!("== bench: {name} ==");
+        BenchReport {
+            name: name.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, st: &BenchStats, extra: Vec<(&str, Value)>) {
+        println!("{}", st.report());
+        let mut fields = vec![
+            ("case", s(st.name.clone())),
+            ("mean_us", num(st.mean_ns / 1e3)),
+            ("p50_us", num(st.p50_ns / 1e3)),
+            ("p99_us", num(st.p99_ns / 1e3)),
+            ("iters", num(st.iters as f64)),
+        ];
+        fields.extend(extra);
+        self.entries.push(obj(fields));
+    }
+
+    pub fn finish(self) {
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/bench_{}.json", self.name);
+        let _ = std::fs::write(&path, arr(self.entries).to_string_pretty());
+        println!("-> {path}");
+    }
+}
+
+/// Warmup/budget presets: `RAP_BENCH_FAST=1` shrinks everything (CI).
+pub fn budgets() -> (Duration, Duration) {
+    if std::env::var("RAP_BENCH_FAST").is_ok() {
+        (Duration::from_millis(20), Duration::from_millis(120))
+    } else {
+        (Duration::from_millis(150), Duration::from_millis(800))
+    }
+}

@@ -1,0 +1,112 @@
+//! Figs. 14/15 + Tables 5/7: KD ablation and recovery curves.
+//!
+//! The KD training itself ran in the build-time pipeline; its curve logs
+//! live under `artifacts/logs/`.  This runner re-measures the with/without
+//! PPLs with the Rust engine (independent of the python numbers) and
+//! replays the curves.
+
+use anyhow::{Context, Result};
+
+use crate::eval::eval_ppl;
+use crate::experiments::{print_table, ExpContext};
+use crate::model::load_engine;
+use crate::util::json::{self, arr, num, obj, s};
+
+pub fn kd_ablation(ctx: &ExpContext) -> Result<()> {
+    let corpus = ctx.manifest.eval_corpus()?;
+    let windows = if ctx.quick { 4 } else { 12 };
+    let mut json_models = Vec::new();
+
+    for (name, entry) in &ctx.manifest.models {
+        println!("\nKD ablation ({name}) — Table 5 analog (PPL):");
+        let base = load_engine(&ctx.manifest, name, "baseline_r00")?;
+        let base_ppl = eval_ppl(&base, &corpus, ctx.manifest.eval_seq, windows)?;
+        let mut rows = Vec::new();
+        let mut json_rows = Vec::new();
+        for rho in [10usize, 20, 30, 40, 50] {
+            let kd_key = format!("rap_r{rho}");
+            let raw_key = format!("rap_r{rho}_noKD");
+            if !(entry.variants.contains_key(&kd_key) && entry.variants.contains_key(&raw_key)) {
+                continue;
+            }
+            let kd = eval_ppl(
+                &load_engine(&ctx.manifest, name, &kd_key)?,
+                &corpus,
+                ctx.manifest.eval_seq,
+                windows,
+            )?;
+            let raw = eval_ppl(
+                &load_engine(&ctx.manifest, name, &raw_key)?,
+                &corpus,
+                ctx.manifest.eval_seq,
+                windows,
+            )?;
+            rows.push(vec![
+                format!("{rho}%"),
+                format!("{base_ppl:.3}"),
+                format!("{raw:.3}"),
+                format!("{kd:.3}"),
+            ]);
+            json_rows.push(obj(vec![
+                ("rho", num(rho as f64 / 100.0)),
+                ("baseline", num(base_ppl)),
+                ("no_kd", num(raw)),
+                ("kd", num(kd)),
+            ]));
+        }
+        print_table(&["rho", "Baseline", "RAP (w/o KD)", "RAP"], &rows);
+
+        // Table 7: PaLU+KD comparison at rho=30%.
+        if entry.variants.contains_key("palu_r30_kd") {
+            let palu = eval_ppl(
+                &load_engine(&ctx.manifest, name, "palu_r30")?,
+                &corpus,
+                ctx.manifest.eval_seq,
+                windows,
+            )?;
+            let palu_kd = eval_ppl(
+                &load_engine(&ctx.manifest, name, "palu_r30_kd")?,
+                &corpus,
+                ctx.manifest.eval_seq,
+                windows,
+            )?;
+            println!(
+                "Table 7 analog: PaLU {palu:.3} -> +KD {palu_kd:.3} (gain {:+.1}%)",
+                100.0 * (1.0 - palu_kd / palu)
+            );
+            json_rows.push(obj(vec![
+                ("palu_r30", num(palu)),
+                ("palu_r30_kd", num(palu_kd)),
+            ]));
+        }
+
+        // Fig. 15: replay the recovery curves from the build logs.
+        let log_path = ctx.manifest.root.join("logs").join(format!("{name}_logs.json"));
+        let mut curves = json::Value::Null;
+        if let Ok(text) = std::fs::read_to_string(&log_path) {
+            let logs = json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e}", log_path.display()))?;
+            if let Some(kd_logs) = logs.get("kd") {
+                curves = kd_logs.clone();
+                if let Some(r30) = kd_logs.get("rap_r30") {
+                    let curve = r30.req("curve").as_arr().context("curve")?;
+                    let pts: Vec<String> = curve
+                        .iter()
+                        .filter_map(|e| {
+                            let step = e.get("step")?.as_i64()?;
+                            let ppl = e.get("ppl")?.as_f64()?;
+                            Some(format!("step {step}: {ppl:.3}"))
+                        })
+                        .collect();
+                    println!("Fig. 15 analog (rap_r30 recovery curve): {}", pts.join(", "));
+                }
+            }
+        }
+        json_models.push(obj(vec![
+            ("model", s(name.clone())),
+            ("rows", arr(json_rows)),
+            ("curves", curves),
+        ]));
+    }
+    ctx.write_json("kd", &arr(json_models))
+}

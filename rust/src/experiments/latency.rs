@@ -1,0 +1,173 @@
+//! Latency experiments — Figs. 7/11/19/25 + Table 16 (attention-path
+//! prefill/decode) via two harnesses:
+//!
+//! 1. PJRT end-to-end: time the exported prefill/decode executables per
+//!    variant (the production path, available at rho in {10,30,50}).
+//! 2. Rust engine, attention-isolated: dense rho sweep measuring just the
+//!    per-layer attention work (projections + rope + scores + AV + output)
+//!    at several KV lengths — the "attention latency" the paper plots.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::experiments::{print_table, ExpContext};
+use crate::model::load_engine;
+use crate::runtime::{PjrtContext, PjrtEngine};
+use crate::util::json::{arr, num, obj, s};
+use crate::util::stats::{bench, bench_with_samples};
+
+pub fn latency(ctx: &ExpContext) -> Result<()> {
+    let pjrt = pjrt_latency(ctx)?;
+    let engine = engine_attention_latency(ctx)?;
+    ctx.write_json(
+        "latency",
+        &obj(vec![("pjrt", pjrt), ("engine_attention", engine)]),
+    )
+}
+
+/// Harness 1: PJRT prefill + decode latency relative to baseline.
+fn pjrt_latency(ctx: &ExpContext) -> Result<crate::util::json::Value> {
+    let pctx = PjrtContext::cpu()?;
+    let corpus = ctx.manifest.eval_corpus()?;
+    let (warm, budget) = if ctx.quick {
+        (Duration::from_millis(50), Duration::from_millis(300))
+    } else {
+        (Duration::from_millis(200), Duration::from_millis(1200))
+    };
+    let mut json_models = Vec::new();
+    for (name, entry) in &ctx.manifest.models {
+        println!("\nPJRT latency ({name}) — prefill(128) and decode(b=1) vs baseline:");
+        let mut rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut base_prefill = 0.0f64;
+        let mut base_decode = 0.0f64;
+        let mut keys: Vec<String> = vec!["baseline_r00".into()];
+        for rho in [10usize, 30, 50] {
+            for m in ["svd", "palu", "rap"] {
+                keys.push(format!("{m}_r{rho}"));
+            }
+        }
+        for key in keys {
+            if !entry.hlo.contains_key(&key) {
+                continue;
+            }
+            let engine = PjrtEngine::load(&pctx, &ctx.manifest, name, &key)?;
+            // prefill at the 128 bucket
+            let tokens: Vec<i32> = corpus[..128].iter().map(|&b| b as i32).collect();
+            let st_p = bench(&format!("{key}/prefill128"), warm, budget, || {
+                let _ = engine.prefill(&pctx, "prefill128", &tokens, 1).unwrap();
+            });
+            // decode at a mid-length context
+            let mut caches = engine.empty_caches(1)?;
+            let fill = engine.s_max / 2;
+            // quick fill: decode a few tokens to a representative position
+            for (i, &b) in corpus[..8].iter().enumerate() {
+                caches = engine
+                    .decode(&pctx, 1, &[b as i32], &[i as i32], &caches)?
+                    .caches;
+            }
+            let st_d = bench(&format!("{key}/decode"), warm, budget, || {
+                let _ = engine
+                    .decode(&pctx, 1, &[65], &[fill as i32], &caches)
+                    .unwrap();
+            });
+            if key == "baseline_r00" {
+                base_prefill = st_p.mean_ns;
+                base_decode = st_d.mean_ns;
+            }
+            rows.push(vec![
+                key.clone(),
+                format!("{:.2} ms", st_p.mean_ms()),
+                format!("{:.0}%", 100.0 * st_p.mean_ns / base_prefill),
+                format!("{:.2} ms", st_d.mean_ms()),
+                format!("{:.0}%", 100.0 * st_d.mean_ns / base_decode),
+            ]);
+            json_rows.push(obj(vec![
+                ("variant", s(key.clone())),
+                ("prefill_ms", num(st_p.mean_ms())),
+                ("prefill_rel", num(st_p.mean_ns / base_prefill)),
+                ("decode_ms", num(st_d.mean_ms())),
+                ("decode_rel", num(st_d.mean_ns / base_decode)),
+            ]));
+        }
+        print_table(
+            &["variant", "prefill", "rel", "decode/tok", "rel"],
+            &rows,
+        );
+        json_models.push(obj(vec![("model", s(name.clone())), ("rows", arr(json_rows))]));
+        if ctx.quick {
+            break;
+        }
+    }
+    Ok(arr(json_models))
+}
+
+/// Harness 2: Rust-engine decode-step latency across the full rho sweep
+/// and several context lengths (Fig. 7/11 shape: the RAP advantage grows
+/// with rho and with context for the reconstruction baselines).
+fn engine_attention_latency(ctx: &ExpContext) -> Result<crate::util::json::Value> {
+    let corpus = ctx.manifest.eval_corpus()?;
+    let ctx_lens: &[usize] = if ctx.quick { &[128] } else { &[64, 128, 256, 320] };
+    let mut json_models = Vec::new();
+    for (name, entry) in &ctx.manifest.models {
+        println!("\nEngine decode-step latency ({name}) by context length (us/token):");
+        let mut rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut keys: Vec<String> = vec!["baseline_r00".into()];
+        for rho in [10usize, 20, 30, 40, 50] {
+            for m in ["svd", "palu", "rap"] {
+                let k = format!("{m}_r{rho}");
+                if entry.variants.contains_key(&k) {
+                    keys.push(k);
+                }
+            }
+        }
+        let mut base_by_len: Vec<f64> = vec![0.0; ctx_lens.len()];
+        for key in keys {
+            let engine = load_engine(&ctx.manifest, name, &key)?;
+            let mut row = vec![key.clone()];
+            let mut lat_json = Vec::new();
+            for (li, &cl) in ctx_lens.iter().enumerate() {
+                let mut cache = engine.new_cache(cl + 8);
+                for (i, &t) in corpus[..cl].iter().enumerate() {
+                    engine.step(t, i, &mut cache);
+                }
+                let mut stats_f = || {
+                    engine.step(corpus[cl], cl, &mut cache);
+                };
+                let st = bench_with_samples(
+                    &format!("{key}@{cl}"),
+                    Duration::from_millis(10),
+                    Duration::from_millis(if ctx.quick { 60 } else { 200 }),
+                    400,
+                    &mut stats_f,
+                );
+                if key == "baseline_r00" {
+                    base_by_len[li] = st.mean_ns;
+                }
+                row.push(format!(
+                    "{:.0} ({:.0}%)",
+                    st.mean_ns / 1e3,
+                    100.0 * st.mean_ns / base_by_len[li]
+                ));
+                lat_json.push(obj(vec![
+                    ("ctx", num(cl as f64)),
+                    ("us", num(st.mean_ns / 1e3)),
+                    ("rel", num(st.mean_ns / base_by_len[li])),
+                ]));
+            }
+            rows.push(row);
+            json_rows.push(obj(vec![("variant", s(key.clone())), ("lat", arr(lat_json))]));
+        }
+        let mut headers = vec!["variant".to_string()];
+        headers.extend(ctx_lens.iter().map(|c| format!("ctx {c}")));
+        let href: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+        print_table(&href, &rows);
+        json_models.push(obj(vec![("model", s(name.clone())), ("rows", arr(json_rows))]));
+        if ctx.quick {
+            break;
+        }
+    }
+    Ok(arr(json_models))
+}

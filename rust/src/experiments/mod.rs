@@ -1,0 +1,129 @@
+//! Experiment harness: one runner per paper table/figure (see DESIGN.md
+//! per-experiment index).  Each runner prints a markdown table mirroring
+//! the paper's rows and writes machine-readable JSON into `results/`.
+
+pub mod accuracy;
+pub mod bench_support;
+pub mod costs;
+pub mod kd;
+pub mod latency;
+pub mod quality_ablation;
+pub mod rope_kernel;
+pub mod serving;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::manifest::Manifest;
+use crate::util::json::Value;
+
+pub struct ExpContext {
+    pub manifest: Manifest,
+    pub results_dir: PathBuf,
+    /// Reduced repetitions / case counts for CI-speed runs.
+    pub quick: bool,
+}
+
+impl ExpContext {
+    pub fn new(quick: bool) -> Result<ExpContext> {
+        let manifest = Manifest::load_default()?;
+        let results_dir = PathBuf::from("results");
+        std::fs::create_dir_all(&results_dir)?;
+        Ok(ExpContext {
+            manifest,
+            results_dir,
+            quick,
+        })
+    }
+
+    pub fn write_json(&self, name: &str, value: &Value) -> Result<()> {
+        let path = self.results_dir.join(format!("{name}.json"));
+        std::fs::write(&path, value.to_string_pretty())?;
+        println!("  -> {}", path.display());
+        Ok(())
+    }
+}
+
+/// All experiment names, in a sensible execution order.
+pub const ALL: [&str; 13] = [
+    "table2",
+    "params",
+    "flops",
+    "fig4",
+    "accuracy",
+    "longbench",
+    "quant",
+    "ablation",
+    "kd",
+    "rope-kernel",
+    "latency",
+    "e2e",
+    "table3",
+];
+
+pub fn run(ctx: &ExpContext, name: &str) -> Result<()> {
+    println!("\n===== experiment: {name} =====");
+    match name {
+        "table2" => costs::table2(ctx),
+        "params" => costs::params(ctx),
+        "flops" => costs::flops(ctx),
+        "fig4" => accuracy::fig4_layer_sensitivity(ctx),
+        "accuracy" => accuracy::accuracy_sweep(ctx),
+        "longbench" => accuracy::longbench(ctx),
+        "quant" => accuracy::quant(ctx),
+        "ablation" => quality_ablation::strategy_ablation(ctx),
+        "kd" => kd::kd_ablation(ctx),
+        "rope-kernel" => rope_kernel::rope_kernel(ctx),
+        "latency" => latency::latency(ctx),
+        "e2e" => serving::e2e(ctx),
+        "table3" => costs::table3(ctx),
+        other => anyhow::bail!("unknown experiment {other:?} (have {ALL:?})"),
+    }
+}
+
+pub fn run_all(ctx: &ExpContext) -> Result<()> {
+    for name in ALL {
+        run(ctx, name)?;
+    }
+    Ok(())
+}
+
+/// Markdown table helper.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let parts: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(4)))
+            .collect();
+        format!("| {} |", parts.join(" | "))
+    };
+    println!(
+        "{}",
+        fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    println!(
+        "|{}|",
+        widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("|")
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}

@@ -1,0 +1,60 @@
+//! Fig. 13: pruning-strategy ablation — Fisher/Magnitude × Adaptive/Uniform
+//! (+ KD) at rho=30%.
+
+use anyhow::Result;
+
+use crate::eval::eval_ppl;
+use crate::experiments::{print_table, ExpContext};
+use crate::model::load_engine;
+use crate::util::json::{arr, num, obj, s};
+
+pub fn strategy_ablation(ctx: &ExpContext) -> Result<()> {
+    let name = "tinyllama";
+    let entry = ctx.manifest.model(name)?;
+    let corpus = ctx.manifest.eval_corpus()?;
+    let windows = if ctx.quick { 4 } else { 12 };
+
+    // (label, variant key) in paper order: BL, FA+KD, FA, FU, MA, MU.
+    let arms = [
+        ("BL (baseline)", "baseline_r00"),
+        ("FA+KD (Fisher+Adaptive+KD)", "rap_r30"),
+        ("FA (Fisher+Adaptive)", "rap_r30_noKD"),
+        ("FU (Fisher+Uniform)", "rap_r30_FU"),
+        ("MA (Magnitude+Adaptive)", "rap_r30_MA"),
+        ("MU (Magnitude+Uniform)", "rap_r30_MU"),
+    ];
+    println!("\nFig. 13 ({name}): strategy ablation at rho=30%:");
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let mut values = std::collections::BTreeMap::new();
+    for (label, key) in arms {
+        if !entry.variants.contains_key(key) {
+            continue;
+        }
+        let engine = load_engine(&ctx.manifest, name, key)?;
+        let ppl = eval_ppl(&engine, &corpus, ctx.manifest.eval_seq, windows)?;
+        rows.push(vec![label.to_string(), format!("{ppl:.3}")]);
+        json_rows.push(obj(vec![("arm", s(label)), ("key", s(key)), ("ppl", num(ppl))]));
+        values.insert(key, ppl);
+    }
+    print_table(&["arm", "PPL"], &rows);
+
+    // The paper's two claims, checked programmatically:
+    let fisher_beats_magnitude = values.get("rap_r30_noKD").zip(values.get("rap_r30_MA"))
+        .map(|(f, m)| f < m)
+        .unwrap_or(false);
+    let adaptive_beats_uniform = values.get("rap_r30_noKD").zip(values.get("rap_r30_FU"))
+        .map(|(a, u)| a < u)
+        .unwrap_or(false);
+    println!(
+        "claims: Fisher<Magnitude: {fisher_beats_magnitude}  Adaptive<Uniform: {adaptive_beats_uniform}"
+    );
+    ctx.write_json(
+        "ablation",
+        &obj(vec![
+            ("rows", arr(json_rows)),
+            ("fisher_beats_magnitude", crate::util::json::Value::Bool(fisher_beats_magnitude)),
+            ("adaptive_beats_uniform", crate::util::json::Value::Bool(adaptive_beats_uniform)),
+        ]),
+    )
+}

@@ -1,0 +1,171 @@
+//! Fig. 16 + Tables 8/11: non-contiguous RoPE kernel microbenchmark.
+//!
+//! Two levels:
+//! 1. **Compiled graphs** (the paper's comparison): the AOT-exported rope
+//!    HLOs — contiguous baseline, materialising gather ("PyTorch"), and the
+//!    fused Pallas kernel — timed through PJRT across (batch, seq, rho).
+//! 2. **Rust hot path**: `rope::apply_gather` (allocating) vs
+//!    `RopeTable::apply_fused` (zero-allocation), the L3-side analog.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::experiments::{print_table, ExpContext};
+use crate::rope::{apply_gather, RopeTable};
+use crate::runtime::PjrtContext;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::rng::Rng;
+use crate::util::stats::{bench, black_box};
+
+pub fn rope_kernel(ctx: &ExpContext) -> Result<()> {
+    let compiled = compiled_kernels(ctx)?;
+    let native = native_hot_path(ctx)?;
+    ctx.write_json(
+        "rope_kernel",
+        &obj(vec![("compiled", compiled), ("native", native)]),
+    )
+}
+
+fn compiled_kernels(ctx: &ExpContext) -> Result<crate::util::json::Value> {
+    let pctx = PjrtContext::cpu()?;
+    let mut rng = Rng::new(7);
+    let (warm, budget) = if ctx.quick {
+        (Duration::from_millis(20), Duration::from_millis(150))
+    } else {
+        (Duration::from_millis(100), Duration::from_millis(600))
+    };
+
+    // Group catalog entries by (batch, seq, ratio).
+    let mut groups: BTreeMap<(usize, usize, u32), BTreeMap<String, &crate::manifest::RopeBenchEntry>> =
+        BTreeMap::new();
+    for e in &ctx.manifest.rope_bench {
+        groups
+            .entry((e.batch, e.seq, (e.ratio * 100.0) as u32))
+            .or_default()
+            .insert(e.impl_name.clone(), e);
+    }
+    // Baselines: ratio==0 contiguous entries, per (batch, seq).
+    let mut base_ms: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+
+    println!("\nRoPE kernel microbench (compiled graphs; speedup vs contiguous baseline):");
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let shapes: Vec<(usize, usize)> = if ctx.quick {
+        vec![(1, 512)]
+    } else {
+        vec![(1, 1), (1, 128), (1, 512), (1, 2048), (2, 512), (2, 2048), (4, 512), (4, 2048)]
+    };
+    let ratios: &[u32] = if ctx.quick { &[30] } else { &[10, 20, 30, 40, 50] };
+
+    let mut time_graph = |path: &str, b: usize, s_len: usize, m: usize| -> Result<f64> {
+        let exe = pctx.compile_file(&ctx.manifest.root.join(path))?;
+        let h = 8usize; // matches the export config (tinyllama heads)
+        let n = b * h * s_len * 2 * m;
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let pos: Vec<i32> = (0..s_len as i32).collect();
+        let device = pctx.client.devices().into_iter().next().unwrap();
+        let xb = pctx
+            .client
+            .buffer_from_host_buffer(&x, &[b, h, s_len, 2 * m], Some(&device))
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let pb = pctx
+            .client
+            .buffer_from_host_buffer(&pos, &[s_len], Some(&device))
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let st = bench(path, warm, budget, || {
+            let _ = exe.execute_b(&[&xb, &pb]).unwrap();
+        });
+        Ok(st.mean_ms())
+    };
+
+    for (b, s_len) in &shapes {
+        // contiguous baseline for this shape
+        let Some(base_entry) = groups
+            .get(&(*b, *s_len, 0))
+            .and_then(|g| g.get("contig"))
+        else {
+            continue;
+        };
+        // contiguous uses full head_dim: m recorded in entry.
+        let bms = time_graph(&base_entry.path, *b, *s_len, base_entry.m / 1)?;
+        base_ms.insert((*b, *s_len), bms);
+        for &r in ratios {
+            let Some(g) = groups.get(&(*b, *s_len, r)) else { continue };
+            let (Some(f), Some(ga)) = (g.get("fused"), g.get("gather")) else { continue };
+            let f_ms = time_graph(&f.path, *b, *s_len, f.m)?;
+            let g_ms = time_graph(&ga.path, *b, *s_len, ga.m)?;
+            rows.push(vec![
+                format!("b={b} S={s_len}"),
+                format!("{r}%"),
+                format!("{bms:.3} ms"),
+                format!("{:.2}x", bms / g_ms),
+                format!("{:.2}x", bms / f_ms),
+            ]);
+            json_rows.push(obj(vec![
+                ("batch", num(*b as f64)),
+                ("seq", num(*s_len as f64)),
+                ("rho", num(r as f64 / 100.0)),
+                ("baseline_ms", num(bms)),
+                ("gather_speedup", num(bms / g_ms)),
+                ("fused_speedup", num(bms / f_ms)),
+            ]));
+        }
+    }
+    print_table(
+        &["shape", "rho", "contig", "gather ('PyTorch')", "fused (Pallas)"],
+        &rows,
+    );
+    println!("(paper Table 11: fused > 1x everywhere; gather can dip below 1x at small shapes)");
+    Ok(arr(json_rows))
+}
+
+fn native_hot_path(ctx: &ExpContext) -> Result<crate::util::json::Value> {
+    let mut rng = Rng::new(9);
+    let head_dim = 128usize;
+    let h = 8usize;
+    println!("\nRust-native RoPE hot path (per-call, head-batch of {h}):");
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let (warm, budget) = if ctx.quick {
+        (Duration::from_millis(10), Duration::from_millis(80))
+    } else {
+        (Duration::from_millis(50), Duration::from_millis(300))
+    };
+    for rho in [0.1f64, 0.3, 0.5] {
+        let m = (((1.0 - rho) * (head_dim / 2) as f64).round()) as usize;
+        let idx: Vec<Vec<usize>> = (0..h)
+            .map(|_| rng.choose_distinct(head_dim / 2, m))
+            .collect();
+        let table = RopeTable::new(&idx, head_dim, 10_000.0);
+        let mut x: Vec<Vec<f32>> = (0..h)
+            .map(|_| (0..2 * m).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let st_fused = bench("fused", warm, budget, || {
+            for (hd, row) in x.iter_mut().enumerate() {
+                table.apply_fused(hd, row, black_box(1234));
+            }
+        });
+        let st_gather = bench("gather", warm, budget, || {
+            for (hd, row) in x.iter_mut().enumerate() {
+                apply_gather(row, black_box(1234), &idx[hd], head_dim, 10_000.0);
+            }
+        });
+        rows.push(vec![
+            format!("{:.0}%", rho * 100.0),
+            format!("{:.2} us", st_gather.mean_us()),
+            format!("{:.2} us", st_fused.mean_us()),
+            format!("{:.2}x", st_gather.mean_ns / st_fused.mean_ns),
+        ]);
+        json_rows.push(obj(vec![
+            ("rho", num(rho)),
+            ("gather_us", num(st_gather.mean_us())),
+            ("fused_us", num(st_fused.mean_us())),
+            ("speedup", num(st_gather.mean_ns / st_fused.mean_ns)),
+        ]));
+    }
+    print_table(&["rho", "gather", "fused", "speedup"], &rows);
+    let _ = s("");
+    Ok(arr(json_rows))
+}

@@ -1,0 +1,88 @@
+//! Table 17 analog: full-model end-to-end serving through the coordinator
+//! (continuous batching, paged KV) on a seeded request trace, per variant.
+
+use anyhow::Result;
+
+use crate::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use crate::experiments::{print_table, ExpContext};
+use crate::kvcache::CacheShape;
+use crate::runtime::backend::PjrtBackend;
+use crate::runtime::{PjrtContext, PjrtEngine};
+use crate::util::json::{arr, num, obj, s};
+use crate::workload::{generate, WorkloadConfig};
+
+pub fn e2e(ctx: &ExpContext) -> Result<()> {
+    let pctx = PjrtContext::cpu()?;
+    let corpus = ctx.manifest.eval_corpus()?;
+    let wl_cfg = WorkloadConfig {
+        n_requests: if ctx.quick { 6 } else { 24 },
+        arrival_rate: 50.0,
+        prompt_lens: vec![16, 32, 32, 64],
+        min_new: 8,
+        max_new: if ctx.quick { 16 } else { 32 },
+        seed: 42,
+    };
+
+    let mut json_models = Vec::new();
+    for (name, entry) in &ctx.manifest.models {
+        println!("\nE2E serving ({name}) — same trace per variant:");
+        let mut rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut base_tps = 0.0f64;
+        for key in ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"] {
+            if !entry.hlo.contains_key(key) {
+                continue;
+            }
+            let engine = PjrtEngine::load(&pctx, &ctx.manifest, name, key)?;
+            let backend = PjrtBackend::new(&pctx, &engine)?;
+            let shape = CacheShape::of(&entry.config, &entry.variants[key].spec);
+            let mut coord = Coordinator::new(
+                backend,
+                shape,
+                CoordinatorConfig {
+                    batcher: BatcherConfig {
+                        max_sessions: 4,
+                        buckets: engine.decode_batches(),
+                        max_queue: 256,
+                    },
+                    kv_budget_bytes: 32 << 20,
+                },
+            );
+            for tr in generate(&wl_cfg, &corpus) {
+                coord.submit(tr.request);
+            }
+            coord.run_to_completion()?;
+            let m = &coord.metrics;
+            if key == "baseline_r00" {
+                base_tps = m.throughput_tps();
+            }
+            rows.push(vec![
+                key.to_string(),
+                format!("{:.1}", m.throughput_tps()),
+                format!("{:.0}%", 100.0 * m.throughput_tps() / base_tps),
+                format!("{:.1}", m.ttft.mean()),
+                format!("{:.2}", m.decode_per_token.mean()),
+                format!("{}", m.peak_kv_blocks),
+                format!("{:.2}", m.decode_batch_occupancy.mean()),
+            ]);
+            json_rows.push(obj(vec![
+                ("variant", s(key)),
+                ("throughput_tps", num(m.throughput_tps())),
+                ("rel_throughput", num(m.throughput_tps() / base_tps)),
+                ("ttft_ms", num(m.ttft.mean())),
+                ("decode_ms_per_tok", num(m.decode_per_token.mean())),
+                ("peak_kv_blocks", num(m.peak_kv_blocks as f64)),
+                ("batch_occupancy", num(m.decode_batch_occupancy.mean())),
+            ]));
+        }
+        print_table(
+            &["variant", "tok/s", "rel", "ttft ms", "dec ms/tok", "peak KV blk", "occupancy"],
+            &rows,
+        );
+        json_models.push(obj(vec![("model", s(name.clone())), ("rows", arr(json_rows))]));
+        if ctx.quick {
+            break;
+        }
+    }
+    ctx.write_json("e2e", &arr(json_models))
+}

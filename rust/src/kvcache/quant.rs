@@ -1,0 +1,149 @@
+//! Int4 group quantization of latent KV rows (paper Fig. 12: RAP composes
+//! with Direct KV-Cache Compression).
+//!
+//! Symmetric per-group int4: each group of `GROUP` consecutive floats
+//! shares one f32 scale; values are rounded to [-7, 7] nibbles.  Storage is
+//! 0.5 byte/element + 4/GROUP bytes of scale — 5 bits/element at GROUP=32
+//! (4 payload + 1 scale overhead), an ~84% cut on top of whatever width
+//! reduction the pruning method already achieved.
+
+pub const GROUP: usize = 32;
+const QMAX: f32 = 7.0;
+
+/// Quantized row: packed nibbles + per-group scales.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantRow {
+    pub packed: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub len: usize,
+}
+
+impl QuantRow {
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + 4 * self.scales.len()
+    }
+}
+
+pub fn quantize(row: &[f32]) -> QuantRow {
+    let n = row.len();
+    let n_groups = n.div_ceil(GROUP);
+    let mut scales = Vec::with_capacity(n_groups);
+    let mut packed = vec![0u8; n.div_ceil(2)];
+    for g in 0..n_groups {
+        let lo = g * GROUP;
+        let hi = (lo + GROUP).min(n);
+        let amax = row[lo..hi].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let scale = if amax > 0.0 { amax / QMAX } else { 1.0 };
+        scales.push(scale);
+        for i in lo..hi {
+            let q = (row[i] / scale).round().clamp(-QMAX, QMAX) as i8;
+            let nib = (q + 8) as u8; // bias to [1, 15]
+            if i % 2 == 0 {
+                packed[i / 2] |= nib;
+            } else {
+                packed[i / 2] |= nib << 4;
+            }
+        }
+    }
+    QuantRow {
+        packed,
+        scales,
+        len: n,
+    }
+}
+
+pub fn dequantize(q: &QuantRow, out: &mut [f32]) {
+    assert_eq!(out.len(), q.len);
+    for i in 0..q.len {
+        let nib = if i % 2 == 0 {
+            q.packed[i / 2] & 0x0F
+        } else {
+            q.packed[i / 2] >> 4
+        };
+        let v = nib as i32 - 8;
+        out[i] = v as f32 * q.scales[i / GROUP];
+    }
+}
+
+/// Round-trip a row through int4 (what the cache stores) — used by the
+/// quantized-eval engine wrapper.
+pub fn roundtrip(row: &mut [f32]) {
+    let q = quantize(row);
+    dequantize(&q, row);
+}
+
+/// Effective bits per element for a given row length.
+pub fn bits_per_element(n: usize) -> f64 {
+    let q = n.div_ceil(2) as f64 * 8.0 + n.div_ceil(GROUP) as f64 * 32.0;
+    q / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        for n in [1, 7, 32, 33, 64, 100] {
+            let row: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 2.0).collect();
+            let q = quantize(&row);
+            let mut back = vec![0.0f32; n];
+            dequantize(&q, &mut back);
+            for g in 0..n.div_ceil(GROUP) {
+                let lo = g * GROUP;
+                let hi = (lo + GROUP).min(n);
+                let amax = row[lo..hi].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let tol = amax / QMAX / 2.0 + 1e-6;
+                for i in lo..hi {
+                    assert!(
+                        (row[i] - back[i]).abs() <= tol + 1e-5,
+                        "n={n} i={i}: {} vs {}",
+                        row[i],
+                        back[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_row_stays_zero() {
+        let row = vec![0.0f32; 40];
+        let q = quantize(&row);
+        let mut back = vec![1.0f32; 40];
+        dequantize(&q, &mut back);
+        assert!(back.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn storage_is_about_4_bits() {
+        // 4 payload bits + one f32 scale per GROUP=32 -> 5 bits/element.
+        let bpe = bits_per_element(256);
+        assert!(bpe >= 4.0 && bpe <= 5.01, "{bpe}");
+        let row: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let q = quantize(&row);
+        assert_eq!(q.bytes(), 128 + 4 * 8);
+    }
+
+    #[test]
+    fn extreme_values_clamp_not_overflow() {
+        let row = vec![1e30f32, -1e30, 0.5, -0.5];
+        let q = quantize(&row);
+        let mut back = vec![0.0f32; 4];
+        dequantize(&q, &mut back);
+        assert!(back.iter().all(|v| v.is_finite()));
+        assert!(back[0] > 0.0 && back[1] < 0.0);
+    }
+
+    #[test]
+    fn preserves_sign_and_order_within_group() {
+        let row = vec![-3.0f32, -1.0, 0.0, 1.0, 3.0];
+        let mut back = row.clone();
+        roundtrip(&mut back);
+        for w in back.windows(2) {
+            assert!(w[0] <= w[1] + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! # RAP — KV-Cache Compression via RoPE-Aligned Pruning
+//!
+//! Production-quality reproduction of *RAP: KV-Cache Compression via
+//! RoPE-Aligned Pruning* (Xin et al., 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): index-aware
+//!   non-contiguous RoPE and fused latent-KV decode attention, AOT-lowered.
+//! * **L2** — JAX model + the offline RAP pipeline (`python/compile/`):
+//!   Fisher scoring, Algorithm-2 budgets, pair pruning, B-absorption,
+//!   KD+LoRA recovery; exported as HLO text + weight binaries.
+//! * **L3** — this crate: the serving coordinator (router, continuous
+//!   batcher, latent-width-aware paged KV cache), the PJRT runtime that
+//!   executes the AOT artifacts, a pure-Rust reference engine, the analytic
+//!   cost model, and the full experiments harness regenerating every table
+//!   and figure in the paper.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `rap` binary is self-contained.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod eval;
+pub mod experiments;
+pub mod kvcache;
+pub mod manifest;
+pub mod model;
+pub mod rap;
+pub mod rope;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,274 @@
+//! `rap` — leader binary: serve, generate, evaluate, plan, benchmark,
+//! and regenerate every paper table/figure.
+//!
+//! Subcommands:
+//!   info                         — manifest summary
+//!   generate  --model --variant --prompt --max-new [--engine rust|pjrt]
+//!   eval      --model [--variants a,b] [--quant]
+//!   serve     --model --variant [--addr 127.0.0.1:7433]
+//!   bench-serving --model --variant [--requests N] [--rate R]
+//!   plan      --rho 0.3          — run the native RAP planner on a config
+//!   experiments [name|--all] [--quick]
+
+use anyhow::{Context, Result};
+
+use rap::config::{Method, ModelConfig};
+use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use rap::eval::{eval_ppl, eval_ppl_quantized};
+use rap::experiments::{self, ExpContext};
+use rap::kvcache::CacheShape;
+use rap::manifest::Manifest;
+use rap::model::load_engine;
+use rap::rap::budget::{allocate, ranks_from_ratios, GroupScores};
+use rap::runtime::backend::PjrtBackend;
+use rap::runtime::{session::Session, PjrtContext, PjrtEngine};
+use rap::util::cli::Args;
+use rap::workload::{generate as gen_workload, WorkloadConfig};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("generate") => cmd_generate(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-serving") => cmd_bench_serving(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("experiments") => cmd_experiments(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "rap — RoPE-Aligned Pruning serving stack\n\n\
+         USAGE: rap <subcommand> [options]\n\n\
+         subcommands:\n\
+           info                                   manifest & artifact summary\n\
+           generate  --model M --variant V --prompt P [--max-new N] [--engine rust|pjrt]\n\
+           eval      --model M [--variants a,b,c] [--quant] [--windows N]\n\
+           serve     --model M --variant V [--addr HOST:PORT] [--sessions N]\n\
+           bench-serving --model M --variant V [--requests N] [--rate R]\n\
+           plan      --rho R [--layers L] [--seed S]   native Alg.2 + pair-selection demo\n\
+           experiments [NAME ...|--all] [--quick]      regenerate paper tables/figures\n"
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    let manifest = Manifest::load_default()?;
+    println!("artifacts root: {}", manifest.root.display());
+    println!(
+        "s_max: {}  eval: seq {} x {} windows",
+        manifest.s_max, manifest.eval_seq, manifest.eval_windows
+    );
+    for (name, entry) in &manifest.models {
+        let c = &entry.config;
+        println!(
+            "\nmodel {name}: d={} L={} H={}/{} dh={} pairing={:?}",
+            c.d_model, c.n_layers, c.n_heads, c.n_kv_heads, c.head_dim, c.pairing,
+        );
+        println!("  variants ({}):", entry.variants.len());
+        for (key, ve) in &entry.variants {
+            let graphs = entry.hlo.get(key).map(|g| g.len()).unwrap_or(0);
+            println!(
+                "    {key:<18} kv={:>5.1}% ppl(py)={:<8.3} graphs={graphs}",
+                100.0 * ve.spec.kv_retained(c),
+                ve.ppl_python
+            );
+        }
+    }
+    println!("\nrope-bench graphs: {}", manifest.rope_bench.len());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tinyllama").to_string();
+    let variant = args.get_or("variant", "rap_r30").to_string();
+    let prompt = args.get_or("prompt", "the quick brown fox ").as_bytes().to_vec();
+    let max_new = args.get_usize("max-new", 48);
+    let manifest = Manifest::load_default()?;
+
+    match args.get_or("engine", "pjrt") {
+        "rust" => {
+            let engine = load_engine(&manifest, &model, &variant)?;
+            let out = engine.generate(&prompt, max_new, manifest.s_max);
+            println!("{}", String::from_utf8_lossy(&out));
+        }
+        _ => {
+            let ctx = PjrtContext::cpu()?;
+            let engine = PjrtEngine::load(&ctx, &manifest, &model, &variant)?;
+            let mut session = Session::new(&ctx, &engine)?;
+            session.prefill(&prompt)?;
+            let out = session.generate(max_new)?;
+            println!("{}", String::from_utf8_lossy(&out));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tinyllama").to_string();
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.model(&model)?;
+    let corpus = manifest.eval_corpus()?;
+    let windows = args.get_usize("windows", 12);
+    let variants = match args.get("variants") {
+        Some(_) => args.get_list("variants", &[]),
+        None => entry.variants.keys().cloned().collect(),
+    };
+    println!(
+        "{:<22} {:>8} {:>8} {:>8}",
+        "variant",
+        "ppl",
+        "py-ppl",
+        if args.flag("quant") { "int4" } else { "" }
+    );
+    for key in variants {
+        let Some(ve) = entry.variants.get(&key) else { continue };
+        let engine = load_engine(&manifest, &model, &key)?;
+        let ppl = eval_ppl(&engine, &corpus, manifest.eval_seq, windows)?;
+        if args.flag("quant") {
+            let q = eval_ppl_quantized(&engine, &corpus, manifest.eval_seq, windows.min(4))?;
+            println!("{key:<22} {ppl:>8.3} {:>8.3} {q:>8.3}", ve.ppl_python);
+        } else {
+            println!("{key:<22} {ppl:>8.3} {:>8.3}", ve.ppl_python);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tinyllama").to_string();
+    let variant = args.get_or("variant", "rap_r30").to_string();
+    let addr = args.get_or("addr", "127.0.0.1:7433").to_string();
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.model(&model)?;
+    let shape = CacheShape::of(&entry.config, &entry.variants[&variant].spec);
+
+    println!(
+        "serving {model}/{variant} on {addr} (KV {:.0}% of baseline)",
+        100.0 * entry.variants[&variant].spec.kv_retained(&entry.config)
+    );
+    let sessions = args.get_usize("sessions", 4);
+    let model2 = model.clone();
+    let variant2 = variant.clone();
+    // PJRT handles are !Send: the factory builds the whole backend on the
+    // scheduler thread (process-lifetime objects leak intentionally).
+    let factory = move || -> Result<Coordinator<PjrtBackend<'static>>> {
+        let manifest = Manifest::load_default()?;
+        let ctx: &'static PjrtContext = Box::leak(Box::new(PjrtContext::cpu()?));
+        let engine: &'static PjrtEngine =
+            Box::leak(Box::new(PjrtEngine::load(ctx, &manifest, &model2, &variant2)?));
+        let backend = PjrtBackend::new(ctx, engine)?;
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: sessions,
+                    buckets: engine.decode_batches(),
+                    max_queue: 512,
+                },
+                kv_budget_bytes: 128 << 20,
+            },
+        ))
+    };
+    let handle = rap::server::serve(&addr, factory, 4)?;
+    println!(
+        "listening on {} — protocol: one JSON object per line {{\"prompt\", \"max_new\"}}",
+        handle.addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_bench_serving(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tinyllama").to_string();
+    let variant = args.get_or("variant", "rap_r30").to_string();
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.model(&model)?;
+    let corpus = manifest.eval_corpus()?;
+    let ctx = PjrtContext::cpu()?;
+    let engine = PjrtEngine::load(&ctx, &manifest, &model, &variant)?;
+    let backend = PjrtBackend::new(&ctx, &engine)?;
+    let shape = CacheShape::of(&entry.config, &entry.variants[&variant].spec);
+    let mut coord = Coordinator::new(
+        backend,
+        shape,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: args.get_usize("sessions", 4),
+                buckets: engine.decode_batches(),
+                max_queue: 1024,
+            },
+            kv_budget_bytes: 64 << 20,
+        },
+    );
+    let wl = WorkloadConfig {
+        n_requests: args.get_usize("requests", 32),
+        arrival_rate: args.get_f64("rate", 50.0),
+        ..Default::default()
+    };
+    for tr in gen_workload(&wl, &corpus) {
+        coord.submit(tr.request);
+    }
+    coord.run_to_completion()?;
+    println!("{}", coord.metrics.report());
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    // Native Algorithm-2 + pair-selection demo on a synthetic config: shows
+    // the budget allocation and the selected pairs without any artifacts.
+    let rho = args.get_f64("rho", 0.3);
+    let layers = args.get_usize("layers", 4);
+    let seed = args.get_usize("seed", 42) as u64;
+    let mut cfg = ModelConfig::paper_llama();
+    cfg.n_layers = layers;
+    let mut rng = rap::util::rng::Rng::new(seed);
+    let scores = GroupScores {
+        k: (0..layers).map(|_| rng.f64() * 10.0 + 0.1).collect(),
+        v: (0..layers).map(|_| rng.f64() * 30.0 + 5.0).collect(),
+    };
+    let (rk, rv) = allocate(&scores, rho);
+    let (m, rvv) = ranks_from_ratios(&cfg, &rk, &rv);
+    println!("Algorithm 2 on synthetic Fisher mass (rho={rho}):");
+    for l in 0..layers {
+        println!(
+            "  layer {l}: score k={:.2} v={:.2}  ->  rho_k={:.3} rho_v={:.3}  ->  m={} (K width {}), rv={}",
+            scores.k[l], scores.v[l], rk[l], rv[l], m[l], 2 * m[l], rvv[l]
+        );
+    }
+    let achieved = rap::rap::budget::achieved_kv_ratio(&cfg, &m, &rvv);
+    println!(
+        "achieved KV retention: {:.1}% (target {:.1}%)",
+        achieved * 100.0,
+        (1.0 - rho) * 100.0
+    );
+    println!(
+        "break-even rho at H=1: SVD {:.0}%, PaLU {:.0}%, RAP 0%",
+        100.0 * rap::cost::break_even_rho(Method::Svd, 1),
+        100.0 * rap::cost::break_even_rho(Method::Palu, 1),
+    );
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let ctx = ExpContext::new(args.flag("quick"))?;
+    if args.flag("all") || args.positionals.is_empty() {
+        experiments::run_all(&ctx)?;
+    } else {
+        for name in &args.positionals {
+            experiments::run(&ctx, name).with_context(|| format!("experiment {name}"))?;
+        }
+    }
+    Ok(())
+}

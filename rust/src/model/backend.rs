@@ -1,0 +1,83 @@
+//! Pure-Rust engine as a serving backend (dense latency sweeps and tests:
+//! no PJRT dependency, deterministic, FLOP-instrumented).  Decode batches
+//! execute sequentially — batching still amortises scheduler work, and the
+//! identical coordinator logic is exercised.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::scheduler::Backend;
+use crate::coordinator::RequestId;
+use crate::model::{Cache, Engine};
+
+pub struct RustBackend<'a> {
+    pub engine: &'a Engine,
+    s_max: usize,
+    sessions: BTreeMap<RequestId, Cache>,
+    /// Optional int4 round-trip of newly written latent rows (Fig. 12).
+    pub quantize_kv: bool,
+}
+
+impl<'a> RustBackend<'a> {
+    pub fn new(engine: &'a Engine, s_max: usize) -> RustBackend<'a> {
+        RustBackend {
+            engine,
+            s_max,
+            sessions: BTreeMap::new(),
+            quantize_kv: false,
+        }
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    fn quantize_step(&self, cache: &mut Cache, pos: usize) {
+        if !self.quantize_kv {
+            return;
+        }
+        for lc in &mut cache.layers {
+            for h in 0..lc.n_kv_heads {
+                crate::kvcache::quant::roundtrip(lc.k_row_mut(h, pos));
+                crate::kvcache::quant::roundtrip(lc.v_row_mut(h, pos));
+            }
+        }
+    }
+}
+
+impl<'a> Backend for RustBackend<'a> {
+    fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    fn prefill(&mut self, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
+        let mut cache = self.engine.new_cache(self.s_max);
+        let mut logits = Vec::new();
+        for (i, &t) in prompt.iter().enumerate() {
+            logits = self.engine.step(t, i, &mut cache);
+            self.quantize_step(&mut cache, i);
+        }
+        self.sessions.insert(session, cache);
+        Ok(logits)
+    }
+
+    fn decode_batch(&mut self, entries: &[(RequestId, u8, usize)]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(entries.len());
+        for &(id, token, pos) in entries {
+            let mut cache = self
+                .sessions
+                .remove(&id)
+                .with_context(|| format!("unknown session {id}"))?;
+            let logits = self.engine.step(token, pos, &mut cache);
+            self.quantize_step(&mut cache, pos);
+            self.sessions.insert(id, cache);
+            out.push(logits);
+        }
+        Ok(out)
+    }
+
+    fn drop_session(&mut self, session: RequestId) {
+        self.sessions.remove(&session);
+    }
+}

@@ -1,0 +1,607 @@
+//! Pure-Rust inference engine for every compression variant.
+//!
+//! The engine mirrors `python/compile/model.py` operation-for-operation and
+//! is cross-validated against PJRT executions of the exported HLO in the
+//! integration tests.  It powers the evaluation experiments (PPL, probe
+//! tasks, long-context suite), dense latency sweeps, and the measured-FLOPs
+//! harness (every matmul is routed through a FLOP counter).
+//!
+//! Method semantics (paper Figure 1 / §4.3):
+//! * baseline — full K (post-RoPE) and V cached.
+//! * svd      — pre-RoPE latent K and latent V cached; **both reconstructed
+//!              every attention call** (the overhead RAP removes).
+//! * palu     — latent K reconstructed; latent V consumed directly through
+//!              the absorbed W_o.
+//! * rap      — index-aware-RoPE'd latent K and latent V consumed directly:
+//!              attention runs entirely at latent widths.
+
+use std::cell::Cell;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Method, ModelConfig, VariantSpec};
+use crate::model::weights::Weights;
+use crate::rap::plan::LayerPlan;
+use crate::rope::apply_full;
+use crate::tensor::ops::{add_inplace, dot, rms_norm, silu, softmax_inplace, vecmat};
+use crate::tensor::Tensor;
+
+/// Per-layer KV cache in *latent* widths.  Row-major [Hkv, Smax, width].
+#[derive(Debug, Clone)]
+pub struct LayerCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub k_width: usize,
+    pub v_width: usize,
+    pub s_max: usize,
+    pub n_kv_heads: usize,
+}
+
+impl LayerCache {
+    pub fn new(n_kv_heads: usize, s_max: usize, k_width: usize, v_width: usize) -> LayerCache {
+        LayerCache {
+            k: vec![0.0; n_kv_heads * s_max * k_width],
+            v: vec![0.0; n_kv_heads * s_max * v_width],
+            k_width,
+            v_width,
+            s_max,
+            n_kv_heads,
+        }
+    }
+
+    #[inline]
+    pub fn k_row(&self, head: usize, s: usize) -> &[f32] {
+        let o = (head * self.s_max + s) * self.k_width;
+        &self.k[o..o + self.k_width]
+    }
+
+    #[inline]
+    pub fn k_row_mut(&mut self, head: usize, s: usize) -> &mut [f32] {
+        let o = (head * self.s_max + s) * self.k_width;
+        &mut self.k[o..o + self.k_width]
+    }
+
+    #[inline]
+    pub fn v_row(&self, head: usize, s: usize) -> &[f32] {
+        let o = (head * self.s_max + s) * self.v_width;
+        &self.v[o..o + self.v_width]
+    }
+
+    #[inline]
+    pub fn v_row_mut(&mut self, head: usize, s: usize) -> &mut [f32] {
+        let o = (head * self.s_max + s) * self.v_width;
+        &mut self.v[o..o + self.v_width]
+    }
+
+    pub fn bytes(&self) -> usize {
+        4 * (self.k.len() + self.v.len())
+    }
+}
+
+/// Whole-model cache for one sequence.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    pub layers: Vec<LayerCache>,
+    pub len: usize,
+}
+
+impl Cache {
+    pub fn bytes_used(&self) -> usize {
+        // Bytes that would be resident for the *current* length.
+        self.layers
+            .iter()
+            .map(|l| 4 * self.len * l.n_kv_heads * (l.k_width + l.v_width))
+            .sum()
+    }
+}
+
+struct Layer {
+    attn_norm: Tensor,
+    mlp_norm: Tensor,
+    w_gate: Tensor,
+    w_up: Tensor,
+    w_down: Tensor,
+    attn: AttnKind,
+}
+
+#[allow(clippy::large_enum_variant)]
+enum AttnKind {
+    Baseline {
+        wq: Tensor,
+        wk: Tensor,
+        wv: Tensor,
+        wo: Tensor,
+    },
+    Svd {
+        wq: Tensor,
+        a_k: Tensor,
+        /// per KV head [rk, dh]
+        b_k: Vec<Tensor>,
+        a_v: Tensor,
+        b_v: Vec<Tensor>,
+        wo: Tensor,
+    },
+    Palu {
+        wq: Tensor,
+        a_k: Tensor,
+        b_k: Vec<Tensor>,
+        a_v: Tensor,
+        wo_t: Tensor,
+    },
+    Rap {
+        wq_t: Tensor,
+        a_k: Tensor,
+        a_v: Tensor,
+        wo_t: Tensor,
+        plan: LayerPlan,
+    },
+}
+
+/// FLOP counter (mul+add = 2, matching the paper's Table 6 convention).
+#[derive(Debug, Default)]
+pub struct Flops(Cell<u64>);
+
+impl Flops {
+    #[inline]
+    fn add(&self, n: u64) {
+        self.0.set(self.0.get() + n);
+    }
+
+    pub fn take(&self) -> u64 {
+        let v = self.0.get();
+        self.0.set(0);
+        v
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.get()
+    }
+}
+
+pub struct Engine {
+    pub cfg: ModelConfig,
+    pub spec: VariantSpec,
+    tok_emb: Tensor,
+    final_norm: Tensor,
+    layers: Vec<Layer>,
+    pub flops: Flops,
+}
+
+fn split_heads(b_k: &Tensor, n_heads: usize) -> Vec<Tensor> {
+    // manifest shape [H, r, dh] -> H tensors [r, dh]
+    assert_eq!(b_k.rank(), 3);
+    let (h, r, dh) = (b_k.shape[0], b_k.shape[1], b_k.shape[2]);
+    assert_eq!(h, n_heads);
+    (0..h)
+        .map(|i| {
+            Tensor::new(
+                vec![r, dh],
+                b_k.data[i * r * dh..(i + 1) * r * dh].to_vec(),
+            )
+        })
+        .collect()
+}
+
+impl Engine {
+    pub fn new(cfg: ModelConfig, spec: VariantSpec, w: &Weights) -> Result<Engine> {
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let attn = match spec.method {
+                Method::Baseline => AttnKind::Baseline {
+                    wq: w.layer(l, "wq").clone(),
+                    wk: w.layer(l, "wk").clone(),
+                    wv: w.layer(l, "wv").clone(),
+                    wo: w.layer(l, "wo").clone(),
+                },
+                Method::Svd => AttnKind::Svd {
+                    wq: w.layer(l, "wq").clone(),
+                    a_k: w.layer(l, "a_k").clone(),
+                    b_k: split_heads(w.layer(l, "b_k"), cfg.n_kv_heads),
+                    a_v: w.layer(l, "a_v").clone(),
+                    b_v: split_heads(w.layer(l, "b_v"), cfg.n_kv_heads),
+                    wo: w.layer(l, "wo").clone(),
+                },
+                Method::Palu => AttnKind::Palu {
+                    wq: w.layer(l, "wq").clone(),
+                    a_k: w.layer(l, "a_k").clone(),
+                    b_k: split_heads(w.layer(l, "b_k"), cfg.n_kv_heads),
+                    a_v: w.layer(l, "a_v").clone(),
+                    wo_t: w.layer(l, "wo_t").clone(),
+                },
+                Method::Rap => {
+                    if spec.k_pairs.len() != cfg.n_layers {
+                        bail!("rap spec missing k_pairs for layer {l}");
+                    }
+                    AttnKind::Rap {
+                        wq_t: w.layer(l, "wq_t").clone(),
+                        a_k: w.layer(l, "a_k").clone(),
+                        a_v: w.layer(l, "a_v").clone(),
+                        wo_t: w.layer(l, "wo_t").clone(),
+                        plan: LayerPlan::new(&cfg, spec.k_pairs[l].clone()),
+                    }
+                }
+            };
+            layers.push(Layer {
+                attn_norm: w.layer(l, "attn_norm").clone(),
+                mlp_norm: w.layer(l, "mlp_norm").clone(),
+                w_gate: w.layer(l, "w_gate").clone(),
+                w_up: w.layer(l, "w_up").clone(),
+                w_down: w.layer(l, "w_down").clone(),
+                attn,
+            });
+        }
+        Ok(Engine {
+            tok_emb: w.get("tok_emb").clone(),
+            final_norm: w.get("final_norm").clone(),
+            layers,
+            cfg,
+            spec,
+            flops: Flops::default(),
+        })
+    }
+
+    pub fn new_cache(&self, s_max: usize) -> Cache {
+        Cache {
+            layers: (0..self.cfg.n_layers)
+                .map(|l| {
+                    LayerCache::new(
+                        self.cfg.n_kv_heads,
+                        s_max,
+                        self.spec.k_rank[l],
+                        self.spec.v_rank[l],
+                    )
+                })
+                .collect(),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn vecmat_counted(&self, x: &[f32], w: &Tensor) -> Vec<f32> {
+        let (k, n) = w.dims2();
+        self.flops.add(2 * (k * n) as u64);
+        vecmat(x, w)
+    }
+
+    fn embed(&self, token: u8) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        self.tok_emb.data[token as usize * d..(token as usize + 1) * d].to_vec()
+    }
+
+    fn logits_from_hidden(&self, x: &[f32]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab;
+        let mut h = vec![0.0f32; d];
+        rms_norm(x, &self.final_norm.data, self.cfg.norm_eps, &mut h);
+        // tied embedding head: logits = h @ tok_emb^T
+        self.flops.add(2 * (d * v) as u64);
+        let mut logits = vec![0.0f32; v];
+        for t in 0..v {
+            logits[t] = dot(&h, &self.tok_emb.data[t * d..(t + 1) * d]);
+        }
+        logits
+    }
+
+    fn mlp_inplace(&self, layer: &Layer, x: &mut [f32]) {
+        let d = self.cfg.d_model;
+        let mut h = vec![0.0f32; d];
+        rms_norm(x, &layer.mlp_norm.data, self.cfg.norm_eps, &mut h);
+        let mut g = self.vecmat_counted(&h, &layer.w_gate);
+        let u = self.vecmat_counted(&h, &layer.w_up);
+        for (gv, uv) in g.iter_mut().zip(&u) {
+            *gv = silu(*gv) * uv;
+        }
+        let down = self.vecmat_counted(&g, &layer.w_down);
+        add_inplace(x, &down);
+    }
+
+    /// Project the normed hidden state of ONE token at `pos` into the
+    /// cacheable K/V rows for layer `l`, and return the rotated Q rows
+    /// [H][q_width].  Writes the K/V rows into the cache at `pos`.
+    fn project_token(
+        &self,
+        layer: &Layer,
+        h: &[f32],
+        pos: usize,
+        cache: &mut LayerCache,
+    ) -> Vec<Vec<f32>> {
+        let cfg = &self.cfg;
+        let dh = cfg.head_dim;
+        match &layer.attn {
+            AttnKind::Baseline { wq, wk, wv, .. } => {
+                let q = self.vecmat_counted(h, wq);
+                let k = self.vecmat_counted(h, wk);
+                let v = self.vecmat_counted(h, wv);
+                for hd in 0..cfg.n_kv_heads {
+                    let krow = cache.k_row_mut(hd, pos);
+                    krow.copy_from_slice(&k[hd * dh..(hd + 1) * dh]);
+                    apply_full(krow, pos, cfg.pairing, cfg.rope_theta);
+                    cache
+                        .v_row_mut(hd, pos)
+                        .copy_from_slice(&v[hd * dh..(hd + 1) * dh]);
+                }
+                (0..cfg.n_heads)
+                    .map(|hq| {
+                        let mut row = q[hq * dh..(hq + 1) * dh].to_vec();
+                        apply_full(&mut row, pos, cfg.pairing, cfg.rope_theta);
+                        row
+                    })
+                    .collect()
+            }
+            AttnKind::Svd { wq, a_k, a_v, .. } | AttnKind::Palu { wq, a_k, a_v, .. } => {
+                // Pre-RoPE latents cached; Q full-rope'd.
+                let q = self.vecmat_counted(h, wq);
+                let kl = self.vecmat_counted(h, a_k);
+                let vl = self.vecmat_counted(h, a_v);
+                let (kw, vw) = (cache.k_width, cache.v_width);
+                for hd in 0..cfg.n_kv_heads {
+                    cache
+                        .k_row_mut(hd, pos)
+                        .copy_from_slice(&kl[hd * kw..(hd + 1) * kw]);
+                    cache
+                        .v_row_mut(hd, pos)
+                        .copy_from_slice(&vl[hd * vw..(hd + 1) * vw]);
+                }
+                (0..cfg.n_heads)
+                    .map(|hq| {
+                        let mut row = q[hq * dh..(hq + 1) * dh].to_vec();
+                        apply_full(&mut row, pos, cfg.pairing, cfg.rope_theta);
+                        row
+                    })
+                    .collect()
+            }
+            AttnKind::Rap {
+                wq_t, a_k, a_v, plan, ..
+            } => {
+                let q = self.vecmat_counted(h, wq_t);
+                let kl = self.vecmat_counted(h, a_k);
+                let vl = self.vecmat_counted(h, a_v);
+                let (kw, vw) = (cache.k_width, cache.v_width);
+                for hd in 0..cfg.n_kv_heads {
+                    let krow = cache.k_row_mut(hd, pos);
+                    krow.copy_from_slice(&kl[hd * kw..(hd + 1) * kw]);
+                    // Index-aware RoPE directly on the latent — the fused
+                    // hot path (no reconstruction, no gather).
+                    plan.k_table.apply_fused(hd, krow, pos);
+                    cache
+                        .v_row_mut(hd, pos)
+                        .copy_from_slice(&vl[hd * vw..(hd + 1) * vw]);
+                }
+                (0..cfg.n_heads)
+                    .map(|hq| {
+                        let mut row = q[hq * kw..(hq + 1) * kw].to_vec();
+                        plan.q_table.apply_fused(hq, &mut row, pos);
+                        row
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Attention for ONE query token at `pos` over cache[0..=ctx_end].
+    /// Returns the per-head context vectors [H][v_width_effective].
+    fn attend(
+        &self,
+        layer: &Layer,
+        q_rows: &[Vec<f32>],
+        cache: &LayerCache,
+        ctx_end: usize,
+    ) -> Vec<Vec<f32>> {
+        let cfg = &self.cfg;
+        let dh = cfg.head_dim;
+        let group = cfg.group_size();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let s = ctx_end + 1;
+
+        // Reconstruction step for factorization methods (paper Fig. 1):
+        // K (and V for SVD) are expanded to full dimension for the whole
+        // visible context, every call.
+        let (recon_k, recon_v): (Option<Vec<Vec<f32>>>, Option<Vec<Vec<f32>>>) =
+            match &layer.attn {
+                AttnKind::Svd { b_k, b_v, .. } => (
+                    Some(self.reconstruct(cache, b_k, true, s)),
+                    Some(self.reconstruct(cache, b_v, false, s)),
+                ),
+                AttnKind::Palu { b_k, .. } => {
+                    (Some(self.reconstruct(cache, b_k, true, s)), None)
+                }
+                _ => (None, None),
+            };
+
+        let mut out = Vec::with_capacity(cfg.n_heads);
+        let mut scores = vec![0.0f32; s];
+        for hq in 0..cfg.n_heads {
+            let hk = hq / group;
+            let q = &q_rows[hq];
+            // scores
+            match &recon_k {
+                Some(k_full) => {
+                    let krows = &k_full[hk];
+                    for t in 0..s {
+                        scores[t] = dot(q, &krows[t * dh..(t + 1) * dh]) * scale;
+                    }
+                    self.flops.add(2 * (s * dh) as u64);
+                }
+                None => {
+                    let w = cache.k_width;
+                    for t in 0..s {
+                        scores[t] = dot(q, cache.k_row(hk, t)) * scale;
+                    }
+                    self.flops.add(2 * (s * w) as u64);
+                }
+            }
+            softmax_inplace(&mut scores[..s]);
+            // values
+            let vw_eff = match &layer.attn {
+                AttnKind::Svd { .. } | AttnKind::Baseline { .. } => dh,
+                _ => cache.v_width,
+            };
+            let mut ctx = vec![0.0f32; vw_eff];
+            match &recon_v {
+                Some(v_full) => {
+                    let vrows = &v_full[hk];
+                    for t in 0..s {
+                        crate::tensor::ops::axpy(scores[t], &vrows[t * dh..(t + 1) * dh], &mut ctx);
+                    }
+                }
+                None => {
+                    for t in 0..s {
+                        crate::tensor::ops::axpy(scores[t], cache.v_row(hk, t), &mut ctx);
+                    }
+                }
+            }
+            self.flops.add(2 * (s * vw_eff) as u64);
+            out.push(ctx);
+        }
+        out
+    }
+
+    /// Expand the latent cache rows [0, s) of every KV head through the
+    /// per-head reconstruction matrices ([w, dh] each).  Counted as FLOPs —
+    /// this is exactly the overhead Table 2 attributes to SVD/PaLU.
+    fn reconstruct(
+        &self,
+        cache: &LayerCache,
+        b: &[Tensor],
+        is_k: bool,
+        s: usize,
+    ) -> Vec<Vec<f32>> {
+        let dh = self.cfg.head_dim;
+        let mut out = Vec::with_capacity(self.cfg.n_kv_heads);
+        for hd in 0..self.cfg.n_kv_heads {
+            let bw = &b[hd];
+            let (w, _) = bw.dims2();
+            let mut rows = vec![0.0f32; s * dh];
+            for t in 0..s {
+                let lat = if is_k { cache.k_row(hd, t) } else { cache.v_row(hd, t) };
+                let dst = &mut rows[t * dh..(t + 1) * dh];
+                for (p, &lv) in lat.iter().enumerate().take(w) {
+                    if lv != 0.0 {
+                        crate::tensor::ops::axpy(lv, bw.row(p), dst);
+                    }
+                }
+            }
+            self.flops.add(2 * (s * w * dh) as u64);
+            let mut full = rows;
+            if is_k {
+                // RoPE the reconstructed K at its token positions.
+                for t in 0..s {
+                    apply_full(
+                        &mut full[t * dh..(t + 1) * dh],
+                        t,
+                        self.cfg.pairing,
+                        self.cfg.rope_theta,
+                    );
+                }
+            }
+            out.push(full);
+        }
+        out
+    }
+
+    fn output_proj(&self, layer: &Layer, ctx: &[Vec<f32>], x: &mut [f32]) {
+        let merged: Vec<f32> = ctx.iter().flatten().copied().collect();
+        let wo = match &layer.attn {
+            AttnKind::Baseline { wo, .. } | AttnKind::Svd { wo, .. } => wo,
+            AttnKind::Palu { wo_t, .. } | AttnKind::Rap { wo_t, .. } => wo_t,
+        };
+        let o = self.vecmat_counted(&merged, wo);
+        add_inplace(x, &o);
+    }
+
+    /// Process one token at `pos` given cache filled for [0, pos); updates
+    /// the cache and returns the hidden state's logits.
+    pub fn step(&self, token: u8, pos: usize, cache: &mut Cache) -> Vec<f32> {
+        assert!(pos < cache.layers[0].s_max, "cache overflow at pos {pos}");
+        let d = self.cfg.d_model;
+        let mut x = self.embed(token);
+        let mut h = vec![0.0f32; d];
+        for (l, layer) in self.layers.iter().enumerate() {
+            rms_norm(&x, &layer.attn_norm.data, self.cfg.norm_eps, &mut h);
+            let lc = &mut cache.layers[l];
+            let q_rows = self.project_token(layer, &h, pos, lc);
+            let ctx = self.attend(layer, &q_rows, lc, pos);
+            self.output_proj(layer, &ctx, &mut x);
+            self.mlp_inplace(layer, &mut x);
+        }
+        cache.len = cache.len.max(pos + 1);
+        self.logits_from_hidden(&x)
+    }
+
+    /// Prefill a prompt, returning logits at the last position.
+    pub fn prefill(&self, tokens: &[u8], cache: &mut Cache) -> Vec<f32> {
+        let mut logits = Vec::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            logits = self.step(t, i, cache);
+        }
+        logits
+    }
+
+    /// Mean negative log-likelihood of `targets` given `tokens` (teacher
+    /// forcing), batch-1 full-sequence evaluation.
+    pub fn nll(&self, tokens: &[u8], targets: &[u8], s_max: usize) -> f64 {
+        assert_eq!(tokens.len(), targets.len());
+        let mut cache = self.new_cache(s_max.max(tokens.len()));
+        let mut total = 0.0f64;
+        for (i, (&t, &y)) in tokens.iter().zip(targets.iter()).enumerate() {
+            let logits = self.step(t, i, &mut cache);
+            // log-softmax at the target
+            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = logits.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+            total += (lse - logits[y as usize]) as f64;
+        }
+        total / tokens.len() as f64
+    }
+
+    /// Greedy-decode `n` tokens after a prompt; returns generated bytes.
+    pub fn generate(&self, prompt: &[u8], n: usize, s_max: usize) -> Vec<u8> {
+        let mut cache = self.new_cache(s_max);
+        let mut logits = self.prefill(prompt, &mut cache);
+        let mut out = Vec::with_capacity(n);
+        let mut pos = prompt.len();
+        for _ in 0..n {
+            let next = argmax(&logits) as u8;
+            out.push(next);
+            if pos >= s_max {
+                break;
+            }
+            logits = self.step(next, pos, &mut cache);
+            pos += 1;
+        }
+        out
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn layer_cache_rows_disjoint() {
+        let mut c = LayerCache::new(2, 4, 3, 5);
+        c.k_row_mut(0, 1).copy_from_slice(&[1.0, 2.0, 3.0]);
+        c.k_row_mut(1, 1).copy_from_slice(&[9.0, 9.0, 9.0]);
+        assert_eq!(c.k_row(0, 1), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.k_row(0, 0), &[0.0, 0.0, 0.0]);
+        assert_eq!(c.v_row(1, 3).len(), 5);
+    }
+
+    // Engine integration tests (vs manifest weights and PJRT) live in
+    // rust/tests/.
+}

@@ -1,0 +1,25 @@
+//! Pure-Rust model substrate: weight loading + the reference inference
+//! engine used by evaluation experiments and cross-checked against PJRT.
+
+pub mod backend;
+pub mod engine;
+pub mod weights;
+
+pub use engine::{argmax, Cache, Engine, LayerCache};
+pub use weights::Weights;
+
+use anyhow::Result;
+
+use crate::manifest::Manifest;
+
+/// Convenience: build an engine for `model/variant` straight from the
+/// manifest.
+pub fn load_engine(manifest: &Manifest, model: &str, variant: &str) -> Result<Engine> {
+    let entry = manifest.model(model)?;
+    let ve = entry
+        .variants
+        .get(variant)
+        .ok_or_else(|| anyhow::anyhow!("variant {variant:?} not found for {model}"))?;
+    let w = Weights::load(manifest, ve)?;
+    Engine::new(entry.config.clone(), ve.spec.clone(), &w)
+}

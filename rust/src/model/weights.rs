@@ -1,0 +1,85 @@
+//! Variant weight loading: flat little-endian f32 binaries indexed by the
+//! manifest's tensor table (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{Manifest, VariantEntry};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub named: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(manifest: &Manifest, entry: &VariantEntry) -> Result<Weights> {
+        let path = manifest.root.join(&entry.weights_path);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        if bytes.len() != entry.weights_bytes {
+            bail!(
+                "weights size mismatch for {}: {} vs manifest {}",
+                entry.weights_path,
+                bytes.len(),
+                entry.weights_bytes
+            );
+        }
+        let mut named = BTreeMap::new();
+        for t in &entry.tensors {
+            let n: usize = t.shape.iter().product();
+            let start = t.offset;
+            let end = start + 4 * n;
+            if end > bytes.len() {
+                bail!("tensor {} overruns weights file", t.name);
+            }
+            let mut data = Vec::with_capacity(n);
+            for chunk in bytes[start..end].chunks_exact(4) {
+                data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            named.insert(t.name.clone(), Tensor::new(t.shape.clone(), data));
+        }
+        Ok(Weights { named })
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.named
+            .get(name)
+            .unwrap_or_else(|| panic!("missing tensor {name:?}"))
+    }
+
+    pub fn layer(&self, layer: usize, field: &str) -> &Tensor {
+        self.get(&format!("layers.{layer}.{field}"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.named.contains_key(name)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.named.values().map(|t| t.numel()).sum()
+    }
+
+    /// Flatten in a given name order (the order PJRT executables expect).
+    pub fn in_order<'a>(&'a self, names: &[String]) -> Vec<&'a Tensor> {
+        names.iter().map(|n| self.get(n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn f32_le_roundtrip() {
+        let vals = [0.0f32, 1.5, -3.25, f32::MIN_POSITIVE];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let parsed: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(parsed, vals);
+    }
+}

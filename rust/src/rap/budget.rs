@@ -1,0 +1,270 @@
+//! Adaptive budget allocation (Algorithm 2) — native mirror of
+//! `python/compile/rap/budget.py`, used by the `plan` CLI and by the
+//! property-test suite (the water-filling projection's invariants are easy
+//! to state and easy to get wrong).
+
+use crate::config::ModelConfig;
+
+/// Per-(layer, K/V) group Fisher mass.
+#[derive(Debug, Clone)]
+pub struct GroupScores {
+    /// sum of pair scores per layer for W_k.
+    pub k: Vec<f64>,
+    /// sum of column scores per layer for W_v.
+    pub v: Vec<f64>,
+}
+
+/// Algorithm 2: returns per-layer compression ratios (rho_k, rho_v) with
+/// mean exactly `rho` and every entry in [0, 1].
+pub fn allocate(scores: &GroupScores, rho: f64) -> (Vec<f64>, Vec<f64>) {
+    let l = scores.k.len();
+    assert_eq!(scores.v.len(), l);
+    let mut flat: Vec<f64> = Vec::with_capacity(2 * l);
+    for i in 0..l {
+        flat.push(scores.k[i]);
+        flat.push(scores.v[i]);
+    }
+    let n = flat.len();
+    let sc: f64 = flat.iter().sum();
+    let mut rho_i: Vec<f64> = if sc <= 0.0 || n <= 1 {
+        vec![rho; n]
+    } else {
+        flat.iter()
+            // Alg. 2 line 6: anti-proportional to sensitivity, normalised.
+            .map(|&s| rho * (1.0 - s / sc) / (1.0 - 1.0 / n as f64))
+            .collect()
+    };
+    for v in rho_i.iter_mut() {
+        *v = v.clamp(0.0, 1.0);
+    }
+    project_mean(&mut rho_i, rho);
+    let rho_k = rho_i.iter().step_by(2).copied().collect();
+    let rho_v = rho_i.iter().skip(1).step_by(2).copied().collect();
+    (rho_k, rho_v)
+}
+
+/// Project onto {y in [0,1]^n : mean(y) = target} by iterative
+/// water-filling (Alg. 2 line 9).
+pub fn project_mean(x: &mut [f64], target: f64) {
+    let target = target.clamp(0.0, 1.0);
+    let n = x.len();
+    if n == 0 {
+        return;
+    }
+    for v in x.iter_mut() {
+        *v = v.clamp(0.0, 1.0);
+    }
+    for _ in 0..200 {
+        let mean = x.iter().sum::<f64>() / n as f64;
+        let resid = target - mean;
+        if resid.abs() < 1e-13 {
+            break;
+        }
+        let free: Vec<usize> = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| if resid > 0.0 { v < 1.0 } else { v > 0.0 })
+            .map(|(i, _)| i)
+            .collect();
+        if free.is_empty() {
+            break;
+        }
+        let delta = resid * n as f64 / free.len() as f64;
+        for &i in &free {
+            x[i] = (x[i] + delta).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Integerise group ratios into retained pair counts / V ranks
+/// (head-uniform within a layer, §4.2 point 2), with a greedy fix-up so the
+/// achieved global KV ratio matches the target as closely as integers allow.
+pub fn ranks_from_ratios(
+    cfg: &ModelConfig,
+    rho_k: &[f64],
+    rho_v: &[f64],
+) -> (Vec<usize>, Vec<usize>) {
+    let p = cfg.n_pairs();
+    let dh = cfg.head_dim;
+    let mut m: Vec<usize> = rho_k
+        .iter()
+        .map(|r| (((1.0 - r) * p as f64).round() as usize).clamp(1, p))
+        .collect();
+    let mut rv: Vec<usize> = rho_v
+        .iter()
+        .map(|r| (((1.0 - r) * dh as f64).round() as usize).clamp(1, dh))
+        .collect();
+
+    let mean_rho =
+        (rho_k.iter().sum::<f64>() + rho_v.iter().sum::<f64>()) / (2 * cfg.n_layers) as f64;
+    let target_keep = (1.0 - mean_rho) * (2 * dh * cfg.n_layers) as f64;
+
+    for _ in 0..4 * cfg.n_layers {
+        let total: isize = m.iter().map(|&x| 2 * x as isize).sum::<isize>()
+            + rv.iter().map(|&x| x as isize).sum::<isize>();
+        let diff = target_keep - total as f64;
+        if diff.abs() < 1.0 {
+            break;
+        }
+        if diff > 0.0 {
+            // grow the width with the largest rounding deficit
+            let mut best: Option<(bool, usize, f64)> = None;
+            for i in 0..cfg.n_layers {
+                if m[i] < p {
+                    let deficit = (1.0 - rho_k[i]) * p as f64 - m[i] as f64;
+                    if best.map(|b| deficit > b.2).unwrap_or(true) {
+                        best = Some((true, i, deficit));
+                    }
+                }
+                if rv[i] < dh {
+                    let deficit = (1.0 - rho_v[i]) * dh as f64 - rv[i] as f64;
+                    if best.map(|b| deficit > b.2).unwrap_or(true) {
+                        best = Some((false, i, deficit));
+                    }
+                }
+            }
+            match best {
+                Some((true, i, _)) => m[i] += 1,
+                Some((false, i, _)) => rv[i] += 1,
+                None => break,
+            }
+        } else {
+            let mut best: Option<(bool, usize, f64)> = None;
+            for i in 0..cfg.n_layers {
+                if m[i] > 1 {
+                    let excess = m[i] as f64 - (1.0 - rho_k[i]) * p as f64;
+                    if best.map(|b| excess > b.2).unwrap_or(true) {
+                        best = Some((true, i, excess));
+                    }
+                }
+                if rv[i] > 1 {
+                    let excess = rv[i] as f64 - (1.0 - rho_v[i]) * dh as f64;
+                    if best.map(|b| excess > b.2).unwrap_or(true) {
+                        best = Some((false, i, excess));
+                    }
+                }
+            }
+            match best {
+                Some((true, i, _)) => m[i] -= 1,
+                Some((false, i, _)) => rv[i] -= 1,
+                None => break,
+            }
+        }
+    }
+    (m, rv)
+}
+
+/// Uniform arm of the Fig. 13 ablation.
+pub fn uniform_ranks(cfg: &ModelConfig, rho: f64) -> (Vec<usize>, Vec<usize>) {
+    let m = (((1.0 - rho) * cfg.n_pairs() as f64).round() as usize).clamp(1, cfg.n_pairs());
+    let rv = (((1.0 - rho) * cfg.head_dim as f64).round() as usize).clamp(1, cfg.head_dim);
+    (vec![m; cfg.n_layers], vec![rv; cfg.n_layers])
+}
+
+pub fn achieved_kv_ratio(cfg: &ModelConfig, m: &[usize], rv: &[usize]) -> f64 {
+    let kept: usize = m.iter().map(|&x| 2 * x).sum::<usize>() + rv.iter().sum::<usize>();
+    kept as f64 / (2 * cfg.head_dim * cfg.n_layers) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall_res;
+
+    fn tiny_cfg(layers: usize) -> ModelConfig {
+        let mut c = ModelConfig::paper_llama();
+        c.n_layers = layers;
+        c
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let s = GroupScores {
+            k: vec![1.0, 5.0, 2.0, 0.5],
+            v: vec![9.0, 3.0, 4.0, 1.0],
+        };
+        for rho in [0.1, 0.3, 0.5, 0.8] {
+            let (rk, rv) = allocate(&s, rho);
+            let mean = (rk.iter().sum::<f64>() + rv.iter().sum::<f64>()) / 8.0;
+            assert!((mean - rho).abs() < 1e-9, "rho {rho}: mean {mean}");
+            assert!(rk.iter().chain(&rv).all(|&r| (0.0..=1.0).contains(&r)));
+        }
+    }
+
+    #[test]
+    fn sensitivity_ordering() {
+        let s = GroupScores {
+            k: vec![100.0, 0.01],
+            v: vec![1.0, 1.0],
+        };
+        let (rk, _) = allocate(&s, 0.3);
+        assert!(rk[0] < rk[1], "sensitive layer pruned more: {rk:?}");
+    }
+
+    #[test]
+    fn project_mean_properties() {
+        forall_res(
+            11,
+            200,
+            |r| {
+                let n = r.range(1, 40);
+                let xs: Vec<f64> = (0..n).map(|_| r.f64() * 3.0 - 1.0).collect();
+                let t = r.f64();
+                (xs, t)
+            },
+            |(xs, t)| {
+                let mut y = xs.clone();
+                project_mean(&mut y, *t);
+                if y.iter().any(|&v| !(-1e-12..=1.0 + 1e-12).contains(&v)) {
+                    return Err(format!("range violated: {y:?}"));
+                }
+                let mean = y.iter().sum::<f64>() / y.len() as f64;
+                if (mean - t).abs() > 1e-7 {
+                    return Err(format!("mean {mean} != {t}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ranks_respect_bounds_and_target() {
+        let cfg = tiny_cfg(6);
+        forall_res(
+            12,
+            60,
+            |r| {
+                let rho = 0.05 + r.f64() * 0.9;
+                let k: Vec<f64> = (0..6).map(|_| r.f64() * 10.0 + 0.01).collect();
+                let v: Vec<f64> = (0..6).map(|_| r.f64() * 10.0 + 0.01).collect();
+                (rho, k, v)
+            },
+            |(rho, k, v)| {
+                let s = GroupScores { k: k.clone(), v: v.clone() };
+                let (rk, rv) = allocate(&s, *rho);
+                let (m, rvv) = ranks_from_ratios(&cfg, &rk, &rv);
+                if m.iter().any(|&x| x < 1 || x > cfg.n_pairs()) {
+                    return Err(format!("m out of range {m:?}"));
+                }
+                if rvv.iter().any(|&x| x < 1 || x > cfg.head_dim) {
+                    return Err(format!("rv out of range {rvv:?}"));
+                }
+                let achieved = achieved_kv_ratio(&cfg, &m, &rvv);
+                if (achieved - (1.0 - rho)).abs() > 0.05 {
+                    return Err(format!("achieved {achieved} vs target {}", 1.0 - rho));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn uniform_matches_rho() {
+        let cfg = tiny_cfg(4);
+        let (m, rv) = uniform_ranks(&cfg, 0.5);
+        assert_eq!(m, vec![cfg.n_pairs() / 2; 4]);
+        assert_eq!(rv, vec![cfg.head_dim / 2; 4]);
+        let a = achieved_kv_ratio(&cfg, &m, &rv);
+        assert!((a - 0.5).abs() < 1e-9);
+    }
+}

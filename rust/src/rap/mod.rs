@@ -1,0 +1,17 @@
+//! RAP: RoPE-Aligned Pruning — the paper's §4 pipeline, natively.
+//!
+//! `budget` — Algorithm 2 adaptive allocation (property-tested invariants).
+//! `plan`   — pair selection, A/B construction (Eq. 8), W_q absorption
+//!            (Eq. 9–10), fused RoPE tables.
+//! `scores` — pair/column score aggregation (Eq. 7) from weight gradients
+//!            or magnitudes.
+//!
+//! The Python pipeline (`python/compile/rap/`) is the authoritative producer
+//! of shipped artifacts (it owns training and Fisher estimation); this
+//! module reproduces the post-scoring stages natively so the planner can be
+//! driven, inspected and property-tested from Rust, and so the coordinator
+//! can construct plans for synthetic configurations (cost model, benches).
+
+pub mod budget;
+pub mod plan;
+pub mod scores;

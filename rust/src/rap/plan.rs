@@ -1,0 +1,232 @@
+//! RAP construction in Rust (paper §4.3): pair selection, A/B gather,
+//! absorption of B_k into W_q, and the explicit binary expansion used by
+//! tests.  Operates on `tensor::Tensor` weights, mirroring
+//! `python/compile/rap/prune.py` so the plan can be computed natively.
+
+use crate::config::ModelConfig;
+use crate::rope::RopeTable;
+use crate::tensor::Tensor;
+
+/// Select the top-m pairs per head from scores [n_heads][n_pairs];
+/// returns indices sorted ascending (stable on ties by index).
+pub fn select_pairs(scores: &[Vec<f64>], m: usize) -> Vec<Vec<usize>> {
+    scores
+        .iter()
+        .map(|row| {
+            let mut idx: Vec<usize> = (0..row.len()).collect();
+            idx.sort_by(|&a, &b| {
+                row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b))
+            });
+            let mut keep = idx[..m].to_vec();
+            keep.sort_unstable();
+            keep
+        })
+        .collect()
+}
+
+/// Gather retained RoPE-pair columns of a [D, H*dh] projection into the
+/// canonical half layout: [D, H*2m].
+pub fn gather_pair_columns(
+    cfg: &ModelConfig,
+    w: &Tensor,
+    n_heads: usize,
+    pair_idx: &[Vec<usize>],
+) -> Tensor {
+    let (d, hd) = w.dims2();
+    let dh = cfg.head_dim;
+    assert_eq!(hd, n_heads * dh);
+    let m = pair_idx[0].len();
+    let mut cols = Vec::with_capacity(n_heads * 2 * m);
+    for (h, idx) in pair_idx.iter().enumerate() {
+        assert_eq!(idx.len(), m, "head-uniform m required");
+        let base = h * dh;
+        for &j in idx {
+            cols.push(base + cfg.pairing.pair_cols(j, dh).0);
+        }
+        for &j in idx {
+            cols.push(base + cfg.pairing.pair_cols(j, dh).1);
+        }
+    }
+    let g = w.gather_cols(&cols);
+    debug_assert_eq!(g.dims2(), (d, n_heads * 2 * m));
+    g
+}
+
+/// Absorb B_k^T into W_q (Eq. 10): gather W_q's columns at the KV group's
+/// retained pairs.  wq: [D, H*dh] -> [D, H*2m].
+pub fn absorb_bk_into_wq(cfg: &ModelConfig, wq: &Tensor, pair_idx: &[Vec<usize>]) -> Tensor {
+    let group = cfg.group_size();
+    let q_idx: Vec<Vec<usize>> = (0..cfg.n_heads)
+        .map(|h| pair_idx[h / group].clone())
+        .collect();
+    gather_pair_columns(cfg, wq, cfg.n_heads, &q_idx)
+}
+
+/// The explicit binary expansion B of Eq. 8 for one head: [2m, dh].
+/// Runtime never materialises it (that is the point of absorption); tests
+/// use it for the commutativity identities.
+pub fn expansion_matrix(cfg: &ModelConfig, pair_idx_h: &[usize]) -> Tensor {
+    let m = pair_idx_h.len();
+    let dh = cfg.head_dim;
+    let mut b = Tensor::zeros(vec![2 * m, dh]);
+    for (i, &j) in pair_idx_h.iter().enumerate() {
+        let (a_col, b_col) = cfg.pairing.pair_cols(j, dh);
+        b.set2(i, a_col, 1.0);
+        b.set2(m + i, b_col, 1.0);
+    }
+    b
+}
+
+/// A complete per-layer RAP plan: retained pairs + the fused RoPE tables
+/// for K (per KV head) and Q (per query head, via its group).
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub pair_idx: Vec<Vec<usize>>,
+    pub m: usize,
+    pub k_table: RopeTable,
+    pub q_table: RopeTable,
+}
+
+impl LayerPlan {
+    pub fn new(cfg: &ModelConfig, pair_idx: Vec<Vec<usize>>) -> LayerPlan {
+        let m = pair_idx[0].len();
+        let k_table = RopeTable::new(&pair_idx, cfg.head_dim, cfg.rope_theta);
+        let group = cfg.group_size();
+        let q_idx: Vec<Vec<usize>> = (0..cfg.n_heads)
+            .map(|h| pair_idx[h / group].clone())
+            .collect();
+        let q_table = RopeTable::new(&q_idx, cfg.head_dim, cfg.rope_theta);
+        LayerPlan {
+            pair_idx,
+            m,
+            k_table,
+            q_table,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Pairing;
+    use crate::tensor::ops::matmul;
+    use crate::util::rng::Rng;
+
+    fn cfg(pairing: Pairing) -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            mlp_hidden: 32,
+            max_seq: 64,
+            rope_theta: 10_000.0,
+            pairing,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn select_pairs_top_m() {
+        let scores = vec![vec![5.0, 1.0, 9.0, 2.0], vec![0.1, 0.4, 0.2, 0.3]];
+        let idx = select_pairs(&scores, 2);
+        assert_eq!(idx[0], vec![0, 2]);
+        assert_eq!(idx[1], vec![1, 3]);
+    }
+
+    #[test]
+    fn select_pairs_tie_stability() {
+        let scores = vec![vec![1.0, 1.0, 1.0, 1.0]];
+        assert_eq!(select_pairs(&scores, 2)[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn gather_equals_w_bt() {
+        // A = W B^T for each head and both pairing strategies.
+        for pairing in [Pairing::Half, Pairing::Interleaved] {
+            let c = cfg(pairing);
+            let mut rng = Rng::new(1);
+            let w = Tensor::randn(vec![c.d_model, c.kv_dim()], 1.0, &mut rng);
+            let m = 5;
+            let idx: Vec<Vec<usize>> = (0..c.n_kv_heads)
+                .map(|_| rng.choose_distinct(c.n_pairs(), m))
+                .collect();
+            let a = gather_pair_columns(&c, &w, c.n_kv_heads, &idx);
+            for h in 0..c.n_kv_heads {
+                let b = expansion_matrix(&c, &idx[h]);
+                let wh = w.gather_cols(
+                    &(h * c.head_dim..(h + 1) * c.head_dim).collect::<Vec<_>>(),
+                );
+                let expect = matmul(&wh, &b.transpose2());
+                let got = a.gather_cols(
+                    &(h * 2 * m..(h + 1) * 2 * m).collect::<Vec<_>>(),
+                );
+                assert!(got.max_abs_diff(&expect) < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn expansion_matrix_orthonormal_binary() {
+        let c = cfg(Pairing::Half);
+        let mut rng = Rng::new(2);
+        let idx = rng.choose_distinct(c.n_pairs(), 4);
+        let b = expansion_matrix(&c, &idx);
+        let bbt = matmul(&b, &b.transpose2());
+        for i in 0..8 {
+            for j in 0..8 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert_eq!(bbt.at2(i, j), expect);
+            }
+        }
+        assert!(b.data.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn commutativity_rope_xa_b_equals_rope_xab() {
+        // The paper's Definition 1.1 in rust arithmetic.
+        for pairing in [Pairing::Half, Pairing::Interleaved] {
+            let c = cfg(pairing);
+            let mut rng = Rng::new(3);
+            let m = 5;
+            let idx = rng.choose_distinct(c.n_pairs(), m);
+            let b = expansion_matrix(&c, &idx);
+            let table = RopeTable::new(&[idx.clone()], c.head_dim, c.rope_theta);
+            for pos in [0usize, 3, 57] {
+                let xa: Vec<f32> = (0..2 * m).map(|_| rng.normal_f32()).collect();
+                // left: rotate latent then expand
+                let mut lat = xa.clone();
+                table.apply_fused(0, &mut lat, pos);
+                let left = matmul(&Tensor::new(vec![1, 2 * m], lat), &b);
+                // right: expand then full index-aware rope
+                let mut full = matmul(&Tensor::new(vec![1, 2 * m], xa), &b);
+                crate::rope::apply_full(&mut full.data, pos, pairing, c.rope_theta);
+                assert!(
+                    left.max_abs_diff(&full) < 1e-5,
+                    "{pairing:?} pos {pos}: {}",
+                    left.max_abs_diff(&full)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn absorbed_wq_width_and_group_mapping() {
+        let c = cfg(Pairing::Half);
+        let mut rng = Rng::new(4);
+        let wq = Tensor::randn(vec![c.d_model, c.q_dim()], 1.0, &mut rng);
+        let idx: Vec<Vec<usize>> = (0..c.n_kv_heads)
+            .map(|_| rng.choose_distinct(c.n_pairs(), 3))
+            .collect();
+        let wq_t = absorb_bk_into_wq(&c, &wq, &idx);
+        assert_eq!(wq_t.dims2(), (c.d_model, c.n_heads * 6));
+        // Query heads 0,1 share kv head 0's indices; 2,3 share kv head 1's.
+        let plan = LayerPlan::new(&c, idx.clone());
+        assert_eq!(plan.q_table.theta_sel[0], plan.k_table.theta_sel[0]);
+        assert_eq!(plan.q_table.theta_sel[1], plan.k_table.theta_sel[0]);
+        assert_eq!(plan.q_table.theta_sel[2], plan.k_table.theta_sel[1]);
+    }
+}

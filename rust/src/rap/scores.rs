@@ -1,0 +1,140 @@
+//! Score aggregation (paper Eq. 7): fold per-entry importance mass
+//! (squared gradients for Fisher, squared weights for the magnitude
+//! ablation) into per-(head, pair) scores for K and per-(head, column)
+//! scores for V.
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+
+/// Per-layer scores.
+#[derive(Debug, Clone)]
+pub struct LayerScores {
+    /// [n_kv_heads][n_pairs]
+    pub k_pairs: Vec<Vec<f64>>,
+    /// [n_kv_heads][head_dim]
+    pub v_cols: Vec<Vec<f64>>,
+}
+
+impl LayerScores {
+    pub fn k_total(&self) -> f64 {
+        self.k_pairs.iter().flatten().sum()
+    }
+
+    pub fn v_total(&self) -> f64 {
+        self.v_cols.iter().flatten().sum()
+    }
+}
+
+/// Aggregate an importance mass matrix [D, Hkv*dh] (already squared) into
+/// pair scores: sigma_p = sum over rows of both pair columns (Eq. 7).
+pub fn pair_scores(cfg: &ModelConfig, mass_k: &Tensor, mass_v: &Tensor) -> LayerScores {
+    let (d, hd) = mass_k.dims2();
+    assert_eq!(hd, cfg.kv_dim());
+    assert_eq!(mass_v.dims2(), (d, hd));
+    let dh = cfg.head_dim;
+    let p = cfg.n_pairs();
+
+    // Column sums per head.
+    let col_sum = |mass: &Tensor| -> Vec<Vec<f64>> {
+        let mut out = vec![vec![0.0f64; dh]; cfg.n_kv_heads];
+        for i in 0..d {
+            let row = mass.row(i);
+            for h in 0..cfg.n_kv_heads {
+                for c in 0..dh {
+                    out[h][c] += row[h * dh + c] as f64;
+                }
+            }
+        }
+        out
+    };
+
+    let ck = col_sum(mass_k);
+    let cv = col_sum(mass_v);
+    let k_pairs = (0..cfg.n_kv_heads)
+        .map(|h| {
+            (0..p)
+                .map(|j| {
+                    let (a, b) = cfg.pairing.pair_cols(j, dh);
+                    ck[h][a] + ck[h][b]
+                })
+                .collect()
+        })
+        .collect();
+    LayerScores {
+        k_pairs,
+        v_cols: cv,
+    }
+}
+
+/// Magnitude scoring (Fig. 13 "M" arms): mass = W ⊙ W.
+pub fn magnitude_mass(w: &Tensor) -> Tensor {
+    Tensor::new(
+        w.shape.clone(),
+        w.data.iter().map(|&x| x * x).collect(),
+    )
+}
+
+/// Group totals feeding Algorithm 2.
+pub fn group_scores(layers: &[LayerScores]) -> crate::rap::budget::GroupScores {
+    crate::rap::budget::GroupScores {
+        k: layers.iter().map(|l| l.k_total()).collect(),
+        v: layers.iter().map(|l| l.v_total()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Pairing;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 4,
+            mlp_hidden: 8,
+            max_seq: 16,
+            rope_theta: 10_000.0,
+            pairing: Pairing::Half,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn pair_scores_sum_both_columns() {
+        let c = cfg();
+        // head 0: column 0 has mass 1 per row, column 2 has mass 2 per row.
+        // half pairing with dh=4: pair 0 = (0, 2), pair 1 = (1, 3).
+        let mut mk = Tensor::zeros(vec![4, 8]);
+        for i in 0..4 {
+            mk.set2(i, 0, 1.0);
+            mk.set2(i, 2, 2.0);
+        }
+        let mv = Tensor::zeros(vec![4, 8]);
+        let s = pair_scores(&c, &mk, &mv);
+        assert!((s.k_pairs[0][0] - 12.0).abs() < 1e-9); // (1+2)*4 rows
+        assert_eq!(s.k_pairs[0][1], 0.0);
+        assert_eq!(s.k_pairs[1][0], 0.0);
+    }
+
+    #[test]
+    fn magnitude_mass_squares() {
+        let w = Tensor::new(vec![1, 3], vec![1.0, -2.0, 3.0]);
+        assert_eq!(magnitude_mass(&w).data, vec![1.0, 4.0, 9.0]);
+    }
+
+    #[test]
+    fn group_scores_totals() {
+        let l = LayerScores {
+            k_pairs: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            v_cols: vec![vec![0.5; 4], vec![0.25; 4]],
+        };
+        let g = group_scores(&[l]);
+        assert!((g.k[0] - 10.0).abs() < 1e-9);
+        assert!((g.v[0] - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,292 @@
+//! RoPE machinery: pairing strategies, theta tables, and three application
+//! strategies mirroring the paper's §4.5 kernel comparison:
+//!
+//! * `apply_full`          — contiguous baseline (one shared theta table).
+//! * `apply_gather`        — "PyTorch"-style: materialise full cos/sin for
+//!   the position range, then index per-head retained columns (allocates the
+//!   gathered tables — the "fake overhead" the paper calls out).
+//! * `RopeTable::apply_fused` — the RAP hot path: per-head theta tables for
+//!   exactly the retained pairs precomputed once at plan time; rotation
+//!   reads them directly with zero per-call allocation.
+//!
+//! Latent tensors use the canonical half layout `[a_0..a_{m-1}, b_0..b_m]`
+//! (see python/compile/kernels/ref.py — layouts must match bit-for-bit for
+//! cache interchange between PJRT and the Rust engine).
+
+use crate::config::{ModelConfig, Pairing};
+
+/// Angular frequency of RoPE pair `j`: base^(-2j / D).
+pub fn theta(j: usize, head_dim: usize, base: f64) -> f64 {
+    base.powf(-2.0 * j as f64 / head_dim as f64)
+}
+
+/// Full per-pair frequency table [n_pairs].
+pub fn theta_table(head_dim: usize, base: f64) -> Vec<f64> {
+    (0..head_dim / 2).map(|j| theta(j, head_dim, base)).collect()
+}
+
+/// Standard RoPE on a full-width head vector, in place.
+/// `x`: one head row of length D at position `pos`.
+pub fn apply_full(x: &mut [f32], pos: usize, pairing: Pairing, base: f64) {
+    let d = x.len();
+    let p = d / 2;
+    for j in 0..p {
+        let (a_idx, b_idx) = pairing.pair_cols(j, d);
+        let ang = pos as f64 * theta(j, d, base);
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (x[a_idx] as f64, x[b_idx] as f64);
+        x[a_idx] = (a * cos - b * sin) as f32;
+        x[b_idx] = (a * sin + b * cos) as f32;
+    }
+}
+
+/// The materialising-gather variant: builds cos/sin tables for the retained
+/// pairs of one head (freshly allocated per call — deliberately reproducing
+/// the PyTorch indexing cost model), then rotates.
+/// `x`: latent row [2m] in half layout; `pair_idx`: retained pair indices.
+pub fn apply_gather(
+    x: &mut [f32],
+    pos: usize,
+    pair_idx: &[usize],
+    head_dim: usize,
+    base: f64,
+) {
+    let m = pair_idx.len();
+    debug_assert_eq!(x.len(), 2 * m);
+    // Step 1: full tables (what a framework broadcast would have cached).
+    let full: Vec<(f32, f32)> = (0..head_dim / 2)
+        .map(|j| {
+            let ang = pos as f64 * theta(j, head_dim, base);
+            let (s, c) = ang.sin_cos();
+            (c as f32, s as f32)
+        })
+        .collect();
+    // Step 2: materialising gather into new buffers (the extra copies).
+    let cos: Vec<f32> = pair_idx.iter().map(|&j| full[j].0).collect();
+    let sin: Vec<f32> = pair_idx.iter().map(|&j| full[j].1).collect();
+    // Step 3: rotate.
+    for i in 0..m {
+        let (a, b) = (x[i], x[m + i]);
+        x[i] = a * cos[i] - b * sin[i];
+        x[m + i] = a * sin[i] + b * cos[i];
+    }
+}
+
+/// Precomputed per-head retained-pair frequency table — the fused hot path.
+///
+/// Built once when a pruning plan is loaded; `apply_fused` then performs the
+/// rotation with no table construction, no gather, no allocation.  This is
+/// the Rust analog of the paper's Triton kernel (and of our Pallas kernel's
+/// VMEM-resident `theta_sel`).
+#[derive(Debug, Clone)]
+pub struct RopeTable {
+    /// [n_heads][m] frequencies of the retained pairs.
+    pub theta_sel: Vec<Vec<f32>>,
+    pub m: usize,
+}
+
+impl RopeTable {
+    /// Build from retained pair indices `[n_heads][m]`.
+    pub fn new(pair_idx: &[Vec<usize>], head_dim: usize, base: f64) -> RopeTable {
+        let m = pair_idx.first().map(|v| v.len()).unwrap_or(0);
+        let theta_sel = pair_idx
+            .iter()
+            .map(|idx| {
+                debug_assert_eq!(idx.len(), m, "head-uniform m required (paper §4.2)");
+                idx.iter()
+                    .map(|&j| theta(j, head_dim, base) as f32)
+                    .collect()
+            })
+            .collect();
+        RopeTable { theta_sel, m }
+    }
+
+    /// Full (no pruning) table for a baseline head in half layout.
+    pub fn full(cfg: &ModelConfig) -> RopeTable {
+        let idx: Vec<Vec<usize>> = vec![(0..cfg.n_pairs()).collect(); cfg.n_kv_heads];
+        RopeTable::new(&idx, cfg.head_dim, cfg.rope_theta)
+    }
+
+    /// Rotate one latent head row [2m] (half layout) at `pos`, in place.
+    #[inline]
+    pub fn apply_fused(&self, head: usize, x: &mut [f32], pos: usize) {
+        let m = self.m;
+        debug_assert_eq!(x.len(), 2 * m);
+        let thetas = &self.theta_sel[head];
+        let posf = pos as f32;
+        let (lo, hi) = x.split_at_mut(m);
+        for i in 0..m {
+            // sin/cos in f32: the angle magnitude is bounded by pos * theta_0
+            // < max_seq, well inside f32's exact-integer range.
+            let ang = posf * thetas[i];
+            let (sin, cos) = ang.sin_cos();
+            let (a, b) = (lo[i], hi[i]);
+            lo[i] = a * cos - b * sin;
+            hi[i] = a * sin + b * cos;
+        }
+    }
+
+    /// Rotate a [S, 2m] latent block whose row s is at position pos0 + s.
+    pub fn apply_fused_block(&self, head: usize, x: &mut [f32], pos0: usize) {
+        let w = 2 * self.m;
+        for (s, row) in x.chunks_mut(w).enumerate() {
+            self.apply_fused(head, row, pos0 + s);
+        }
+    }
+}
+
+/// Convert a full-width head row from the model's native pairing into the
+/// canonical half layout (used when cross-checking baseline caches).
+pub fn to_half_layout(x: &[f32], pairing: Pairing) -> Vec<f32> {
+    let d = x.len();
+    let p = d / 2;
+    let mut out = vec![0.0f32; d];
+    for j in 0..p {
+        let (a, b) = pairing.pair_cols(j, d);
+        out[j] = x[a];
+        out[p + j] = x[b];
+    }
+    out
+}
+
+/// Inverse of `to_half_layout`.
+pub fn from_half_layout(x: &[f32], pairing: Pairing) -> Vec<f32> {
+    let d = x.len();
+    let p = d / 2;
+    let mut out = vec![0.0f32; d];
+    for j in 0..p {
+        let (a, b) = pairing.pair_cols(j, d);
+        out[a] = x[j];
+        out[b] = x[p + j];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall_res;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fused_matches_gather() {
+        let mut rng = Rng::new(1);
+        let head_dim = 16;
+        let m = 5;
+        let idx = vec![rng.choose_distinct(head_dim / 2, m)];
+        let table = RopeTable::new(&idx, head_dim, 10_000.0);
+        for pos in [0usize, 1, 7, 123] {
+            let mut a: Vec<f32> = (0..2 * m).map(|_| rng.normal_f32()).collect();
+            let mut b = a.clone();
+            table.apply_fused(0, &mut a, pos);
+            apply_gather(&mut b, pos, &idx[0], head_dim, 10_000.0);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-5, "pos {pos}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_full_when_all_pairs_kept() {
+        let mut rng = Rng::new(2);
+        for pairing in [Pairing::Half, Pairing::Interleaved] {
+            let d = 12;
+            let idx = vec![(0..d / 2).collect::<Vec<_>>()];
+            let table = RopeTable::new(&idx, d, 10_000.0);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let pos = 9;
+            // full path in native layout
+            let mut full = x.clone();
+            apply_full(&mut full, pos, pairing, 10_000.0);
+            // fused path in half layout
+            let mut half = to_half_layout(&x, pairing);
+            table.apply_fused(0, &mut half, pos);
+            let back = from_half_layout(&half, pairing);
+            for (a, b) in full.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        forall_res(
+            3,
+            60,
+            |r| {
+                let m = r.range(1, 12);
+                let x: Vec<f32> = (0..2 * m).map(|_| r.normal_f32()).collect();
+                let idx = r.choose_distinct(16, m);
+                let pos = r.below(2048);
+                (x, idx, pos)
+            },
+            |(x, idx, pos)| {
+                let table = RopeTable::new(&[idx.clone()], 32, 10_000.0);
+                let mut y = x.clone();
+                table.apply_fused(0, &mut y, *pos);
+                let n0: f32 = x.iter().map(|v| v * v).sum();
+                let n1: f32 = y.iter().map(|v| v * v).sum();
+                if (n0.sqrt() - n1.sqrt()).abs() > 1e-3 * (1.0 + n0.sqrt()) {
+                    return Err(format!("norm {n0} -> {n1}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn relative_position_property() {
+        // <R_i q, R_j k> depends only on i - j.
+        let mut rng = Rng::new(4);
+        let m = 4;
+        let idx = vec![rng.choose_distinct(8, m)];
+        let table = RopeTable::new(&idx, 16, 100.0);
+        let q: Vec<f32> = (0..2 * m).map(|_| rng.normal_f32()).collect();
+        let k: Vec<f32> = (0..2 * m).map(|_| rng.normal_f32()).collect();
+        let score = |i: usize, j: usize| {
+            let mut qi = q.clone();
+            let mut kj = k.clone();
+            table.apply_fused(0, &mut qi, i);
+            table.apply_fused(0, &mut kj, j);
+            qi.iter().zip(&kj).map(|(a, b)| a * b).sum::<f32>()
+        };
+        assert!((score(5, 2) - score(103, 100)).abs() < 1e-3);
+        assert!((score(0, 0) - score(77, 77)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pos_zero_is_identity() {
+        let table = RopeTable::new(&[vec![0, 2, 3]], 8, 10_000.0);
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut y = x.clone();
+        table.apply_fused(0, &mut y, 0);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn half_layout_roundtrip() {
+        let mut rng = Rng::new(5);
+        for pairing in [Pairing::Half, Pairing::Interleaved] {
+            let x: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            let rt = from_half_layout(&to_half_layout(&x, pairing), pairing);
+            assert_eq!(x, rt);
+        }
+    }
+
+    #[test]
+    fn block_apply_positions() {
+        let mut rng = Rng::new(6);
+        let m = 3;
+        let idx = vec![rng.choose_distinct(8, m)];
+        let table = RopeTable::new(&idx, 16, 10_000.0);
+        let s = 5;
+        let mut block: Vec<f32> = (0..s * 2 * m).map(|_| rng.normal_f32()).collect();
+        let orig = block.clone();
+        table.apply_fused_block(0, &mut block, 10);
+        for row in 0..s {
+            let mut expect = orig[row * 2 * m..(row + 1) * 2 * m].to_vec();
+            table.apply_fused(0, &mut expect, 10 + row);
+            assert_eq!(&block[row * 2 * m..(row + 1) * 2 * m], &expect[..]);
+        }
+    }
+}

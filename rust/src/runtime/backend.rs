@@ -1,0 +1,170 @@
+//! PJRT-backed serving backend: per-session host caches, batched decode
+//! through the exported batch-bucket graphs with per-sequence positions.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::scheduler::Backend;
+use crate::coordinator::RequestId;
+use crate::model::argmax;
+use crate::runtime::{PjrtCache, PjrtContext, PjrtEngine};
+
+pub struct PjrtBackend<'a> {
+    ctx: &'a PjrtContext,
+    engine: &'a PjrtEngine,
+    sessions: BTreeMap<RequestId, Vec<PjrtCache>>,
+    buckets: Vec<usize>,
+    /// Zero cache used to pad partial batches (outputs discarded).
+    pad_cache: Vec<PjrtCache>,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(ctx: &'a PjrtContext, engine: &'a PjrtEngine) -> Result<PjrtBackend<'a>> {
+        Ok(PjrtBackend {
+            pad_cache: engine.empty_caches(1)?,
+            buckets: engine.decode_batches(),
+            ctx,
+            engine,
+            sessions: BTreeMap::new(),
+        })
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Smallest exported bucket >= n.
+    fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .with_context(|| format!("no decode bucket fits batch {n} (have {:?})", self.buckets))
+    }
+
+    /// Concatenate per-session [1, ...] caches into one [B, ...] batch.
+    fn gather_batch(&self, ids: &[Option<RequestId>]) -> Result<Vec<PjrtCache>> {
+        let b = ids.len();
+        let mut out = Vec::with_capacity(self.engine.n_layers);
+        for l in 0..self.engine.n_layers {
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            for id in ids {
+                let cache = match id {
+                    Some(id) => self
+                        .sessions
+                        .get(id)
+                        .with_context(|| format!("unknown session {id}"))?,
+                    None => &self.pad_cache,
+                };
+                k.extend_from_slice(&cache[l].k);
+                v.extend_from_slice(&cache[l].v);
+            }
+            let mut k_dims = self.pad_cache[l].k_dims.clone();
+            let mut v_dims = self.pad_cache[l].v_dims.clone();
+            k_dims[0] = b;
+            v_dims[0] = b;
+            out.push(PjrtCache { k, k_dims, v, v_dims });
+        }
+        Ok(out)
+    }
+
+    /// Split a [B, ...] batched cache back into per-session [1, ...] caches.
+    fn scatter_batch(&mut self, ids: &[Option<RequestId>], caches: Vec<PjrtCache>) {
+        for (l, c) in caches.into_iter().enumerate() {
+            let kn = c.k.len() / ids.len();
+            let vn = c.v.len() / ids.len();
+            for (bi, id) in ids.iter().enumerate() {
+                let Some(id) = id else { continue };
+                let sess = self.sessions.get_mut(id).unwrap();
+                sess[l].k.copy_from_slice(&c.k[bi * kn..(bi + 1) * kn]);
+                sess[l].v.copy_from_slice(&c.v[bi * vn..(bi + 1) * vn]);
+            }
+        }
+    }
+}
+
+impl<'a> Backend for PjrtBackend<'a> {
+    fn s_max(&self) -> usize {
+        self.engine.s_max
+    }
+
+    fn prefill(&mut self, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        // Exact-bucket prompts use the prefill graph; others run the decode
+        // graph token-by-token (same numerics, verified in tests).
+        if let Ok((graph, s)) = self.engine.prefill_bucket(prompt.len()) {
+            if s == prompt.len() {
+                let tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+                let out = self.engine.prefill(self.ctx, &graph, &tokens, 1)?;
+                self.sessions.insert(session, out.caches);
+                return Ok(out.logits);
+            }
+        }
+        self.sessions.insert(session, self.engine.empty_caches(1)?);
+        let mut logits = Vec::new();
+        for (i, &b) in prompt.iter().enumerate() {
+            let cache = self.sessions.get(&session).unwrap();
+            let out = self
+                .engine
+                .decode(self.ctx, 1, &[b as i32], &[i as i32], cache)?;
+            self.sessions.insert(session, out.caches);
+            logits = out.logits;
+        }
+        Ok(logits)
+    }
+
+    fn decode_batch(&mut self, entries: &[(RequestId, u8, usize)]) -> Result<Vec<Vec<f32>>> {
+        let bucket = self.bucket_for(entries.len())?;
+        let mut ids: Vec<Option<RequestId>> = entries.iter().map(|e| Some(e.0)).collect();
+        let mut tokens: Vec<i32> = entries.iter().map(|e| e.1 as i32).collect();
+        let mut pos: Vec<i32> = entries.iter().map(|e| e.2 as i32).collect();
+        // Pad the batch to the bucket with inert slots (zero cache, pos 0 —
+        // its cache write lands in the pad cache copy, which is discarded).
+        while ids.len() < bucket {
+            ids.push(None);
+            tokens.push(0);
+            pos.push(0);
+        }
+        let batch_cache = self.gather_batch(&ids)?;
+        let out = self
+            .engine
+            .decode(self.ctx, bucket, &tokens, &pos, &batch_cache)?;
+        self.scatter_batch(&ids, out.caches);
+        let vocab = out.logits.len() / bucket;
+        Ok((0..entries.len())
+            .map(|i| out.logits[i * vocab..(i + 1) * vocab].to_vec())
+            .collect())
+    }
+
+    fn drop_session(&mut self, session: RequestId) {
+        self.sessions.remove(&session);
+    }
+}
+
+/// Convenience: greedy-generate through the backend (used by tests).
+pub fn generate_once(
+    backend: &mut dyn Backend,
+    id: RequestId,
+    prompt: &[u8],
+    n: usize,
+) -> Result<Vec<u8>> {
+    let logits = backend.prefill(id, prompt)?;
+    let mut next = argmax(&logits) as u8;
+    let mut pos = prompt.len();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(next);
+        let lg = backend.decode_batch(&[(id, next, pos)])?;
+        next = argmax(&lg[0]) as u8;
+        pos += 1;
+        if pos >= backend.s_max() {
+            break;
+        }
+    }
+    backend.drop_session(id);
+    Ok(out)
+}

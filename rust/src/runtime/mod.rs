@@ -1,0 +1,337 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! `PjrtEngine` owns one compiled executable per exported graph
+//! (prefill buckets + decode batch buckets per variant) and keeps the
+//! variant's weights **device-resident** as `PjRtBuffer`s, so the decode
+//! hot loop only uploads the per-step inputs (token, pos, caches) and never
+//! re-marshals weights.
+//!
+//! Cache threading: the executables return `(logits, k_0..k_L, v_0..v_L)`
+//! as one tuple buffer (that is how this PJRT build materialises tuples).
+//! Each step therefore downloads the tuple and re-uploads the caches next
+//! step.  The marshalling cost is identical *policy* for every method but
+//! proportional to cache bytes — i.e. it scales with exactly the quantity
+//! the paper compresses, so the relative latency shapes are preserved (and
+//! measured separately from compute in the experiments).
+
+pub mod backend;
+pub mod session;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::manifest::{HloGraph, Manifest, VariantEntry};
+use crate::model::Weights;
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct PjrtContext {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<PjrtContext> {
+        Ok(PjrtContext {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?,
+        })
+    }
+
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+}
+
+/// One compiled graph + its signature.
+pub struct CompiledGraph {
+    pub info: HloGraph,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// Host-side per-layer cache pair (re-uploaded per step).
+#[derive(Debug, Clone)]
+pub struct PjrtCache {
+    pub k: Vec<f32>,
+    pub k_dims: Vec<usize>,
+    pub v: Vec<f32>,
+    pub v_dims: Vec<usize>,
+}
+
+/// Decode-step output.
+pub struct StepOut {
+    pub logits: Vec<f32>,
+    pub caches: Vec<PjrtCache>,
+}
+
+/// A variant loaded for serving: compiled graphs + device-resident weights.
+pub struct PjrtEngine {
+    pub model: String,
+    pub variant: String,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub s_max: usize,
+    pub k_rank: Vec<usize>,
+    pub v_rank: Vec<usize>,
+    graphs: BTreeMap<String, CompiledGraph>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+// NOTE: uploads go through `buffer_from_host_buffer`, whose C++ shim uses
+// HostBufferSemantics::kImmutableOnlyDuringCall (synchronous copy).  The
+// literal-based upload path (`BufferFromHostLiteral`) is asynchronous in
+// this PJRT build and the binding drops the literal before the transfer
+// completes — a use-after-free that aborts the process.  Do not use it.
+fn upload_f32(
+    ctx: &PjrtContext,
+    data: &[f32],
+    dims: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    let device = ctx.client.devices().into_iter().next().context("no device")?;
+    ctx.client
+        .buffer_from_host_buffer(data, dims, Some(&device))
+        .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+}
+
+fn upload_i32(
+    ctx: &PjrtContext,
+    data: &[i32],
+    dims: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    let device = ctx.client.devices().into_iter().next().context("no device")?;
+    ctx.client
+        .buffer_from_host_buffer(data, dims, Some(&device))
+        .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+}
+
+impl PjrtEngine {
+    /// Compile all exported graphs of `model/variant` and upload weights.
+    pub fn load(
+        ctx: &PjrtContext,
+        manifest: &Manifest,
+        model: &str,
+        variant: &str,
+    ) -> Result<PjrtEngine> {
+        let entry = manifest.model(model)?;
+        let ve: &VariantEntry = entry
+            .variants
+            .get(variant)
+            .with_context(|| format!("variant {variant} of {model}"))?;
+        let graphs_info = entry
+            .hlo
+            .get(variant)
+            .with_context(|| format!("no HLO graphs exported for {model}/{variant}"))?;
+
+        let mut graphs = BTreeMap::new();
+        let mut weight_names: Option<Vec<String>> = None;
+        for (name, info) in graphs_info {
+            let exe = ctx.compile_file(&manifest.root.join(&info.path))?;
+            if let Some(ref names) = weight_names {
+                if names != &info.weight_names {
+                    bail!("inconsistent weight ordering across graphs of {variant}");
+                }
+            } else {
+                weight_names = Some(info.weight_names.clone());
+            }
+            graphs.insert(name.clone(), CompiledGraph { info: info.clone(), exe });
+        }
+        let weight_names = weight_names.context("variant has no graphs")?;
+
+        // Upload weights once; reuse buffers across every execution.
+        let weights = Weights::load(manifest, ve)?;
+        let mut weight_bufs = Vec::with_capacity(weight_names.len());
+        for name in &weight_names {
+            let t = weights.get(name);
+            weight_bufs.push(upload_f32(ctx, &t.data, &t.shape)?);
+        }
+
+        let any = graphs.values().next().context("no graphs")?;
+        Ok(PjrtEngine {
+            model: model.to_string(),
+            variant: variant.to_string(),
+            n_layers: any.info.k_rank.len(),
+            n_kv_heads: entry.config.n_kv_heads,
+            s_max: any.info.s_max,
+            k_rank: any.info.k_rank.clone(),
+            v_rank: any.info.v_rank.clone(),
+            graphs,
+            weight_bufs,
+        })
+    }
+
+    pub fn graph_names(&self) -> Vec<&str> {
+        self.graphs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&CompiledGraph> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph {name} not loaded for {}", self.variant))
+    }
+
+    /// Pick the smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Result<(String, usize)> {
+        let mut best: Option<(String, usize)> = None;
+        for (name, g) in &self.graphs {
+            if g.info.kind == "prefill"
+                && g.info.seq >= len
+                && best.as_ref().map(|(_, s)| g.info.seq < *s).unwrap_or(true)
+            {
+                best = Some((name.clone(), g.info.seq));
+            }
+        }
+        best.with_context(|| format!("no prefill bucket fits length {len}"))
+    }
+
+    pub fn decode_graph(&self, batch: usize) -> Result<&CompiledGraph> {
+        self.graph(&format!("decode_b{batch}"))
+    }
+
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .graphs
+            .values()
+            .filter(|g| g.info.kind == "decode")
+            .map(|g| g.info.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Execute the prefill graph on (padded) `tokens` [B, S_bucket].
+    pub fn prefill(
+        &self,
+        ctx: &PjrtContext,
+        graph: &str,
+        tokens: &[i32],
+        batch: usize,
+    ) -> Result<StepOut> {
+        let g = self.graph(graph)?;
+        let s = g.info.seq;
+        assert_eq!(tokens.len(), batch * s, "tokens must be padded to the bucket");
+        let tok_buf = upload_i32(ctx, tokens, &[batch, s])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        let out = g.exe.execute_b(&args).map_err(|e| anyhow!("prefill exec: {e:?}"))?;
+        self.unpack(out, batch)
+    }
+
+    /// Execute one decode step for a batch of sessions, each at its own
+    /// position (`pos[b]`) — the continuous batcher mixes offsets freely.
+    pub fn decode(
+        &self,
+        ctx: &PjrtContext,
+        batch: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        caches: &[PjrtCache],
+    ) -> Result<StepOut> {
+        let g = self.decode_graph(batch)?;
+        assert_eq!(tokens.len(), batch);
+        assert_eq!(pos.len(), batch);
+        assert_eq!(caches.len(), self.n_layers);
+        let tok_buf = upload_i32(ctx, tokens, &[batch])?;
+        let pos_buf = upload_i32(ctx, pos, &[batch])?;
+
+        let mut cache_bufs = Vec::with_capacity(2 * self.n_layers);
+        for c in caches {
+            cache_bufs.push(upload_f32(ctx, &c.k, &c.k_dims)?);
+        }
+        for c in caches {
+            cache_bufs.push(upload_f32(ctx, &c.v, &c.v_dims)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.extend(cache_bufs.iter());
+        let out = g.exe.execute_b(&args).map_err(|e| anyhow!("decode exec: {e:?}"))?;
+        self.unpack(out, batch)
+    }
+
+    /// Outputs arrive as one tuple buffer: (logits, k_0..k_L, v_0..v_L).
+    fn unpack(&self, out: Vec<Vec<xla::PjRtBuffer>>, batch: usize) -> Result<StepOut> {
+        let bufs = out.into_iter().next().context("no replica output")?;
+        let mut literals: Vec<xla::Literal> = Vec::new();
+        if bufs.len() == 1 {
+            let lit = bufs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("output download: {e:?}"))?;
+            literals = lit.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        } else {
+            for b in &bufs {
+                literals.push(
+                    b.to_literal_sync()
+                        .map_err(|e| anyhow!("output download: {e:?}"))?,
+                );
+            }
+        }
+        if literals.len() != 1 + 2 * self.n_layers {
+            bail!(
+                "unexpected output arity {} (want {})",
+                literals.len(),
+                1 + 2 * self.n_layers
+            );
+        }
+        let mut iter = literals.into_iter();
+        let logits = iter
+            .next()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        let mut ks: Vec<Vec<f32>> = Vec::with_capacity(self.n_layers);
+        for _ in 0..self.n_layers {
+            ks.push(
+                iter.next()
+                    .unwrap()
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("k cache: {e:?}"))?,
+            );
+        }
+        let mut caches = Vec::with_capacity(self.n_layers);
+        for (l, k) in ks.into_iter().enumerate() {
+            let v = iter
+                .next()
+                .unwrap()
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("v cache: {e:?}"))?;
+            caches.push(PjrtCache {
+                k,
+                k_dims: vec![batch, self.n_kv_heads, self.s_max, self.k_rank[l]],
+                v,
+                v_dims: vec![batch, self.n_kv_heads, self.s_max, self.v_rank[l]],
+            });
+        }
+        Ok(StepOut { logits, caches })
+    }
+
+    /// Zeroed host caches for a fresh sequence.
+    pub fn empty_caches(&self, batch: usize) -> Result<Vec<PjrtCache>> {
+        let mut out = Vec::with_capacity(self.n_layers);
+        for l in 0..self.n_layers {
+            let kdims = vec![batch, self.n_kv_heads, self.s_max, self.k_rank[l]];
+            let vdims = vec![batch, self.n_kv_heads, self.s_max, self.v_rank[l]];
+            out.push(PjrtCache {
+                k: vec![0.0; kdims.iter().product()],
+                k_dims: kdims,
+                v: vec![0.0; vdims.iter().product()],
+                v_dims: vdims,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Cache bytes per sequence at full s_max (marshalled per decode step).
+    pub fn cache_bytes(&self, batch: usize) -> usize {
+        4 * batch
+            * self.n_kv_heads
+            * self.s_max
+            * (self.k_rank.iter().sum::<usize>() + self.v_rank.iter().sum::<usize>())
+    }
+}

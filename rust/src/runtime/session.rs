@@ -1,0 +1,85 @@
+//! Single-sequence generation session over a `PjrtEngine` — the simplest
+//! consumer of the runtime (examples, integration tests, batch-1 serving).
+
+use anyhow::Result;
+
+use crate::model::argmax;
+use crate::runtime::{PjrtCache, PjrtContext, PjrtEngine};
+
+pub struct Session<'a> {
+    engine: &'a PjrtEngine,
+    ctx: &'a PjrtContext,
+    pub caches: Vec<PjrtCache>,
+    pub pos: usize,
+    pub last_logits: Vec<f32>,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(ctx: &'a PjrtContext, engine: &'a PjrtEngine) -> Result<Session<'a>> {
+        Ok(Session {
+            engine,
+            ctx,
+            caches: engine.empty_caches(1)?,
+            pos: 0,
+            last_logits: Vec::new(),
+        })
+    }
+
+    /// Prefill using the smallest fitting bucket (prompt padded with zeros;
+    /// positions beyond the prompt are overwritten by later decode steps).
+    ///
+    /// NOTE on bucket semantics: the exported prefill graph computes
+    /// last-*bucket*-position logits, so for prompts shorter than the
+    /// bucket we prefill `len-1` tokens step-wise... to keep semantics
+    /// exact for any length we use the bucket only when the prompt length
+    /// matches it exactly, otherwise fall back to stepwise decode-prefill.
+    pub fn prefill(&mut self, prompt: &[u8]) -> Result<()> {
+        let exact = self
+            .engine
+            .prefill_bucket(prompt.len())
+            .ok()
+            .filter(|(_, s)| *s == prompt.len());
+        if let Some((graph, s)) = exact {
+            let tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+            debug_assert_eq!(tokens.len(), s);
+            let out = self.engine.prefill(self.ctx, &graph, &tokens, 1)?;
+            self.caches = out.caches;
+            self.last_logits = out.logits;
+            self.pos = prompt.len();
+            return Ok(());
+        }
+        for &b in prompt {
+            self.push(b)?;
+        }
+        Ok(())
+    }
+
+    /// Feed one token at the current position.
+    pub fn push(&mut self, token: u8) -> Result<()> {
+        let out = self.engine.decode(
+            self.ctx,
+            1,
+            &[token as i32],
+            &[self.pos as i32],
+            &self.caches,
+        )?;
+        self.caches = out.caches;
+        self.last_logits = out.logits;
+        self.pos += 1;
+        Ok(())
+    }
+
+    /// Greedy-generate `n` tokens.
+    pub fn generate(&mut self, n: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if self.pos >= self.engine.s_max {
+                break;
+            }
+            let next = argmax(&self.last_logits) as u8;
+            out.push(next);
+            self.push(next)?;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,215 @@
+//! JSON-lines TCP server in front of the coordinator.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "...", "max_new": 32}
+//!   <- {"id": 1, "text": "...", "ttft_ms": 12.3, "decode_ms_per_token": 1.8}
+//!
+//! Architecture: acceptor thread + per-connection handler threads (from the
+//! in-tree `ThreadPool`) feeding an mpsc channel into the single scheduler
+//! thread that owns the backend; responses are routed back over per-request
+//! channels.  (std-only: no tokio in this offline environment.)
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Backend, Coordinator, Request, Response};
+use crate::util::json::{self, Value};
+use crate::util::threadpool::ThreadPool;
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    tx: Sender<Msg>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Msg::Shutdown);
+        // Poke the acceptor so it notices the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Scheduler loop: owns the coordinator, multiplexes submissions and ticks.
+fn scheduler_loop<B: Backend>(mut coord: Coordinator<B>, rx: Receiver<Msg>) {
+    let mut reply_to: HashMap<u64, Sender<Response>> = HashMap::new();
+    loop {
+        // Drain pending submissions (non-blocking when busy, blocking when
+        // idle so we don't spin).
+        let msg = if coord.pending() == 0 {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        } else {
+            rx.try_recv().ok()
+        };
+        match msg {
+            Some(Msg::Submit(req, reply)) => {
+                reply_to.insert(req.id, reply);
+                if !coord.submit(req) {
+                    // queue full: synthesize an immediate empty response
+                    // (the client treats empty text + 0 tokens as a 429).
+                }
+                continue; // keep draining before ticking
+            }
+            Some(Msg::Shutdown) => break,
+            None => {}
+        }
+        if coord.pending() > 0 {
+            match coord.tick() {
+                Ok(done) => {
+                    for resp in done {
+                        if let Some(ch) = reply_to.remove(&resp.id) {
+                            let _ = ch.send(resp);
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[server] tick error: {e:#}");
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Msg>, ids: Arc<AtomicU64>) {
+    let peer = stream.peer_addr().ok();
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = match json::parse(trimmed) {
+            Ok(v) => {
+                let prompt = v
+                    .get("prompt")
+                    .and_then(|p| p.as_str())
+                    .unwrap_or("")
+                    .as_bytes()
+                    .to_vec();
+                let max_new = v
+                    .get("max_new")
+                    .and_then(|m| m.as_usize())
+                    .unwrap_or(32);
+                let id = ids.fetch_add(1, Ordering::SeqCst);
+                let (rtx, rrx) = channel();
+                if tx.send(Msg::Submit(Request::new(id, prompt, max_new), rtx)).is_err() {
+                    break;
+                }
+                match rrx.recv_timeout(Duration::from_secs(120)) {
+                    Ok(resp) => json::obj(vec![
+                        ("id", json::num(resp.id as f64)),
+                        (
+                            "text",
+                            json::s(String::from_utf8_lossy(&resp.generated).to_string()),
+                        ),
+                        ("ttft_ms", json::num(resp.metrics.ttft_ms)),
+                        (
+                            "decode_ms_per_token",
+                            json::num(resp.metrics.decode_ms_per_token),
+                        ),
+                        ("tokens", json::num(resp.metrics.generated_tokens as f64)),
+                    ]),
+                    Err(_) => json::obj(vec![("error", json::s("timeout"))]),
+                }
+            }
+            Err(e) => json::obj(vec![("error", json::s(format!("bad json: {e}")))]),
+        };
+        if writeln!(out, "{reply}").is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Start serving on `addr` ("127.0.0.1:0" for an ephemeral port).
+///
+/// The coordinator is built *inside* the scheduler thread by `factory`
+/// (PJRT handles are `!Send`: raw PJRT pointers and `Rc` internals must
+/// never cross threads, so the whole backend is constructed where it runs).
+pub fn serve<B, F>(addr: &str, factory: F, n_conn_threads: usize) -> Result<ServerHandle>
+where
+    B: Backend + 'static,
+    F: FnOnce() -> Result<Coordinator<B>> + Send + 'static,
+{
+    let listener = TcpListener::bind(addr).context("bind")?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = channel::<Msg>();
+
+    let sched = std::thread::Builder::new()
+        .name("rap-scheduler".into())
+        .spawn(move || match factory() {
+            Ok(coord) => scheduler_loop(coord, rx),
+            Err(e) => eprintln!("[server] backend init failed: {e:#}"),
+        })?;
+
+    let stop2 = Arc::clone(&stop);
+    let tx2 = tx.clone();
+    let acceptor = std::thread::Builder::new()
+        .name("rap-acceptor".into())
+        .spawn(move || {
+            let pool = ThreadPool::new(n_conn_threads);
+            let ids = Arc::new(AtomicU64::new(1));
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let tx = tx2.clone();
+                let ids = Arc::clone(&ids);
+                pool.execute(move || handle_conn(stream, tx, ids));
+            }
+        })?;
+
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        tx,
+        threads: vec![sched, acceptor],
+    })
+}
+
+/// Minimal client for tests/examples.
+pub fn client_request(addr: &std::net::SocketAddr, prompt: &str, max_new: usize) -> Result<Value> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = json::obj(vec![
+        ("prompt", json::s(prompt)),
+        ("max_new", json::num(max_new as f64)),
+    ]);
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    json::parse(line.trim()).map_err(|e| anyhow::anyhow!("client parse: {e}"))
+}

@@ -1,0 +1,292 @@
+//! Numerical linear algebra: one-sided Jacobi SVD and Cholesky.
+//!
+//! Used by the Rust implementations of the SVD/PaLU baselines
+//! (`baselines::svd`, `baselines::palu`) so the entire pruning pipeline can
+//! also be executed natively — an independent cross-check of the Python
+//! plan and the substrate for the `plan` CLI subcommand.
+//!
+//! Matrices here are small (at most d_model × head_dim), so an O(n^3)
+//! Jacobi sweep with f64 accumulation is both adequate and very accurate.
+
+use super::Tensor;
+
+/// Thin SVD of an [m, n] matrix with m >= n: A = U diag(s) V^T where
+/// U is [m, n] with orthonormal columns, s descending, V is [n, n].
+///
+/// One-sided Jacobi: orthogonalise the columns of a working copy of A by
+/// plane rotations; the resulting column norms are the singular values and
+/// the accumulated rotations give V.
+pub fn svd_thin(a: &Tensor) -> (Tensor, Vec<f32>, Tensor) {
+    let (m, n) = a.dims2();
+    assert!(m >= n, "svd_thin expects m >= n, got {m}x{n}");
+    // Work in f64 column-major for accuracy.
+    let mut u: Vec<f64> = vec![0.0; m * n]; // column-major [m, n]
+    for i in 0..m {
+        for j in 0..n {
+            u[j * m + i] = a.data[i * n + j] as f64;
+        }
+    }
+    let mut v: Vec<f64> = vec![0.0; n * n]; // column-major identity
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    let eps = 1e-14;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let up = u[p * m + i];
+                    let uq = u[q * m + i];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) inner product.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[p * m + i];
+                    let uq = u[q * m + i];
+                    u[p * m + i] = c * up - s * uq;
+                    u[q * m + i] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[p * n + i];
+                    let vq = v[q * n + i];
+                    v[p * n + i] = c * vp - s * vq;
+                    v[q * n + i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+
+    // Column norms -> singular values; normalise U columns.
+    let mut svals: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm = (0..m).map(|i| u[j * m + i] * u[j * m + i]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u_out = Tensor::zeros(vec![m, n]);
+    let mut v_out = Tensor::zeros(vec![n, n]);
+    let mut s_out = vec![0.0f32; n];
+    for (rank, &(norm, j)) in svals.iter().enumerate() {
+        s_out[rank] = norm as f32;
+        let inv = if norm > 1e-300 { 1.0 / norm } else { 0.0 };
+        for i in 0..m {
+            u_out.data[i * n + rank] = (u[j * m + i] * inv) as f32;
+        }
+        for i in 0..n {
+            v_out.data[i * n + rank] = v[j * n + i] as f32;
+        }
+    }
+    (u_out, s_out, v_out)
+}
+
+/// Cholesky factorization of a symmetric positive-definite [n, n] matrix:
+/// A = L L^T with L lower-triangular.  Panics on non-PD input beyond
+/// a small damping tolerance.
+pub fn cholesky(a: &Tensor) -> Tensor {
+    let (n, n2) = a.dims2();
+    assert_eq!(n, n2);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.data[i * n + j] as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                assert!(sum > 0.0, "matrix not positive definite at row {i} (sum={sum})");
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Tensor::new(vec![n, n], l.iter().map(|&x| x as f32).collect())
+}
+
+/// Solve L x = b for lower-triangular L (forward substitution), column-wise
+/// over the columns of B: returns X with L X = B.
+pub fn solve_lower_triangular(l: &Tensor, b: &Tensor) -> Tensor {
+    let (n, _) = l.dims2();
+    let (n2, cols) = b.dims2();
+    assert_eq!(n, n2);
+    let mut x = vec![0.0f64; n * cols];
+    for c in 0..cols {
+        for i in 0..n {
+            let mut sum = b.data[i * cols + c] as f64;
+            for k in 0..i {
+                sum -= l.data[i * n + k] as f64 * x[k * cols + c];
+            }
+            x[i * cols + c] = sum / l.data[i * n + i] as f64;
+        }
+    }
+    Tensor::new(vec![n, cols], x.iter().map(|&v| v as f32).collect())
+}
+
+/// Solve L^T x = b for lower-triangular L (back substitution over columns).
+pub fn solve_upper_from_lower(l: &Tensor, b: &Tensor) -> Tensor {
+    let (n, _) = l.dims2();
+    let (n2, cols) = b.dims2();
+    assert_eq!(n, n2);
+    let mut x = vec![0.0f64; n * cols];
+    for c in 0..cols {
+        for i in (0..n).rev() {
+            let mut sum = b.data[i * cols + c] as f64;
+            for k in (i + 1)..n {
+                // (L^T)[i,k] = L[k,i]
+                sum -= l.data[k * n + i] as f64 * x[k * cols + c];
+            }
+            x[i * cols + c] = sum / l.data[i * n + i] as f64;
+        }
+    }
+    Tensor::new(vec![n, cols], x.iter().map(|&v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(u: &Tensor, s: &[f32], v: &Tensor, rank: usize) -> Tensor {
+        let (m, n) = u.dims2();
+        let (nv, _) = v.dims2();
+        let mut out = Tensor::zeros(vec![m, nv]);
+        for r in 0..rank.min(n) {
+            for i in 0..m {
+                let f = u.data[i * n + r] * s[r];
+                for j in 0..nv {
+                    out.data[i * nv + j] += f * v.data[j * nv + r];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn svd_reconstructs_exactly_at_full_rank() {
+        let mut rng = Rng::new(1);
+        for (m, n) in [(4, 4), (10, 6), (32, 8)] {
+            let a = Tensor::randn(vec![m, n], 1.0, &mut rng);
+            let (u, s, v) = svd_thin(&a);
+            let rec = reconstruct(&u, &s, &v, n);
+            assert!(a.max_abs_diff(&rec) < 1e-4, "{m}x{n}: {}", a.max_abs_diff(&rec));
+        }
+    }
+
+    #[test]
+    fn svd_singular_values_descend_and_nonneg() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(vec![12, 7], 1.0, &mut rng);
+        let (_, s, _) = svd_thin(&a);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn svd_u_v_orthonormal() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(vec![9, 5], 1.0, &mut rng);
+        let (u, _, v) = svd_thin(&a);
+        let utu = matmul(&u.transpose2(), &u);
+        let vtv = matmul(&v.transpose2(), &v);
+        for i in 0..5 {
+            for j in 0..5 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at2(i, j) - expect).abs() < 1e-4);
+                assert!((vtv.at2(i, j) - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_truncation_is_best_approx_energy() {
+        // Truncated reconstruction error equals the tail singular-value
+        // energy (Eckart–Young).
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(vec![16, 8], 1.0, &mut rng);
+        let (u, s, v) = svd_thin(&a);
+        for rank in [1, 3, 5, 8] {
+            let rec = reconstruct(&u, &s, &v, rank);
+            let err2: f32 = a
+                .data
+                .iter()
+                .zip(&rec.data)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            let tail: f32 = s[rank..].iter().map(|x| x * x).sum();
+            assert!((err2 - tail).abs() < 1e-2 * (1.0 + tail), "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        // Duplicate columns: true rank 2 of a 6x4 matrix.
+        let mut rng = Rng::new(5);
+        let base = Tensor::randn(vec![6, 2], 1.0, &mut rng);
+        let mut a = Tensor::zeros(vec![6, 4]);
+        for i in 0..6 {
+            for j in 0..4 {
+                a.data[i * 4 + j] = base.data[i * 2 + j % 2];
+            }
+        }
+        let (_, s, _) = svd_thin(&a);
+        assert!(s[2] < 1e-4 && s[3] < 1e-4, "tail {s:?}");
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(6);
+        let b = Tensor::randn(vec![8, 8], 1.0, &mut rng);
+        // SPD: B B^T + I
+        let mut spd = matmul(&b, &b.transpose2());
+        for i in 0..8 {
+            spd.data[i * 8 + i] += 1.0;
+        }
+        let l = cholesky(&spd);
+        let rec = matmul(&l, &l.transpose2());
+        assert!(spd.max_abs_diff(&rec) < 1e-3);
+        // lower triangular
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_eq!(l.at2(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(7);
+        let b = Tensor::randn(vec![6, 6], 1.0, &mut rng);
+        let mut spd = matmul(&b, &b.transpose2());
+        for i in 0..6 {
+            spd.data[i * 6 + i] += 2.0;
+        }
+        let l = cholesky(&spd);
+        let rhs = Tensor::randn(vec![6, 3], 1.0, &mut rng);
+        let x = solve_lower_triangular(&l, &rhs);
+        assert!(matmul(&l, &x).max_abs_diff(&rhs) < 1e-4);
+        let y = solve_upper_from_lower(&l, &rhs);
+        assert!(matmul(&l.transpose2(), &y).max_abs_diff(&rhs) < 1e-4);
+    }
+}

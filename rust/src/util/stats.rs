@@ -1,0 +1,211 @@
+//! Micro-benchmark statistics — the in-tree replacement for criterion.
+//!
+//! `bench()` runs warmup + timed iterations, adaptively choosing the
+//! iteration count for a target measurement time, and reports mean / p50 /
+//! p95 / p99 / min with a simple outlier-robust summary.  All `cargo bench`
+//! targets in `rust/benches/` use this harness.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.2} us/iter (p50 {:.2}, p95 {:.2}, p99 {:.2}, min {:.2}; n={})",
+            self.name,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p95_ns / 1e3,
+            self.p99_ns / 1e3,
+            self.min_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Time `f` adaptively: warm up for `warmup`, then sample individual
+/// invocations until `budget` elapses (min 10, max `max_samples` samples).
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, budget: Duration, mut f: F) -> BenchStats {
+    bench_with_samples(name, warmup, budget, 10_000, &mut f)
+}
+
+/// Quick preset used inside experiments: ~30 ms warmup, ~300 ms budget.
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    bench(
+        name,
+        Duration::from_millis(30),
+        Duration::from_millis(300),
+        f,
+    )
+}
+
+pub fn bench_with_samples<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    budget: Duration,
+    max_samples: usize,
+    f: &mut F,
+) -> BenchStats {
+    let wstart = Instant::now();
+    let mut warm_iters = 0usize;
+    while wstart.elapsed() < warmup || warm_iters < 2 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+
+    let mut samples = Vec::with_capacity(256);
+    let start = Instant::now();
+    while (start.elapsed() < budget || samples.len() < 10) && samples.len() < max_samples {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    summarize(name, samples)
+}
+
+pub fn summarize(name: &str, mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n.max(1) as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: percentile(&samples, 0.50),
+        p95_ns: percentile(&samples, 0.95),
+        p99_ns: percentile(&samples, 0.99),
+        min_ns: samples.first().copied().unwrap_or(f64::NAN),
+        max_ns: samples.last().copied().unwrap_or(f64::NAN),
+    }
+}
+
+/// Prevent the optimizer from deleting a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Welford online mean/variance — used by latency metrics in the coordinator.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let st = bench(
+            "busy",
+            Duration::from_millis(1),
+            Duration::from_millis(10),
+            || {
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(black_box(i));
+                }
+            },
+        );
+        assert!(st.iters >= 10);
+        assert!(st.mean_ns > 0.0);
+        assert!(st.p50_ns <= st.p99_ns + 1.0);
+        assert!(st.min_ns <= st.mean_ns);
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        let var =
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.var() - var).abs() < 1e-9);
+        assert_eq!(w.min, 1.0);
+        assert_eq!(w.max, 10.0);
+    }
+
+    #[test]
+    fn percentile_sane() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert!((percentile(&v, 0.5) - 50.0).abs() <= 1.0);
+    }
+}

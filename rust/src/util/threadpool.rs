@@ -1,0 +1,181 @@
+//! Small fixed-size thread pool (no tokio/rayon offline).
+//!
+//! Two facilities:
+//!   * `ThreadPool` — long-lived workers consuming boxed jobs from a channel;
+//!     used by the serving layer for request handling.
+//!   * `scoped_chunks` — data-parallel helper that splits an index range
+//!     across `std::thread::scope` workers; used by the tensor kernels.
+//!
+//! On this single-core testbed the pool defaults to 1 worker and the scoped
+//! helper falls back to inline execution — zero overhead — but the code
+//! paths are exercised by tests with forced worker counts.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("rap-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                cv.notify_all();
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            pending,
+        }
+    }
+
+    /// Default worker count: available parallelism minus nothing (min 1).
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Split `0..n` into contiguous chunks and run `f(chunk_range)` on up to
+/// `threads` scoped workers.  `f` must be `Sync` since multiple workers call
+/// it concurrently on disjoint ranges.
+pub fn scoped_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo..hi));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn scoped_chunks_covers_range() {
+        for threads in [1, 2, 3, 8] {
+            let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            scoped_chunks(23, threads, |range| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        }
+    }
+
+    #[test]
+    fn scoped_chunks_empty() {
+        scoped_chunks(0, 4, |r| assert!(r.is_empty()));
+    }
+}

@@ -1,0 +1,281 @@
+//! Integration tests over the real artifacts (require `make artifacts`).
+//!
+//! The heart of the suite is the three-way numerics cross-check:
+//! python-JAX (ppl_python in the manifest) vs the pure-Rust engine vs the
+//! PJRT execution of the exported HLO — all three must agree, proving the
+//! L1/L2/L3 layers compose with identical semantics.
+
+use rap::eval::{eval_ppl, probe_suite};
+use rap::manifest::Manifest;
+use rap::model::{argmax, load_engine, Weights};
+use rap::runtime::{session::Session, PjrtContext, PjrtEngine};
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_loads_with_expected_structure() {
+    let m = manifest();
+    assert!(m.models.contains_key("tinyllama"));
+    assert!(m.models.contains_key("tinymistral"));
+    let tl = &m.models["tinyllama"];
+    assert!(tl.variants.len() >= 20, "got {}", tl.variants.len());
+    assert!(tl.variants.contains_key("baseline_r00"));
+    assert!(tl.variants.contains_key("rap_r30"));
+    assert!(tl.hlo.contains_key("rap_r30"));
+    assert!(!m.rope_bench.is_empty());
+    // KV ratios encoded in the specs match the variant names.
+    for rho in [10usize, 20, 30, 40, 50] {
+        let v = &tl.variants[&format!("rap_r{rho}")];
+        let retained = v.spec.kv_retained(&tl.config);
+        assert!(
+            (retained - (1.0 - rho as f64 / 100.0)).abs() < 0.03,
+            "rap_r{rho}: retained {retained}"
+        );
+    }
+}
+
+#[test]
+fn weights_load_and_have_expected_tensors() {
+    let m = manifest();
+    let entry = m.model("tinyllama").unwrap();
+    let ve = &entry.variants["rap_r30"];
+    let w = Weights::load(&m, ve).unwrap();
+    assert!(w.has("tok_emb"));
+    assert!(w.has("layers.0.wq_t"));
+    assert!(w.has("layers.0.theta_sel"));
+    assert!(w.has("final_norm"));
+    // absorbed widths match the spec
+    let wq_t = w.layer(0, "wq_t");
+    assert_eq!(
+        wq_t.shape,
+        vec![entry.config.d_model, entry.config.n_heads * ve.spec.k_rank[0]]
+    );
+}
+
+#[test]
+fn rust_engine_ppl_tracks_python_ppl() {
+    // Same windowing as python but fewer windows: values must be within a
+    // modest tolerance and the METHOD ORDERING must match exactly.
+    let m = manifest();
+    let corpus = m.eval_corpus().unwrap();
+    let mut pairs = Vec::new();
+    for key in ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"] {
+        let engine = load_engine(&m, "tinyllama", key).unwrap();
+        let rust_ppl = eval_ppl(&engine, &corpus, m.eval_seq, 8).unwrap();
+        let py_ppl = m.models["tinyllama"].variants[key].ppl_python;
+        assert!(
+            (rust_ppl / py_ppl - 1.0).abs() < 0.25,
+            "{key}: rust {rust_ppl} vs python {py_ppl}"
+        );
+        pairs.push((key, rust_ppl, py_ppl));
+    }
+    // ordering: baseline < palu < {svd, rap} in both measurements
+    let rust_base = pairs[0].1;
+    for (key, rust_ppl, _) in &pairs[1..] {
+        assert!(rust_ppl > &rust_base, "{key} should degrade vs baseline");
+    }
+}
+
+#[test]
+fn pjrt_and_rust_engine_agree_on_logits() {
+    // Decode the same 12-token sequence through both execution paths.
+    let m = manifest();
+    let ctx = PjrtContext::cpu().unwrap();
+    let corpus = m.eval_corpus().unwrap();
+    for key in ["baseline_r00", "rap_r30", "svd_r30", "palu_r30"] {
+        if !m.models["tinyllama"].hlo.contains_key(key) {
+            continue;
+        }
+        let pjrt = PjrtEngine::load(&ctx, &m, "tinyllama", key).unwrap();
+        let rust = load_engine(&m, "tinyllama", key).unwrap();
+
+        let seq = &corpus[..12];
+        // rust path
+        let mut cache = rust.new_cache(pjrt.s_max);
+        let mut rust_logits = Vec::new();
+        for (i, &t) in seq.iter().enumerate() {
+            rust_logits = rust.step(t, i, &mut cache);
+        }
+        // pjrt path
+        let mut caches = pjrt.empty_caches(1).unwrap();
+        let mut pjrt_logits = Vec::new();
+        for (i, &t) in seq.iter().enumerate() {
+            let out = pjrt
+                .decode(&ctx, 1, &[t as i32], &[i as i32], &caches)
+                .unwrap();
+            caches = out.caches;
+            pjrt_logits = out.logits;
+        }
+        let max_diff: f32 = rust_logits
+            .iter()
+            .zip(&pjrt_logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max_diff < 2e-2, "{key}: max logit diff {max_diff}");
+        assert_eq!(
+            argmax(&rust_logits),
+            argmax(&pjrt_logits),
+            "{key}: argmax disagreement"
+        );
+    }
+}
+
+#[test]
+fn pjrt_prefill_bucket_matches_stepwise_decode() {
+    let m = manifest();
+    let ctx = PjrtContext::cpu().unwrap();
+    let corpus = m.eval_corpus().unwrap();
+    let engine = PjrtEngine::load(&ctx, &m, "tinyllama", "rap_r30").unwrap();
+
+    let prompt = &corpus[..32];
+    // bucketed prefill
+    let tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+    let bucketed = engine.prefill(&ctx, "prefill32", &tokens, 1).unwrap();
+    // stepwise
+    let mut caches = engine.empty_caches(1).unwrap();
+    let mut logits = Vec::new();
+    for (i, &t) in prompt.iter().enumerate() {
+        let out = engine
+            .decode(&ctx, 1, &[t as i32], &[i as i32], &caches)
+            .unwrap();
+        caches = out.caches;
+        logits = out.logits;
+    }
+    let max_diff: f32 = bucketed
+        .logits
+        .iter()
+        .zip(&logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(max_diff < 2e-2, "prefill bucket vs stepwise: {max_diff}");
+    // caches must agree too (same latent layout)
+    for (l, (a, b)) in bucketed.caches.iter().zip(&caches).enumerate() {
+        let kd: f32 = a.k.iter().zip(&b.k).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(kd < 2e-2, "layer {l} K cache diff {kd}");
+    }
+}
+
+#[test]
+fn mixed_position_batched_decode_matches_single() {
+    // Two sessions at different offsets in one decode_b4 call must produce
+    // the same logits as batch-1 calls (continuous-batching correctness).
+    let m = manifest();
+    let ctx = PjrtContext::cpu().unwrap();
+    let corpus = m.eval_corpus().unwrap();
+    let engine = PjrtEngine::load(&ctx, &m, "tinyllama", "rap_r30").unwrap();
+
+    // session A: 5 tokens, session B: 9 tokens.
+    let fill = |n: usize| {
+        let mut caches = engine.empty_caches(1).unwrap();
+        let mut logits = Vec::new();
+        for (i, &t) in corpus[..n].iter().enumerate() {
+            let out = engine
+                .decode(&ctx, 1, &[t as i32], &[i as i32], &caches)
+                .unwrap();
+            caches = out.caches;
+            logits = out.logits;
+        }
+        (caches, logits)
+    };
+    let (ca, _la) = fill(5);
+    let (cb, _lb) = fill(9);
+
+    // batch-1 references for the NEXT token
+    let ra = engine
+        .decode(&ctx, 1, &[corpus[5] as i32], &[5], &ca)
+        .unwrap();
+    let rb = engine
+        .decode(&ctx, 1, &[corpus[9] as i32], &[9], &cb)
+        .unwrap();
+
+    // batched call (bucket 4 padded with zeros)
+    let mut batch_caches = Vec::new();
+    for l in 0..engine.n_layers {
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        k.extend_from_slice(&ca[l].k);
+        k.extend_from_slice(&cb[l].k);
+        v.extend_from_slice(&ca[l].v);
+        v.extend_from_slice(&cb[l].v);
+        // two pad slots
+        k.extend(std::iter::repeat(0.0).take(2 * ca[l].k.len()));
+        v.extend(std::iter::repeat(0.0).take(2 * ca[l].v.len()));
+        let mut k_dims = ca[l].k_dims.clone();
+        let mut v_dims = ca[l].v_dims.clone();
+        k_dims[0] = 4;
+        v_dims[0] = 4;
+        batch_caches.push(rap::runtime::PjrtCache { k, k_dims, v, v_dims });
+    }
+    let out = engine
+        .decode(
+            &ctx,
+            4,
+            &[corpus[5] as i32, corpus[9] as i32, 0, 0],
+            &[5, 9, 0, 0],
+            &batch_caches,
+        )
+        .unwrap();
+    let vocab = out.logits.len() / 4;
+    for (bi, reference) in [(0usize, &ra.logits), (1usize, &rb.logits)] {
+        let got = &out.logits[bi * vocab..(bi + 1) * vocab];
+        let max_diff: f32 = got
+            .iter()
+            .zip(reference.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max_diff < 2e-2, "batch slot {bi}: diff {max_diff}");
+    }
+}
+
+#[test]
+fn pjrt_session_generates_deterministically() {
+    let m = manifest();
+    let ctx = PjrtContext::cpu().unwrap();
+    let engine = PjrtEngine::load(&ctx, &m, "tinyllama", "rap_r30").unwrap();
+    let gen = |prompt: &[u8]| {
+        let mut s = Session::new(&ctx, &engine).unwrap();
+        s.prefill(prompt).unwrap();
+        s.generate(16).unwrap()
+    };
+    let a = gen(b"the quick brown ");
+    let b = gen(b"the quick brown ");
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 16);
+    // generated bytes are printable corpus-like text
+    assert!(a.iter().all(|&c| c == b' ' || c == b'.' || c == b'?' || c == b'\n' || c.is_ascii_alphanumeric()),
+        "got {:?}", String::from_utf8_lossy(&a));
+}
+
+#[test]
+fn probe_suite_runs_and_baseline_beats_heavy_pruning() {
+    let m = manifest();
+    let corpus = m.eval_corpus().unwrap();
+    let base = load_engine(&m, "tinyllama", "baseline_r00").unwrap();
+    let heavy = load_engine(&m, "tinyllama", "svd_r50").unwrap();
+    let sb = probe_suite(&base, &corpus, m.eval_seq, 6, 32).unwrap();
+    let sh = probe_suite(&heavy, &corpus, m.eval_seq, 6, 32).unwrap();
+    let avg = |s: &[rap::eval::ProbeScore]| {
+        rap::eval::tasks::average_accuracy(s)
+    };
+    assert!(
+        avg(&sb) > avg(&sh),
+        "baseline {:.3} should beat svd@50% {:.3}",
+        avg(&sb),
+        avg(&sh)
+    );
+}
+
+#[test]
+fn engine_generation_stays_in_distribution() {
+    let m = manifest();
+    let engine = load_engine(&m, "tinyllama", "rap_r30").unwrap();
+    let out = engine.generate(b"the ", 40, 128);
+    assert_eq!(out.len(), 40);
+    let printable = out
+        .iter()
+        .filter(|&&c| c.is_ascii_graphic() || c == b' ' || c == b'\n')
+        .count();
+    assert!(printable >= 38, "mostly printable, got {:?}", String::from_utf8_lossy(&out));
+}

@@ -1,0 +1,178 @@
+//! Serving-stack integration tests: coordinator over both backends, the
+//! TCP server, and KV accounting under load.  Require `make artifacts`.
+
+use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use rap::kvcache::CacheShape;
+use rap::manifest::Manifest;
+use rap::model::backend::RustBackend;
+use rap::model::load_engine;
+use rap::runtime::backend::PjrtBackend;
+use rap::runtime::{PjrtContext, PjrtEngine};
+use rap::server::{client_request, serve};
+use rap::workload::{generate, WorkloadConfig};
+
+fn manifest() -> Manifest {
+    Manifest::load_default().expect("run `make artifacts` before cargo test")
+}
+
+fn coordinator_cfg(buckets: Vec<usize>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_sessions: 3,
+            buckets,
+            max_queue: 64,
+        },
+        kv_budget_bytes: 32 << 20,
+    }
+}
+
+#[test]
+fn coordinator_over_rust_backend_serves_trace() {
+    let m = manifest();
+    let entry = m.model("tinyllama").unwrap();
+    let engine = load_engine(&m, "tinyllama", "rap_r30").unwrap();
+    let backend = RustBackend::new(&engine, 128);
+    let shape = CacheShape::of(&entry.config, &entry.variants["rap_r30"].spec);
+    let mut coord = Coordinator::new(backend, shape, coordinator_cfg(vec![1, 4]));
+
+    let corpus = m.eval_corpus().unwrap();
+    let wl = generate(
+        &WorkloadConfig {
+            n_requests: 6,
+            prompt_lens: vec![8, 16],
+            min_new: 4,
+            max_new: 8,
+            ..Default::default()
+        },
+        &corpus,
+    );
+    for tr in wl {
+        assert!(coord.submit(tr.request));
+    }
+    let responses = coord.run_to_completion().unwrap();
+    assert_eq!(responses.len(), 6);
+    for r in &responses {
+        assert!(!r.generated.is_empty());
+        assert!(r.metrics.ttft_ms > 0.0);
+    }
+    assert_eq!(coord.kv_used_blocks(), 0, "all KV released");
+    assert!(coord.metrics.throughput_tps() > 0.0);
+}
+
+#[test]
+fn coordinator_over_pjrt_backend_matches_sequential_generation() {
+    let m = manifest();
+    let ctx = PjrtContext::cpu().unwrap();
+    let engine = PjrtEngine::load(&ctx, &m, "tinyllama", "rap_r30").unwrap();
+    let entry = m.model("tinyllama").unwrap();
+    let shape = CacheShape::of(&entry.config, &entry.variants["rap_r30"].spec);
+
+    // Reference: sequential generation of each prompt.
+    let corpus = m.eval_corpus().unwrap();
+    let prompts: Vec<Vec<u8>> = vec![
+        corpus[..16].to_vec(),
+        corpus[100..116].to_vec(),
+        corpus[500..508].to_vec(),
+    ];
+    let mut expected = Vec::new();
+    {
+        let mut backend = PjrtBackend::new(&ctx, &engine).unwrap();
+        for (i, p) in prompts.iter().enumerate() {
+            expected.push(
+                rap::runtime::backend::generate_once(&mut backend, 1000 + i as u64, p, 6)
+                    .unwrap(),
+            );
+        }
+    }
+
+    // Coordinator path: all three concurrently (batched decode).
+    let backend = PjrtBackend::new(&ctx, &engine).unwrap();
+    let mut coord = Coordinator::new(backend, shape, coordinator_cfg(engine.decode_batches()));
+    for (i, p) in prompts.iter().enumerate() {
+        coord.submit(Request::new(i as u64, p.clone(), 6));
+    }
+    let mut responses = coord.run_to_completion().unwrap();
+    responses.sort_by_key(|r| r.id);
+    for (r, e) in responses.iter().zip(&expected) {
+        assert_eq!(&r.generated, e, "batched output must equal sequential");
+    }
+}
+
+#[test]
+fn kv_pressure_defers_admission_but_everything_completes() {
+    let m = manifest();
+    let entry = m.model("tinyllama").unwrap();
+    let engine = load_engine(&m, "tinyllama", "rap_r30").unwrap();
+    let backend = RustBackend::new(&engine, 96);
+    let shape = CacheShape::of(&entry.config, &entry.variants["rap_r30"].spec);
+    // Tiny KV budget: only ~2 sessions' worth of blocks.
+    let budget = shape.bytes_per_token() * 96 * 2;
+    let mut coord = Coordinator::new(
+        backend,
+        shape,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: 8,
+                buckets: vec![1, 4],
+                max_queue: 64,
+            },
+            kv_budget_bytes: budget,
+        },
+    );
+    let corpus = m.eval_corpus().unwrap();
+    for i in 0..5u64 {
+        coord.submit(Request::new(i, corpus[..32].to_vec(), 8));
+    }
+    let responses = coord.run_to_completion().unwrap();
+    assert_eq!(responses.len(), 5, "deferred requests still complete");
+    assert!(coord.metrics.peak_kv_blocks > 0);
+}
+
+#[test]
+fn quantized_backend_still_generates_sensibly() {
+    let m = manifest();
+    let engine = load_engine(&m, "tinyllama", "rap_r30").unwrap();
+    let mut backend = RustBackend::new(&engine, 64);
+    backend.quantize_kv = true;
+    let corpus = m.eval_corpus().unwrap();
+    let out =
+        rap::runtime::backend::generate_once(&mut backend, 1, &corpus[..16], 8).unwrap();
+    assert_eq!(out.len(), 8);
+    assert!(out.iter().all(|&c| c == b' ' || c.is_ascii_graphic() || c == b'\n'));
+}
+
+#[test]
+fn tcp_server_round_trip() {
+    let factory = move || {
+        let m = Manifest::load_default()?;
+        let entry = m.model("tinyllama")?;
+        let shape = CacheShape::of(&entry.config, &entry.variants["rap_r30"].spec);
+        // Engine leaks deliberately: server lifetime == process lifetime.
+        let engine: &'static rap::model::Engine =
+            Box::leak(Box::new(load_engine(&m, "tinyllama", "rap_r30")?));
+        let backend = RustBackend::new(engine, 128);
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 2,
+                    buckets: vec![1, 4],
+                    max_queue: 16,
+                },
+                kv_budget_bytes: 16 << 20,
+            },
+        ))
+    };
+    let handle = serve("127.0.0.1:0", factory, 2).unwrap();
+    let addr = handle.addr;
+
+    let resp = client_request(&addr, "the quick brown ", 8).unwrap();
+    let text = resp.get("text").and_then(|t| t.as_str()).unwrap().to_string();
+    assert_eq!(resp.get("tokens").and_then(|t| t.as_usize()), Some(8));
+    assert_eq!(text.len(), 8);
+    // Second request on a fresh connection also works.
+    let resp2 = client_request(&addr, "words and more ", 4).unwrap();
+    assert_eq!(resp2.get("tokens").and_then(|t| t.as_usize()), Some(4));
+    handle.shutdown();
+}
