@@ -13,9 +13,12 @@
 use std::time::Instant;
 
 use anyhow::Result;
+use rap::config::Method;
 use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use rap::kvcache::CacheShape;
 use rap::manifest::Manifest;
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
 use rap::runtime::backend::PjrtBackend;
 use rap::runtime::{PjrtContext, PjrtEngine};
 use rap::server::{client_request, serve};
@@ -117,11 +120,86 @@ fn drive(model: &str, variant: &str, n_requests: usize) -> Result<()> {
     Ok(())
 }
 
+/// No-artifacts fallback: the synthetic RAP model served by the pure-Rust
+/// engine decoding straight out of the storage-backed paged KV-cache —
+/// same server, scheduler, continuous batcher and client pool as the PJRT
+/// path, so the serving stack is demonstrable anywhere.
+fn drive_synth(n_requests: usize) -> Result<()> {
+    println!("\n=== synthetic rap model (paged-store rust engine) ===");
+    let factory = move || -> Result<Coordinator<RustBackend<'static>>> {
+        // Engine leaks deliberately: server lifetime == process lifetime.
+        let engine: &'static rap::model::Engine =
+            Box::leak(Box::new(synth_engine(Method::Rap, 7)));
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let backend = RustBackend::new(engine, 256);
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 8,
+                    buckets: vec![1, 4, 8],
+                    max_queue: 256,
+                },
+                kv_budget_bytes: 64 << 20,
+            },
+        ))
+    };
+    let handle = serve("127.0.0.1:0", factory, 4)?;
+    let addr = handle.addr;
+    println!("server on {addr}");
+
+    let corpus: Vec<u8> = (0..4096).map(|i| (i % 251) as u8).collect();
+    let wl = generate(
+        &WorkloadConfig {
+            n_requests,
+            arrival_rate: 30.0,
+            prompt_lens: vec![16, 32, 32, 64],
+            min_new: 8,
+            max_new: 24,
+            seed: 7,
+        },
+        &corpus,
+    );
+    let pool = ThreadPool::new(4);
+    let t0 = Instant::now();
+    let done = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let toks = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    for tr in wl {
+        let (done, toks) = (std::sync::Arc::clone(&done), std::sync::Arc::clone(&toks));
+        pool.execute(move || {
+            let prompt = String::from_utf8_lossy(&tr.request.prompt).to_string();
+            match client_request(&addr, &prompt, tr.request.max_new) {
+                Ok(resp) => {
+                    let n = resp.get("tokens").and_then(|v| v.as_usize()).unwrap_or(0);
+                    toks.fetch_add(n, std::sync::atomic::Ordering::SeqCst);
+                    done.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }
+                Err(e) => eprintln!("client error: {e:#}"),
+            }
+        });
+    }
+    pool.wait_idle();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} responses in {wall:.2}s | {:.1} gen tok/s through the paged store",
+        done.load(std::sync::atomic::Ordering::SeqCst),
+        toks.load(std::sync::atomic::Ordering::SeqCst) as f64 / wall,
+    );
+    handle.shutdown();
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let n = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())
         .unwrap_or(12);
+    if Manifest::load_default().is_err() {
+        drive_synth(n)?;
+        println!("\n(run `make artifacts` for the PJRT side-by-side)");
+        return Ok(());
+    }
     drive("tinyllama", "rap_r30", n)?;
     drive("tinyllama", "baseline_r00", n)?;
     println!("\n(RAP serves the same trace with a 30% smaller KV cache and lower decode latency.)");

@@ -1,83 +1,173 @@
 //! Fig. 11 / Table 16 (decode side): per-token decode latency vs KV length,
 //! per method — the series where SVD/PaLU pay per-step reconstruction of
 //! the whole visible cache and RAP does not.
+//!
+//! Section (c) is the perf gate for the allocation-free paged decode path:
+//! it times the seed's allocating dense step (`step_alloc_reference`)
+//! against `decode_batch_paged` at 2k context on synthetic weights (no
+//! artifacts needed) and writes the speedups to `BENCH_decode.json`, so
+//! the decode-latency trajectory is tracked across PRs.
 
+use rap::config::Method;
 use rap::experiments::bench_support::{budgets, BenchReport};
+use rap::kvcache::{CacheShape, PagedKvCache};
 use rap::manifest::Manifest;
 use rap::model::load_engine;
+use rap::model::synth::synth_engine;
+use rap::model::BatchWorkspace;
 use rap::runtime::{PjrtContext, PjrtEngine};
-use rap::util::json::{num, s};
+use rap::util::json::{arr, num, obj, s};
 use rap::util::stats::bench;
 
 fn main() {
     let (warm, budget) = budgets();
     let mut report = BenchReport::new("decode_latency");
-    let Ok(manifest) = Manifest::load_default() else {
-        println!("no artifacts; run `make artifacts` first");
-        return;
-    };
-    let corpus = manifest.eval_corpus().unwrap();
-    let model = "tinyllama";
-    let keys = ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"];
 
-    // (a) PJRT decode at mid-context.
-    if let Ok(pctx) = PjrtContext::cpu() {
-        let mut base = 0.0f64;
-        for key in keys {
-            let Ok(engine) = PjrtEngine::load(&pctx, &manifest, model, key) else { continue };
-            let mut caches = engine.empty_caches(1).unwrap();
-            for (i, &b) in corpus[..8].iter().enumerate() {
-                caches = engine
-                    .decode(&pctx, 1, &[b as i32], &[i as i32], &caches)
-                    .unwrap()
-                    .caches;
+    if let Ok(manifest) = Manifest::load_default() {
+        let corpus = manifest.eval_corpus().unwrap();
+        let model = "tinyllama";
+        let keys = ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"];
+
+        // (a) PJRT decode at mid-context.
+        if let Ok(pctx) = PjrtContext::cpu() {
+            let mut base = 0.0f64;
+            for key in keys {
+                let Ok(engine) = PjrtEngine::load(&pctx, &manifest, model, key) else { continue };
+                let mut caches = engine.empty_caches(1).unwrap();
+                for (i, &b) in corpus[..8].iter().enumerate() {
+                    caches = engine
+                        .decode(&pctx, 1, &[b as i32], &[i as i32], &caches)
+                        .unwrap()
+                        .caches;
+                }
+                let pos = (engine.s_max / 2) as i32;
+                let st = bench(&format!("pjrt_decode/{key}"), warm, budget, || {
+                    let _ = engine.decode(&pctx, 1, &[65], &[pos], &caches).unwrap();
+                });
+                if key == "baseline_r00" {
+                    base = st.mean_ns;
+                }
+                println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
+                report.record(
+                    &st,
+                    vec![("variant", s(key)), ("rel", num(st.mean_ns / base)), ("kind", s("pjrt"))],
+                );
             }
-            let pos = (engine.s_max / 2) as i32;
-            let st = bench(&format!("pjrt_decode/{key}"), warm, budget, || {
-                let _ = engine.decode(&pctx, 1, &[65], &[pos], &caches).unwrap();
-            });
-            if key == "baseline_r00" {
-                base = st.mean_ns;
-            }
-            println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
-            report.record(
-                &st,
-                vec![("variant", s(key)), ("rel", num(st.mean_ns / base)), ("kind", s("pjrt"))],
-            );
         }
+
+        // (b) Rust engine decode step across KV lengths (the Fig. 11 sweep).
+        for ctx_len in [64usize, 192, 320] {
+            let mut base = 0.0f64;
+            for key in keys {
+                let Ok(engine) = load_engine(&manifest, model, key) else { continue };
+                let mut cache = engine.new_cache(ctx_len + 8);
+                for (i, &t) in corpus[..ctx_len].iter().enumerate() {
+                    engine.step_reuse(t, i, &mut cache);
+                }
+                let st = bench(
+                    &format!("engine_decode/ctx{ctx_len}/{key}"),
+                    warm,
+                    budget,
+                    || {
+                        engine.step_reuse(corpus[ctx_len], ctx_len, &mut cache);
+                    },
+                );
+                if key == "baseline_r00" {
+                    base = st.mean_ns;
+                }
+                println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
+                report.record(
+                    &st,
+                    vec![
+                        ("variant", s(key)),
+                        ("ctx", num(ctx_len as f64)),
+                        ("rel", num(st.mean_ns / base)),
+                        ("kind", s("engine")),
+                    ],
+                );
+            }
+        }
+    } else {
+        println!("no artifacts; skipping PJRT/manifest sweeps");
     }
 
-    // (b) Rust engine decode step across KV lengths (the Fig. 11 sweep).
-    for ctx_len in [64usize, 192, 320] {
-        let mut base = 0.0f64;
-        for key in keys {
-            let Ok(engine) = load_engine(&manifest, model, key) else { continue };
-            let mut cache = engine.new_cache(ctx_len + 8);
-            for (i, &t) in corpus[..ctx_len].iter().enumerate() {
-                engine.step(t, i, &mut cache);
-            }
-            let st = bench(
-                &format!("engine_decode/ctx{ctx_len}/{key}"),
-                warm,
-                budget,
-                || {
-                    engine.step(corpus[ctx_len], ctx_len, &mut cache);
-                },
-            );
-            if key == "baseline_r00" {
-                base = st.mean_ns;
-            }
-            println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
-            report.record(
-                &st,
-                vec![
-                    ("variant", s(key)),
-                    ("ctx", num(ctx_len as f64)),
-                    ("rel", num(st.mean_ns / base)),
-                    ("kind", s("engine")),
-                ],
-            );
+    // (c) Seed dense allocating step vs allocation-free paged decode at
+    // long context — synthetic weights, always runs.
+    let ctx_len: usize = if std::env::var("RAP_BENCH_FAST").is_ok() { 512 } else { 2048 };
+    let s_max = ctx_len + 8;
+    let mut variants = Vec::new();
+    let mut rap_speedup = 0.0f64;
+    for method in [Method::Baseline, Method::Svd, Method::Palu, Method::Rap] {
+        let engine = synth_engine(method, 2);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+
+        let mut dense = engine.new_cache(s_max);
+        for i in 0..ctx_len {
+            engine.step_reuse((i % 251) as u8, i, &mut dense);
         }
+        let seed_st = bench(
+            &format!("seed_dense/ctx{ctx_len}/{}", method.name()),
+            warm,
+            budget,
+            || {
+                let _ = engine.step_alloc_reference(65, ctx_len, &mut dense);
+            },
+        );
+
+        let mut kv = PagedKvCache::with_storage(shape, 64 << 20);
+        kv.reserve(1, s_max).unwrap();
+        let mut batch = BatchWorkspace::new(&engine, s_max);
+        for i in 0..ctx_len {
+            engine
+                .decode_batch_paged(&[(1, (i % 251) as u8, i)], &mut kv, &mut batch, false)
+                .unwrap();
+        }
+        let paged_st = bench(
+            &format!("paged_ws/ctx{ctx_len}/{}", method.name()),
+            warm,
+            budget,
+            || {
+                engine
+                    .decode_batch_paged(&[(1, 65, ctx_len)], &mut kv, &mut batch, true)
+                    .unwrap();
+            },
+        );
+
+        let speedup = seed_st.mean_ns / paged_st.mean_ns;
+        println!("    -> {}: paged workspace {speedup:.2}x vs seed dense", method.name());
+        if method == Method::Rap {
+            rap_speedup = speedup;
+        }
+        report.record(
+            &seed_st,
+            vec![("variant", s(method.name())), ("ctx", num(ctx_len as f64)), ("kind", s("seed_dense"))],
+        );
+        report.record(
+            &paged_st,
+            vec![
+                ("variant", s(method.name())),
+                ("ctx", num(ctx_len as f64)),
+                ("kind", s("paged_ws")),
+                ("speedup", num(speedup)),
+            ],
+        );
+        variants.push(obj(vec![
+            ("method", s(method.name())),
+            ("ctx", num(ctx_len as f64)),
+            ("seed_dense_us", num(seed_st.mean_ns / 1e3)),
+            ("paged_ws_us", num(paged_st.mean_ns / 1e3)),
+            ("speedup", num(speedup)),
+        ]));
     }
+    let summary = obj(vec![
+        ("bench", s("decode_latency")),
+        ("ctx", num(ctx_len as f64)),
+        ("target_rap_speedup", num(1.3)),
+        ("rap_speedup", num(rap_speedup)),
+        ("variants", arr(variants)),
+    ]);
+    let _ = std::fs::write("BENCH_decode.json", summary.to_string_pretty());
+    println!("-> BENCH_decode.json (rap {rap_speedup:.2}x vs seed dense at ctx {ctx_len})");
+
     report.finish();
 }

@@ -1,27 +1,96 @@
 //! Table 17 bench: end-to-end serving throughput through the coordinator
 //! (continuous batching + paged KV + PJRT) on the same seeded trace per
-//! variant.
+//! variant — plus the pure-Rust engine decoding straight out of the
+//! storage-backed paged cache (synthetic weights, runs without artifacts).
 
+use rap::config::Method;
 use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use rap::experiments::bench_support::BenchReport;
 use rap::kvcache::CacheShape;
 use rap::manifest::Manifest;
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
 use rap::runtime::backend::PjrtBackend;
 use rap::runtime::{PjrtContext, PjrtEngine};
 use rap::util::json::{num, s};
 use rap::util::stats::summarize;
 use rap::workload::{generate, WorkloadConfig};
 
+/// Continuous batching over the storage-backed paged KV with the Rust
+/// engine: 8 concurrent sessions, batched decode through the scheduler.
+fn rust_engine_paged_sweep(report: &mut BenchReport, fast: bool) {
+    let corpus: Vec<u8> = (0..4096).map(|i| (i % 251) as u8).collect();
+    let wl = WorkloadConfig {
+        n_requests: if fast { 8 } else { 24 },
+        arrival_rate: 200.0,
+        prompt_lens: vec![16, 32, 48],
+        min_new: 8,
+        max_new: if fast { 12 } else { 24 },
+        seed: 42,
+    };
+    let mut base_tps = 0.0f64;
+    for method in [Method::Baseline, Method::Rap] {
+        let engine = synth_engine(method, 3);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let backend = RustBackend::new(&engine, 256);
+        let mut coord = Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 8,
+                    buckets: vec![1, 4, 8],
+                    max_queue: 128,
+                },
+                kv_budget_bytes: 32 << 20,
+            },
+        );
+        for tr in generate(&wl, &corpus) {
+            coord.submit(tr.request);
+        }
+        coord.run_to_completion().unwrap();
+        let m = &coord.metrics;
+        if method == Method::Baseline {
+            base_tps = m.throughput_tps();
+        }
+        println!(
+            "rust_paged/{:<8} {:>7.1} tok/s ({:>4.0}% of baseline)  dec {:>5.2} ms/tok  occupancy {:.2}  peak_kv {} blocks",
+            method.name(),
+            m.throughput_tps(),
+            100.0 * m.throughput_tps() / base_tps,
+            m.decode_per_token.mean(),
+            m.decode_batch_occupancy.mean(),
+            m.peak_kv_blocks,
+        );
+        let st = summarize(&format!("rust_paged/{}", method.name()), vec![m.wall.as_nanos() as f64]);
+        report.record(
+            &st,
+            vec![
+                ("variant", s(method.name())),
+                ("kind", s("rust_paged")),
+                ("tps", num(m.throughput_tps())),
+                ("rel_tps", num(m.throughput_tps() / base_tps)),
+                ("occupancy", num(m.decode_batch_occupancy.mean())),
+            ],
+        );
+    }
+}
+
 fn main() {
     let mut report = BenchReport::new("e2e_serving");
+    let fast = std::env::var("RAP_BENCH_FAST").is_ok();
+    rust_engine_paged_sweep(&mut report, fast);
     let Ok(manifest) = Manifest::load_default() else {
-        println!("no artifacts; run `make artifacts` first");
+        println!("no artifacts; skipping the PJRT sweep");
+        report.finish();
         return;
     };
-    let Ok(pctx) = PjrtContext::cpu() else { return };
+    let Ok(pctx) = PjrtContext::cpu() else {
+        report.finish();
+        return;
+    };
     let corpus = manifest.eval_corpus().unwrap();
     let model = "tinyllama";
-    let fast = std::env::var("RAP_BENCH_FAST").is_ok();
     let wl = WorkloadConfig {
         n_requests: if fast { 6 } else { 16 },
         arrival_rate: 100.0,

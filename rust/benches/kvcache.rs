@@ -1,8 +1,9 @@
 //! KV-cache manager bench: allocator throughput, capacity gain under
-//! compression, and int4 quantization round-trip cost.
+//! compression, storage-backed page-table access, and int4 quantization
+//! round-trip cost.
 
 use rap::experiments::bench_support::{budgets, BenchReport};
-use rap::kvcache::{quant, CacheShape, PagedKvCache, BLOCK_TOKENS};
+use rap::kvcache::{quant, CacheShape, KvLayerView, PagedKvCache, BLOCK_TOKENS};
 use rap::util::json::num;
 use rap::util::rng::Rng;
 use rap::util::stats::{bench, black_box};
@@ -41,6 +42,45 @@ fn main() {
         black_box(c.used_blocks());
     });
     report.record(&st, vec![("sessions", num(64.0))]);
+
+    // Same cycle against a storage-backed cache: the delta is the cost of
+    // zeroing recycled blocks at reserve time (amortised 1/BLOCK_TOKENS per
+    // decoded token on the serving path).
+    {
+        let mut c = PagedKvCache::with_storage(shape(24, 24), 8 << 20);
+        let st = bench("reserve_release_cycle_zeroed", warm, budget, || {
+            for sess in 0..64u64 {
+                let _ = c.reserve(sess, BLOCK_TOKENS * 2);
+            }
+            for sess in 0..64u64 {
+                c.release(sess);
+            }
+            black_box(c.used_blocks());
+        });
+        report.record(&st, vec![("sessions", num(64.0))]);
+    }
+
+    // Page-table row writes + blocked run reads at a long context — the
+    // access pattern of the engine's paged decode hot path.
+    {
+        let sh = shape(17, 17);
+        let ctx = 4096usize;
+        let mut c = PagedKvCache::with_storage(sh.clone(), 64 << 20);
+        c.reserve(1, ctx).unwrap();
+        let st = bench("paged_rows_write_sweep/ctx4096", warm, budget, || {
+            let (pages, store) = c.tables_and_ptrs().unwrap();
+            let blocks = pages.blocks(1).unwrap();
+            // SAFETY: one live view at a time.
+            let mut view = unsafe { store.seq_layer(0, blocks) };
+            for t in 0..256 {
+                view.k_row_mut(0, t)[0] = t as f32;
+            }
+            let mut acc = 0.0f32;
+            view.for_k_runs(0, ctx, |_, rows| acc += rows[0]);
+            black_box(acc);
+        });
+        report.record(&st, vec![("ctx", num(ctx as f64))]);
+    }
 
     // int4 quantization round-trip at latent row widths.
     let mut rng = Rng::new(5);

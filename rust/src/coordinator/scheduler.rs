@@ -12,18 +12,32 @@ use crate::coordinator::request::{Request, RequestId, Response};
 use crate::kvcache::{CacheShape, PagedKvCache};
 use crate::model::argmax;
 
-/// Model-execution backend.  Implementations own per-session KV state in
-/// whatever representation suits them (host vectors for the Rust engine,
-/// re-uploaded literals for PJRT).
+/// Model-execution backend.  The coordinator owns the paged KV allocator
+/// and passes it into every call: backends that want real paged storage
+/// (`wants_paged_storage`, e.g. the pure-Rust engine) read and write latent
+/// rows through its page tables, while backends with external KV state
+/// (PJRT's re-uploaded literals) use it for accounting only and ignore the
+/// handle.
 pub trait Backend {
     /// Max cache length per session.
     fn s_max(&self) -> usize;
+    /// Whether the coordinator should allocate latent K/V storage behind
+    /// the paged allocator (`PagedKvCache::with_storage`).
+    fn wants_paged_storage(&self) -> bool {
+        false
+    }
     /// Create session state and run the prompt; returns last-token logits.
-    fn prefill(&mut self, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>>;
+    fn prefill(&mut self, kv: &mut PagedKvCache, session: RequestId, prompt: &[u8])
+        -> Result<Vec<f32>>;
     /// One decode step for a batch of (session, token, position).
     /// Returns logits per entry, in order.
-    fn decode_batch(&mut self, entries: &[(RequestId, u8, usize)]) -> Result<Vec<Vec<f32>>>;
-    /// Drop a finished session's state.
+    fn decode_batch(
+        &mut self,
+        kv: &mut PagedKvCache,
+        entries: &[(RequestId, u8, usize)],
+    ) -> Result<Vec<Vec<f32>>>;
+    /// Drop a finished session's state (its KV blocks are released by the
+    /// coordinator via the batcher).
     fn drop_session(&mut self, session: RequestId);
 }
 
@@ -67,10 +81,15 @@ pub struct Coordinator<B: Backend> {
 
 impl<B: Backend> Coordinator<B> {
     pub fn new(backend: B, shape: CacheShape, cfg: CoordinatorConfig) -> Coordinator<B> {
+        let kv = if backend.wants_paged_storage() {
+            PagedKvCache::with_storage(shape, cfg.kv_budget_bytes)
+        } else {
+            PagedKvCache::new(shape, cfg.kv_budget_bytes)
+        };
         Coordinator {
             backend,
             batcher: Batcher::new(cfg.batcher),
-            kv: PagedKvCache::new(shape, cfg.kv_budget_bytes),
+            kv,
             running: BTreeMap::new(),
             metrics: AggregateMetrics::default(),
             finished: Vec::new(),
@@ -101,7 +120,7 @@ impl<B: Backend> Coordinator<B> {
                 .arrival
                 .map(|a| a.elapsed().as_secs_f64() * 1e3)
                 .unwrap_or(0.0);
-            let logits = self.backend.prefill(req.id, &req.prompt)?;
+            let logits = self.backend.prefill(&mut self.kv, req.id, &req.prompt)?;
             let ttft_ms = queue_ms + t0.elapsed().as_secs_f64() * 1e3;
             let next = argmax(&logits) as u8;
             let pos = req.prompt.len();
@@ -137,7 +156,7 @@ impl<B: Backend> Coordinator<B> {
                 })
                 .collect();
             let t0 = Instant::now();
-            let logits = self.backend.decode_batch(&entries)?;
+            let logits = self.backend.decode_batch(&mut self.kv, &entries)?;
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
             self.metrics.decode_batches += 1;
             self.metrics.decode_batch_occupancy.add(entries.len() as f64);
@@ -233,12 +252,18 @@ mod tests {
         fn s_max(&self) -> usize {
             self.s_max
         }
-        fn prefill(&mut self, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
+        fn prefill(
+            &mut self,
+            _kv: &mut PagedKvCache,
+            session: RequestId,
+            prompt: &[u8],
+        ) -> Result<Vec<f32>> {
             self.sessions.insert(session, prompt.len());
             Ok(Self::logits_for(*prompt.last().unwrap_or(&0)))
         }
         fn decode_batch(
             &mut self,
+            _kv: &mut PagedKvCache,
             entries: &[(RequestId, u8, usize)],
         ) -> Result<Vec<Vec<f32>>> {
             self.decode_calls += 1;

@@ -1,4 +1,4 @@
-//! Latent-width-aware paged KV-cache manager.
+//! Latent-width-aware paged KV-cache: block allocator **and** backing store.
 //!
 //! The serving-side resource RAP compresses.  Sessions allocate cache space
 //! in fixed-size token *blocks*; each layer's block holds
@@ -7,12 +7,37 @@
 //! serves baseline and compressed models and its accounting directly
 //! exhibits the paper's KV-cache reduction.
 //!
+//! Two construction modes:
+//!
+//! * [`PagedKvCache::new`] — accounting-only.  The coordinator uses this
+//!   over backends that own their KV state elsewhere (PJRT keeps host
+//!   literals per session); only block bookkeeping and backpressure run
+//!   here.
+//! * [`PagedKvCache::with_storage`] — the allocator also owns the latent
+//!   K/V floats, one [`LayerStore`] per layer laid out block-major:
+//!   `[block][kv_head][token_in_block][width]`.  The pure-Rust engine reads
+//!   and writes rows *through the page table* ([`PagedSeqLayer`]), so a
+//!   session's cache is physically scattered across blocks exactly like a
+//!   vLLM-style paged cache, while each (block, head) run of
+//!   `BLOCK_TOKENS` rows stays contiguous for the blocked attention
+//!   kernels (`tensor::ops::dot_rows_scaled` / `axpy_rows`).
+//!
+//! Freshly allocated blocks are zeroed at `reserve` time, so block reuse
+//! after [`PagedKvCache::release`] can never leak one session's K/V rows
+//! into another session — covered by the `no_stale_rows_across_reuse` test.
+//!
+//! The engine-facing read/write abstraction is [`KvLayerView`]; the dense
+//! per-sequence `model::LayerCache` implements the same trait, which is how
+//! paged and dense decode stay bit-identical (one set of kernels, two
+//! layouts).
+//!
 //! `quant` adds int4 group quantization of latent rows (the Fig. 12
 //! orthogonality experiment: RAP + 4-bit KV).
 
 pub mod quant;
 
 use std::collections::BTreeMap;
+use std::marker::PhantomData;
 
 use anyhow::{bail, Result};
 
@@ -45,8 +70,20 @@ impl CacheShape {
             * (self.k_width.iter().sum::<usize>() + self.v_width.iter().sum::<usize>())
     }
 
+    /// f32 count per cached token for one layer (all KV heads).
+    pub fn layer_floats_per_token(&self, layer: usize) -> usize {
+        self.n_kv_heads * (self.k_width[layer] + self.v_width[layer])
+    }
+
     pub fn bytes_per_token(&self) -> usize {
         4 * self.floats_per_token()
+    }
+
+    /// Resident bytes for `tokens` cached tokens — the single source of
+    /// truth for both engine-side (`model::Cache::bytes_used`) and
+    /// allocator-side accounting, so the two can never diverge.
+    pub fn bytes_for_tokens(&self, tokens: usize) -> usize {
+        self.bytes_per_token() * tokens
     }
 
     pub fn bytes_per_block(&self) -> usize {
@@ -54,7 +91,209 @@ impl CacheShape {
     }
 }
 
-/// Paged block allocator with per-session page tables.
+/// One layer's latent K/V backing store, sized for the whole block budget.
+///
+/// Layout (both K and V): `[block][kv_head][token_in_block][width]` — a
+/// (block, head) pair owns one contiguous run of `BLOCK_TOKENS * width`
+/// floats, which is the unit the blocked attention kernels consume.
+///
+/// Base pointers are captured once at construction (the buffers are never
+/// resized) so the batched decode path can hand disjoint-session writers
+/// raw row slices without re-borrowing the whole store — same idiom as the
+/// matmul kernel's `OutPtr`.
+#[derive(Debug)]
+pub struct LayerStore {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    k_ptr: *mut f32,
+    v_ptr: *mut f32,
+    k_width: usize,
+    v_width: usize,
+}
+
+// SAFETY: the raw pointers alias only `self.k` / `self.v`, and every write
+// path goes through `PagedSeqLayer`, whose users hold disjoint blocks
+// (enforced by the allocator's free-list: a block id is owned by at most
+// one session).
+unsafe impl Send for LayerStore {}
+unsafe impl Sync for LayerStore {}
+
+impl LayerStore {
+    fn new(capacity_blocks: usize, n_kv_heads: usize, k_width: usize, v_width: usize) -> LayerStore {
+        let mut k = vec![0.0f32; capacity_blocks * n_kv_heads * BLOCK_TOKENS * k_width];
+        let mut v = vec![0.0f32; capacity_blocks * n_kv_heads * BLOCK_TOKENS * v_width];
+        let (k_ptr, v_ptr) = (k.as_mut_ptr(), v.as_mut_ptr());
+        LayerStore { k, v, k_ptr, v_ptr, k_width, v_width }
+    }
+
+    fn zero_block(&mut self, block: usize, n_kv_heads: usize) {
+        let kn = n_kv_heads * BLOCK_TOKENS * self.k_width;
+        let vn = n_kv_heads * BLOCK_TOKENS * self.v_width;
+        self.k[block * kn..(block + 1) * kn].fill(0.0);
+        self.v[block * vn..(block + 1) * vn].fill(0.0);
+    }
+}
+
+/// Read/write access to one sequence's latent K/V rows for one layer.
+///
+/// Implemented by the dense per-sequence `model::LayerCache` and by the
+/// paged [`PagedSeqLayer`]; the engine's projection/attention kernels are
+/// generic over this trait, so both layouts execute identical arithmetic.
+pub trait KvLayerView {
+    fn k_row(&self, head: usize, t: usize) -> &[f32];
+    fn v_row(&self, head: usize, t: usize) -> &[f32];
+    fn k_row_mut(&mut self, head: usize, t: usize) -> &mut [f32];
+    fn v_row_mut(&mut self, head: usize, t: usize) -> &mut [f32];
+    /// Visit the contiguous runs of K rows covering tokens `[0, s)` of
+    /// `head`, in ascending token order.  The callback receives the first
+    /// token index of the run and a slice of `run_len * k_width` floats.
+    fn for_k_runs<F: FnMut(usize, &[f32])>(&self, head: usize, s: usize, f: F);
+    /// Same for V rows.
+    fn for_v_runs<F: FnMut(usize, &[f32])>(&self, head: usize, s: usize, f: F);
+}
+
+/// One session × one layer window into the paged store: rows are addressed
+/// through the session's page table, runs are per-block contiguous.
+///
+/// Constructed via [`StorePtrs::seq_layer`].  Writers for different
+/// sessions may exist concurrently (batched decode parallelises across
+/// sessions); the allocator guarantees their block sets are disjoint.
+pub struct PagedSeqLayer<'a> {
+    k_base: *mut f32,
+    v_base: *mut f32,
+    blocks: &'a [usize],
+    n_kv_heads: usize,
+    k_width: usize,
+    v_width: usize,
+}
+
+// SAFETY: see `LayerStore` — disjoint blocks per session.
+unsafe impl Send for PagedSeqLayer<'_> {}
+
+impl PagedSeqLayer<'_> {
+    #[inline]
+    fn k_off(&self, head: usize, t: usize) -> usize {
+        let (block, slot) = (self.blocks[t / BLOCK_TOKENS], t % BLOCK_TOKENS);
+        ((block * self.n_kv_heads + head) * BLOCK_TOKENS + slot) * self.k_width
+    }
+
+    #[inline]
+    fn v_off(&self, head: usize, t: usize) -> usize {
+        let (block, slot) = (self.blocks[t / BLOCK_TOKENS], t % BLOCK_TOKENS);
+        ((block * self.n_kv_heads + head) * BLOCK_TOKENS + slot) * self.v_width
+    }
+}
+
+impl KvLayerView for PagedSeqLayer<'_> {
+    #[inline]
+    fn k_row(&self, head: usize, t: usize) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.k_base.add(self.k_off(head, t)), self.k_width) }
+    }
+
+    #[inline]
+    fn v_row(&self, head: usize, t: usize) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.v_base.add(self.v_off(head, t)), self.v_width) }
+    }
+
+    #[inline]
+    fn k_row_mut(&mut self, head: usize, t: usize) -> &mut [f32] {
+        unsafe {
+            std::slice::from_raw_parts_mut(self.k_base.add(self.k_off(head, t)), self.k_width)
+        }
+    }
+
+    #[inline]
+    fn v_row_mut(&mut self, head: usize, t: usize) -> &mut [f32] {
+        unsafe {
+            std::slice::from_raw_parts_mut(self.v_base.add(self.v_off(head, t)), self.v_width)
+        }
+    }
+
+    fn for_k_runs<F: FnMut(usize, &[f32])>(&self, head: usize, s: usize, mut f: F) {
+        let mut t0 = 0;
+        while t0 < s {
+            let run = (s - t0).min(BLOCK_TOKENS);
+            let rows = unsafe {
+                std::slice::from_raw_parts(
+                    self.k_base.add(self.k_off(head, t0)),
+                    run * self.k_width,
+                )
+            };
+            f(t0, rows);
+            t0 += run;
+        }
+    }
+
+    fn for_v_runs<F: FnMut(usize, &[f32])>(&self, head: usize, s: usize, mut f: F) {
+        let mut t0 = 0;
+        while t0 < s {
+            let run = (s - t0).min(BLOCK_TOKENS);
+            let rows = unsafe {
+                std::slice::from_raw_parts(
+                    self.v_base.add(self.v_off(head, t0)),
+                    run * self.v_width,
+                )
+            };
+            f(t0, rows);
+            t0 += run;
+        }
+    }
+}
+
+/// Shared read view of the per-session page tables (block id lists).
+#[derive(Clone, Copy)]
+pub struct PageTables<'a> {
+    tables: &'a BTreeMap<u64, SessionAlloc>,
+}
+
+impl<'a> PageTables<'a> {
+    pub fn blocks(&self, session: u64) -> Option<&'a [usize]> {
+        self.tables.get(&session).map(|t| t.blocks.as_slice())
+    }
+
+    pub fn tokens(&self, session: u64) -> usize {
+        self.tables.get(&session).map(|t| t.tokens).unwrap_or(0)
+    }
+}
+
+/// Raw per-layer handles into the backing store, witnessed by an exclusive
+/// borrow of the owning `PagedKvCache` (so no other reader/writer of the
+/// storage exists while these are live).
+pub struct StorePtrs<'a> {
+    layers: &'a [LayerStore],
+    n_kv_heads: usize,
+    _excl: PhantomData<&'a mut ()>,
+}
+
+// SAFETY: handed to scoped workers that write disjoint sessions' blocks.
+unsafe impl Send for StorePtrs<'_> {}
+unsafe impl Sync for StorePtrs<'_> {}
+
+impl<'a> StorePtrs<'a> {
+    /// View of `session`'s rows in layer `l` (its page table is `blocks`).
+    ///
+    /// # Safety
+    ///
+    /// The caller must not let two views over the *same* page table be
+    /// written (or written + read) at the same time — that would alias
+    /// mutable memory.  Views over *different* sessions are always fine to
+    /// use in parallel because the allocator hands each session disjoint
+    /// blocks.
+    pub unsafe fn seq_layer(&self, l: usize, blocks: &'a [usize]) -> PagedSeqLayer<'a> {
+        let ls = &self.layers[l];
+        PagedSeqLayer {
+            k_base: ls.k_ptr,
+            v_base: ls.v_ptr,
+            blocks,
+            n_kv_heads: self.n_kv_heads,
+            k_width: ls.k_width,
+            v_width: ls.v_width,
+        }
+    }
+}
+
+/// Paged block allocator with per-session page tables (and, in
+/// `with_storage` mode, the latent K/V backing store itself).
 ///
 /// Capacity is expressed in bytes (as an operator would configure it); the
 /// block budget adapts to the variant's width, so a RAP-compressed model
@@ -68,6 +307,7 @@ pub struct PagedKvCache {
     /// session -> block ids (one entry per BLOCK_TOKENS tokens).
     tables: BTreeMap<u64, SessionAlloc>,
     peak_used: usize,
+    store: Option<Vec<LayerStore>>,
 }
 
 #[derive(Debug, Clone)]
@@ -77,15 +317,39 @@ struct SessionAlloc {
 }
 
 impl PagedKvCache {
+    /// Accounting-only allocator (backends that own KV state elsewhere).
     pub fn new(shape: CacheShape, capacity_bytes: usize) -> PagedKvCache {
         let capacity_blocks = capacity_bytes / shape.bytes_per_block().max(1);
         PagedKvCache {
-            shape,
-            capacity_blocks,
             free: (0..capacity_blocks).rev().collect(),
             tables: BTreeMap::new(),
             peak_used: 0,
+            store: None,
+            capacity_blocks,
+            shape,
         }
+    }
+
+    /// Allocator that also owns the latent K/V storage the pure-Rust engine
+    /// decodes from.
+    pub fn with_storage(shape: CacheShape, capacity_bytes: usize) -> PagedKvCache {
+        let mut kv = PagedKvCache::new(shape, capacity_bytes);
+        let store = (0..kv.shape.n_layers)
+            .map(|l| {
+                LayerStore::new(
+                    kv.capacity_blocks,
+                    kv.shape.n_kv_heads,
+                    kv.shape.k_width[l],
+                    kv.shape.v_width[l],
+                )
+            })
+            .collect();
+        kv.store = Some(store);
+        kv
+    }
+
+    pub fn has_storage(&self) -> bool {
+        self.store.is_some()
     }
 
     pub fn capacity_blocks(&self) -> usize {
@@ -118,7 +382,8 @@ impl PagedKvCache {
     }
 
     /// Reserve capacity for `tokens` more tokens of `session`, allocating
-    /// blocks as needed.  Fails (backpressure signal) when out of blocks.
+    /// (and, with storage, zeroing) blocks as needed.  Fails (backpressure
+    /// signal) when out of blocks.
     pub fn reserve(&mut self, session: u64, tokens: usize) -> Result<()> {
         let entry = self
             .tables
@@ -135,11 +400,31 @@ impl PagedKvCache {
             );
         }
         for _ in 0..deficit {
-            entry.blocks.push(self.free.pop().unwrap());
+            let block = self.free.pop().unwrap();
+            // Zero recycled blocks so a new session can never observe a
+            // previous session's rows (and unwritten positions read as 0).
+            if let Some(store) = &mut self.store {
+                for ls in store.iter_mut() {
+                    ls.zero_block(block, self.shape.n_kv_heads);
+                }
+            }
+            entry.blocks.push(block);
         }
         entry.tokens = needed_tokens;
         self.peak_used = self.peak_used.max(self.capacity_blocks - self.free.len());
         Ok(())
+    }
+
+    /// Grow `session`'s reservation so it covers at least `upto` tokens.
+    /// No-op when already covered (the coordinator reserves a request's full
+    /// budget at admission, making per-step calls free on that path).
+    pub fn ensure_tokens(&mut self, session: u64, upto: usize) -> Result<()> {
+        let have = self.session_tokens(session);
+        if upto > have {
+            self.reserve(session, upto - have)
+        } else {
+            Ok(())
+        }
     }
 
     /// Release a finished session's blocks.
@@ -152,6 +437,26 @@ impl PagedKvCache {
     /// The block ids backing a session (page table), for diagnostics.
     pub fn page_table(&self, session: u64) -> Option<&[usize]> {
         self.tables.get(&session).map(|t| t.blocks.as_slice())
+    }
+
+    /// Split into the page-table read view and the raw storage handles the
+    /// engine decodes through.  Errors on an accounting-only cache.
+    ///
+    /// Taking `&mut self` makes the returned handles the only live access
+    /// path to the storage; per-session write disjointness is then
+    /// guaranteed by block ownership (see [`StorePtrs::seq_layer`]).
+    pub fn tables_and_ptrs(&mut self) -> Result<(PageTables<'_>, StorePtrs<'_>)> {
+        let Some(store) = &self.store else {
+            bail!("PagedKvCache was built accounting-only (use with_storage for engine decode)")
+        };
+        Ok((
+            PageTables { tables: &self.tables },
+            StorePtrs {
+                layers: store.as_slice(),
+                n_kv_heads: self.shape.n_kv_heads,
+                _excl: PhantomData,
+            },
+        ))
     }
 }
 
@@ -175,6 +480,8 @@ mod tests {
         assert_eq!(s.floats_per_token(), 384);
         assert_eq!(s.bytes_per_token(), 1536);
         assert_eq!(s.bytes_per_block(), 1536 * BLOCK_TOKENS);
+        assert_eq!(s.bytes_for_tokens(10), 15360);
+        assert_eq!(s.layer_floats_per_token(0), 96);
     }
 
     #[test]
@@ -203,6 +510,18 @@ mod tests {
         c.release(1);
         assert_eq!(c.used_blocks(), 0);
         assert_eq!(c.session_tokens(1), 0);
+    }
+
+    #[test]
+    fn ensure_tokens_grows_only_the_deficit() {
+        let mut c = PagedKvCache::new(shape(8, 8), 1 << 16);
+        c.ensure_tokens(1, 20).unwrap();
+        assert_eq!(c.session_tokens(1), 20);
+        c.ensure_tokens(1, 12).unwrap(); // already covered
+        assert_eq!(c.session_tokens(1), 20);
+        c.ensure_tokens(1, 40).unwrap();
+        assert_eq!(c.session_tokens(1), 40);
+        assert_eq!(c.used_blocks(), 3);
     }
 
     #[test]
@@ -235,5 +554,127 @@ mod tests {
         let t1: Vec<usize> = c.page_table(1).unwrap().to_vec();
         let t2: Vec<usize> = c.page_table(2).unwrap().to_vec();
         assert!(t1.iter().all(|b| !t2.contains(b)));
+    }
+
+    #[test]
+    fn accounting_only_cache_refuses_storage_access() {
+        let mut c = PagedKvCache::new(shape(8, 8), 1 << 16);
+        assert!(!c.has_storage());
+        assert!(c.tables_and_ptrs().is_err());
+    }
+
+    #[test]
+    fn storage_rows_round_trip_across_block_boundaries() {
+        let sh = shape(6, 4);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 8);
+        c.reserve(7, BLOCK_TOKENS * 2 + 3).unwrap();
+        // Write distinct rows at the block seam: BLOCK_TOKENS-1, BLOCK_TOKENS,
+        // BLOCK_TOKENS+1 (plus 0 and the last covered token).
+        let probes = [0usize, BLOCK_TOKENS - 1, BLOCK_TOKENS, BLOCK_TOKENS + 1, 2 * BLOCK_TOKENS + 2];
+        {
+            let (pages, store) = c.tables_and_ptrs().unwrap();
+            let blocks = pages.blocks(7).unwrap();
+            for l in 0..sh.n_layers {
+                // SAFETY: one live view per session at a time.
+                let mut view = unsafe { store.seq_layer(l, blocks) };
+                for &t in &probes {
+                    for hd in 0..sh.n_kv_heads {
+                        let tag = (l * 1000 + hd * 100 + t) as f32;
+                        for (j, x) in view.k_row_mut(hd, t).iter_mut().enumerate() {
+                            *x = tag + j as f32;
+                        }
+                        for (j, x) in view.v_row_mut(hd, t).iter_mut().enumerate() {
+                            *x = -(tag + j as f32);
+                        }
+                    }
+                }
+            }
+        }
+        let (pages, store) = c.tables_and_ptrs().unwrap();
+        let blocks = pages.blocks(7).unwrap();
+        for l in 0..sh.n_layers {
+            let view = unsafe { store.seq_layer(l, blocks) };
+            for &t in &probes {
+                for hd in 0..sh.n_kv_heads {
+                    let tag = (l * 1000 + hd * 100 + t) as f32;
+                    let k: Vec<f32> = (0..sh.k_width[l]).map(|j| tag + j as f32).collect();
+                    let v: Vec<f32> = (0..sh.v_width[l]).map(|j| -(tag + j as f32)).collect();
+                    assert_eq!(view.k_row(hd, t), &k[..], "K l{l} h{hd} t{t}");
+                    assert_eq!(view.v_row(hd, t), &v[..], "V l{l} h{hd} t{t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn runs_cover_rows_in_order_and_match_row_reads() {
+        let sh = shape(6, 4);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 8);
+        let s = BLOCK_TOKENS * 2 + 5;
+        c.reserve(3, s).unwrap();
+        {
+            let (pages, store) = c.tables_and_ptrs().unwrap();
+            let mut view = unsafe { store.seq_layer(1, pages.blocks(3).unwrap()) };
+            for t in 0..s {
+                view.k_row_mut(0, t)[0] = t as f32;
+                view.v_row_mut(0, t)[0] = 2.0 * t as f32;
+            }
+        }
+        let (pages, store) = c.tables_and_ptrs().unwrap();
+        let view = unsafe { store.seq_layer(1, pages.blocks(3).unwrap()) };
+        let mut next = 0usize;
+        view.for_k_runs(0, s, |t0, rows| {
+            assert_eq!(t0, next);
+            let n = rows.len() / sh.k_width[1];
+            assert!(n <= BLOCK_TOKENS);
+            for (i, chunk) in rows.chunks_exact(sh.k_width[1]).enumerate() {
+                assert_eq!(chunk[0], (t0 + i) as f32);
+            }
+            next += n;
+        });
+        assert_eq!(next, s);
+        let mut seen = 0usize;
+        view.for_v_runs(0, s, |t0, rows| {
+            for (i, chunk) in rows.chunks_exact(sh.v_width[1]).enumerate() {
+                assert_eq!(chunk[0], 2.0 * (t0 + i) as f32);
+            }
+            seen = t0 + rows.len() / sh.v_width[1];
+        });
+        assert_eq!(seen, s);
+    }
+
+    #[test]
+    fn no_stale_rows_across_reuse() {
+        let sh = shape(5, 5);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 2);
+        c.reserve(1, BLOCK_TOKENS * 2).unwrap();
+        {
+            let (pages, store) = c.tables_and_ptrs().unwrap();
+            let blocks = pages.blocks(1).unwrap();
+            for l in 0..sh.n_layers {
+                // SAFETY: one live view per session at a time.
+                let mut view = unsafe { store.seq_layer(l, blocks) };
+                for t in 0..BLOCK_TOKENS * 2 {
+                    for hd in 0..sh.n_kv_heads {
+                        view.k_row_mut(hd, t).fill(9.25);
+                        view.v_row_mut(hd, t).fill(-9.25);
+                    }
+                }
+            }
+        }
+        c.release(1);
+        // Session 2 must get the same physical blocks back, fully zeroed.
+        c.reserve(2, BLOCK_TOKENS * 2).unwrap();
+        let (pages, store) = c.tables_and_ptrs().unwrap();
+        let blocks = pages.blocks(2).unwrap();
+        for l in 0..sh.n_layers {
+            let view = unsafe { store.seq_layer(l, blocks) };
+            for t in 0..BLOCK_TOKENS * 2 {
+                for hd in 0..sh.n_kv_heads {
+                    assert!(view.k_row(hd, t).iter().all(|&x| x == 0.0), "stale K l{l} t{t}");
+                    assert!(view.v_row(hd, t).iter().all(|&x| x == 0.0), "stale V l{l} t{t}");
+                }
+            }
+        }
     }
 }

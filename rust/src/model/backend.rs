@@ -1,20 +1,27 @@
 //! Pure-Rust engine as a serving backend (dense latency sweeps and tests:
-//! no PJRT dependency, deterministic, FLOP-instrumented).  Decode batches
-//! execute sequentially — batching still amortises scheduler work, and the
-//! identical coordinator logic is exercised.
+//! no PJRT dependency, deterministic, FLOP-instrumented).
+//!
+//! Session KV state lives in the coordinator's storage-backed
+//! `PagedKvCache` (`wants_paged_storage`), not in per-session host vectors:
+//! prefill writes latent rows through the page table, and `decode_batch`
+//! runs the engine's layer-major batched step over all entries at once —
+//! allocation-free in steady state apart from the logits vectors the
+//! `Backend` trait returns.
 
-use std::collections::BTreeMap;
+use std::collections::BTreeSet;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::scheduler::Backend;
 use crate::coordinator::RequestId;
-use crate::model::{Cache, Engine};
+use crate::kvcache::{KvLayerView, PagedKvCache};
+use crate::model::{BatchWorkspace, Engine};
 
 pub struct RustBackend<'a> {
     pub engine: &'a Engine,
     s_max: usize,
-    sessions: BTreeMap<RequestId, Cache>,
+    batch: BatchWorkspace,
+    sessions: BTreeSet<RequestId>,
     /// Optional int4 round-trip of newly written latent rows (Fig. 12).
     pub quantize_kv: bool,
 }
@@ -22,9 +29,10 @@ pub struct RustBackend<'a> {
 impl<'a> RustBackend<'a> {
     pub fn new(engine: &'a Engine, s_max: usize) -> RustBackend<'a> {
         RustBackend {
+            batch: BatchWorkspace::new(engine, s_max),
             engine,
             s_max,
-            sessions: BTreeMap::new(),
+            sessions: BTreeSet::new(),
             quantize_kv: false,
         }
     }
@@ -33,14 +41,21 @@ impl<'a> RustBackend<'a> {
         self.sessions.len()
     }
 
-    fn quantize_step(&self, cache: &mut Cache, pos: usize) {
+    /// int4 round-trip the rows just written at each entry's position.
+    fn quantize_step(&self, kv: &mut PagedKvCache, entries: &[(RequestId, u8, usize)]) {
         if !self.quantize_kv {
             return;
         }
-        for lc in &mut cache.layers {
-            for h in 0..lc.n_kv_heads {
-                crate::kvcache::quant::roundtrip(lc.k_row_mut(h, pos));
-                crate::kvcache::quant::roundtrip(lc.v_row_mut(h, pos));
+        let (pages, store) = kv.tables_and_ptrs().expect("storage-backed kv");
+        for &(sid, _, pos) in entries {
+            let blocks = pages.blocks(sid).expect("session reserved");
+            for l in 0..self.engine.cfg.n_layers {
+                // SAFETY: one view at a time, single-threaded loop.
+                let mut view = unsafe { store.seq_layer(l, blocks) };
+                for h in 0..self.engine.cfg.n_kv_heads {
+                    crate::kvcache::quant::roundtrip(view.k_row_mut(h, pos));
+                    crate::kvcache::quant::roundtrip(view.v_row_mut(h, pos));
+                }
             }
         }
     }
@@ -51,30 +66,44 @@ impl<'a> Backend for RustBackend<'a> {
         self.s_max
     }
 
-    fn prefill(&mut self, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
-        let mut cache = self.engine.new_cache(self.s_max);
-        let mut logits = Vec::new();
-        for (i, &t) in prompt.iter().enumerate() {
-            logits = self.engine.step(t, i, &mut cache);
-            self.quantize_step(&mut cache, i);
-        }
-        self.sessions.insert(session, cache);
-        Ok(logits)
+    fn wants_paged_storage(&self) -> bool {
+        true
     }
 
-    fn decode_batch(&mut self, entries: &[(RequestId, u8, usize)]) -> Result<Vec<Vec<f32>>> {
-        let mut out = Vec::with_capacity(entries.len());
-        for &(id, token, pos) in entries {
-            let mut cache = self
-                .sessions
-                .remove(&id)
-                .with_context(|| format!("unknown session {id}"))?;
-            let logits = self.engine.step(token, pos, &mut cache);
-            self.quantize_step(&mut cache, pos);
-            self.sessions.insert(id, cache);
-            out.push(logits);
+    fn prefill(&mut self, kv: &mut PagedKvCache, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            anyhow::bail!("empty prompt");
         }
-        Ok(out)
+        // Under the coordinator the full budget is already reserved; this
+        // only allocates blocks for standalone use.
+        kv.ensure_tokens(session, prompt.len())?;
+        self.sessions.insert(session);
+        for (i, &t) in prompt.iter().enumerate() {
+            let last = i + 1 == prompt.len();
+            self.engine
+                .decode_batch_paged(&[(session, t, i)], kv, &mut self.batch, last)?;
+            self.quantize_step(kv, &[(session, t, i)]);
+        }
+        Ok(self.batch.logits_row(0).to_vec())
+    }
+
+    fn decode_batch(
+        &mut self,
+        kv: &mut PagedKvCache,
+        entries: &[(RequestId, u8, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        for &(sid, _, pos) in entries {
+            if !self.sessions.contains(&sid) {
+                anyhow::bail!("unknown session {sid}");
+            }
+            kv.ensure_tokens(sid, pos + 1)?;
+        }
+        self.engine
+            .decode_batch_paged(entries, kv, &mut self.batch, true)?;
+        self.quantize_step(kv, entries);
+        Ok((0..entries.len())
+            .map(|i| self.batch.logits_row(i).to_vec())
+            .collect())
     }
 
     fn drop_session(&mut self, session: RequestId) {

@@ -14,17 +14,43 @@
 //!              the absorbed W_o.
 //! * rap      — index-aware-RoPE'd latent K and latent V consumed directly:
 //!              attention runs entirely at latent widths.
+//!
+//! ## Decode paths
+//!
+//! All hot-path arithmetic lives in kernels generic over
+//! [`KvLayerView`], so the same code serves two cache layouts:
+//!
+//! * the dense per-sequence [`LayerCache`] (evaluation, latency sweeps),
+//!   driven by [`Engine::step`];
+//! * the storage-backed `kvcache::PagedKvCache`, driven by
+//!   [`Engine::decode_batch_paged`] — the serving path.  It steps a whole
+//!   batch of sessions through one layer at a time (weights stay hot in
+//!   cache), parallelises across sessions via `scoped_chunks_indexed`, and
+//!   performs **zero heap allocations** in steady state: all scratch lives
+//!   in a reusable [`DecodeWorkspace`] / [`BatchWorkspace`], and scores are
+//!   computed with the blocked `dot_rows_scaled` / `axpy_rows` kernels
+//!   whose accumulation order makes paged and dense decode bit-identical.
+//!
+//! [`Engine::step_alloc_reference`] preserves the original allocating
+//! per-row decode verbatim; it is the oracle the workspace path is tested
+//! against bitwise, and the baseline `benches/decode_latency.rs` reports
+//! speedups over in `BENCH_decode.json`.
 
-use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
 use crate::config::{Method, ModelConfig, VariantSpec};
+use crate::kvcache::{CacheShape, KvLayerView, PagedKvCache};
 use crate::model::weights::Weights;
 use crate::rap::plan::LayerPlan;
 use crate::rope::apply_full;
-use crate::tensor::ops::{add_inplace, dot, rms_norm, silu, softmax_inplace, vecmat};
+use crate::tensor::ops::{
+    add_inplace, axpy_rows, dot, dot_rows_scaled, kernel_threads, rms_norm, silu,
+    softmax_inplace, vecmat, vecmat_into,
+};
 use crate::tensor::Tensor;
+use crate::util::threadpool::scoped_chunks_indexed;
 
 /// Per-layer KV cache in *latent* widths.  Row-major [Hkv, Smax, width].
 #[derive(Debug, Clone)]
@@ -72,26 +98,65 @@ impl LayerCache {
         let o = (head * self.s_max + s) * self.v_width;
         &mut self.v[o..o + self.v_width]
     }
+}
 
-    pub fn bytes(&self) -> usize {
-        4 * (self.k.len() + self.v.len())
+/// The dense layout is one maximal contiguous run per head, which lets the
+/// blocked kernels sweep the whole visible context in a single call.
+impl KvLayerView for LayerCache {
+    #[inline]
+    fn k_row(&self, head: usize, t: usize) -> &[f32] {
+        LayerCache::k_row(self, head, t)
+    }
+
+    #[inline]
+    fn v_row(&self, head: usize, t: usize) -> &[f32] {
+        LayerCache::v_row(self, head, t)
+    }
+
+    #[inline]
+    fn k_row_mut(&mut self, head: usize, t: usize) -> &mut [f32] {
+        LayerCache::k_row_mut(self, head, t)
+    }
+
+    #[inline]
+    fn v_row_mut(&mut self, head: usize, t: usize) -> &mut [f32] {
+        LayerCache::v_row_mut(self, head, t)
+    }
+
+    fn for_k_runs<F: FnMut(usize, &[f32])>(&self, head: usize, s: usize, mut f: F) {
+        if s > 0 {
+            let o = head * self.s_max * self.k_width;
+            f(0, &self.k[o..o + s * self.k_width]);
+        }
+    }
+
+    fn for_v_runs<F: FnMut(usize, &[f32])>(&self, head: usize, s: usize, mut f: F) {
+        if s > 0 {
+            let o = head * self.s_max * self.v_width;
+            f(0, &self.v[o..o + s * self.v_width]);
+        }
     }
 }
 
-/// Whole-model cache for one sequence.
+/// Whole-model cache for one sequence, plus the per-sequence decode
+/// workspace that makes repeated `step` calls allocation-free.
 #[derive(Debug, Clone)]
 pub struct Cache {
     pub layers: Vec<LayerCache>,
     pub len: usize,
+    /// Variant cache geometry — the single source of byte accounting,
+    /// shared with the allocator (`kvcache::CacheShape`).
+    pub shape: CacheShape,
+    x: Vec<f32>,
+    ws: DecodeWorkspace,
 }
 
 impl Cache {
+    /// Bytes resident for the *current* length, derived from the same
+    /// `CacheShape` the paged allocator bills against — engine-side and
+    /// allocator-side accounting cannot diverge.
     pub fn bytes_used(&self) -> usize {
-        // Bytes that would be resident for the *current* length.
-        self.layers
-            .iter()
-            .map(|l| 4 * self.len * l.n_kv_heads * (l.k_width + l.v_width))
-            .sum()
+        self.shape.bytes_for_tokens(self.len)
     }
 }
 
@@ -138,25 +203,144 @@ enum AttnKind {
 }
 
 /// FLOP counter (mul+add = 2, matching the paper's Table 6 convention).
+/// Atomic so batched decode workers can share the engine across threads.
 #[derive(Debug, Default)]
-pub struct Flops(Cell<u64>);
+pub struct Flops(AtomicU64);
 
 impl Flops {
     #[inline]
     fn add(&self, n: u64) {
-        self.0.set(self.0.get() + n);
+        self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn take(&self) -> u64 {
-        let v = self.0.get();
-        self.0.set(0);
-        v
+        self.0.swap(0, Ordering::Relaxed)
     }
 
     pub fn get(&self) -> u64 {
-        self.0.get()
+        self.0.load(Ordering::Relaxed)
     }
 }
+
+/// Reusable per-token scratch: every buffer the decode step needs, sized
+/// once for the engine's widest layer and an `s_max` context.  Reusing it
+/// is what makes steady-state decode allocation-free.
+#[derive(Debug, Clone)]
+pub struct DecodeWorkspace {
+    /// Normed hidden state (also the logits head's norm scratch).
+    h: Vec<f32>,
+    /// Raw Q projection output.
+    q: Vec<f32>,
+    /// Raw latent-K projection output.
+    kl: Vec<f32>,
+    /// Raw latent-V projection output.
+    vl: Vec<f32>,
+    /// Rotated per-head Q rows, packed [H, q_width].
+    q_rows: Vec<f32>,
+    /// Attention scores over the visible context.
+    scores: Vec<f32>,
+    /// SVD/PaLU reconstructed K, packed [Hkv, s, dh] (empty otherwise).
+    recon_k: Vec<f32>,
+    /// SVD reconstructed V (empty otherwise).
+    recon_v: Vec<f32>,
+    /// Per-head context vectors, packed [H, ctx_width] — contiguity makes
+    /// this directly consumable by the output projection (no merge copy).
+    ctx: Vec<f32>,
+    /// d_model-sized projection output (attention out / MLP down).
+    o: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl DecodeWorkspace {
+    pub fn new(engine: &Engine, s_max: usize) -> DecodeWorkspace {
+        let cfg = &engine.cfg;
+        let (h_n, hkv, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim);
+        let max_qw = (0..cfg.n_layers).map(|l| engine.q_width(l)).max().unwrap_or(dh);
+        let max_kw = engine.spec.k_rank.iter().copied().max().unwrap_or(dh);
+        let max_vw = engine.spec.v_rank.iter().copied().max().unwrap_or(dh);
+        let max_cw = (0..cfg.n_layers).map(|l| engine.ctx_width(l)).max().unwrap_or(dh);
+        let recon_k_n = if engine.spec.method.reconstructs_k() { hkv * s_max * dh } else { 0 };
+        let recon_v_n = if engine.spec.method.reconstructs_v() { hkv * s_max * dh } else { 0 };
+        DecodeWorkspace {
+            h: vec![0.0; cfg.d_model],
+            q: vec![0.0; h_n * max_qw],
+            kl: vec![0.0; hkv * max_kw],
+            vl: vec![0.0; hkv * max_vw],
+            q_rows: vec![0.0; h_n * max_qw],
+            scores: vec![0.0; s_max],
+            recon_k: vec![0.0; recon_k_n],
+            recon_v: vec![0.0; recon_v_n],
+            ctx: vec![0.0; h_n * max_cw],
+            o: vec![0.0; cfg.d_model],
+            gate: vec![0.0; cfg.mlp_hidden],
+            up: vec![0.0; cfg.mlp_hidden],
+            logits: vec![0.0; cfg.vocab],
+        }
+    }
+
+    /// Longest context this workspace can attend over.
+    pub fn s_max(&self) -> usize {
+        self.scores.len()
+    }
+}
+
+/// Batched-decode scratch: per-session hidden states and logits plus one
+/// [`DecodeWorkspace`] per worker thread.  Buffers only ever grow, so once
+/// every decode bucket size has been seen the steady state allocates
+/// nothing.
+pub struct BatchWorkspace {
+    s_max: usize,
+    d_model: usize,
+    vocab: usize,
+    /// Hidden states, packed [B, d_model].
+    x: Vec<f32>,
+    /// Logits, packed [B, vocab].
+    logits: Vec<f32>,
+    workers: Vec<DecodeWorkspace>,
+    batch_capacity: usize,
+}
+
+impl BatchWorkspace {
+    pub fn new(engine: &Engine, s_max: usize) -> BatchWorkspace {
+        BatchWorkspace {
+            s_max,
+            d_model: engine.cfg.d_model,
+            vocab: engine.cfg.vocab,
+            x: Vec::new(),
+            logits: Vec::new(),
+            workers: Vec::new(),
+            batch_capacity: 0,
+        }
+    }
+
+    pub fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    /// Logits of batch entry `i` from the last `decode_batch_paged` call.
+    pub fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    fn ensure(&mut self, engine: &Engine, b: usize) {
+        let workers = kernel_threads().min(b.max(1));
+        while self.workers.len() < workers {
+            self.workers.push(DecodeWorkspace::new(engine, self.s_max));
+        }
+        if b > self.batch_capacity {
+            self.x.resize(b * self.d_model, 0.0);
+            self.logits.resize(b * self.vocab, 0.0);
+            self.batch_capacity = b;
+        }
+    }
+}
+
+/// `*mut T` that scoped workers may share; every use dereferences a
+/// worker-exclusive region (same idiom as the matmul kernel's `OutPtr`).
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
 
 pub struct Engine {
     pub cfg: ModelConfig,
@@ -240,22 +424,510 @@ impl Engine {
         })
     }
 
-    pub fn new_cache(&self, s_max: usize) -> Cache {
-        Cache {
-            layers: (0..self.cfg.n_layers)
-                .map(|l| {
-                    LayerCache::new(
-                        self.cfg.n_kv_heads,
-                        s_max,
-                        self.spec.k_rank[l],
-                        self.spec.v_rank[l],
-                    )
-                })
-                .collect(),
-            len: 0,
+    /// Width of one rotated Q row at layer `l` (latent for RAP, full head
+    /// dimension otherwise).
+    pub fn q_width(&self, l: usize) -> usize {
+        match self.spec.method {
+            Method::Rap => self.spec.k_rank[l],
+            _ => self.cfg.head_dim,
         }
     }
 
+    /// Width of one per-head context vector at layer `l` (latent when V is
+    /// consumed through the absorbed W_o).
+    pub fn ctx_width(&self, l: usize) -> usize {
+        match self.spec.method {
+            Method::Baseline | Method::Svd => self.cfg.head_dim,
+            Method::Palu | Method::Rap => self.spec.v_rank[l],
+        }
+    }
+
+    pub fn new_cache(&self, s_max: usize) -> Cache {
+        let shape = CacheShape::of(&self.cfg, &self.spec);
+        Cache {
+            layers: (0..self.cfg.n_layers)
+                .map(|l| {
+                    LayerCache::new(shape.n_kv_heads, s_max, shape.k_width[l], shape.v_width[l])
+                })
+                .collect(),
+            len: 0,
+            x: vec![0.0; self.cfg.d_model],
+            ws: DecodeWorkspace::new(self, s_max),
+            shape,
+        }
+    }
+
+    #[inline]
+    fn vecmat_counted_into(&self, x: &[f32], w: &Tensor, out: &mut [f32]) {
+        let (k, n) = w.dims2();
+        self.flops.add(2 * (k * n) as u64);
+        vecmat_into(x, w, out);
+    }
+
+    fn embed_into(&self, token: u8, x: &mut [f32]) {
+        let d = self.cfg.d_model;
+        x.copy_from_slice(&self.tok_emb.data[token as usize * d..(token as usize + 1) * d]);
+    }
+
+    fn logits_into(&self, x: &[f32], h: &mut [f32], logits: &mut [f32]) {
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab;
+        rms_norm(x, &self.final_norm.data, self.cfg.norm_eps, h);
+        // tied embedding head: logits = h @ tok_emb^T
+        self.flops.add(2 * (d * v) as u64);
+        for t in 0..v {
+            logits[t] = dot(h, &self.tok_emb.data[t * d..(t + 1) * d]);
+        }
+    }
+
+    /// Project ONE token's normed hidden state into the cacheable K/V rows
+    /// at `pos` (written through `kv`) and the rotated Q rows (`q_rows`,
+    /// packed [H, q_width(l)]).
+    fn project_into<L: KvLayerView>(
+        &self,
+        l: usize,
+        layer: &Layer,
+        h: &[f32],
+        pos: usize,
+        kv: &mut L,
+        q: &mut [f32],
+        kl: &mut [f32],
+        vl: &mut [f32],
+        q_rows: &mut [f32],
+    ) {
+        let cfg = &self.cfg;
+        let dh = cfg.head_dim;
+        match &layer.attn {
+            AttnKind::Baseline { wq, wk, wv, .. } => {
+                let q = &mut q[..cfg.n_heads * dh];
+                let kl = &mut kl[..cfg.n_kv_heads * dh];
+                let vl = &mut vl[..cfg.n_kv_heads * dh];
+                self.vecmat_counted_into(h, wq, q);
+                self.vecmat_counted_into(h, wk, kl);
+                self.vecmat_counted_into(h, wv, vl);
+                for hd in 0..cfg.n_kv_heads {
+                    let krow = kv.k_row_mut(hd, pos);
+                    krow.copy_from_slice(&kl[hd * dh..(hd + 1) * dh]);
+                    apply_full(krow, pos, cfg.pairing, cfg.rope_theta);
+                    kv.v_row_mut(hd, pos)
+                        .copy_from_slice(&vl[hd * dh..(hd + 1) * dh]);
+                }
+                q_rows.copy_from_slice(q);
+                for hq in 0..cfg.n_heads {
+                    apply_full(
+                        &mut q_rows[hq * dh..(hq + 1) * dh],
+                        pos,
+                        cfg.pairing,
+                        cfg.rope_theta,
+                    );
+                }
+            }
+            AttnKind::Svd { wq, a_k, a_v, .. } | AttnKind::Palu { wq, a_k, a_v, .. } => {
+                // Pre-RoPE latents cached; Q full-rope'd.
+                let (kw, vw) = (self.spec.k_rank[l], self.spec.v_rank[l]);
+                let q = &mut q[..cfg.n_heads * dh];
+                let kl = &mut kl[..cfg.n_kv_heads * kw];
+                let vl = &mut vl[..cfg.n_kv_heads * vw];
+                self.vecmat_counted_into(h, wq, q);
+                self.vecmat_counted_into(h, a_k, kl);
+                self.vecmat_counted_into(h, a_v, vl);
+                for hd in 0..cfg.n_kv_heads {
+                    kv.k_row_mut(hd, pos)
+                        .copy_from_slice(&kl[hd * kw..(hd + 1) * kw]);
+                    kv.v_row_mut(hd, pos)
+                        .copy_from_slice(&vl[hd * vw..(hd + 1) * vw]);
+                }
+                q_rows.copy_from_slice(q);
+                for hq in 0..cfg.n_heads {
+                    apply_full(
+                        &mut q_rows[hq * dh..(hq + 1) * dh],
+                        pos,
+                        cfg.pairing,
+                        cfg.rope_theta,
+                    );
+                }
+            }
+            AttnKind::Rap {
+                wq_t, a_k, a_v, plan, ..
+            } => {
+                let (kw, vw) = (self.spec.k_rank[l], self.spec.v_rank[l]);
+                let q = &mut q[..cfg.n_heads * kw];
+                let kl = &mut kl[..cfg.n_kv_heads * kw];
+                let vl = &mut vl[..cfg.n_kv_heads * vw];
+                self.vecmat_counted_into(h, wq_t, q);
+                self.vecmat_counted_into(h, a_k, kl);
+                self.vecmat_counted_into(h, a_v, vl);
+                for hd in 0..cfg.n_kv_heads {
+                    let krow = kv.k_row_mut(hd, pos);
+                    krow.copy_from_slice(&kl[hd * kw..(hd + 1) * kw]);
+                    // Index-aware RoPE directly on the latent — the fused
+                    // hot path (no reconstruction, no gather).
+                    plan.k_table.apply_fused(hd, krow, pos);
+                    kv.v_row_mut(hd, pos)
+                        .copy_from_slice(&vl[hd * vw..(hd + 1) * vw]);
+                }
+                q_rows.copy_from_slice(q);
+                for hq in 0..cfg.n_heads {
+                    plan.q_table
+                        .apply_fused(hq, &mut q_rows[hq * kw..(hq + 1) * kw], pos);
+                }
+            }
+        }
+    }
+
+    /// Attention for ONE query token at `pos` over cache rows `[0, pos]`,
+    /// writing the per-head context vectors into `ctx` (packed
+    /// [H, ctx_width(l)]).  Scores sweep the cache run-by-run through the
+    /// blocked kernels — identical arithmetic for dense and paged layouts.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_into<L: KvLayerView>(
+        &self,
+        l: usize,
+        layer: &Layer,
+        pos: usize,
+        kv: &L,
+        q_rows: &[f32],
+        scores: &mut [f32],
+        recon_k: &mut [f32],
+        recon_v: &mut [f32],
+        ctx: &mut [f32],
+    ) {
+        let cfg = &self.cfg;
+        let dh = cfg.head_dim;
+        let group = cfg.group_size();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let s = pos + 1;
+        let qw = q_rows.len() / cfg.n_heads;
+        let cw = ctx.len() / cfg.n_heads;
+        let (kw, vw) = (self.spec.k_rank[l], self.spec.v_rank[l]);
+
+        // Reconstruction step for factorization methods (paper Fig. 1):
+        // K (and V for SVD) are expanded to full dimension for the whole
+        // visible context, every call.
+        let (use_rk, use_rv) = match &layer.attn {
+            AttnKind::Svd { b_k, b_v, .. } => {
+                self.reconstruct_into(kv, b_k, true, s, recon_k);
+                self.reconstruct_into(kv, b_v, false, s, recon_v);
+                (true, true)
+            }
+            AttnKind::Palu { b_k, .. } => {
+                self.reconstruct_into(kv, b_k, true, s, recon_k);
+                (true, false)
+            }
+            _ => (false, false),
+        };
+
+        for hq in 0..cfg.n_heads {
+            let hk = hq / group;
+            let q = &q_rows[hq * qw..(hq + 1) * qw];
+            if use_rk {
+                dot_rows_scaled(q, &recon_k[hk * s * dh..(hk + 1) * s * dh], dh, scale, &mut scores[..s]);
+                self.flops.add(2 * (s * dh) as u64);
+            } else {
+                kv.for_k_runs(hk, s, |t0, rows| {
+                    let n = rows.len() / kw;
+                    dot_rows_scaled(q, rows, kw, scale, &mut scores[t0..t0 + n]);
+                });
+                self.flops.add(2 * (s * kw) as u64);
+            }
+            softmax_inplace(&mut scores[..s]);
+            let c = &mut ctx[hq * cw..(hq + 1) * cw];
+            c.fill(0.0);
+            if use_rv {
+                axpy_rows(&scores[..s], &recon_v[hk * s * dh..(hk + 1) * s * dh], dh, c);
+            } else {
+                kv.for_v_runs(hk, s, |t0, rows| {
+                    let n = rows.len() / vw;
+                    axpy_rows(&scores[t0..t0 + n], rows, vw, c);
+                });
+            }
+            self.flops.add(2 * (s * cw) as u64);
+        }
+    }
+
+    /// Expand the latent cache rows [0, s) of every KV head through the
+    /// per-head reconstruction matrices ([w, dh] each) into `out`, packed
+    /// [Hkv, s, dh].  Counted as FLOPs — this is exactly the overhead
+    /// Table 2 attributes to SVD/PaLU.
+    fn reconstruct_into<L: KvLayerView>(
+        &self,
+        kv: &L,
+        b: &[Tensor],
+        is_k: bool,
+        s: usize,
+        out: &mut [f32],
+    ) {
+        let dh = self.cfg.head_dim;
+        for hd in 0..self.cfg.n_kv_heads {
+            let bw = &b[hd];
+            let (w, _) = bw.dims2();
+            let rows = &mut out[hd * s * dh..(hd + 1) * s * dh];
+            for t in 0..s {
+                let lat = if is_k { kv.k_row(hd, t) } else { kv.v_row(hd, t) };
+                let dst = &mut rows[t * dh..(t + 1) * dh];
+                dst.fill(0.0);
+                for (p, &lv) in lat.iter().enumerate().take(w) {
+                    if lv != 0.0 {
+                        crate::tensor::ops::axpy(lv, bw.row(p), dst);
+                    }
+                }
+            }
+            self.flops.add(2 * (s * w * dh) as u64);
+            if is_k {
+                // RoPE the reconstructed K at its token positions.
+                for t in 0..s {
+                    apply_full(
+                        &mut rows[t * dh..(t + 1) * dh],
+                        t,
+                        self.cfg.pairing,
+                        self.cfg.rope_theta,
+                    );
+                }
+            }
+        }
+    }
+
+    /// One full transformer layer for one token: attention (through `kv`)
+    /// plus MLP, accumulated into the hidden state `x`.
+    fn layer_forward<L: KvLayerView>(
+        &self,
+        l: usize,
+        layer: &Layer,
+        x: &mut [f32],
+        pos: usize,
+        kv: &mut L,
+        ws: &mut DecodeWorkspace,
+    ) {
+        let cfg = &self.cfg;
+        let DecodeWorkspace {
+            h,
+            q,
+            kl,
+            vl,
+            q_rows,
+            scores,
+            recon_k,
+            recon_v,
+            ctx,
+            o,
+            gate,
+            up,
+            ..
+        } = ws;
+        let qw = self.q_width(l);
+        let cw = self.ctx_width(l);
+
+        rms_norm(x, &layer.attn_norm.data, cfg.norm_eps, h);
+        self.project_into(l, layer, h, pos, kv, q, kl, vl, &mut q_rows[..cfg.n_heads * qw]);
+        self.attend_into(
+            l,
+            layer,
+            pos,
+            kv,
+            &q_rows[..cfg.n_heads * qw],
+            scores,
+            recon_k,
+            recon_v,
+            &mut ctx[..cfg.n_heads * cw],
+        );
+        let wo = match &layer.attn {
+            AttnKind::Baseline { wo, .. } | AttnKind::Svd { wo, .. } => wo,
+            AttnKind::Palu { wo_t, .. } | AttnKind::Rap { wo_t, .. } => wo_t,
+        };
+        self.vecmat_counted_into(&ctx[..cfg.n_heads * cw], wo, o);
+        add_inplace(x, o);
+
+        rms_norm(x, &layer.mlp_norm.data, cfg.norm_eps, h);
+        self.vecmat_counted_into(h, &layer.w_gate, gate);
+        self.vecmat_counted_into(h, &layer.w_up, up);
+        for (gv, uv) in gate.iter_mut().zip(up.iter()) {
+            *gv = silu(*gv) * *uv;
+        }
+        self.vecmat_counted_into(gate, &layer.w_down, o);
+        add_inplace(x, o);
+    }
+
+    fn step_inner<'c>(
+        &self,
+        token: u8,
+        pos: usize,
+        cache: &'c mut Cache,
+        want_logits: bool,
+    ) -> &'c [f32] {
+        assert!(pos < cache.layers[0].s_max, "cache overflow at pos {pos}");
+        let Cache { layers, len, x, ws, .. } = cache;
+        self.embed_into(token, x);
+        for (l, layer) in self.layers.iter().enumerate() {
+            self.layer_forward(l, layer, x, pos, &mut layers[l], ws);
+        }
+        *len = (*len).max(pos + 1);
+        let DecodeWorkspace { h, logits, .. } = ws;
+        if want_logits {
+            self.logits_into(x, h, logits);
+        }
+        logits
+    }
+
+    /// Process one token at `pos` given cache filled for [0, pos); updates
+    /// the cache and returns the logits as a borrow of the cache's
+    /// workspace — the allocation-free form of [`Engine::step`].
+    pub fn step_reuse<'c>(&self, token: u8, pos: usize, cache: &'c mut Cache) -> &'c [f32] {
+        self.step_inner(token, pos, cache, true)
+    }
+
+    /// Process one token at `pos`; returns owned logits (compatibility
+    /// wrapper over [`Engine::step_reuse`]).
+    pub fn step(&self, token: u8, pos: usize, cache: &mut Cache) -> Vec<f32> {
+        self.step_reuse(token, pos, cache).to_vec()
+    }
+
+    /// One decode step for a batch of `(session, token, pos)` entries
+    /// against the storage-backed paged KV-cache, layer-major: all sessions
+    /// advance through layer 0, then layer 1, … so each layer's weights are
+    /// touched once per step regardless of batch size.  Sessions are split
+    /// across `kernel_threads()` scoped workers (their blocks are disjoint
+    /// by construction).
+    ///
+    /// Zero heap allocations in steady state: scratch lives in `batch`,
+    /// which only grows the first time a batch size is seen.  Logits land
+    /// in `batch` (read via [`BatchWorkspace::logits_row`]) and are only
+    /// computed when `compute_logits` — prefill loops skip the head for all
+    /// but the final token.
+    ///
+    /// Every session must already hold a reservation covering `pos`
+    /// (`PagedKvCache::ensure_tokens`; the coordinator reserves a request's
+    /// full budget at admission).
+    pub fn decode_batch_paged(
+        &self,
+        entries: &[(u64, u8, usize)],
+        kv: &mut PagedKvCache,
+        batch: &mut BatchWorkspace,
+        compute_logits: bool,
+    ) -> Result<()> {
+        let b = entries.len();
+        if b == 0 {
+            return Ok(());
+        }
+        batch.ensure(self, b);
+        for (i, &(sid, _, pos)) in entries.iter().enumerate() {
+            if pos >= batch.s_max {
+                bail!("session {sid}: pos {pos} exceeds workspace s_max {}", batch.s_max);
+            }
+            if kv.session_tokens(sid) <= pos {
+                bail!(
+                    "session {sid}: pos {pos} beyond its {}-token reservation",
+                    kv.session_tokens(sid)
+                );
+            }
+            // A duplicated session id would give two workers overlapping
+            // views of the same blocks — reject it before any write.
+            if entries[..i].iter().any(|&(other, _, _)| other == sid) {
+                bail!("session {sid} appears twice in one decode batch");
+            }
+        }
+        let d = self.cfg.d_model;
+        let (pages, store) = kv.tables_and_ptrs()?;
+        for (i, &(_, token, _)) in entries.iter().enumerate() {
+            self.embed_into(token, &mut batch.x[i * d..(i + 1) * d]);
+        }
+        let threads = kernel_threads().min(b);
+        let ws_ptr = SendPtr(batch.workers.as_mut_ptr());
+        let x_ptr = SendPtr(batch.x.as_mut_ptr());
+        for (l, layer) in self.layers.iter().enumerate() {
+            scoped_chunks_indexed(b, threads, |widx, range| {
+                // SAFETY: each worker owns a unique workspace index and a
+                // disjoint range of batch entries; sessions own disjoint
+                // cache blocks, so no two workers touch the same memory.
+                let ws = unsafe { &mut *ws_ptr.0.add(widx) };
+                for bi in range {
+                    let (sid, _, pos) = entries[bi];
+                    let x = unsafe { std::slice::from_raw_parts_mut(x_ptr.0.add(bi * d), d) };
+                    // SAFETY: session ids are unique within `entries`
+                    // (checked above), so this worker holds the only live
+                    // view over this session's blocks.
+                    let mut view = unsafe { store.seq_layer(l, pages.blocks(sid).unwrap()) };
+                    self.layer_forward(l, layer, x, pos, &mut view, ws);
+                }
+            });
+        }
+        if compute_logits {
+            let v = self.cfg.vocab;
+            let lg_ptr = SendPtr(batch.logits.as_mut_ptr());
+            scoped_chunks_indexed(b, threads, |widx, range| {
+                // SAFETY: as above — disjoint entries and workspaces.
+                let ws = unsafe { &mut *ws_ptr.0.add(widx) };
+                for bi in range {
+                    let x = unsafe { std::slice::from_raw_parts(x_ptr.0.add(bi * d), d) };
+                    let logits =
+                        unsafe { std::slice::from_raw_parts_mut(lg_ptr.0.add(bi * v), v) };
+                    self.logits_into(x, &mut ws.h, logits);
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Prefill a prompt, returning logits at the last position.  Only the
+    /// final token pays for the vocabulary head; intermediate positions run
+    /// the allocation-free layer stack alone.
+    pub fn prefill(&self, tokens: &[u8], cache: &mut Cache) -> Vec<f32> {
+        let Some((&last, rest)) = tokens.split_last() else {
+            return Vec::new();
+        };
+        for (i, &t) in rest.iter().enumerate() {
+            self.step_inner(t, i, cache, false);
+        }
+        self.step_inner(last, tokens.len() - 1, cache, true).to_vec()
+    }
+
+    /// Mean negative log-likelihood of `targets` given `tokens` (teacher
+    /// forcing), batch-1 full-sequence evaluation.
+    pub fn nll(&self, tokens: &[u8], targets: &[u8], s_max: usize) -> f64 {
+        assert_eq!(tokens.len(), targets.len());
+        let mut cache = self.new_cache(s_max.max(tokens.len()));
+        let mut total = 0.0f64;
+        for (i, (&t, &y)) in tokens.iter().zip(targets.iter()).enumerate() {
+            let logits = self.step_reuse(t, i, &mut cache);
+            // log-softmax at the target
+            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = logits.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+            total += (lse - logits[y as usize]) as f64;
+        }
+        total / tokens.len() as f64
+    }
+
+    /// Greedy-decode `n` tokens after a prompt; returns generated bytes.
+    pub fn generate(&self, prompt: &[u8], n: usize, s_max: usize) -> Vec<u8> {
+        let mut cache = self.new_cache(s_max);
+        self.prefill(prompt, &mut cache);
+        let mut out = Vec::with_capacity(n);
+        let mut pos = prompt.len();
+        for _ in 0..n {
+            let next = argmax(cache.ws.logits.as_slice()) as u8;
+            out.push(next);
+            if pos >= s_max {
+                break;
+            }
+            self.step_reuse(next, pos, &mut cache);
+            pos += 1;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seed reference path.
+//
+// The original (pre-workspace) decode, preserved verbatim: per-token heap
+// allocations for every projection/score/context buffer and per-row `dot`
+// calls over the dense cache.  It serves two purposes:
+//   * the oracle for the workspace refactor — `step` must match it bitwise
+//     (asserted in `tests/paged.rs`);
+//   * the measured baseline in `benches/decode_latency.rs`, whose speedup
+//     ratio is recorded in BENCH_decode.json.
+// ---------------------------------------------------------------------------
+
+impl Engine {
     #[inline]
     fn vecmat_counted(&self, x: &[f32], w: &Tensor) -> Vec<f32> {
         let (k, n) = w.dims2();
@@ -263,42 +935,7 @@ impl Engine {
         vecmat(x, w)
     }
 
-    fn embed(&self, token: u8) -> Vec<f32> {
-        let d = self.cfg.d_model;
-        self.tok_emb.data[token as usize * d..(token as usize + 1) * d].to_vec()
-    }
-
-    fn logits_from_hidden(&self, x: &[f32]) -> Vec<f32> {
-        let d = self.cfg.d_model;
-        let v = self.cfg.vocab;
-        let mut h = vec![0.0f32; d];
-        rms_norm(x, &self.final_norm.data, self.cfg.norm_eps, &mut h);
-        // tied embedding head: logits = h @ tok_emb^T
-        self.flops.add(2 * (d * v) as u64);
-        let mut logits = vec![0.0f32; v];
-        for t in 0..v {
-            logits[t] = dot(&h, &self.tok_emb.data[t * d..(t + 1) * d]);
-        }
-        logits
-    }
-
-    fn mlp_inplace(&self, layer: &Layer, x: &mut [f32]) {
-        let d = self.cfg.d_model;
-        let mut h = vec![0.0f32; d];
-        rms_norm(x, &layer.mlp_norm.data, self.cfg.norm_eps, &mut h);
-        let mut g = self.vecmat_counted(&h, &layer.w_gate);
-        let u = self.vecmat_counted(&h, &layer.w_up);
-        for (gv, uv) in g.iter_mut().zip(&u) {
-            *gv = silu(*gv) * uv;
-        }
-        let down = self.vecmat_counted(&g, &layer.w_down);
-        add_inplace(x, &down);
-    }
-
-    /// Project the normed hidden state of ONE token at `pos` into the
-    /// cacheable K/V rows for layer `l`, and return the rotated Q rows
-    /// [H][q_width].  Writes the K/V rows into the cache at `pos`.
-    fn project_token(
+    fn project_token_ref(
         &self,
         layer: &Layer,
         h: &[f32],
@@ -329,7 +966,6 @@ impl Engine {
                     .collect()
             }
             AttnKind::Svd { wq, a_k, a_v, .. } | AttnKind::Palu { wq, a_k, a_v, .. } => {
-                // Pre-RoPE latents cached; Q full-rope'd.
                 let q = self.vecmat_counted(h, wq);
                 let kl = self.vecmat_counted(h, a_k);
                 let vl = self.vecmat_counted(h, a_v);
@@ -360,8 +996,6 @@ impl Engine {
                 for hd in 0..cfg.n_kv_heads {
                     let krow = cache.k_row_mut(hd, pos);
                     krow.copy_from_slice(&kl[hd * kw..(hd + 1) * kw]);
-                    // Index-aware RoPE directly on the latent — the fused
-                    // hot path (no reconstruction, no gather).
                     plan.k_table.apply_fused(hd, krow, pos);
                     cache
                         .v_row_mut(hd, pos)
@@ -378,9 +1012,45 @@ impl Engine {
         }
     }
 
-    /// Attention for ONE query token at `pos` over cache[0..=ctx_end].
-    /// Returns the per-head context vectors [H][v_width_effective].
-    fn attend(
+    fn reconstruct_ref(
+        &self,
+        cache: &LayerCache,
+        b: &[Tensor],
+        is_k: bool,
+        s: usize,
+    ) -> Vec<Vec<f32>> {
+        let dh = self.cfg.head_dim;
+        let mut out = Vec::with_capacity(self.cfg.n_kv_heads);
+        for hd in 0..self.cfg.n_kv_heads {
+            let bw = &b[hd];
+            let (w, _) = bw.dims2();
+            let mut rows = vec![0.0f32; s * dh];
+            for t in 0..s {
+                let lat = if is_k { cache.k_row(hd, t) } else { cache.v_row(hd, t) };
+                let dst = &mut rows[t * dh..(t + 1) * dh];
+                for (p, &lv) in lat.iter().enumerate().take(w) {
+                    if lv != 0.0 {
+                        crate::tensor::ops::axpy(lv, bw.row(p), dst);
+                    }
+                }
+            }
+            self.flops.add(2 * (s * w * dh) as u64);
+            if is_k {
+                for t in 0..s {
+                    apply_full(
+                        &mut rows[t * dh..(t + 1) * dh],
+                        t,
+                        self.cfg.pairing,
+                        self.cfg.rope_theta,
+                    );
+                }
+            }
+            out.push(rows);
+        }
+        out
+    }
+
+    fn attend_ref(
         &self,
         layer: &Layer,
         q_rows: &[Vec<f32>],
@@ -393,17 +1063,14 @@ impl Engine {
         let scale = 1.0 / (dh as f32).sqrt();
         let s = ctx_end + 1;
 
-        // Reconstruction step for factorization methods (paper Fig. 1):
-        // K (and V for SVD) are expanded to full dimension for the whole
-        // visible context, every call.
         let (recon_k, recon_v): (Option<Vec<Vec<f32>>>, Option<Vec<Vec<f32>>>) =
             match &layer.attn {
                 AttnKind::Svd { b_k, b_v, .. } => (
-                    Some(self.reconstruct(cache, b_k, true, s)),
-                    Some(self.reconstruct(cache, b_v, false, s)),
+                    Some(self.reconstruct_ref(cache, b_k, true, s)),
+                    Some(self.reconstruct_ref(cache, b_v, false, s)),
                 ),
                 AttnKind::Palu { b_k, .. } => {
-                    (Some(self.reconstruct(cache, b_k, true, s)), None)
+                    (Some(self.reconstruct_ref(cache, b_k, true, s)), None)
                 }
                 _ => (None, None),
             };
@@ -413,7 +1080,6 @@ impl Engine {
         for hq in 0..cfg.n_heads {
             let hk = hq / group;
             let q = &q_rows[hq];
-            // scores
             match &recon_k {
                 Some(k_full) => {
                     let krows = &k_full[hk];
@@ -431,7 +1097,6 @@ impl Engine {
                 }
             }
             softmax_inplace(&mut scores[..s]);
-            // values
             let vw_eff = match &layer.attn {
                 AttnKind::Svd { .. } | AttnKind::Baseline { .. } => dh,
                 _ => cache.v_width,
@@ -456,119 +1121,50 @@ impl Engine {
         out
     }
 
-    /// Expand the latent cache rows [0, s) of every KV head through the
-    /// per-head reconstruction matrices ([w, dh] each).  Counted as FLOPs —
-    /// this is exactly the overhead Table 2 attributes to SVD/PaLU.
-    fn reconstruct(
-        &self,
-        cache: &LayerCache,
-        b: &[Tensor],
-        is_k: bool,
-        s: usize,
-    ) -> Vec<Vec<f32>> {
-        let dh = self.cfg.head_dim;
-        let mut out = Vec::with_capacity(self.cfg.n_kv_heads);
-        for hd in 0..self.cfg.n_kv_heads {
-            let bw = &b[hd];
-            let (w, _) = bw.dims2();
-            let mut rows = vec![0.0f32; s * dh];
-            for t in 0..s {
-                let lat = if is_k { cache.k_row(hd, t) } else { cache.v_row(hd, t) };
-                let dst = &mut rows[t * dh..(t + 1) * dh];
-                for (p, &lv) in lat.iter().enumerate().take(w) {
-                    if lv != 0.0 {
-                        crate::tensor::ops::axpy(lv, bw.row(p), dst);
-                    }
-                }
-            }
-            self.flops.add(2 * (s * w * dh) as u64);
-            let mut full = rows;
-            if is_k {
-                // RoPE the reconstructed K at its token positions.
-                for t in 0..s {
-                    apply_full(
-                        &mut full[t * dh..(t + 1) * dh],
-                        t,
-                        self.cfg.pairing,
-                        self.cfg.rope_theta,
-                    );
-                }
-            }
-            out.push(full);
+    fn mlp_inplace_ref(&self, layer: &Layer, x: &mut [f32]) {
+        let d = self.cfg.d_model;
+        let mut h = vec![0.0f32; d];
+        rms_norm(x, &layer.mlp_norm.data, self.cfg.norm_eps, &mut h);
+        let mut g = self.vecmat_counted(&h, &layer.w_gate);
+        let u = self.vecmat_counted(&h, &layer.w_up);
+        for (gv, uv) in g.iter_mut().zip(&u) {
+            *gv = silu(*gv) * uv;
         }
-        out
+        let down = self.vecmat_counted(&g, &layer.w_down);
+        add_inplace(x, &down);
     }
 
-    fn output_proj(&self, layer: &Layer, ctx: &[Vec<f32>], x: &mut [f32]) {
-        let merged: Vec<f32> = ctx.iter().flatten().copied().collect();
-        let wo = match &layer.attn {
-            AttnKind::Baseline { wo, .. } | AttnKind::Svd { wo, .. } => wo,
-            AttnKind::Palu { wo_t, .. } | AttnKind::Rap { wo_t, .. } => wo_t,
-        };
-        let o = self.vecmat_counted(&merged, wo);
-        add_inplace(x, &o);
-    }
-
-    /// Process one token at `pos` given cache filled for [0, pos); updates
-    /// the cache and returns the hidden state's logits.
-    pub fn step(&self, token: u8, pos: usize, cache: &mut Cache) -> Vec<f32> {
+    /// The seed's decode step, allocation behaviour and all.  See the
+    /// section comment above.
+    pub fn step_alloc_reference(&self, token: u8, pos: usize, cache: &mut Cache) -> Vec<f32> {
         assert!(pos < cache.layers[0].s_max, "cache overflow at pos {pos}");
         let d = self.cfg.d_model;
-        let mut x = self.embed(token);
+        let mut x = self.tok_emb.data[token as usize * d..(token as usize + 1) * d].to_vec();
         let mut h = vec![0.0f32; d];
         for (l, layer) in self.layers.iter().enumerate() {
             rms_norm(&x, &layer.attn_norm.data, self.cfg.norm_eps, &mut h);
             let lc = &mut cache.layers[l];
-            let q_rows = self.project_token(layer, &h, pos, lc);
-            let ctx = self.attend(layer, &q_rows, lc, pos);
-            self.output_proj(layer, &ctx, &mut x);
-            self.mlp_inplace(layer, &mut x);
+            let q_rows = self.project_token_ref(layer, &h, pos, lc);
+            let ctx = self.attend_ref(layer, &q_rows, lc, pos);
+            let merged: Vec<f32> = ctx.iter().flatten().copied().collect();
+            let wo = match &layer.attn {
+                AttnKind::Baseline { wo, .. } | AttnKind::Svd { wo, .. } => wo,
+                AttnKind::Palu { wo_t, .. } | AttnKind::Rap { wo_t, .. } => wo_t,
+            };
+            let o = self.vecmat_counted(&merged, wo);
+            add_inplace(&mut x, &o);
+            self.mlp_inplace_ref(layer, &mut x);
         }
         cache.len = cache.len.max(pos + 1);
-        self.logits_from_hidden(&x)
-    }
-
-    /// Prefill a prompt, returning logits at the last position.
-    pub fn prefill(&self, tokens: &[u8], cache: &mut Cache) -> Vec<f32> {
-        let mut logits = Vec::new();
-        for (i, &t) in tokens.iter().enumerate() {
-            logits = self.step(t, i, cache);
+        let mut hn = vec![0.0f32; d];
+        rms_norm(&x, &self.final_norm.data, self.cfg.norm_eps, &mut hn);
+        let v = self.cfg.vocab;
+        self.flops.add(2 * (d * v) as u64);
+        let mut logits = vec![0.0f32; v];
+        for t in 0..v {
+            logits[t] = dot(&hn, &self.tok_emb.data[t * d..(t + 1) * d]);
         }
         logits
-    }
-
-    /// Mean negative log-likelihood of `targets` given `tokens` (teacher
-    /// forcing), batch-1 full-sequence evaluation.
-    pub fn nll(&self, tokens: &[u8], targets: &[u8], s_max: usize) -> f64 {
-        assert_eq!(tokens.len(), targets.len());
-        let mut cache = self.new_cache(s_max.max(tokens.len()));
-        let mut total = 0.0f64;
-        for (i, (&t, &y)) in tokens.iter().zip(targets.iter()).enumerate() {
-            let logits = self.step(t, i, &mut cache);
-            // log-softmax at the target
-            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let lse: f32 = logits.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
-            total += (lse - logits[y as usize]) as f64;
-        }
-        total / tokens.len() as f64
-    }
-
-    /// Greedy-decode `n` tokens after a prompt; returns generated bytes.
-    pub fn generate(&self, prompt: &[u8], n: usize, s_max: usize) -> Vec<u8> {
-        let mut cache = self.new_cache(s_max);
-        let mut logits = self.prefill(prompt, &mut cache);
-        let mut out = Vec::with_capacity(n);
-        let mut pos = prompt.len();
-        for _ in 0..n {
-            let next = argmax(&logits) as u8;
-            out.push(next);
-            if pos >= s_max {
-                break;
-            }
-            logits = self.step(next, pos, &mut cache);
-            pos += 1;
-        }
-        out
     }
 }
 
@@ -602,6 +1198,30 @@ mod tests {
         assert_eq!(c.v_row(1, 3).len(), 5);
     }
 
-    // Engine integration tests (vs manifest weights and PJRT) live in
-    // rust/tests/.
+    #[test]
+    fn layer_cache_runs_match_rows() {
+        let mut c = LayerCache::new(2, 8, 3, 2);
+        for t in 0..6 {
+            c.k_row_mut(1, t)[0] = t as f32;
+            c.v_row_mut(1, t)[1] = -(t as f32);
+        }
+        let mut calls = 0;
+        KvLayerView::for_k_runs(&c, 1, 6, |t0, rows| {
+            calls += 1;
+            assert_eq!(t0, 0);
+            assert_eq!(rows.len(), 6 * 3);
+            for (i, chunk) in rows.chunks_exact(3).enumerate() {
+                assert_eq!(chunk[0], i as f32);
+            }
+        });
+        assert_eq!(calls, 1, "dense layout yields one maximal run");
+        KvLayerView::for_v_runs(&c, 1, 6, |_, rows| {
+            for (i, chunk) in rows.chunks_exact(2).enumerate() {
+                assert_eq!(chunk[1], -(i as f32));
+            }
+        });
+    }
+
+    // Engine integration tests (vs manifest weights, PJRT, and the paged
+    // batched-decode identity suite) live in rust/tests/.
 }

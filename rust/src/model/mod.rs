@@ -3,9 +3,10 @@
 
 pub mod backend;
 pub mod engine;
+pub mod synth;
 pub mod weights;
 
-pub use engine::{argmax, Cache, Engine, LayerCache};
+pub use engine::{argmax, BatchWorkspace, Cache, DecodeWorkspace, Engine, LayerCache};
 pub use weights::Weights;
 
 use anyhow::Result;

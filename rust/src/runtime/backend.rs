@@ -7,6 +7,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::scheduler::Backend;
 use crate::coordinator::RequestId;
+use crate::kvcache::PagedKvCache;
 use crate::model::argmax;
 use crate::runtime::{PjrtCache, PjrtContext, PjrtEngine};
 
@@ -90,7 +91,14 @@ impl<'a> Backend for PjrtBackend<'a> {
         self.engine.s_max
     }
 
-    fn prefill(&mut self, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
+    // Session caches are host literals re-uploaded per step; the
+    // coordinator's paged allocator is accounting-only for this backend.
+    fn prefill(
+        &mut self,
+        _kv: &mut PagedKvCache,
+        session: RequestId,
+        prompt: &[u8],
+    ) -> Result<Vec<f32>> {
         if prompt.is_empty() {
             bail!("empty prompt");
         }
@@ -117,7 +125,11 @@ impl<'a> Backend for PjrtBackend<'a> {
         Ok(logits)
     }
 
-    fn decode_batch(&mut self, entries: &[(RequestId, u8, usize)]) -> Result<Vec<Vec<f32>>> {
+    fn decode_batch(
+        &mut self,
+        _kv: &mut PagedKvCache,
+        entries: &[(RequestId, u8, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
         let bucket = self.bucket_for(entries.len())?;
         let mut ids: Vec<Option<RequestId>> = entries.iter().map(|e| Some(e.0)).collect();
         let mut tokens: Vec<i32> = entries.iter().map(|e| e.1 as i32).collect();
@@ -145,20 +157,24 @@ impl<'a> Backend for PjrtBackend<'a> {
     }
 }
 
-/// Convenience: greedy-generate through the backend (used by tests).
+/// Convenience: greedy-generate through the backend (used by tests).  The
+/// caller supplies the paged allocator the backend decodes against
+/// (storage-backed when the backend `wants_paged_storage`); the session's
+/// blocks are released before returning.
 pub fn generate_once(
     backend: &mut dyn Backend,
+    kv: &mut PagedKvCache,
     id: RequestId,
     prompt: &[u8],
     n: usize,
 ) -> Result<Vec<u8>> {
-    let logits = backend.prefill(id, prompt)?;
+    let logits = backend.prefill(kv, id, prompt)?;
     let mut next = argmax(&logits) as u8;
     let mut pos = prompt.len();
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         out.push(next);
-        let lg = backend.decode_batch(&[(id, next, pos)])?;
+        let lg = backend.decode_batch(kv, &[(id, next, pos)])?;
         next = argmax(&lg[0]) as u8;
         pos += 1;
         if pos >= backend.s_max() {
@@ -166,5 +182,6 @@ pub fn generate_once(
         }
     }
     backend.drop_session(id);
+    kv.release(id);
     Ok(out)
 }

@@ -6,40 +6,69 @@
 //! vectorizable without materialising B^T), parallelised over A-row chunks
 //! via `scoped_chunks`.
 
+use std::sync::OnceLock;
+
 use super::Tensor;
 use crate::util::threadpool::scoped_chunks;
 
 /// Number of threads for data-parallel kernels (1 on this testbed;
-/// overridable for tests via RAP_THREADS).
+/// overridable via RAP_THREADS).  The environment is consulted exactly once
+/// per process — this sits on the per-token decode path, so re-parsing an
+/// env var per matmul call would be both slow and racy.  Tests that need a
+/// specific thread count use the explicit `*_with_threads` entry points
+/// instead of mutating the process environment.
 pub fn kernel_threads() -> usize {
-    std::env::var("RAP_THREADS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|v| v.get())
-                .unwrap_or(1)
-        })
+    static KERNEL_THREADS: OnceLock<usize> = OnceLock::new();
+    *KERNEL_THREADS.get_or_init(|| {
+        std::env::var("RAP_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|v| v.get())
+                    .unwrap_or(1)
+            })
+    })
 }
 
 /// C[M,N] = A[M,K] @ B[K,N].
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_with_threads(a, b, if a.dims2().0 >= 4 { kernel_threads() } else { 1 })
+}
+
+/// `matmul` with an explicit worker count (tests pin this instead of
+/// mutating the process-global RAP_THREADS, which races under the parallel
+/// test harness).
+pub fn matmul_with_threads(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     let (m, k) = a.dims2();
     let (k2, n) = b.dims2();
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
     let mut out = Tensor::zeros(vec![m, n]);
-    matmul_into(&a.data, &b.data, &mut out.data, m, k, n);
+    matmul_into_threads(&a.data, &b.data, &mut out.data, m, k, n, threads);
     out
 }
 
 /// Accumulating inner routine on raw slices (reused by the engine to avoid
 /// intermediate allocations on the decode hot path).
 pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let threads = if m >= 4 { kernel_threads() } else { 1 };
+    matmul_into_threads(a, b, out, m, k, n, threads);
+}
+
+/// `matmul_into` with an explicit worker count.
+pub fn matmul_into_threads(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
     out.fill(0.0);
-    let threads = if m >= 4 { kernel_threads() } else { 1 };
     // SAFETY-free parallelism: split output rows across scoped workers.
     let out_ptr = OutPtr(out.as_mut_ptr());
     scoped_chunks(m, threads, |rows| {
@@ -73,9 +102,19 @@ unsafe impl Sync for OutPtr {}
 /// once, quartering the y load/store traffic vs the naive axpy loop (§Perf:
 /// ~1.6x on the engine's projection shapes).
 pub fn vecmat(x: &[f32], b: &Tensor) -> Vec<f32> {
+    let n = b.dims2().1;
+    let mut y = vec![0.0f32; n];
+    vecmat_into(x, b, &mut y);
+    y
+}
+
+/// `vecmat` writing into caller-owned storage — the allocation-free decode
+/// hot path (`DecodeWorkspace` owns `y`).
+pub fn vecmat_into(x: &[f32], b: &Tensor, y: &mut [f32]) {
     let (k, n) = b.dims2();
     assert_eq!(x.len(), k);
-    let mut y = vec![0.0f32; n];
+    assert_eq!(y.len(), n);
+    y.fill(0.0);
     let blocks = k / 4;
     for blk in 0..blocks {
         let p = blk * 4;
@@ -98,7 +137,79 @@ pub fn vecmat(x: &[f32], b: &Tensor) -> Vec<f32> {
             *yo += xv * bv;
         }
     }
-    y
+}
+
+/// Attention score kernel over one contiguous block of cached rows:
+/// `out[i] = scale * (q · rows[i*w .. (i+1)*w])` for each of the
+/// `rows.len()/w` rows.  Rows are processed in pairs so `q` streams through
+/// the registers once per pair instead of once per row.
+///
+/// Per-row accumulation (four partial sums + scalar tail, reduced as
+/// `acc + s0 + s1 + s2 + s3`) mirrors `dot` exactly, so scores computed
+/// block-by-block over the paged KV store are bit-identical to a dense
+/// sweep — the batched-vs-sequential identity tests rely on this.
+pub fn dot_rows_scaled(q: &[f32], rows: &[f32], w: usize, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), w);
+    debug_assert_eq!(rows.len() % w, 0);
+    let n = rows.len() / w;
+    debug_assert!(out.len() >= n);
+    let chunks = w / 4;
+    let mut r = 0;
+    while r + 2 <= n {
+        let row0 = &rows[r * w..(r + 1) * w];
+        let row1 = &rows[(r + 1) * w..(r + 2) * w];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0, 0.0, 0.0);
+        let (mut b0, mut b1, mut b2, mut b3) = (0.0f32, 0.0, 0.0, 0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            let (q0, q1, q2, q3) = (q[i], q[i + 1], q[i + 2], q[i + 3]);
+            a0 += q0 * row0[i];
+            a1 += q1 * row0[i + 1];
+            a2 += q2 * row0[i + 2];
+            a3 += q3 * row0[i + 3];
+            b0 += q0 * row1[i];
+            b1 += q1 * row1[i + 1];
+            b2 += q2 * row1[i + 2];
+            b3 += q3 * row1[i + 3];
+        }
+        let (mut ta, mut tb) = (0.0f32, 0.0f32);
+        for i in chunks * 4..w {
+            ta += q[i] * row0[i];
+            tb += q[i] * row1[i];
+        }
+        out[r] = (ta + a0 + a1 + a2 + a3) * scale;
+        out[r + 1] = (tb + b0 + b1 + b2 + b3) * scale;
+        r += 2;
+    }
+    if r < n {
+        out[r] = dot(q, &rows[r * w..(r + 1) * w]) * scale;
+    }
+}
+
+/// Weighted row accumulation over one contiguous block of cached rows:
+/// `ctx[j] += Σ_i weights[i] * rows[i*w + j]`.
+///
+/// Rows are folded strictly in ascending order with one add per element per
+/// row (`(ctx + w0·r0) + w1·r1`), so accumulating block-by-block over the
+/// paged store matches a single dense sweep bitwise.
+pub fn axpy_rows(weights: &[f32], rows: &[f32], w: usize, ctx: &mut [f32]) {
+    debug_assert_eq!(rows.len() % w, 0);
+    debug_assert_eq!(weights.len(), rows.len() / w);
+    debug_assert_eq!(ctx.len(), w);
+    let n = weights.len();
+    let mut r = 0;
+    while r + 2 <= n {
+        let (w0, w1) = (weights[r], weights[r + 1]);
+        let row0 = &rows[r * w..(r + 1) * w];
+        let row1 = &rows[(r + 1) * w..(r + 2) * w];
+        for j in 0..w {
+            ctx[j] = (ctx[j] + w0 * row0[j]) + w1 * row1[j];
+        }
+        r += 2;
+    }
+    if r < n {
+        axpy(weights[r], &rows[r * w..(r + 1) * w], ctx);
+    }
 }
 
 /// dot(x, y).
@@ -204,15 +315,16 @@ mod tests {
 
     #[test]
     fn matmul_parallel_matches_serial() {
+        // Explicit thread counts: no RAP_THREADS env mutation (which would
+        // race with concurrently running tests in this binary).
         let mut rng = Rng::new(2);
         let a = Tensor::randn(vec![32, 24], 1.0, &mut rng);
         let b = Tensor::randn(vec![24, 16], 1.0, &mut rng);
-        std::env::set_var("RAP_THREADS", "4");
-        let par = matmul(&a, &b);
-        std::env::set_var("RAP_THREADS", "1");
-        let ser = matmul(&a, &b);
-        std::env::remove_var("RAP_THREADS");
-        assert!(par.max_abs_diff(&ser) < 1e-6);
+        let ser = matmul_with_threads(&a, &b, 1);
+        for threads in [2, 4, 7] {
+            let par = matmul_with_threads(&a, &b, threads);
+            assert!(par.max_abs_diff(&ser) < 1e-6, "{threads} threads");
+        }
     }
 
     #[test]
@@ -224,6 +336,70 @@ mod tests {
         let fast = vecmat(&x.data, &b);
         for (a, b) in full.data.iter().zip(&fast) {
             assert!((a - b).abs() < 1e-5);
+        }
+        // The _into form reuses (and fully overwrites) its output buffer.
+        let mut y = vec![7.0f32; 5];
+        vecmat_into(&x.data, &b, &mut y);
+        assert_eq!(y, fast);
+    }
+
+    #[test]
+    fn dot_rows_scaled_is_bitwise_per_row_dot() {
+        let mut rng = Rng::new(11);
+        for (n, w) in [(1usize, 7usize), (2, 8), (5, 12), (16, 24), (21, 16)] {
+            let q: Vec<f32> = (0..w).map(|_| rng.normal_f32()).collect();
+            let rows: Vec<f32> = (0..n * w).map(|_| rng.normal_f32()).collect();
+            let scale = 0.37f32;
+            let mut out = vec![0.0f32; n];
+            dot_rows_scaled(&q, &rows, w, scale, &mut out);
+            for t in 0..n {
+                let expect = dot(&q, &rows[t * w..(t + 1) * w]) * scale;
+                assert_eq!(out[t], expect, "row {t} of ({n},{w})");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_rows_matches_sequential_axpy_bitwise() {
+        let mut rng = Rng::new(12);
+        for (n, w) in [(1usize, 5usize), (2, 8), (7, 16), (16, 9), (33, 16)] {
+            let weights: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let rows: Vec<f32> = (0..n * w).map(|_| rng.normal_f32()).collect();
+            let mut blocked = vec![0.5f32; w];
+            let mut serial = vec![0.5f32; w];
+            axpy_rows(&weights, &rows, w, &mut blocked);
+            for t in 0..n {
+                axpy(weights[t], &rows[t * w..(t + 1) * w], &mut serial);
+            }
+            assert_eq!(blocked, serial, "({n},{w})");
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_agree_across_run_partitions() {
+        // Accumulating block-by-block (the paged layout) must equal one
+        // dense sweep — the batched decode identity depends on it.
+        let mut rng = Rng::new(13);
+        let (n, w) = (37usize, 12usize);
+        let q: Vec<f32> = (0..w).map(|_| rng.normal_f32()).collect();
+        let weights: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let rows: Vec<f32> = (0..n * w).map(|_| rng.normal_f32()).collect();
+        let mut dense_scores = vec![0.0f32; n];
+        dot_rows_scaled(&q, &rows, w, 1.3, &mut dense_scores);
+        let mut dense_ctx = vec![0.0f32; w];
+        axpy_rows(&weights, &rows, w, &mut dense_ctx);
+        for block in [1usize, 4, 16] {
+            let mut scores = vec![0.0f32; n];
+            let mut ctx = vec![0.0f32; w];
+            let mut t0 = 0;
+            while t0 < n {
+                let t1 = (t0 + block).min(n);
+                dot_rows_scaled(&q, &rows[t0 * w..t1 * w], w, 1.3, &mut scores[t0..t1]);
+                axpy_rows(&weights[t0..t1], &rows[t0 * w..t1 * w], w, &mut ctx);
+                t0 = t1;
+            }
+            assert_eq!(scores, dense_scores, "block {block}");
+            assert_eq!(ctx, dense_ctx, "block {block}");
         }
     }
 

@@ -107,9 +107,21 @@ pub fn scoped_chunks<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(std::ops::Range<usize>) + Sync,
 {
+    scoped_chunks_indexed(n, threads, |_, range| f(range));
+}
+
+/// `scoped_chunks` variant that also hands each worker its chunk index
+/// (`0..threads`).  The batched decode path uses the index to address a
+/// per-worker `DecodeWorkspace` without locking.  With one worker (or one
+/// item) the closure runs inline on the caller's thread — no spawn, no
+/// allocation — which is what makes single-token decode allocation-free.
+pub fn scoped_chunks_indexed<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
     let threads = threads.max(1).min(n.max(1));
     if threads == 1 || n <= 1 {
-        f(0..n);
+        f(0, 0..n);
         return;
     }
     let chunk = n.div_ceil(threads);
@@ -121,7 +133,7 @@ where
                 break;
             }
             let f = &f;
-            s.spawn(move || f(lo..hi));
+            s.spawn(move || f(t, lo..hi));
         }
     });
 }
@@ -177,5 +189,22 @@ mod tests {
     #[test]
     fn scoped_chunks_empty() {
         scoped_chunks(0, 4, |r| assert!(r.is_empty()));
+    }
+
+    #[test]
+    fn scoped_chunks_indexed_distinct_workers() {
+        // Every chunk index is within 0..threads and owned by one worker.
+        let threads = 4;
+        let seen: Vec<AtomicUsize> = (0..threads).map(|_| AtomicUsize::new(0)).collect();
+        let hits: Vec<AtomicUsize> = (0..19).map(|_| AtomicUsize::new(0)).collect();
+        scoped_chunks_indexed(19, threads, |idx, range| {
+            assert!(idx < threads);
+            seen[idx].fetch_add(1, Ordering::SeqCst);
+            for i in range {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert!(seen.iter().all(|s| s.load(Ordering::SeqCst) <= 1));
     }
 }

@@ -1,0 +1,83 @@
+//! Steady-state decode must perform ZERO heap allocations (the tentpole
+//! perf claim): all scratch lives in `DecodeWorkspace`/`BatchWorkspace`,
+//! logits land in the batch workspace, and the paged store was reserved up
+//! front (as the coordinator does at admission).
+//!
+//! Verified with a counting global allocator, so this file holds exactly
+//! one test and pins RAP_THREADS=1 before the engine's first kernel call
+//! (`kernel_threads` reads the env once; with one worker the scoped
+//! parallelism runs inline — no spawns, which also allocate).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use rap::config::Method;
+use rap::kvcache::{CacheShape, PagedKvCache};
+use rap::model::synth::synth_engine;
+use rap::model::BatchWorkspace;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_paged_decode_allocates_nothing() {
+    std::env::set_var("RAP_THREADS", "1");
+    for method in [Method::Baseline, Method::Svd, Method::Palu, Method::Rap] {
+        let engine = synth_engine(method, 1);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let s_max = 256;
+        let mut kv = PagedKvCache::with_storage(shape, 8 << 20);
+        // Reserve the session's full budget up front, exactly like the
+        // coordinator's admission policy — decode then never touches the
+        // block free-list.
+        kv.reserve(1, s_max).unwrap();
+        let mut batch = BatchWorkspace::new(&engine, s_max);
+
+        let mut pos = 0usize;
+        let feed = |pos: &mut usize, kv: &mut PagedKvCache, batch: &mut BatchWorkspace, n: usize| {
+            for _ in 0..n {
+                let token = (*pos % 251) as u8;
+                engine
+                    .decode_batch_paged(&[(1, token, *pos)], kv, batch, true)
+                    .unwrap();
+                *pos += 1;
+            }
+        };
+        // Warmup: first calls size the workspace buffers.
+        feed(&mut pos, &mut kv, &mut batch, 64);
+
+        let before = ALLOCS.load(Ordering::Relaxed);
+        feed(&mut pos, &mut kv, &mut batch, 128);
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "{method:?}: steady-state single-token decode must not allocate"
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Paged-store decode identity suite over synthetic weights — runs without
+//! `make artifacts`.
+//!
+//! Three layers of bit-exactness, for every method
+//! (baseline/svd/palu/rap):
+//!   1. the workspace-based dense step vs the seed's allocating per-row
+//!      decode (`step_alloc_reference`);
+//!   2. paged (block-scattered) decode vs dense decode;
+//!   3. batched decode over 8 concurrent sessions through the scheduler vs
+//!      sequential single-session decode.
+
+use rap::config::Method;
+use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use rap::kvcache::{CacheShape, PagedKvCache, BLOCK_TOKENS};
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
+use rap::model::BatchWorkspace;
+use rap::runtime::backend::generate_once;
+
+const METHODS: [Method; 4] = [Method::Baseline, Method::Svd, Method::Palu, Method::Rap];
+
+fn prompt(len: usize, salt: usize) -> Vec<u8> {
+    (0..len).map(|i| ((i * 37 + salt * 101) % 251) as u8).collect()
+}
+
+#[test]
+fn workspace_step_matches_seed_reference_bitwise() {
+    for method in METHODS {
+        let engine = synth_engine(method, 42);
+        let mut ws_cache = engine.new_cache(96);
+        let mut ref_cache = engine.new_cache(96);
+        for (i, &t) in prompt(80, 1).iter().enumerate() {
+            let ws = engine.step(t, i, &mut ws_cache);
+            let reference = engine.step_alloc_reference(t, i, &mut ref_cache);
+            assert_eq!(ws, reference, "{method:?} step {i}");
+        }
+        assert_eq!(ws_cache.bytes_used(), ref_cache.bytes_used());
+    }
+}
+
+#[test]
+fn paged_decode_matches_dense_bitwise() {
+    for method in METHODS {
+        let engine = synth_engine(method, 9);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        // Enough tokens to cross several block boundaries.
+        let s = BLOCK_TOKENS * 3 + 5;
+        let mut kv = PagedKvCache::with_storage(shape, 4 << 20);
+        kv.reserve(1, s).unwrap();
+        let mut batch = BatchWorkspace::new(&engine, 96);
+        let mut dense = engine.new_cache(96);
+        for (i, &t) in prompt(s, 2).iter().enumerate() {
+            let dense_logits = engine.step(t, i, &mut dense);
+            engine
+                .decode_batch_paged(&[(1, t, i)], &mut kv, &mut batch, true)
+                .unwrap();
+            assert_eq!(
+                dense_logits.as_slice(),
+                batch.logits_row(0),
+                "{method:?} pos {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scheduler_batched_decode_bit_identical_to_sequential() {
+    const SESSIONS: usize = 8;
+    const MAX_NEW: usize = 12;
+    for method in METHODS {
+        let engine = synth_engine(method, 5);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let s_max = 96;
+        // Staggered prompt lengths put concurrent sessions at different
+        // positions within the same decode batch.
+        let prompts: Vec<Vec<u8>> = (0..SESSIONS).map(|i| prompt(5 + 2 * i, i)).collect();
+
+        // Reference: each session decoded alone, one token per batch.
+        let mut expected = Vec::new();
+        {
+            let mut backend = RustBackend::new(&engine, s_max);
+            let mut kv = PagedKvCache::with_storage(shape.clone(), 16 << 20);
+            for (i, p) in prompts.iter().enumerate() {
+                expected.push(
+                    generate_once(&mut backend, &mut kv, 500 + i as u64, p, MAX_NEW).unwrap(),
+                );
+            }
+        }
+
+        // All sessions live at once, decoded in buckets of up to 8.
+        let backend = RustBackend::new(&engine, s_max);
+        let mut coord = Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: SESSIONS,
+                    buckets: vec![1, 4, 8],
+                    max_queue: 64,
+                },
+                kv_budget_bytes: 16 << 20,
+            },
+        );
+        for (i, p) in prompts.iter().enumerate() {
+            assert!(coord.submit(Request::new(i as u64, p.clone(), MAX_NEW)));
+        }
+        let mut responses = coord.run_to_completion().unwrap();
+        assert_eq!(responses.len(), SESSIONS);
+        responses.sort_by_key(|r| r.id);
+        for (r, e) in responses.iter().zip(&expected) {
+            assert_eq!(r.generated.len(), MAX_NEW, "{method:?} session {}", r.id);
+            assert_eq!(&r.generated, e, "{method:?} session {}", r.id);
+        }
+        assert_eq!(coord.kv_used_blocks(), 0, "{method:?}: all KV released");
+        assert!(coord.metrics.decode_batch_occupancy.mean() > 1.5, "{method:?}: batching exercised");
+    }
+}
+
+#[test]
+fn paged_sessions_are_isolated() {
+    // Interleaving another session's decode must not perturb the first
+    // session's outputs (disjoint blocks, no cross-talk).
+    let engine = synth_engine(Method::Rap, 21);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let n = 40;
+
+    let solo: Vec<Vec<f32>> = {
+        let mut kv = PagedKvCache::with_storage(shape.clone(), 4 << 20);
+        kv.reserve(1, n).unwrap();
+        let mut batch = BatchWorkspace::new(&engine, 64);
+        prompt(n, 3)
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                engine
+                    .decode_batch_paged(&[(1, t, i)], &mut kv, &mut batch, true)
+                    .unwrap();
+                batch.logits_row(0).to_vec()
+            })
+            .collect()
+    };
+
+    let mut kv = PagedKvCache::with_storage(shape, 4 << 20);
+    kv.reserve(1, n).unwrap();
+    kv.reserve(2, n).unwrap();
+    let mut batch = BatchWorkspace::new(&engine, 64);
+    let other = prompt(n, 4);
+    for (i, &t) in prompt(n, 3).iter().enumerate() {
+        // Batch both sessions together; session 2 runs a different stream.
+        engine
+            .decode_batch_paged(&[(1, t, i), (2, other[i], i)], &mut kv, &mut batch, true)
+            .unwrap();
+        assert_eq!(batch.logits_row(0), solo[i].as_slice(), "pos {i}");
+    }
+}

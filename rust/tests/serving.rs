@@ -77,9 +77,10 @@ fn coordinator_over_pjrt_backend_matches_sequential_generation() {
     let mut expected = Vec::new();
     {
         let mut backend = PjrtBackend::new(&ctx, &engine).unwrap();
+        let mut kv = rap::kvcache::PagedKvCache::new(shape.clone(), 32 << 20);
         for (i, p) in prompts.iter().enumerate() {
             expected.push(
-                rap::runtime::backend::generate_once(&mut backend, 1000 + i as u64, p, 6)
+                rap::runtime::backend::generate_once(&mut backend, &mut kv, 1000 + i as u64, p, 6)
                     .unwrap(),
             );
         }
@@ -131,14 +132,18 @@ fn kv_pressure_defers_admission_but_everything_completes() {
 #[test]
 fn quantized_backend_still_generates_sensibly() {
     let m = manifest();
+    let entry = m.model("tinyllama").unwrap();
     let engine = load_engine(&m, "tinyllama", "rap_r30").unwrap();
     let mut backend = RustBackend::new(&engine, 64);
     backend.quantize_kv = true;
+    let shape = CacheShape::of(&entry.config, &entry.variants["rap_r30"].spec);
+    let mut kv = rap::kvcache::PagedKvCache::with_storage(shape, 16 << 20);
     let corpus = m.eval_corpus().unwrap();
     let out =
-        rap::runtime::backend::generate_once(&mut backend, 1, &corpus[..16], 8).unwrap();
+        rap::runtime::backend::generate_once(&mut backend, &mut kv, 1, &corpus[..16], 8).unwrap();
     assert_eq!(out.len(), 8);
     assert!(out.iter().all(|&c| c == b' ' || c.is_ascii_graphic() || c == b'\n'));
+    assert_eq!(kv.used_blocks(), 0, "generate_once releases its session");
 }
 
 #[test]
