@@ -55,6 +55,7 @@ fn drive(model: &str, variant: &str, n_requests: usize) -> Result<()> {
                     max_sessions: 4,
                     buckets: engine.decode_batches(),
                     max_queue: 256,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 64 << 20,
             },
@@ -140,6 +141,7 @@ fn drive_synth(n_requests: usize) -> Result<()> {
                     max_sessions: 8,
                     buckets: vec![1, 4, 8],
                     max_queue: 256,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 64 << 20,
             },

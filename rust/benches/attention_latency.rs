@@ -1,35 +1,65 @@
 //! Fig. 7 / Table 16 (prefill side): attention-path latency per variant.
 //!
-//! Times (a) PJRT prefill executables at the exported buckets and (b) the
-//! rust engine's prefill loop, per method at rho=30%, reporting ratios vs
-//! baseline — the paper's "attention latency relative to baseline" series.
+//! Times (a) PJRT prefill executables at the exported buckets, (b) the
+//! rust engine's prefill at the bucket size, per method at rho=30%,
+//! reporting ratios vs baseline — the paper's "attention latency relative
+//! to baseline" series — and (c) the perf gate for the block-parallel
+//! prefill path: token-by-token (`Engine::prefill_token_loop`) vs blocked
+//! chunked prefill (`Engine::prefill_chunked`) at 512/2k-token prompts on
+//! synthetic weights (no artifacts needed), with the speedups written to
+//! `BENCH_prefill.json` so the prefill-latency trajectory is tracked
+//! across PRs next to `BENCH_decode.json`.
 
+use rap::config::Method;
 use rap::experiments::bench_support::{budgets, BenchReport};
 use rap::manifest::Manifest;
-use rap::model::load_engine;
+use rap::model::synth::synth_engine;
+use rap::model::{load_engine, PrefillWorkspace};
 use rap::runtime::{PjrtContext, PjrtEngine};
-use rap::util::json::{num, s};
-use rap::util::stats::bench;
+use rap::util::json::{arr, num, obj, s};
+use rap::util::stats::{bench, bench_with_samples};
 
 fn main() {
     let (warm, budget) = budgets();
     let mut report = BenchReport::new("attention_latency");
-    let Ok(manifest) = Manifest::load_default() else {
-        println!("no artifacts; run `make artifacts` first");
-        return;
-    };
-    let corpus = manifest.eval_corpus().unwrap();
-    let model = "tinyllama";
-    let keys = ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"];
 
-    // (a) PJRT prefill bucket 128.
-    if let Ok(pctx) = PjrtContext::cpu() {
+    if let Ok(manifest) = Manifest::load_default() {
+        let corpus = manifest.eval_corpus().unwrap();
+        let model = "tinyllama";
+        let keys = ["baseline_r00", "svd_r30", "palu_r30", "rap_r30"];
+
+        // (a) PJRT prefill bucket 128.
+        if let Ok(pctx) = PjrtContext::cpu() {
+            let mut base = 0.0f64;
+            for key in keys {
+                let Ok(engine) = PjrtEngine::load(&pctx, &manifest, model, key) else { continue };
+                let tokens: Vec<i32> = corpus[..128].iter().map(|&b| b as i32).collect();
+                let st = bench(&format!("pjrt_prefill128/{key}"), warm, budget, || {
+                    let _ = engine.prefill(&pctx, "prefill128", &tokens, 1).unwrap();
+                });
+                if key == "baseline_r00" {
+                    base = st.mean_ns;
+                }
+                println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
+                report.record(
+                    &st,
+                    vec![("variant", s(key)), ("rel", num(st.mean_ns / base))],
+                );
+            }
+        }
+
+        // (b) Rust engine prefill of 128 tokens.  The workspace is hoisted
+        // out of the timed loop (its reconstruction scratch is
+        // method-dependent, so allocating it per sample would skew the
+        // per-variant ratios).
         let mut base = 0.0f64;
         for key in keys {
-            let Ok(engine) = PjrtEngine::load(&pctx, &manifest, model, key) else { continue };
-            let tokens: Vec<i32> = corpus[..128].iter().map(|&b| b as i32).collect();
-            let st = bench(&format!("pjrt_prefill128/{key}"), warm, budget, || {
-                let _ = engine.prefill(&pctx, "prefill128", &tokens, 1).unwrap();
+            let Ok(engine) = load_engine(&manifest, model, key) else { continue };
+            let prompt = &corpus[..128];
+            let mut ws = PrefillWorkspace::new(&engine, 160);
+            let st = bench(&format!("engine_prefill128/{key}"), warm, budget, || {
+                let mut cache = engine.new_cache(160);
+                engine.prefill_chunked(prompt, 128, &mut cache, &mut ws);
             });
             if key == "baseline_r00" {
                 base = st.mean_ns;
@@ -40,25 +70,89 @@ fn main() {
                 vec![("variant", s(key)), ("rel", num(st.mean_ns / base))],
             );
         }
+    } else {
+        println!("no artifacts; skipping PJRT/manifest sweeps");
     }
 
-    // (b) Rust engine prefill of 128 tokens.
-    let mut base = 0.0f64;
-    for key in keys {
-        let Ok(engine) = load_engine(&manifest, model, key) else { continue };
-        let prompt = &corpus[..128];
-        let st = bench(&format!("engine_prefill128/{key}"), warm, budget, || {
-            let mut cache = engine.new_cache(160);
-            let _ = engine.prefill(prompt, &mut cache);
-        });
-        if key == "baseline_r00" {
-            base = st.mean_ns;
+    // (c) Token-loop vs blocked chunked prefill — synthetic weights,
+    // always runs.  The token loop is the seed's prefill (T sequential
+    // step_inner calls); the blocked path is bit-identical to it
+    // (tests/prefill.rs), so this ratio is pure implementation speedup.
+    let max_samples = if std::env::var("RAP_BENCH_FAST").is_ok() { 3 } else { 10 };
+    let chunk = 128usize;
+    let mut variants = Vec::new();
+    let mut rap_speedup_2k = 0.0f64;
+    for method in [Method::Baseline, Method::Svd, Method::Palu, Method::Rap] {
+        let engine = synth_engine(method, 2);
+        for plen in [512usize, 2048] {
+            let s_max = plen + 8;
+            let prompt: Vec<u8> = (0..plen).map(|i| (i % 251) as u8).collect();
+            let tok_st = bench_with_samples(
+                &format!("prefill_token_loop/{plen}/{}", method.name()),
+                warm,
+                budget,
+                max_samples,
+                &mut || {
+                    let mut cache = engine.new_cache(s_max);
+                    let _ = engine.prefill_token_loop(&prompt, &mut cache);
+                },
+            );
+            println!("{}", tok_st.report());
+            let mut ws = PrefillWorkspace::new(&engine, s_max);
+            let blk_st = bench_with_samples(
+                &format!("prefill_blocked/{plen}/{}", method.name()),
+                warm,
+                budget,
+                max_samples,
+                &mut || {
+                    let mut cache = engine.new_cache(s_max);
+                    engine.prefill_chunked(&prompt, chunk, &mut cache, &mut ws);
+                },
+            );
+            println!("{}", blk_st.report());
+            let speedup = tok_st.mean_ns / blk_st.mean_ns;
+            println!(
+                "    -> {}: blocked prefill {speedup:.2}x vs token loop at {plen} tokens",
+                method.name()
+            );
+            if method == Method::Rap && plen == 2048 {
+                rap_speedup_2k = speedup;
+            }
+            report.record(
+                &tok_st,
+                vec![
+                    ("variant", s(method.name())),
+                    ("prompt", num(plen as f64)),
+                    ("kind", s("token_loop")),
+                ],
+            );
+            report.record(
+                &blk_st,
+                vec![
+                    ("variant", s(method.name())),
+                    ("prompt", num(plen as f64)),
+                    ("kind", s("blocked")),
+                    ("speedup", num(speedup)),
+                ],
+            );
+            variants.push(obj(vec![
+                ("method", s(method.name())),
+                ("prompt", num(plen as f64)),
+                ("token_loop_us", num(tok_st.mean_ns / 1e3)),
+                ("blocked_us", num(blk_st.mean_ns / 1e3)),
+                ("speedup", num(speedup)),
+            ]));
         }
-        println!("    -> {:.0}% of baseline", 100.0 * st.mean_ns / base);
-        report.record(
-            &st,
-            vec![("variant", s(key)), ("rel", num(st.mean_ns / base))],
-        );
     }
+    let summary = obj(vec![
+        ("bench", s("prefill_latency")),
+        ("chunk", num(chunk as f64)),
+        ("target_rap_speedup_2k", num(3.0)),
+        ("rap_speedup_2k", num(rap_speedup_2k)),
+        ("variants", arr(variants)),
+    ]);
+    let _ = std::fs::write("BENCH_prefill.json", summary.to_string_pretty());
+    println!("-> BENCH_prefill.json (rap {rap_speedup_2k:.2}x vs token loop at 2k prompt)");
+
     report.finish();
 }

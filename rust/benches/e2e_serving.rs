@@ -41,6 +41,7 @@ fn rust_engine_paged_sweep(report: &mut BenchReport, fast: bool) {
                     max_sessions: 8,
                     buckets: vec![1, 4, 8],
                     max_queue: 128,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 32 << 20,
             },
@@ -117,6 +118,7 @@ fn main() {
                     max_sessions: 4,
                     buckets: engine.decode_batches(),
                     max_queue: 128,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 32 << 20,
             },

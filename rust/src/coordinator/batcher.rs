@@ -21,6 +21,16 @@ pub struct BatcherConfig {
     pub buckets: Vec<usize>,
     /// Queue bound; submits beyond this are rejected (backpressure).
     pub max_queue: usize,
+    /// Prompt-token budget one scheduler tick may spend on prefill before
+    /// its decode round (Sarathi-style chunked prefill).  For backends
+    /// with `supports_chunked_prefill()`, long prompts are fed to
+    /// `Backend::prefill_chunk` in pieces of at most this many tokens, so
+    /// admitting a 2k-token prompt can never stall in-flight decode
+    /// sessions for more than one chunk.  Backends that cannot resume a
+    /// partial prompt receive it whole in a single call — the budget then
+    /// only bounds how many *prompts* one tick starts, not the length of
+    /// the stall.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for BatcherConfig {
@@ -29,6 +39,7 @@ impl Default for BatcherConfig {
             max_sessions: 8,
             buckets: vec![1, 4],
             max_queue: 1024,
+            prefill_chunk_tokens: 128,
         }
     }
 }

@@ -28,6 +28,16 @@ pub struct AggregateMetrics {
     pub rejected: u64,
     pub decode_batches: u64,
     pub decode_batch_occupancy: Welford,
+    /// Prefill chunks executed (Sarathi-style chunked admission).
+    pub prefill_chunks: u64,
+    /// Tokens per prefill chunk.
+    pub prefill_chunk_tokens: Welford,
+    /// Max prefill chunks executed between two consecutive decode rounds
+    /// while at least one session was waiting to decode — the chunked
+    /// admission interleave bound (1 when the per-tick prefill budget
+    /// equals one chunk: a long prompt delays in-flight decodes by at most
+    /// one chunk).
+    pub max_prefill_chunks_between_decodes: u64,
 }
 
 impl AggregateMetrics {
@@ -53,7 +63,8 @@ impl AggregateMetrics {
         format!(
             "requests={} rejected={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
              ttft: mean {:.1} ms (max {:.1})  decode: mean {:.2} ms/tok  queue: mean {:.1} ms\n\
-             decode batches={} mean occupancy={:.2}  peak kv blocks={}",
+             decode batches={} mean occupancy={:.2}  peak kv blocks={}\n\
+             prefill chunks={} mean tokens={:.1}  max decode stall={} chunks",
             self.requests,
             self.rejected,
             self.total_tokens,
@@ -66,6 +77,9 @@ impl AggregateMetrics {
             self.decode_batches,
             self.decode_batch_occupancy.mean(),
             self.peak_kv_blocks,
+            self.prefill_chunks,
+            self.prefill_chunk_tokens.mean(),
+            self.max_prefill_chunks_between_decodes,
         )
     }
 }

@@ -1,10 +1,17 @@
-//! The serve loop: admission → prefill → continuous decode, over an
-//! abstract `Backend` (PJRT or pure-Rust engine).
+//! The serve loop: admission → chunked prefill → continuous decode, over
+//! an abstract `Backend` (PJRT or pure-Rust engine).
+//!
+//! Prefill is Sarathi-style chunked: each tick spends at most
+//! `BatcherConfig::prefill_chunk_tokens` prompt tokens (fed to
+//! `Backend::prefill_chunk`) before running its decode round, so a long
+//! prompt admitted mid-stream delays in-flight decode sessions by at most
+//! one chunk — `AggregateMetrics::max_prefill_chunks_between_decodes`
+//! tracks the realised bound.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::{AggregateMetrics, RequestMetrics};
@@ -29,6 +36,30 @@ pub trait Backend {
     /// Create session state and run the prompt; returns last-token logits.
     fn prefill(&mut self, kv: &mut PagedKvCache, session: RequestId, prompt: &[u8])
         -> Result<Vec<f32>>;
+    /// Whether `prefill_chunk` can resume a partially-fed prompt
+    /// (`pos0 > 0`).  Backends answering `false` are only ever handed the
+    /// whole prompt in one call.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+    /// Run one bounded chunk of `session`'s prompt: `tokens` sit at
+    /// positions `[pos0, pos0 + len)`, `last` marks the chunk holding the
+    /// prompt's final token.  Returns `Some(last-token logits)` on the last
+    /// chunk, `None` otherwise.  The default forwards whole prompts to
+    /// [`Backend::prefill`] for backends without chunk support.
+    fn prefill_chunk(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        tokens: &[u8],
+        pos0: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        if pos0 != 0 || !last {
+            anyhow::bail!("backend does not support chunked prefill");
+        }
+        self.prefill(kv, session, tokens).map(Some)
+    }
     /// One decode step for a batch of (session, token, position).
     /// Returns logits per entry, in order.
     fn decode_batch(
@@ -68,15 +99,32 @@ struct Running {
     started: Instant,
 }
 
+/// An admitted request whose prompt is still being fed chunk-by-chunk.
+/// Its full token budget is already reserved in the paged allocator.
+struct Prefilling {
+    req: Request,
+    /// Prompt tokens already fed to the backend.
+    done: usize,
+    queue_ms: f64,
+    /// Admission instant — TTFT spans from here (including any decode
+    /// rounds interleaved between this prompt's chunks).
+    started: Instant,
+}
+
 /// Synchronous coordinator: drives a backend over a stream of requests.
 /// The server wraps it in a thread; benches call `run_to_completion`.
 pub struct Coordinator<B: Backend> {
     pub backend: B,
     batcher: Batcher,
     kv: PagedKvCache,
+    /// Admitted requests still mid-prefill, oldest first.
+    prefilling: VecDeque<Prefilling>,
     running: BTreeMap<RequestId, Running>,
     pub metrics: AggregateMetrics,
     finished: Vec<Response>,
+    /// Prefill chunks run since the last decode round while decodable
+    /// sessions were waiting (feeds `max_prefill_chunks_between_decodes`).
+    stalled_chunks: u64,
 }
 
 impl<B: Backend> Coordinator<B> {
@@ -90,9 +138,11 @@ impl<B: Backend> Coordinator<B> {
             backend,
             batcher: Batcher::new(cfg.batcher),
             kv,
+            prefilling: VecDeque::new(),
             running: BTreeMap::new(),
             metrics: AggregateMetrics::default(),
             finished: Vec::new(),
+            stalled_chunks: 0,
         }
     }
 
@@ -107,40 +157,83 @@ impl<B: Backend> Coordinator<B> {
     }
 
     pub fn pending(&self) -> usize {
-        self.batcher.queue_len() + self.running.len()
+        self.batcher.queue_len() + self.prefilling.len() + self.running.len()
     }
 
-    /// One scheduler tick: admit + prefill, then one decode round.
-    /// Returns responses completed during this tick.
+    /// One scheduler tick: admit, spend the tick's prefill-token budget in
+    /// chunks, then one decode round.  Returns responses completed during
+    /// this tick.
     pub fn tick(&mut self) -> Result<Vec<Response>> {
-        // 1. Admission + prefill.
+        // 1. Admission: reserve the full token budget and queue the prompt
+        // for chunked prefill.
         for req in self.batcher.admit(&mut self.kv) {
-            let t0 = Instant::now();
             let queue_ms = req
                 .arrival
                 .map(|a| a.elapsed().as_secs_f64() * 1e3)
                 .unwrap_or(0.0);
-            let logits = self.backend.prefill(&mut self.kv, req.id, &req.prompt)?;
-            let ttft_ms = queue_ms + t0.elapsed().as_secs_f64() * 1e3;
-            let next = argmax(&logits) as u8;
-            let pos = req.prompt.len();
-            self.running.insert(
-                req.id,
-                Running {
-                    generated: Vec::with_capacity(req.max_new),
-                    next_token: next,
-                    pos,
-                    ttft_ms,
-                    queue_ms,
-                    decode_ms: 0.0,
-                    started: t0,
-                    req,
-                },
-            );
+            self.prefilling.push_back(Prefilling {
+                req,
+                done: 0,
+                queue_ms,
+                started: Instant::now(),
+            });
         }
         self.metrics.peak_kv_blocks = self.metrics.peak_kv_blocks.max(self.kv.used_blocks());
 
-        // 2. Continuous decode round over all runnable sessions.
+        // 2. Chunked prefill: spend at most `prefill_chunk_tokens` prompt
+        // tokens, oldest request first, then fall through to the decode
+        // round — a long prompt can never freeze in-flight decodes.
+        let mut budget = self.batcher.cfg.prefill_chunk_tokens.max(1);
+        while budget > 0 {
+            let Some(mut p) = self.prefilling.pop_front() else { break };
+            let remaining = p.req.prompt.len() - p.done;
+            let take = if self.backend.supports_chunked_prefill() {
+                remaining.min(budget)
+            } else {
+                // Whole-prompt backends can't resume mid-prompt; the tick
+                // still bills the full length against its budget.
+                remaining
+            };
+            let last = p.done + take == p.req.prompt.len();
+            let logits = self.backend.prefill_chunk(
+                &mut self.kv,
+                p.req.id,
+                &p.req.prompt[p.done..p.done + take],
+                p.done,
+                last,
+            )?;
+            p.done += take;
+            budget = budget.saturating_sub(take.max(1));
+            self.metrics.prefill_chunks += 1;
+            self.metrics.prefill_chunk_tokens.add(take as f64);
+            if !self.running.is_empty() {
+                self.stalled_chunks += 1;
+            }
+            if last {
+                let logits =
+                    logits.ok_or_else(|| anyhow!("no logits for final prefill chunk"))?;
+                let next = argmax(&logits) as u8;
+                let pos = p.req.prompt.len();
+                let ttft_ms = p.queue_ms + p.started.elapsed().as_secs_f64() * 1e3;
+                self.running.insert(
+                    p.req.id,
+                    Running {
+                        generated: Vec::with_capacity(p.req.max_new),
+                        next_token: next,
+                        pos,
+                        ttft_ms,
+                        queue_ms: p.queue_ms,
+                        decode_ms: 0.0,
+                        started: p.started,
+                        req: p.req,
+                    },
+                );
+            } else {
+                self.prefilling.push_front(p);
+            }
+        }
+
+        // 3. Continuous decode round over all runnable sessions.
         let runnable: Vec<RequestId> = self
             .running
             .iter()
@@ -168,8 +261,17 @@ impl<B: Backend> Coordinator<B> {
                 r.decode_ms += step_ms / entries.len() as f64;
             }
         }
+        if !runnable.is_empty() {
+            // A decode round ran: record how many prefill chunks the
+            // waiting sessions sat through since the previous round.
+            self.metrics.max_prefill_chunks_between_decodes = self
+                .metrics
+                .max_prefill_chunks_between_decodes
+                .max(self.stalled_chunks);
+            self.stalled_chunks = 0;
+        }
 
-        // 3. Collect completions.
+        // 4. Collect completions.
         let done: Vec<RequestId> = self
             .running
             .iter()
@@ -290,6 +392,7 @@ mod tests {
                     max_sessions,
                     buckets: vec![1, 4],
                     max_queue: 100,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 16 << 20,
             },
@@ -347,5 +450,102 @@ mod tests {
         assert_eq!(m.generated_tokens, 4);
         assert!(m.ttft_ms >= 0.0 && m.total_ms >= 0.0);
         assert!(c.metrics.throughput_tps() > 0.0);
+        assert_eq!(c.metrics.prefill_chunks, 1, "whole prompt in one chunk");
+    }
+
+    /// Toy backend with real chunked-prefill support: tracks how many
+    /// prompt tokens each session has been fed and insists chunks arrive
+    /// in order.
+    struct ChunkedToy {
+        s_max: usize,
+        fed: std::collections::BTreeMap<RequestId, usize>,
+    }
+
+    impl Backend for ChunkedToy {
+        fn s_max(&self) -> usize {
+            self.s_max
+        }
+        fn supports_chunked_prefill(&self) -> bool {
+            true
+        }
+        fn prefill_chunk(
+            &mut self,
+            _kv: &mut PagedKvCache,
+            session: RequestId,
+            tokens: &[u8],
+            pos0: usize,
+            last: bool,
+        ) -> Result<Option<Vec<f32>>> {
+            let fed = self.fed.entry(session).or_insert(0);
+            assert_eq!(*fed, pos0, "chunks must arrive in prompt order");
+            *fed += tokens.len();
+            Ok(if last {
+                Some(ToyBackend::logits_for(*tokens.last().unwrap_or(&0)))
+            } else {
+                None
+            })
+        }
+        fn prefill(
+            &mut self,
+            kv: &mut PagedKvCache,
+            session: RequestId,
+            prompt: &[u8],
+        ) -> Result<Vec<f32>> {
+            Ok(self.prefill_chunk(kv, session, prompt, 0, true)?.unwrap())
+        }
+        fn decode_batch(
+            &mut self,
+            _kv: &mut PagedKvCache,
+            entries: &[(RequestId, u8, usize)],
+        ) -> Result<Vec<Vec<f32>>> {
+            Ok(entries.iter().map(|&(_, t, _)| ToyBackend::logits_for(t)).collect())
+        }
+        fn drop_session(&mut self, session: RequestId) {
+            self.fed.remove(&session);
+        }
+    }
+
+    #[test]
+    fn long_prompt_admission_interleaves_with_decode() {
+        // A 2k-token prompt admitted mid-stream must not freeze the
+        // in-flight session: with a 256-token per-tick budget it is fed in
+        // 8 chunks, and every decode round waits on at most ONE chunk.
+        let shape = CacheShape {
+            n_layers: 2,
+            n_kv_heads: 2,
+            k_width: vec![8, 8],
+            v_width: vec![8, 8],
+        };
+        let mut c = Coordinator::new(
+            ChunkedToy { s_max: 4096, fed: Default::default() },
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 2,
+                    buckets: vec![1, 4],
+                    max_queue: 16,
+                    prefill_chunk_tokens: 256,
+                },
+                kv_budget_bytes: 64 << 20,
+            },
+        );
+        // In-flight session decoding away...
+        assert!(c.submit(Request::new(1, vec![1, 2, 3], 64)));
+        c.tick().unwrap();
+        assert_eq!(c.running.len(), 1, "session 1 decoding");
+        // ...when a 2k-token prompt arrives.
+        assert!(c.submit(Request::new(2, vec![0u8; 2048], 4)));
+        let mut responses = c.run_to_completion().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 2);
+        assert_eq!(responses[0].generated.len(), 64);
+        assert_eq!(responses[1].generated.len(), 4);
+        // 1 chunk for session 1's prompt + ceil(2048/256) for session 2's.
+        assert_eq!(c.metrics.prefill_chunks, 1 + 8);
+        assert_eq!(
+            c.metrics.max_prefill_chunks_between_decodes, 1,
+            "an in-flight decode round waits on at most one prefill chunk"
+        );
+        assert!(c.metrics.prefill_chunk_tokens.max <= 256.0);
     }
 }

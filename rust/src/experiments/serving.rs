@@ -44,6 +44,7 @@ pub fn e2e(ctx: &ExpContext) -> Result<()> {
                         max_sessions: 4,
                         buckets: engine.decode_batches(),
                         max_queue: 256,
+                        ..Default::default()
                     },
                     kv_budget_bytes: 32 << 20,
                 },

@@ -150,6 +150,14 @@ pub trait KvLayerView {
     fn for_k_runs<F: FnMut(usize, &[f32])>(&self, head: usize, s: usize, f: F);
     /// Same for V rows.
     fn for_v_runs<F: FnMut(usize, &[f32])>(&self, head: usize, s: usize, f: F);
+    /// Visit the contiguous runs of K rows covering tokens `[t0, t0 + n)`
+    /// of `head` *mutably*, in ascending token order — the chunked-prefill
+    /// write path: one callback per run instead of one row lookup per
+    /// token.  The callback receives the first token index of the run and
+    /// a mutable slice of `run_len * k_width` floats.
+    fn for_k_runs_mut<F: FnMut(usize, &mut [f32])>(&mut self, head: usize, t0: usize, n: usize, f: F);
+    /// Same for V rows.
+    fn for_v_runs_mut<F: FnMut(usize, &mut [f32])>(&mut self, head: usize, t0: usize, n: usize, f: F);
 }
 
 /// One session × one layer window into the paged store: rows are addressed
@@ -169,6 +177,12 @@ pub struct PagedSeqLayer<'a> {
 
 // SAFETY: see `LayerStore` — disjoint blocks per session.
 unsafe impl Send for PagedSeqLayer<'_> {}
+// SAFETY: every `&self` method only reads; mutation requires `&mut self`,
+// which Rust's borrow rules keep exclusive.  Sharing a view across the
+// chunked-prefill attention workers (read-only score/context sweeps) is
+// therefore sound — the chunk's K/V rows are fully written before the
+// shared borrow is taken.
+unsafe impl Sync for PagedSeqLayer<'_> {}
 
 impl PagedSeqLayer<'_> {
     #[inline]
@@ -236,6 +250,38 @@ impl KvLayerView for PagedSeqLayer<'_> {
             };
             f(t0, rows);
             t0 += run;
+        }
+    }
+
+    fn for_k_runs_mut<F: FnMut(usize, &mut [f32])>(&mut self, head: usize, t0: usize, n: usize, mut f: F) {
+        let (mut t, end) = (t0, t0 + n);
+        while t < end {
+            // A chunk may start mid-block: the first run ends at the block
+            // boundary, later runs are whole blocks (or the chunk tail).
+            let run = (end - t).min(BLOCK_TOKENS - t % BLOCK_TOKENS);
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut(
+                    self.k_base.add(self.k_off(head, t)),
+                    run * self.k_width,
+                )
+            };
+            f(t, rows);
+            t += run;
+        }
+    }
+
+    fn for_v_runs_mut<F: FnMut(usize, &mut [f32])>(&mut self, head: usize, t0: usize, n: usize, mut f: F) {
+        let (mut t, end) = (t0, t0 + n);
+        while t < end {
+            let run = (end - t).min(BLOCK_TOKENS - t % BLOCK_TOKENS);
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut(
+                    self.v_base.add(self.v_off(head, t)),
+                    run * self.v_width,
+                )
+            };
+            f(t, rows);
+            t += run;
         }
     }
 }
@@ -641,6 +687,47 @@ mod tests {
             seen = t0 + rows.len() / sh.v_width[1];
         });
         assert_eq!(seen, s);
+    }
+
+    #[test]
+    fn mut_runs_cover_chunks_starting_mid_block() {
+        let sh = shape(6, 4);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 8);
+        let total = BLOCK_TOKENS * 3;
+        c.reserve(5, total).unwrap();
+        let (pages, store) = c.tables_and_ptrs().unwrap();
+        let mut view = unsafe { store.seq_layer(2, pages.blocks(5).unwrap()) };
+        // Write a chunk that starts mid-block and crosses two block seams.
+        let (t0, n) = (BLOCK_TOKENS - 3, BLOCK_TOKENS + 7);
+        let mut starts = Vec::new();
+        let mut covered = 0usize;
+        view.for_k_runs_mut(0, t0, n, |run_t0, rows| {
+            starts.push(run_t0);
+            assert_eq!(run_t0, t0 + covered, "runs in ascending token order");
+            let w = sh.k_width[2];
+            for (i, chunk) in rows.chunks_exact_mut(w).enumerate() {
+                chunk[0] = (run_t0 + i) as f32;
+            }
+            covered += rows.len() / w;
+        });
+        assert_eq!(covered, n);
+        assert_eq!(starts[0], t0);
+        // The first run stops at the block boundary.
+        assert_eq!(starts[1], BLOCK_TOKENS);
+        for t in t0..t0 + n {
+            assert_eq!(view.k_row(0, t)[0], t as f32, "row {t} via row read");
+        }
+        // V visitor: same coverage, disjoint storage.
+        let mut seen = 0usize;
+        view.for_v_runs_mut(1, t0, n, |run_t0, rows| {
+            let w = sh.v_width[2];
+            for (i, chunk) in rows.chunks_exact_mut(w).enumerate() {
+                chunk[1] = -((run_t0 + i) as f32);
+            }
+            seen += rows.len() / w;
+        });
+        assert_eq!(seen, n);
+        assert_eq!(view.v_row(1, t0 + n - 1)[1], -((t0 + n - 1) as f32));
     }
 
     #[test]

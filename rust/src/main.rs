@@ -175,6 +175,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     max_sessions: sessions,
                     buckets: engine.decode_batches(),
                     max_queue: 512,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 128 << 20,
             },
@@ -208,6 +209,7 @@ fn cmd_bench_serving(args: &Args) -> Result<()> {
                 max_sessions: args.get_usize("sessions", 4),
                 buckets: engine.decode_batches(),
                 max_queue: 1024,
+                ..Default::default()
             },
             kv_budget_bytes: 64 << 20,
         },

@@ -3,8 +3,10 @@
 //!
 //! Session KV state lives in the coordinator's storage-backed
 //! `PagedKvCache` (`wants_paged_storage`), not in per-session host vectors:
-//! prefill writes latent rows through the page table, and `decode_batch`
-//! runs the engine's layer-major batched step over all entries at once —
+//! prefill runs the engine's block-parallel chunk kernel
+//! (`Engine::prefill_chunk_paged`) — one GEMM per weight matrix per chunk,
+//! chunked admission feeds it bounded slices — and `decode_batch` runs the
+//! layer-major batched step over all entries at once.  Both paths are
 //! allocation-free in steady state apart from the logits vectors the
 //! `Backend` trait returns.
 
@@ -15,14 +17,25 @@ use anyhow::Result;
 use crate::coordinator::scheduler::Backend;
 use crate::coordinator::RequestId;
 use crate::kvcache::{KvLayerView, PagedKvCache};
-use crate::model::{BatchWorkspace, Engine};
+use crate::model::{BatchWorkspace, Engine, PrefillWorkspace};
 
 pub struct RustBackend<'a> {
     pub engine: &'a Engine,
     s_max: usize,
     batch: BatchWorkspace,
+    prefill_ws: PrefillWorkspace,
     sessions: BTreeSet<RequestId>,
     /// Optional int4 round-trip of newly written latent rows (Fig. 12).
+    ///
+    /// Quantization is **chunk-granular** on the prefill path: a chunk's
+    /// rows are round-tripped after the chunk completes, so attention
+    /// within the in-flight chunk reads full-precision rows while every
+    /// earlier chunk is read quantized — the semantics of a real blocked
+    /// quantized-KV prefill (the current chunk lives in working memory,
+    /// only the cache is int4).  Decode keeps per-token granularity.
+    /// Consequently quantized prefill numerics depend on the chunk size
+    /// (`BatcherConfig::prefill_chunk_tokens`), unlike the pre-chunking
+    /// per-token round-trip.
     pub quantize_kv: bool,
 }
 
@@ -30,6 +43,7 @@ impl<'a> RustBackend<'a> {
     pub fn new(engine: &'a Engine, s_max: usize) -> RustBackend<'a> {
         RustBackend {
             batch: BatchWorkspace::new(engine, s_max),
+            prefill_ws: PrefillWorkspace::new(engine, s_max),
             engine,
             s_max,
             sessions: BTreeSet::new(),
@@ -41,17 +55,18 @@ impl<'a> RustBackend<'a> {
         self.sessions.len()
     }
 
-    /// int4 round-trip the rows just written at each entry's position.
-    fn quantize_step(&self, kv: &mut PagedKvCache, entries: &[(RequestId, u8, usize)]) {
-        if !self.quantize_kv {
+    /// int4 round-trip the rows just written at positions
+    /// `[pos0, pos0 + n)` of `sid`.
+    fn quantize_range(&self, kv: &mut PagedKvCache, sid: RequestId, pos0: usize, n: usize) {
+        if !self.quantize_kv || n == 0 {
             return;
         }
         let (pages, store) = kv.tables_and_ptrs().expect("storage-backed kv");
-        for &(sid, _, pos) in entries {
-            let blocks = pages.blocks(sid).expect("session reserved");
-            for l in 0..self.engine.cfg.n_layers {
-                // SAFETY: one view at a time, single-threaded loop.
-                let mut view = unsafe { store.seq_layer(l, blocks) };
+        let blocks = pages.blocks(sid).expect("session reserved");
+        for l in 0..self.engine.cfg.n_layers {
+            // SAFETY: one view at a time, single-threaded loop.
+            let mut view = unsafe { store.seq_layer(l, blocks) };
+            for pos in pos0..pos0 + n {
                 for h in 0..self.engine.cfg.n_kv_heads {
                     crate::kvcache::quant::roundtrip(view.k_row_mut(h, pos));
                     crate::kvcache::quant::roundtrip(view.v_row_mut(h, pos));
@@ -70,21 +85,41 @@ impl<'a> Backend for RustBackend<'a> {
         true
     }
 
-    fn prefill(&mut self, kv: &mut PagedKvCache, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
-        if prompt.is_empty() {
-            anyhow::bail!("empty prompt");
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        tokens: &[u8],
+        pos0: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        if tokens.is_empty() {
+            // Covers the whole-prompt case AND the degenerate empty
+            // last-chunk shape: returning logits for a zero-length chunk
+            // would hand back another request's stale workspace contents.
+            anyhow::bail!("empty prefill chunk (session {session}, pos {pos0})");
+        }
+        if pos0 == 0 {
+            self.sessions.insert(session);
         }
         // Under the coordinator the full budget is already reserved; this
         // only allocates blocks for standalone use.
-        kv.ensure_tokens(session, prompt.len())?;
-        self.sessions.insert(session);
-        for (i, &t) in prompt.iter().enumerate() {
-            let last = i + 1 == prompt.len();
-            self.engine
-                .decode_batch_paged(&[(session, t, i)], kv, &mut self.batch, last)?;
-            self.quantize_step(kv, &[(session, t, i)]);
+        kv.ensure_tokens(session, pos0 + tokens.len())?;
+        self.engine
+            .prefill_chunk_paged(session, tokens, pos0, kv, &mut self.prefill_ws, last)?;
+        self.quantize_range(kv, session, pos0, tokens.len());
+        Ok(if last { Some(self.prefill_ws.logits().to_vec()) } else { None })
+    }
+
+    fn prefill(&mut self, kv: &mut PagedKvCache, session: RequestId, prompt: &[u8]) -> Result<Vec<f32>> {
+        match self.prefill_chunk(kv, session, prompt, 0, true)? {
+            Some(logits) => Ok(logits),
+            None => unreachable!("last chunk always returns logits"),
         }
-        Ok(self.batch.logits_row(0).to_vec())
     }
 
     fn decode_batch(
@@ -100,7 +135,9 @@ impl<'a> Backend for RustBackend<'a> {
         }
         self.engine
             .decode_batch_paged(entries, kv, &mut self.batch, true)?;
-        self.quantize_step(kv, entries);
+        for &(sid, _, pos) in entries {
+            self.quantize_range(kv, sid, pos, 1);
+        }
         Ok((0..entries.len())
             .map(|i| self.batch.logits_row(i).to_vec())
             .collect())

@@ -35,6 +35,21 @@
 //! per-row decode verbatim; it is the oracle the workspace path is tested
 //! against bitwise, and the baseline `benches/decode_latency.rs` reports
 //! speedups over in `BENCH_decode.json`.
+//!
+//! ## Prefill paths
+//!
+//! Prompt processing is block-parallel: [`Engine::prefill_chunk_dense`] /
+//! [`Engine::prefill_chunk_paged`] run a whole prompt chunk token-major —
+//! one GEMM per weight matrix per chunk (`tensor::ops::matmul_rows_into`,
+//! per-row arithmetic identical to the token loop's `vecmat_into`), RoPE
+//! applied to the chunk in place, the chunk's latent K/V rows written to
+//! the cache run-by-run, and causal attention fanned across workers per
+//! query row with the same blocked kernels as decode.  Scratch lives in a
+//! reusable [`PrefillWorkspace`] (zero steady-state allocations, same
+//! contract as [`DecodeWorkspace`]).  [`Engine::prefill_token_loop`] keeps
+//! the original token-by-token prefill as the bitwise oracle
+//! (`tests/prefill.rs`) and the `benches/attention_latency.rs` /
+//! `BENCH_prefill.json` baseline.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -44,10 +59,10 @@ use crate::config::{Method, ModelConfig, VariantSpec};
 use crate::kvcache::{CacheShape, KvLayerView, PagedKvCache};
 use crate::model::weights::Weights;
 use crate::rap::plan::LayerPlan;
-use crate::rope::apply_full;
+use crate::rope::{apply_full, apply_full_tokens};
 use crate::tensor::ops::{
-    add_inplace, axpy_rows, dot, dot_rows_scaled, kernel_threads, rms_norm, silu,
-    softmax_inplace, vecmat, vecmat_into,
+    add_inplace, axpy_rows, dot, dot_rows_scaled, kernel_threads, matmul_rows_into, rms_norm,
+    silu, softmax_inplace, vecmat, vecmat_into,
 };
 use crate::tensor::Tensor;
 use crate::util::threadpool::scoped_chunks_indexed;
@@ -134,6 +149,20 @@ impl KvLayerView for LayerCache {
         if s > 0 {
             let o = head * self.s_max * self.v_width;
             f(0, &self.v[o..o + s * self.v_width]);
+        }
+    }
+
+    fn for_k_runs_mut<F: FnMut(usize, &mut [f32])>(&mut self, head: usize, t0: usize, n: usize, mut f: F) {
+        if n > 0 {
+            let o = (head * self.s_max + t0) * self.k_width;
+            f(t0, &mut self.k[o..o + n * self.k_width]);
+        }
+    }
+
+    fn for_v_runs_mut<F: FnMut(usize, &mut [f32])>(&mut self, head: usize, t0: usize, n: usize, mut f: F) {
+        if n > 0 {
+            let o = (head * self.s_max + t0) * self.v_width;
+            f(t0, &mut self.v[o..o + n * self.v_width]);
         }
     }
 }
@@ -341,6 +370,109 @@ impl BatchWorkspace {
 /// worker-exclusive region (same idiom as the matmul kernel's `OutPtr`).
 struct SendPtr<T>(*mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Chunk-sized prefill scratch, token-major: every buffer the blocked
+/// prefill needs for one prompt chunk, sized for the engine's widest layer.
+/// Chunk buffers only ever grow (first call at each chunk size), so
+/// steady-state chunked prefill performs zero heap allocations — the same
+/// contract as [`DecodeWorkspace`], asserted by `tests/alloc_free.rs`.
+pub struct PrefillWorkspace {
+    s_max: usize,
+    chunk_capacity: usize,
+    d_model: usize,
+    mlp: usize,
+    row_q: usize,
+    row_kl: usize,
+    row_vl: usize,
+    row_ctx: usize,
+    /// Chunk hidden states [T, d_model].
+    x: Vec<f32>,
+    /// Normed hidden states [T, d_model] (and the logits head's scratch).
+    h: Vec<f32>,
+    /// Rotated Q rows, tight-packed [T, H * q_width(l)].
+    q: Vec<f32>,
+    /// Latent K rows, tight-packed [T, Hkv * k_width(l)].
+    kl: Vec<f32>,
+    /// Latent V rows, tight-packed [T, Hkv * v_width(l)].
+    vl: Vec<f32>,
+    /// Per-head context vectors, tight-packed [T, H * ctx_width(l)].
+    ctx: Vec<f32>,
+    /// d_model-sized projection outputs [T, d_model].
+    o: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    /// SVD/PaLU reconstructed K over the whole visible context,
+    /// [Hkv, s_end, dh] — built once per (layer, chunk) and shared by every
+    /// query row, instead of once per token as the token loop does.
+    recon_k: Vec<f32>,
+    recon_v: Vec<f32>,
+    /// Per-worker score rows, [kernel_threads(), s_max].
+    scores: Vec<f32>,
+    /// Final-token logits (filled when the chunk closes the prompt).
+    logits: Vec<f32>,
+}
+
+impl PrefillWorkspace {
+    pub fn new(engine: &Engine, s_max: usize) -> PrefillWorkspace {
+        let cfg = &engine.cfg;
+        let (h_n, hkv, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim);
+        let max_qw = (0..cfg.n_layers).map(|l| engine.q_width(l)).max().unwrap_or(dh);
+        let max_kw = engine.spec.k_rank.iter().copied().max().unwrap_or(dh);
+        let max_vw = engine.spec.v_rank.iter().copied().max().unwrap_or(dh);
+        let max_cw = (0..cfg.n_layers).map(|l| engine.ctx_width(l)).max().unwrap_or(dh);
+        let recon_k_n = if engine.spec.method.reconstructs_k() { hkv * s_max * dh } else { 0 };
+        let recon_v_n = if engine.spec.method.reconstructs_v() { hkv * s_max * dh } else { 0 };
+        PrefillWorkspace {
+            s_max,
+            chunk_capacity: 0,
+            d_model: cfg.d_model,
+            mlp: cfg.mlp_hidden,
+            row_q: h_n * max_qw,
+            row_kl: hkv * max_kw,
+            row_vl: hkv * max_vw,
+            row_ctx: h_n * max_cw,
+            x: Vec::new(),
+            h: Vec::new(),
+            q: Vec::new(),
+            kl: Vec::new(),
+            vl: Vec::new(),
+            ctx: Vec::new(),
+            o: Vec::new(),
+            gate: Vec::new(),
+            up: Vec::new(),
+            recon_k: vec![0.0; recon_k_n],
+            recon_v: vec![0.0; recon_v_n],
+            scores: vec![0.0; kernel_threads() * s_max],
+            logits: vec![0.0; cfg.vocab],
+        }
+    }
+
+    /// Longest context this workspace can attend over.
+    pub fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    /// Logits of the prompt's final token, valid after the chunk that was
+    /// run with `want_logits`.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if n > self.chunk_capacity {
+            self.x.resize(n * self.d_model, 0.0);
+            self.h.resize(n * self.d_model, 0.0);
+            self.o.resize(n * self.d_model, 0.0);
+            self.q.resize(n * self.row_q, 0.0);
+            self.kl.resize(n * self.row_kl, 0.0);
+            self.vl.resize(n * self.row_vl, 0.0);
+            self.ctx.resize(n * self.row_ctx, 0.0);
+            self.gate.resize(n * self.mlp, 0.0);
+            self.up.resize(n * self.mlp, 0.0);
+            self.chunk_capacity = n;
+        }
+    }
+}
 
 pub struct Engine {
     pub cfg: ModelConfig,
@@ -867,10 +999,340 @@ impl Engine {
         Ok(())
     }
 
-    /// Prefill a prompt, returning logits at the last position.  Only the
-    /// final token pays for the vocabulary head; intermediate positions run
-    /// the allocation-free layer stack alone.
+    /// One full transformer layer for a whole prompt chunk, token-major:
+    /// per-layer projections run as one GEMM over the chunk
+    /// (`matmul_rows_into`, per-row arithmetic identical to the token
+    /// loop's `vecmat_into`), RoPE rotates the chunk in place, the chunk's
+    /// latent K/V rows land in the cache run-by-run, and causal attention
+    /// fans query rows across `scoped_chunks_indexed` workers using the
+    /// same blocked `dot_rows_scaled`/`axpy_rows` kernels as decode — so
+    /// the blocked path is **bit-identical** to token-by-token prefill
+    /// (asserted in `tests/prefill.rs`).
+    ///
+    /// For SVD/PaLU the reconstruction of the visible context is built once
+    /// per (layer, chunk) and shared by every query row — each row's
+    /// reconstruction arithmetic is position-independent, so this too is
+    /// bit-identical to the token loop's per-token rebuilds while removing
+    /// their O(T²) reconstruction cost.
+    fn prefill_chunk_layer<L: KvLayerView + Sync>(
+        &self,
+        l: usize,
+        layer: &Layer,
+        n: usize,
+        pos0: usize,
+        kv: &mut L,
+        ws: &mut PrefillWorkspace,
+    ) {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let dh = cfg.head_dim;
+        let hkv = cfg.n_kv_heads;
+        let h_n = cfg.n_heads;
+        let qw = self.q_width(l);
+        let cw = self.ctx_width(l);
+        let (kw, vw) = (self.spec.k_rank[l], self.spec.v_rank[l]);
+        let threads = kernel_threads().min(n);
+        let PrefillWorkspace {
+            x,
+            h,
+            q,
+            kl,
+            vl,
+            ctx,
+            o,
+            gate,
+            up,
+            recon_k,
+            recon_v,
+            scores,
+            s_max,
+            ..
+        } = ws;
+
+        // Attention norm, per token row.
+        for (xi, hi) in x[..n * d].chunks_exact(d).zip(h[..n * d].chunks_exact_mut(d)) {
+            rms_norm(xi, &layer.attn_norm.data, cfg.norm_eps, hi);
+        }
+
+        // Q/K/V projections: one GEMM per weight for the whole chunk, then
+        // RoPE over the chunk in place (same per-row rotation the token
+        // loop applies after copying each row into the cache).
+        match &layer.attn {
+            AttnKind::Baseline { wq, wk, wv, .. } => {
+                self.gemm_counted(&h[..n * d], wq, &mut q[..n * h_n * dh], threads);
+                self.gemm_counted(&h[..n * d], wk, &mut kl[..n * hkv * dh], threads);
+                self.gemm_counted(&h[..n * d], wv, &mut vl[..n * hkv * dh], threads);
+                apply_full_tokens(&mut q[..n * h_n * dh], h_n, dh, pos0, cfg.pairing, cfg.rope_theta);
+                apply_full_tokens(&mut kl[..n * hkv * dh], hkv, dh, pos0, cfg.pairing, cfg.rope_theta);
+            }
+            AttnKind::Svd { wq, a_k, a_v, .. } | AttnKind::Palu { wq, a_k, a_v, .. } => {
+                self.gemm_counted(&h[..n * d], wq, &mut q[..n * h_n * dh], threads);
+                self.gemm_counted(&h[..n * d], a_k, &mut kl[..n * hkv * kw], threads);
+                self.gemm_counted(&h[..n * d], a_v, &mut vl[..n * hkv * vw], threads);
+                // Pre-RoPE latents cached; only Q rotates.
+                apply_full_tokens(&mut q[..n * h_n * dh], h_n, dh, pos0, cfg.pairing, cfg.rope_theta);
+            }
+            AttnKind::Rap {
+                wq_t, a_k, a_v, plan, ..
+            } => {
+                self.gemm_counted(&h[..n * d], wq_t, &mut q[..n * h_n * kw], threads);
+                self.gemm_counted(&h[..n * d], a_k, &mut kl[..n * hkv * kw], threads);
+                self.gemm_counted(&h[..n * d], a_v, &mut vl[..n * hkv * vw], threads);
+                // Index-aware RoPE on the latent chunk — the fused hot path.
+                plan.q_table.apply_fused_chunk(&mut q[..n * h_n * kw], h_n, pos0);
+                plan.k_table.apply_fused_chunk(&mut kl[..n * hkv * kw], hkv, pos0);
+            }
+        }
+
+        // Write the chunk's K/V rows into the cache in one pass per head
+        // (run-by-run through the page table for the paged layout).
+        for hd in 0..hkv {
+            kv.for_k_runs_mut(hd, pos0, n, |t0, rows| {
+                for (j, dst) in rows.chunks_exact_mut(kw).enumerate() {
+                    let i = t0 - pos0 + j;
+                    dst.copy_from_slice(&kl[(i * hkv + hd) * kw..(i * hkv + hd + 1) * kw]);
+                }
+            });
+            kv.for_v_runs_mut(hd, pos0, n, |t0, rows| {
+                for (j, dst) in rows.chunks_exact_mut(vw).enumerate() {
+                    let i = t0 - pos0 + j;
+                    dst.copy_from_slice(&vl[(i * hkv + hd) * vw..(i * hkv + hd + 1) * vw]);
+                }
+            });
+        }
+
+        // Reconstruction for the factorization baselines: once per chunk,
+        // covering the whole visible context [0, pos0 + n).
+        let s_end = pos0 + n;
+        let (use_rk, use_rv) = match &layer.attn {
+            AttnKind::Svd { b_k, b_v, .. } => {
+                self.reconstruct_into(&*kv, b_k, true, s_end, recon_k);
+                self.reconstruct_into(&*kv, b_v, false, s_end, recon_v);
+                (true, true)
+            }
+            AttnKind::Palu { b_k, .. } => {
+                self.reconstruct_into(&*kv, b_k, true, s_end, recon_k);
+                (true, false)
+            }
+            _ => (false, false),
+        };
+
+        // Causal attention, one query row per chunk token, fanned across
+        // workers.  All chunk K/V rows are already written, and row t only
+        // reads rows [0, t] — the same visible set as the token loop.
+        let group = cfg.group_size();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let kv_r: &L = kv;
+        let q_r: &[f32] = &q[..n * h_n * qw];
+        let recon_k_r: &[f32] = recon_k;
+        let recon_v_r: &[f32] = recon_v;
+        let s_cap = *s_max;
+        let ctx_ptr = SendPtr(ctx.as_mut_ptr());
+        let scores_ptr = SendPtr(scores.as_mut_ptr());
+        scoped_chunks_indexed(n, threads, |widx, range| {
+            // SAFETY: each worker owns a unique score row (by worker index)
+            // and disjoint ctx rows (by token index); K/V and the
+            // reconstruction are only read.
+            let sc = unsafe { std::slice::from_raw_parts_mut(scores_ptr.0.add(widx * s_cap), s_cap) };
+            for i in range {
+                let pos = pos0 + i;
+                let s = pos + 1;
+                let ctx_i =
+                    unsafe { std::slice::from_raw_parts_mut(ctx_ptr.0.add(i * h_n * cw), h_n * cw) };
+                for hq in 0..h_n {
+                    let hk = hq / group;
+                    let qrow = &q_r[(i * h_n + hq) * qw..(i * h_n + hq + 1) * qw];
+                    if use_rk {
+                        dot_rows_scaled(
+                            qrow,
+                            &recon_k_r[hk * s_end * dh..hk * s_end * dh + s * dh],
+                            dh,
+                            scale,
+                            &mut sc[..s],
+                        );
+                        self.flops.add(2 * (s * dh) as u64);
+                    } else {
+                        kv_r.for_k_runs(hk, s, |t0, rows| {
+                            let m = rows.len() / kw;
+                            dot_rows_scaled(qrow, rows, kw, scale, &mut sc[t0..t0 + m]);
+                        });
+                        self.flops.add(2 * (s * kw) as u64);
+                    }
+                    softmax_inplace(&mut sc[..s]);
+                    let c = &mut ctx_i[hq * cw..(hq + 1) * cw];
+                    c.fill(0.0);
+                    if use_rv {
+                        axpy_rows(&sc[..s], &recon_v_r[hk * s_end * dh..hk * s_end * dh + s * dh], dh, c);
+                    } else {
+                        kv_r.for_v_runs(hk, s, |t0, rows| {
+                            let m = rows.len() / vw;
+                            axpy_rows(&sc[t0..t0 + m], rows, vw, c);
+                        });
+                    }
+                    self.flops.add(2 * (s * cw) as u64);
+                }
+            }
+        });
+
+        // Output projection + residual, then the MLP — all chunk GEMMs.
+        let wo = match &layer.attn {
+            AttnKind::Baseline { wo, .. } | AttnKind::Svd { wo, .. } => wo,
+            AttnKind::Palu { wo_t, .. } | AttnKind::Rap { wo_t, .. } => wo_t,
+        };
+        self.gemm_counted(&ctx[..n * h_n * cw], wo, &mut o[..n * d], threads);
+        add_inplace(&mut x[..n * d], &o[..n * d]);
+
+        for (xi, hi) in x[..n * d].chunks_exact(d).zip(h[..n * d].chunks_exact_mut(d)) {
+            rms_norm(xi, &layer.mlp_norm.data, cfg.norm_eps, hi);
+        }
+        let mlp = cfg.mlp_hidden;
+        self.gemm_counted(&h[..n * d], &layer.w_gate, &mut gate[..n * mlp], threads);
+        self.gemm_counted(&h[..n * d], &layer.w_up, &mut up[..n * mlp], threads);
+        for (gv, uv) in gate[..n * mlp].iter_mut().zip(up[..n * mlp].iter()) {
+            *gv = silu(*gv) * *uv;
+        }
+        self.gemm_counted(&gate[..n * mlp], &layer.w_down, &mut o[..n * d], threads);
+        add_inplace(&mut x[..n * d], &o[..n * d]);
+    }
+
+    /// FLOP-counted chunk GEMM (rows = chunk tokens).
+    #[inline]
+    fn gemm_counted(&self, a: &[f32], w: &Tensor, out: &mut [f32], threads: usize) {
+        let (k, nn) = w.dims2();
+        self.flops.add(2 * ((a.len() / k) * k * nn) as u64);
+        matmul_rows_into(a, w, out, threads);
+    }
+
+    /// Blocked prefill of `tokens` at positions `[pos0, pos0 + len)` over a
+    /// dense per-sequence cache, layer-major (weights touched once per
+    /// chunk).  `want_logits` computes the vocabulary head for the chunk's
+    /// final token into the workspace ([`PrefillWorkspace::logits`]).
+    pub fn prefill_chunk_dense(
+        &self,
+        tokens: &[u8],
+        pos0: usize,
+        cache: &mut Cache,
+        ws: &mut PrefillWorkspace,
+        want_logits: bool,
+    ) {
+        let n = tokens.len();
+        if n == 0 {
+            return;
+        }
+        assert!(pos0 + n <= cache.layers[0].s_max, "cache overflow at {}", pos0 + n);
+        assert!(pos0 + n <= ws.s_max, "workspace overflow at {}", pos0 + n);
+        ws.ensure(n);
+        let d = self.cfg.d_model;
+        for (i, &t) in tokens.iter().enumerate() {
+            self.embed_into(t, &mut ws.x[i * d..(i + 1) * d]);
+        }
+        for (l, layer) in self.layers.iter().enumerate() {
+            self.prefill_chunk_layer(l, layer, n, pos0, &mut cache.layers[l], ws);
+        }
+        cache.len = cache.len.max(pos0 + n);
+        if want_logits {
+            let PrefillWorkspace { x, h, logits, .. } = ws;
+            self.logits_into(&x[(n - 1) * d..n * d], &mut h[..d], logits);
+        }
+    }
+
+    /// Blocked prefill of one prompt chunk through the storage-backed paged
+    /// KV-cache — the serving path behind `Backend::prefill_chunk`.  The
+    /// session's reservation must already cover `pos0 + tokens.len()` (the
+    /// coordinator reserves a request's full budget at admission).  Zero
+    /// heap allocations once `ws` has seen the chunk size.
+    pub fn prefill_chunk_paged(
+        &self,
+        session: u64,
+        tokens: &[u8],
+        pos0: usize,
+        kv: &mut PagedKvCache,
+        ws: &mut PrefillWorkspace,
+        want_logits: bool,
+    ) -> Result<()> {
+        let n = tokens.len();
+        if n == 0 {
+            return Ok(());
+        }
+        if pos0 + n > ws.s_max {
+            bail!("session {session}: chunk end {} exceeds workspace s_max {}", pos0 + n, ws.s_max);
+        }
+        if kv.session_tokens(session) < pos0 + n {
+            bail!(
+                "session {session}: chunk end {} beyond its {}-token reservation",
+                pos0 + n,
+                kv.session_tokens(session)
+            );
+        }
+        ws.ensure(n);
+        let d = self.cfg.d_model;
+        for (i, &t) in tokens.iter().enumerate() {
+            self.embed_into(t, &mut ws.x[i * d..(i + 1) * d]);
+        }
+        let (pages, store) = kv.tables_and_ptrs()?;
+        let blocks = pages
+            .blocks(session)
+            .ok_or_else(|| anyhow::anyhow!("session {session} has no page table"))?;
+        for (l, layer) in self.layers.iter().enumerate() {
+            // SAFETY: one live view per session; the chunk's attention
+            // workers only share it read-only after its writes complete.
+            let mut view = unsafe { store.seq_layer(l, blocks) };
+            self.prefill_chunk_layer(l, layer, n, pos0, &mut view, ws);
+        }
+        if want_logits {
+            let PrefillWorkspace { x, h, logits, .. } = ws;
+            self.logits_into(&x[(n - 1) * d..n * d], &mut h[..d], logits);
+        }
+        Ok(())
+    }
+
+    /// Blocked prefill of a whole prompt over a dense cache in chunks of
+    /// `chunk` tokens; the final chunk fills [`PrefillWorkspace::logits`].
+    pub fn prefill_chunked(
+        &self,
+        tokens: &[u8],
+        chunk: usize,
+        cache: &mut Cache,
+        ws: &mut PrefillWorkspace,
+    ) {
+        let chunk = chunk.max(1);
+        let mut pos0 = 0;
+        while pos0 < tokens.len() {
+            let end = (pos0 + chunk).min(tokens.len());
+            self.prefill_chunk_dense(&tokens[pos0..end], pos0, cache, ws, end == tokens.len());
+            pos0 = end;
+        }
+    }
+
+    /// Default chunk length for blocked prefill: long enough to amortise
+    /// the per-chunk GEMM setup, short enough that the chunk scratch stays
+    /// cache-resident.
+    pub const PREFILL_CHUNK: usize = 64;
+
+    /// Prefill a prompt, returning logits at the last position.  Runs the
+    /// block-parallel chunked path; only the final token pays for the
+    /// vocabulary head.  Returns an empty vector for an empty prompt (no
+    /// position to compute logits at).
+    ///
+    /// Convenience form: allocates a fresh [`PrefillWorkspace`] per call
+    /// (small next to the `Cache` such callers also build per prompt).
+    /// Hot paths that prefill repeatedly should hold a workspace and call
+    /// [`Engine::prefill_chunked`] / [`Engine::prefill_chunk_paged`]
+    /// directly, as the serving backend and benches do.
     pub fn prefill(&self, tokens: &[u8], cache: &mut Cache) -> Vec<f32> {
+        if tokens.is_empty() {
+            return Vec::new();
+        }
+        let mut ws = PrefillWorkspace::new(self, cache.layers[0].s_max);
+        self.prefill_chunked(tokens, Self::PREFILL_CHUNK, cache, &mut ws);
+        ws.logits().to_vec()
+    }
+
+    /// The original token-by-token prefill (T sequential `step_inner`
+    /// calls) — the oracle the blocked path is tested against bitwise
+    /// (`tests/prefill.rs`) and the baseline `benches/attention_latency.rs`
+    /// measures blocked-prefill speedups over in `BENCH_prefill.json`.
+    pub fn prefill_token_loop(&self, tokens: &[u8], cache: &mut Cache) -> Vec<f32> {
         let Some((&last, rest)) = tokens.split_last() else {
             return Vec::new();
         };
@@ -897,18 +1359,24 @@ impl Engine {
     }
 
     /// Greedy-decode `n` tokens after a prompt; returns generated bytes.
+    /// An empty prompt yields no output: `prefill` computes no logits then,
+    /// and argmaxing untouched workspace memory would emit a garbage first
+    /// token.
     pub fn generate(&self, prompt: &[u8], n: usize, s_max: usize) -> Vec<u8> {
         let mut cache = self.new_cache(s_max);
-        self.prefill(prompt, &mut cache);
+        let logits = self.prefill(prompt, &mut cache);
+        if logits.is_empty() {
+            return Vec::new();
+        }
+        let mut next = argmax(&logits) as u8;
         let mut out = Vec::with_capacity(n);
         let mut pos = prompt.len();
         for _ in 0..n {
-            let next = argmax(cache.ws.logits.as_slice()) as u8;
             out.push(next);
             if pos >= s_max {
                 break;
             }
-            self.step_reuse(next, pos, &mut cache);
+            next = argmax(self.step_reuse(next, pos, &mut cache)) as u8;
             pos += 1;
         }
         out

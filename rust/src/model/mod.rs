@@ -6,7 +6,9 @@ pub mod engine;
 pub mod synth;
 pub mod weights;
 
-pub use engine::{argmax, BatchWorkspace, Cache, DecodeWorkspace, Engine, LayerCache};
+pub use engine::{
+    argmax, BatchWorkspace, Cache, DecodeWorkspace, Engine, LayerCache, PrefillWorkspace,
+};
 pub use weights::Weights;
 
 use anyhow::Result;

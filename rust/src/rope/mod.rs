@@ -40,6 +40,27 @@ pub fn apply_full(x: &mut [f32], pos: usize, pairing: Pairing, base: f64) {
     }
 }
 
+/// `apply_full` over a token-major chunk: `x` holds one row of
+/// `heads * head_width` floats per token, token `s` sits at position
+/// `pos0 + s`, and every head row of that token is rotated at that
+/// position.  This is the chunked-prefill form — one call rotates a whole
+/// prompt chunk in place with per-row arithmetic identical to the token
+/// loop's `apply_full` calls.
+pub fn apply_full_tokens(
+    x: &mut [f32],
+    heads: usize,
+    head_width: usize,
+    pos0: usize,
+    pairing: Pairing,
+    base: f64,
+) {
+    for (s, tok) in x.chunks_mut(heads * head_width).enumerate() {
+        for row in tok.chunks_mut(head_width) {
+            apply_full(row, pos0 + s, pairing, base);
+        }
+    }
+}
+
 /// The materialising-gather variant: builds cos/sin tables for the retained
 /// pairs of one head (freshly allocated per call — deliberately reproducing
 /// the PyTorch indexing cost model), then rotates.
@@ -131,6 +152,20 @@ impl RopeTable {
         let w = 2 * self.m;
         for (s, row) in x.chunks_mut(w).enumerate() {
             self.apply_fused(head, row, pos0 + s);
+        }
+    }
+
+    /// Rotate a token-major [S, heads*2m] chunk in place: token `s` (at
+    /// position `pos0 + s`) holds `heads` contiguous latent head rows, each
+    /// rotated with its own per-head theta table — the chunked-prefill
+    /// counterpart of per-token `apply_fused` calls (same per-row
+    /// arithmetic, one call per chunk).
+    pub fn apply_fused_chunk(&self, x: &mut [f32], heads: usize, pos0: usize) {
+        let w = 2 * self.m;
+        for (s, tok) in x.chunks_mut(heads * w).enumerate() {
+            for (h, row) in tok.chunks_mut(w).enumerate() {
+                self.apply_fused(h, row, pos0 + s);
+            }
         }
     }
 }
@@ -270,6 +305,45 @@ mod tests {
             let x: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
             let rt = from_half_layout(&to_half_layout(&x, pairing), pairing);
             assert_eq!(x, rt);
+        }
+    }
+
+    #[test]
+    fn chunk_apply_matches_per_token_fused() {
+        let mut rng = Rng::new(7);
+        let (heads, m, s) = (3usize, 4usize, 6usize);
+        let idx: Vec<Vec<usize>> = (0..heads).map(|_| rng.choose_distinct(8, m)).collect();
+        let table = RopeTable::new(&idx, 16, 10_000.0);
+        let w = 2 * m;
+        let mut chunk: Vec<f32> = (0..s * heads * w).map(|_| rng.normal_f32()).collect();
+        let orig = chunk.clone();
+        table.apply_fused_chunk(&mut chunk, heads, 5);
+        for t in 0..s {
+            for h in 0..heads {
+                let o = (t * heads + h) * w;
+                let mut expect = orig[o..o + w].to_vec();
+                table.apply_fused(h, &mut expect, 5 + t);
+                assert_eq!(&chunk[o..o + w], &expect[..], "t{t} h{h}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_tokens_matches_per_row_apply_full() {
+        let mut rng = Rng::new(8);
+        for pairing in [Pairing::Half, Pairing::Interleaved] {
+            let (heads, d, s) = (2usize, 8usize, 5usize);
+            let mut chunk: Vec<f32> = (0..s * heads * d).map(|_| rng.normal_f32()).collect();
+            let orig = chunk.clone();
+            apply_full_tokens(&mut chunk, heads, d, 3, pairing, 10_000.0);
+            for t in 0..s {
+                for h in 0..heads {
+                    let o = (t * heads + h) * d;
+                    let mut expect = orig[o..o + d].to_vec();
+                    apply_full(&mut expect, 3 + t, pairing, 10_000.0);
+                    assert_eq!(&chunk[o..o + d], &expect[..], "t{t} h{h}");
+                }
+            }
         }
     }
 

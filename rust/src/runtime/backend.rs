@@ -95,34 +95,67 @@ impl<'a> Backend for PjrtBackend<'a> {
     // coordinator's paged allocator is accounting-only for this backend.
     fn prefill(
         &mut self,
-        _kv: &mut PagedKvCache,
+        kv: &mut PagedKvCache,
         session: RequestId,
         prompt: &[u8],
     ) -> Result<Vec<f32>> {
-        if prompt.is_empty() {
-            bail!("empty prompt");
+        match self.prefill_chunk(kv, session, prompt, 0, true)? {
+            Some(logits) => Ok(logits),
+            None => unreachable!("last chunk always returns logits"),
         }
-        // Exact-bucket prompts use the prefill graph; others run the decode
-        // graph token-by-token (same numerics, verified in tests).
-        if let Ok((graph, s)) = self.engine.prefill_bucket(prompt.len()) {
-            if s == prompt.len() {
-                let tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
-                let out = self.engine.prefill(self.ctx, &graph, &tokens, 1)?;
-                self.sessions.insert(session, out.caches);
-                return Ok(out.logits);
+    }
+
+    // Chunked prefill: the per-session host cache already carries decode
+    // state forward token-by-token, so resuming a prompt at `pos0` is the
+    // same decode-graph loop the whole-prompt path used.  A first chunk
+    // whose length exactly matches an exported bucket keeps the AOT
+    // prefill-graph fast path (with the default 128-token chunk budget
+    // that is the `prefill128` bucket) whether or not it closes the
+    // prompt — the graph's output caches seed the session either way.
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        _kv: &mut PagedKvCache,
+        session: RequestId,
+        tokens: &[u8],
+        pos0: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        if tokens.is_empty() {
+            // Whole-prompt case and the degenerate empty last-chunk shape:
+            // an empty chunk has no logits to return.
+            bail!("empty prefill chunk (session {session}, pos {pos0})");
+        }
+        if pos0 == 0 {
+            // Exact-bucket first chunks use the prefill graph; everything
+            // else runs the decode graph token-by-token (same numerics,
+            // verified in tests).
+            if let Ok((graph, s)) = self.engine.prefill_bucket(tokens.len()) {
+                if s == tokens.len() {
+                    let ids: Vec<i32> = tokens.iter().map(|&b| b as i32).collect();
+                    let out = self.engine.prefill(self.ctx, &graph, &ids, 1)?;
+                    self.sessions.insert(session, out.caches);
+                    return Ok(if last { Some(out.logits) } else { None });
+                }
             }
+            self.sessions.insert(session, self.engine.empty_caches(1)?);
         }
-        self.sessions.insert(session, self.engine.empty_caches(1)?);
         let mut logits = Vec::new();
-        for (i, &b) in prompt.iter().enumerate() {
-            let cache = self.sessions.get(&session).unwrap();
+        for (i, &b) in tokens.iter().enumerate() {
+            let cache = self
+                .sessions
+                .get(&session)
+                .with_context(|| format!("unknown session {session}"))?;
             let out = self
                 .engine
-                .decode(self.ctx, 1, &[b as i32], &[i as i32], cache)?;
+                .decode(self.ctx, 1, &[b as i32], &[(pos0 + i) as i32], cache)?;
             self.sessions.insert(session, out.caches);
             logits = out.logits;
         }
-        Ok(logits)
+        Ok(if last { Some(logits) } else { None })
     }
 
     fn decode_batch(

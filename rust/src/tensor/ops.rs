@@ -96,6 +96,28 @@ struct OutPtr(*mut f32);
 // Disjoint row ranges per worker make this sound.
 unsafe impl Sync for OutPtr {}
 
+/// C[M,N] = A[M,K] @ B[K,N] where row i of C is computed with *exactly*
+/// the accumulation order of `vecmat_into(&a[i*k..], b, row_i)` — the
+/// chunked-prefill GEMM.  One call projects a whole token chunk; rows fan
+/// out across `threads` scoped workers, and because each output row runs
+/// the same 4-row K-blocked kernel the token loop runs per token, the
+/// blocked prefill stays bit-identical to token-by-token prefill.
+pub fn matmul_rows_into(a: &[f32], b: &Tensor, out: &mut [f32], threads: usize) {
+    let (k, n) = b.dims2();
+    debug_assert_eq!(a.len() % k, 0);
+    let m = a.len() / k;
+    debug_assert_eq!(out.len(), m * n);
+    let out_ptr = OutPtr(out.as_mut_ptr());
+    scoped_chunks(m, threads, |rows| {
+        let out_ptr = &out_ptr;
+        for i in rows {
+            // SAFETY: workers own disjoint row ranges of `out`.
+            let yi = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+            vecmat_into(&a[i * k..(i + 1) * k], b, yi);
+        }
+    });
+}
+
 /// y[N] = x[K] @ B[K,N] — single-row fast path (decode step projections).
 ///
 /// 4-row blocking over the K axis: each pass reads four B rows and writes y
@@ -341,6 +363,27 @@ mod tests {
         let mut y = vec![7.0f32; 5];
         vecmat_into(&x.data, &b, &mut y);
         assert_eq!(y, fast);
+    }
+
+    #[test]
+    fn matmul_rows_is_bitwise_per_row_vecmat() {
+        let mut rng = Rng::new(21);
+        for (m, k, n) in [(1usize, 8usize, 5usize), (3, 32, 24), (17, 9, 13), (64, 32, 48)] {
+            let a = Tensor::randn(vec![m, k], 1.0, &mut rng);
+            let b = Tensor::randn(vec![k, n], 1.0, &mut rng);
+            for threads in [1usize, 2, 4] {
+                let mut out = vec![0.0f32; m * n];
+                matmul_rows_into(&a.data, &b, &mut out, threads);
+                for i in 0..m {
+                    let row = vecmat(&a.data[i * k..(i + 1) * k], &b);
+                    assert_eq!(
+                        &out[i * n..(i + 1) * n],
+                        row.as_slice(),
+                        "row {i} of ({m},{k},{n}) with {threads} threads"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,8 @@
-//! Steady-state decode must perform ZERO heap allocations (the tentpole
-//! perf claim): all scratch lives in `DecodeWorkspace`/`BatchWorkspace`,
-//! logits land in the batch workspace, and the paged store was reserved up
-//! front (as the coordinator does at admission).
+//! Steady-state decode AND chunked prefill must perform ZERO heap
+//! allocations (the tentpole perf claim): all scratch lives in
+//! `DecodeWorkspace`/`BatchWorkspace`/`PrefillWorkspace`, logits land in
+//! the workspaces, and the paged store was reserved up front (as the
+//! coordinator does at admission).
 //!
 //! Verified with a counting global allocator, so this file holds exactly
 //! one test and pins RAP_THREADS=1 before the engine's first kernel call
@@ -14,7 +15,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use rap::config::Method;
 use rap::kvcache::{CacheShape, PagedKvCache};
 use rap::model::synth::synth_engine;
-use rap::model::BatchWorkspace;
+use rap::model::{BatchWorkspace, PrefillWorkspace};
 
 struct CountingAlloc;
 
@@ -78,6 +79,34 @@ fn steady_state_paged_decode_allocates_nothing() {
             after - before,
             0,
             "{method:?}: steady-state single-token decode must not allocate"
+        );
+
+        // Chunked prefill: same contract.  The session's budget is already
+        // reserved and the workspace has seen the chunk size after one
+        // warmup chunk, so subsequent chunks touch neither the allocator
+        // nor the block free-list.
+        // 192 decode positions are filled; the remaining 64 of the
+        // reservation take four 16-token chunks (1 warmup + 3 measured).
+        let mut prefill_ws = PrefillWorkspace::new(&engine, s_max);
+        let chunk: Vec<u8> = (0..16).map(|i| (i % 251) as u8).collect();
+        engine
+            .prefill_chunk_paged(1, &chunk, pos, &mut kv, &mut prefill_ws, false)
+            .unwrap();
+        let mut cpos = pos + 16;
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for i in 0..3 {
+            // Final chunk computes logits too — also allocation-free.
+            let last = i == 2;
+            engine
+                .prefill_chunk_paged(1, &chunk, cpos, &mut kv, &mut prefill_ws, last)
+                .unwrap();
+            cpos += 16;
+        }
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "{method:?}: steady-state chunked prefill must not allocate"
         );
     }
 }

@@ -97,6 +97,7 @@ fn scheduler_batched_decode_bit_identical_to_sequential() {
                     max_sessions: SESSIONS,
                     buckets: vec![1, 4, 8],
                     max_queue: 64,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 16 << 20,
             },

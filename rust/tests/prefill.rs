@@ -1,0 +1,166 @@
+//! Blocked-prefill identity suite over synthetic weights — runs without
+//! `make artifacts`.
+//!
+//! The block-parallel chunked prefill (`Engine::prefill_chunk_dense` /
+//! `prefill_chunk_paged`) must be **bit-identical** to the token-by-token
+//! loop (`Engine::prefill_token_loop`) for every method and every chunk
+//! partition — same oracle convention as the decode suite in
+//! `tests/paged.rs`.  Three layers:
+//!   1. dense chunked prefill vs the token loop, logits AND cache rows,
+//!      randomized prompt lengths / chunk sizes via `util::propcheck`;
+//!   2. paged chunked prefill vs dense, including the decode step that
+//!      consumes the chunk-written rows;
+//!   3. chunked admission through the coordinator vs sequential
+//!      whole-prompt generation.
+
+use rap::config::Method;
+use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use rap::kvcache::{CacheShape, PagedKvCache};
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
+use rap::model::{BatchWorkspace, PrefillWorkspace};
+use rap::runtime::backend::generate_once;
+use rap::util::propcheck::forall_res;
+
+const METHODS: [Method; 4] = [Method::Baseline, Method::Svd, Method::Palu, Method::Rap];
+
+fn prompt(len: usize, salt: usize) -> Vec<u8> {
+    (0..len).map(|i| ((i * 37 + salt * 101) % 251) as u8).collect()
+}
+
+#[test]
+fn blocked_prefill_matches_token_loop_bitwise() {
+    for method in METHODS {
+        let engine = synth_engine(method, 11);
+        forall_res(
+            17,
+            10,
+            |r| {
+                let len = r.range(1, 96);
+                let chunk = r.range(1, 40);
+                let salt = r.below(1000);
+                (len, chunk, salt)
+            },
+            |&(len, chunk, salt)| {
+                let p = prompt(len, salt);
+                let s_max = 128;
+                let mut ref_cache = engine.new_cache(s_max);
+                let ref_logits = engine.prefill_token_loop(&p, &mut ref_cache);
+                let mut cache = engine.new_cache(s_max);
+                let mut ws = PrefillWorkspace::new(&engine, s_max);
+                engine.prefill_chunked(&p, chunk, &mut cache, &mut ws);
+                if ws.logits() != ref_logits.as_slice() {
+                    return Err(format!("{method:?}: logits diverge (len {len}, chunk {chunk})"));
+                }
+                for (l, (a, b)) in ref_cache.layers.iter().zip(&cache.layers).enumerate() {
+                    if a.k != b.k {
+                        return Err(format!("{method:?}: layer {l} K rows diverge"));
+                    }
+                    if a.v != b.v {
+                        return Err(format!("{method:?}: layer {l} V rows diverge"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn paged_chunked_prefill_matches_dense_and_decodes_identically() {
+    for method in METHODS {
+        let engine = synth_engine(method, 13);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let s_max = 96;
+        // 70 tokens in uneven chunks: crosses block seams (BLOCK_TOKENS=16)
+        // and chunk boundaries that don't align with them.
+        let p = prompt(70, 5);
+        let chunks = [13usize, 16, 7, 20, 14];
+        assert_eq!(chunks.iter().sum::<usize>(), p.len());
+
+        let mut dense_cache = engine.new_cache(s_max);
+        let mut dense_ws = PrefillWorkspace::new(&engine, s_max);
+        engine.prefill_chunked(&p, 17, &mut dense_cache, &mut dense_ws);
+
+        let mut kv = PagedKvCache::with_storage(shape, 8 << 20);
+        kv.reserve(1, s_max).unwrap();
+        let mut ws = PrefillWorkspace::new(&engine, s_max);
+        let mut pos0 = 0;
+        for (ci, &c) in chunks.iter().enumerate() {
+            let last = ci + 1 == chunks.len();
+            engine
+                .prefill_chunk_paged(1, &p[pos0..pos0 + c], pos0, &mut kv, &mut ws, last)
+                .unwrap();
+            pos0 += c;
+        }
+        assert_eq!(ws.logits(), dense_ws.logits(), "{method:?}: prefill logits");
+
+        // The chunk-written paged rows must serve decode exactly like the
+        // dense cache: step one token both ways and compare logits bitwise.
+        let next = 65u8;
+        let dense_logits = engine.step(next, p.len(), &mut dense_cache);
+        let mut batch = BatchWorkspace::new(&engine, s_max);
+        engine
+            .decode_batch_paged(&[(1, next, p.len())], &mut kv, &mut batch, true)
+            .unwrap();
+        assert_eq!(
+            dense_logits.as_slice(),
+            batch.logits_row(0),
+            "{method:?}: decode after chunked prefill"
+        );
+    }
+}
+
+#[test]
+fn chunked_admission_serves_bit_identical_outputs() {
+    const MAX_NEW: usize = 8;
+    for method in METHODS {
+        let engine = synth_engine(method, 19);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let s_max = 96;
+        let prompts: Vec<Vec<u8>> = (0..3).map(|i| prompt(40 + 3 * i, i)).collect();
+
+        // Reference: whole-prompt prefill, each session alone.
+        let mut expected = Vec::new();
+        {
+            let mut backend = RustBackend::new(&engine, s_max);
+            let mut kv = PagedKvCache::with_storage(shape.clone(), 16 << 20);
+            for (i, p) in prompts.iter().enumerate() {
+                expected.push(
+                    generate_once(&mut backend, &mut kv, 700 + i as u64, p, MAX_NEW).unwrap(),
+                );
+            }
+        }
+
+        // Coordinator with a tiny prefill budget: every prompt is fed in
+        // several chunks, interleaved with the other sessions' decodes.
+        let backend = RustBackend::new(&engine, s_max);
+        let mut coord = Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 3,
+                    buckets: vec![1, 4],
+                    max_queue: 16,
+                    prefill_chunk_tokens: 16,
+                },
+                kv_budget_bytes: 16 << 20,
+            },
+        );
+        for (i, p) in prompts.iter().enumerate() {
+            assert!(coord.submit(Request::new(i as u64, p.clone(), MAX_NEW)));
+        }
+        let mut responses = coord.run_to_completion().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), prompts.len());
+        for (r, e) in responses.iter().zip(&expected) {
+            assert_eq!(&r.generated, e, "{method:?} session {}", r.id);
+        }
+        assert!(
+            coord.metrics.prefill_chunks as usize > prompts.len(),
+            "{method:?}: prompts must actually be chunked"
+        );
+        assert_eq!(coord.kv_used_blocks(), 0, "{method:?}: all KV released");
+    }
+}

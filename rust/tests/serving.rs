@@ -21,6 +21,7 @@ fn coordinator_cfg(buckets: Vec<usize>) -> CoordinatorConfig {
             max_sessions: 3,
             buckets,
             max_queue: 64,
+            ..Default::default()
         },
         kv_budget_bytes: 32 << 20,
     }
@@ -116,6 +117,7 @@ fn kv_pressure_defers_admission_but_everything_completes() {
                 max_sessions: 8,
                 buckets: vec![1, 4],
                 max_queue: 64,
+                ..Default::default()
             },
             kv_budget_bytes: budget,
         },
@@ -164,6 +166,7 @@ fn tcp_server_round_trip() {
                     max_sessions: 2,
                     buckets: vec![1, 4],
                     max_queue: 16,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 16 << 20,
             },
