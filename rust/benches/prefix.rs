@@ -1,0 +1,124 @@
+//! Prefix-cache serving gate: 8 concurrent requests sharing a 512-token
+//! prompt prefix vs the same workload with pairwise-distinct prefixes,
+//! through the coordinator over the pure-Rust backend (synthetic weights —
+//! no artifacts needed).
+//!
+//! Shared-prefix admission attaches the resident blocks read-only and
+//! starts chunked prefill past the match, so the workload must show BOTH
+//! fewer allocated blocks (peak ~ prefix + N·suffix instead of
+//! N·(prefix + suffix)) and a lower time-to-first-token (the prefix is
+//! prefillled once, not N times).  Results land in `BENCH_prefix.json`
+//! (uploaded by CI next to the decode/prefill artifacts) so the
+//! prefix-cache trajectory is tracked across PRs.
+
+use rap::config::Method;
+use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use rap::kvcache::{CacheShape, BLOCK_TOKENS};
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
+use rap::util::json::{num, obj, s, Value};
+
+fn prompt(len: usize, salt: usize) -> Vec<u8> {
+    (0..len).map(|i| ((i * 37 + salt * 101) % 251) as u8).collect()
+}
+
+struct WorkloadStats {
+    mean_ttft_ms: f64,
+    max_ttft_ms: f64,
+    peak_blocks: usize,
+    prefix_hits: u64,
+    saved_blocks: u64,
+    throughput_tps: f64,
+}
+
+impl WorkloadStats {
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("mean_ttft_ms", num(self.mean_ttft_ms)),
+            ("max_ttft_ms", num(self.max_ttft_ms)),
+            ("peak_blocks", num(self.peak_blocks as f64)),
+            ("prefix_hits", num(self.prefix_hits as f64)),
+            ("saved_blocks", num(self.saved_blocks as f64)),
+            ("throughput_tps", num(self.throughput_tps)),
+        ])
+    }
+}
+
+fn run(shared: bool, sessions: usize, prefix_len: usize, suffix: usize, max_new: usize) -> WorkloadStats {
+    let engine = synth_engine(Method::Rap, 11);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let s_max = prefix_len + suffix + max_new + BLOCK_TOKENS;
+    let backend = RustBackend::new(&engine, s_max);
+    let mut coord = Coordinator::new(
+        backend,
+        shape,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: sessions,
+                buckets: vec![1, 4, 8],
+                max_queue: 64,
+                prefill_chunk_tokens: 128,
+            },
+            kv_budget_bytes: 256 << 20,
+        },
+    );
+    for i in 0..sessions {
+        // Shared workload: one common prefix.  Unshared: per-request salt
+        // makes every prefix distinct, so the trie never matches.
+        let mut p = prompt(prefix_len, if shared { 0 } else { 1000 + i });
+        p.extend(prompt(suffix, 500 + i));
+        assert!(coord.submit(Request::new(i as u64, p, max_new)));
+    }
+    let responses = coord.run_to_completion().unwrap();
+    assert_eq!(responses.len(), sessions);
+    let mut mean_ttft = 0.0;
+    let mut max_ttft = 0.0f64;
+    for r in &responses {
+        mean_ttft += r.metrics.ttft_ms / sessions as f64;
+        max_ttft = max_ttft.max(r.metrics.ttft_ms);
+    }
+    WorkloadStats {
+        mean_ttft_ms: mean_ttft,
+        max_ttft_ms: max_ttft,
+        peak_blocks: coord.metrics.peak_kv_blocks,
+        prefix_hits: coord.metrics.prefix_hits,
+        saved_blocks: coord.metrics.prefix_saved_blocks,
+        throughput_tps: coord.metrics.throughput_tps(),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("RAP_BENCH_FAST").is_ok();
+    let sessions = 8usize;
+    let prefix_len = if fast { 256 } else { 512 };
+    let (suffix, max_new) = (12usize, if fast { 8 } else { 16 });
+
+    println!("== bench: prefix_cache ({sessions} sessions, {prefix_len}-token prefix) ==");
+    let shared = run(true, sessions, prefix_len, suffix, max_new);
+    let unshared = run(false, sessions, prefix_len, suffix, max_new);
+    let ttft_speedup = unshared.mean_ttft_ms / shared.mean_ttft_ms.max(1e-9);
+    let block_savings = unshared.peak_blocks as f64 / shared.peak_blocks.max(1) as f64;
+    println!(
+        "shared:   ttft mean {:.2} ms (max {:.2})  peak blocks {}  hits {}  saved {}",
+        shared.mean_ttft_ms, shared.max_ttft_ms, shared.peak_blocks, shared.prefix_hits, shared.saved_blocks
+    );
+    println!(
+        "unshared: ttft mean {:.2} ms (max {:.2})  peak blocks {}",
+        unshared.mean_ttft_ms, unshared.max_ttft_ms, unshared.peak_blocks
+    );
+    println!("    -> ttft {ttft_speedup:.2}x faster, {block_savings:.2}x fewer peak blocks with sharing");
+
+    let summary = obj(vec![
+        ("bench", s("prefix_cache")),
+        ("sessions", num(sessions as f64)),
+        ("prefix_tokens", num(prefix_len as f64)),
+        ("suffix_tokens", num(suffix as f64)),
+        ("max_new", num(max_new as f64)),
+        ("shared", shared.to_json()),
+        ("unshared", unshared.to_json()),
+        ("ttft_speedup", num(ttft_speedup)),
+        ("peak_block_savings", num(block_savings)),
+    ]);
+    let _ = std::fs::write("BENCH_prefix.json", summary.to_string_pretty());
+    println!("-> BENCH_prefix.json (ttft {ttft_speedup:.2}x, blocks {block_savings:.2}x)");
+}

@@ -13,6 +13,17 @@ use std::collections::VecDeque;
 use crate::coordinator::request::{Request, RequestId};
 use crate::kvcache::PagedKvCache;
 
+/// One admitted request plus its prefix-cache outcome.
+#[derive(Debug)]
+pub struct Admission {
+    pub req: Request,
+    /// Prompt tokens already resident in shared prefix blocks — chunked
+    /// prefill starts at this position instead of 0.
+    pub matched_tokens: usize,
+    /// Leading blocks attached from the prefix trie instead of allocated.
+    pub shared_blocks: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Max sessions decoding concurrently.
@@ -68,9 +79,16 @@ impl Batcher {
         self.running.len()
     }
 
-    /// Enqueue a request; returns false when the queue is full.
+    /// Enqueue a request; returns false when the queue is full or the id
+    /// is already queued/running.  Admission reserves per-id KV state
+    /// (`reserve_prefix` refuses an id with a live reservation), so letting
+    /// a duplicate reach the queue front would wedge admission behind an
+    /// error that cannot clear until the original session finishes.
     pub fn submit(&mut self, req: Request) -> bool {
-        if self.queue.len() >= self.cfg.max_queue {
+        if self.queue.len() >= self.cfg.max_queue
+            || self.running.contains(&req.id)
+            || self.queue.iter().any(|r| r.id == req.id)
+        {
             return false;
         }
         self.queue.push_back(req);
@@ -78,23 +96,39 @@ impl Batcher {
     }
 
     /// Admit queued requests while session slots and KV capacity allow.
-    /// Reserves each admitted request's *full* token budget up front
-    /// (prompt + max_new) so a running sequence can never be evicted
+    /// Admission queries the prefix trie (`PagedKvCache::reserve_prefix`):
+    /// a prompt whose block-aligned prefix is already resident attaches
+    /// those blocks read-only and reserves fresh blocks only for the
+    /// *unmatched* suffix plus max_new; the rest of the budget is still
+    /// reserved up front so a running sequence can never be evicted
     /// mid-generation — the no-preemption policy.
-    pub fn admit(&mut self, kv: &mut PagedKvCache) -> Vec<Request> {
-        let mut admitted = Vec::new();
+    pub fn admit(&mut self, kv: &mut PagedKvCache) -> Vec<Admission> {
+        let mut admitted: Vec<Admission> = Vec::new();
         while self.running.len() + admitted.len() < self.cfg.max_sessions {
             let Some(req) = self.queue.front() else { break };
-            match kv.reserve(req.id, req.total_tokens()) {
-                Ok(()) => {
+            // Zero-token requests complete at admission without touching
+            // the allocator: reserving (and zeroing) max_new blocks just
+            // to release them in the same tick would let an empty prompt
+            // head-of-line block admission under KV pressure.
+            if req.prompt.is_empty() {
+                let req = self.queue.pop_front().unwrap();
+                admitted.push(Admission { req, matched_tokens: 0, shared_blocks: 0 });
+                continue;
+            }
+            match kv.reserve_prefix(req.id, &req.prompt, req.total_tokens()) {
+                Ok(m) => {
                     let req = self.queue.pop_front().unwrap();
-                    admitted.push(req);
+                    admitted.push(Admission {
+                        req,
+                        matched_tokens: m.matched_tokens,
+                        shared_blocks: m.shared_blocks,
+                    });
                 }
                 Err(_) => break, // KV pressure: stop admitting this tick
             }
         }
-        for r in &admitted {
-            self.running.push(r.id);
+        for a in &admitted {
+            self.running.push(a.req.id);
         }
         admitted
     }
@@ -181,9 +215,41 @@ mod tests {
         let adm = b.admit(&mut kv);
         assert_eq!(adm.len(), 1, "only one 2-block request fits in 3 blocks");
         // Finishing frees capacity; the next admit succeeds.
-        b.finish(adm[0].id, &mut kv);
+        b.finish(adm[0].req.id, &mut kv);
         let adm2 = b.admit(&mut kv);
         assert_eq!(adm2.len(), 1);
+    }
+
+    #[test]
+    fn admit_shares_resident_prompt_prefixes() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_sessions: 4,
+            ..Default::default()
+        });
+        let shape = CacheShape {
+            n_layers: 2,
+            n_kv_heads: 2,
+            k_width: vec![8, 8],
+            v_width: vec![8, 8],
+        };
+        let mut kv = PagedKvCache::with_storage(shape.clone(), shape.bytes_per_block() * 64);
+        // Two prompts sharing a 2-block prefix, one unrelated prompt.
+        let prefix: Vec<u8> = (0..BLOCK_TOKENS * 2).map(|i| (i % 97) as u8).collect();
+        let mut p1 = prefix.clone();
+        p1.extend([200u8; 8]);
+        let mut p2 = prefix.clone();
+        p2.extend([201u8; 8]);
+        assert!(b.submit(Request::new(1, p1, 8)));
+        assert!(b.submit(Request::new(2, p2, 8)));
+        assert!(b.submit(Request::new(3, vec![7u8; BLOCK_TOKENS * 2 + 8], 8)));
+        let adm = b.admit(&mut kv);
+        assert_eq!(adm.len(), 3);
+        assert_eq!(adm[0].matched_tokens, 0, "cold trie");
+        assert_eq!(adm[1].matched_tokens, BLOCK_TOKENS * 2);
+        assert_eq!(adm[1].shared_blocks, 2);
+        assert_eq!(adm[2].matched_tokens, 0, "different prefix never matches");
+        // 1 and 2 share the two prefix blocks: 3 + 1 + 3 blocks, not 3+3+3.
+        assert_eq!(kv.used_blocks(), 7);
     }
 
     #[test]
@@ -195,6 +261,22 @@ mod tests {
         assert!(b.submit(req(1, 4)));
         assert!(b.submit(req(2, 4)));
         assert!(!b.submit(req(3, 4)), "queue full must reject");
+    }
+
+    #[test]
+    fn duplicate_ids_rejected_not_wedged() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let mut kv = kv(100);
+        assert!(b.submit(req(1, 8)));
+        assert!(!b.submit(req(1, 8)), "queued duplicate rejected");
+        let adm = b.admit(&mut kv);
+        assert_eq!(adm.len(), 1);
+        assert!(!b.submit(req(1, 8)), "running duplicate rejected");
+        // Admission keeps flowing for other ids behind a would-be duplicate.
+        assert!(b.submit(req(2, 8)));
+        assert_eq!(b.admit(&mut kv).len(), 1);
+        b.finish(1, &mut kv);
+        assert!(b.submit(req(1, 8)), "id reusable once the session finished");
     }
 
     #[test]

@@ -10,6 +10,11 @@ pub struct RequestMetrics {
     pub queue_ms: f64,
     /// Time to first token (queue + prefill).
     pub ttft_ms: f64,
+    /// Mean wall time this request waited per generated token.  Every
+    /// session in a decode batch waits the *full* step, so each step
+    /// contributes its whole wall time here (the throughput-side,
+    /// occupancy-normalised number lives in
+    /// `AggregateMetrics::decode_per_token_shared`).
     pub decode_ms_per_token: f64,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
@@ -38,6 +43,20 @@ pub struct AggregateMetrics {
     /// equals one chunk: a long prompt delays in-flight decodes by at most
     /// one chunk).
     pub max_prefill_chunks_between_decodes: u64,
+    /// Decode-step wall time divided by batch occupancy, one sample per
+    /// decode batch — what a token costs the fleet.  Per-request
+    /// `decode_ms_per_token` instead attributes the full step to every
+    /// waiting session (the latency each session actually observed).
+    pub decode_per_token_shared: Welford,
+    /// Admissions that consulted the prefix trie.
+    pub prefix_lookups: u64,
+    /// Admissions that found a shared block-aligned prompt prefix.
+    pub prefix_hits: u64,
+    /// Blocks attached from the shared prefix cache instead of being
+    /// allocated (and prefilled) again.
+    pub prefix_saved_blocks: u64,
+    /// Prompt tokens skipped at prefill, per prefix hit.
+    pub prefix_matched_tokens: Welford,
 }
 
 impl AggregateMetrics {
@@ -51,6 +70,14 @@ impl AggregateMetrics {
         self.total_tokens += (m.prompt_tokens + m.generated_tokens) as u64;
     }
 
+    /// Fraction of admissions served a shared prompt prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+
     /// Generated tokens per second of wall time.
     pub fn throughput_tps(&self) -> f64 {
         if self.wall.is_zero() {
@@ -62,9 +89,10 @@ impl AggregateMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} rejected={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
-             ttft: mean {:.1} ms (max {:.1})  decode: mean {:.2} ms/tok  queue: mean {:.1} ms\n\
+             ttft: mean {:.1} ms (max {:.1})  decode: mean {:.2} ms/tok (shared {:.2})  queue: mean {:.1} ms\n\
              decode batches={} mean occupancy={:.2}  peak kv blocks={}\n\
-             prefill chunks={} mean tokens={:.1}  max decode stall={} chunks",
+             prefill chunks={} mean tokens={:.1}  max decode stall={} chunks\n\
+             prefix cache: {}/{} hits ({:.0}%)  saved blocks={}  mean matched={:.0} tok",
             self.requests,
             self.rejected,
             self.total_tokens,
@@ -73,6 +101,7 @@ impl AggregateMetrics {
             self.ttft.mean(),
             self.ttft.max,
             self.decode_per_token.mean(),
+            self.decode_per_token_shared.mean(),
             self.queue.mean(),
             self.decode_batches,
             self.decode_batch_occupancy.mean(),
@@ -80,6 +109,11 @@ impl AggregateMetrics {
             self.prefill_chunks,
             self.prefill_chunk_tokens.mean(),
             self.max_prefill_chunks_between_decodes,
+            self.prefix_hits,
+            self.prefix_lookups,
+            100.0 * self.prefix_hit_rate(),
+            self.prefix_saved_blocks,
+            self.prefix_matched_tokens.mean(),
         )
     }
 }
@@ -112,5 +146,14 @@ mod tests {
         assert!((a.ttft.mean() - 15.0).abs() < 1e-9);
         a.wall = Duration::from_secs(3);
         assert!((a.throughput_tps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_hit_rate_handles_zero_lookups() {
+        let mut a = AggregateMetrics::default();
+        assert_eq!(a.prefix_hit_rate(), 0.0);
+        a.prefix_lookups = 4;
+        a.prefix_hits = 3;
+        assert!((a.prefix_hit_rate() - 0.75).abs() < 1e-9);
     }
 }

@@ -11,7 +11,7 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Admission, Batcher, BatcherConfig};
 pub use metrics::{AggregateMetrics, RequestMetrics};
 pub use request::{Request, RequestId, Response};
 pub use scheduler::{Backend, Coordinator, CoordinatorConfig};

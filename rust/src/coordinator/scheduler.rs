@@ -7,13 +7,21 @@
 //! prompt admitted mid-stream delays in-flight decode sessions by at most
 //! one chunk — `AggregateMetrics::max_prefill_chunks_between_decodes`
 //! tracks the realised bound.
+//!
+//! Admission is prefix-aware (storage-backed caches only): the batcher
+//! consults the `kvcache::prefix` trie, attaches any resident
+//! block-aligned prompt prefix read-only, and prefill starts at
+//! `pos0 = matched_tokens` — the shared prefix is neither recomputed nor
+//! stored again.  Prefill strictly FIFO-orders sessions, so a sharer's
+//! first chunk always runs after the session that registered the prefix
+//! finished prefilling it (its rows exist before anyone reads them).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::batcher::{Admission, Batcher, BatcherConfig};
 use crate::coordinator::metrics::{AggregateMetrics, RequestMetrics};
 use crate::coordinator::request::{Request, RequestId, Response};
 use crate::kvcache::{CacheShape, PagedKvCache};
@@ -103,7 +111,9 @@ struct Running {
 /// Its full token budget is already reserved in the paged allocator.
 struct Prefilling {
     req: Request,
-    /// Prompt tokens already fed to the backend.
+    /// Prompt tokens already in the cache: fed to the backend by earlier
+    /// chunks, or covered by shared prefix blocks at admission (prefill
+    /// then starts at `matched_tokens` and never recomputes the prefix).
     done: usize,
     queue_ms: f64,
     /// Admission instant — TTFT spans from here (including any decode
@@ -164,16 +174,46 @@ impl<B: Backend> Coordinator<B> {
     /// chunks, then one decode round.  Returns responses completed during
     /// this tick.
     pub fn tick(&mut self) -> Result<Vec<Response>> {
-        // 1. Admission: reserve the full token budget and queue the prompt
-        // for chunked prefill.
-        for req in self.batcher.admit(&mut self.kv) {
+        let mut out = Vec::new();
+        // 1. Admission: query the prefix trie, reserve the unmatched
+        // suffix plus the generation budget, and queue the prompt for
+        // chunked prefill starting past the shared prefix.
+        for adm in self.batcher.admit(&mut self.kv) {
+            let Admission { req, matched_tokens, shared_blocks } = adm;
             let queue_ms = req
                 .arrival
                 .map(|a| a.elapsed().as_secs_f64() * 1e3)
                 .unwrap_or(0.0);
+            if req.prompt.is_empty() {
+                // A zero-token request has no position to compute logits
+                // at: complete it immediately with an empty generation
+                // instead of handing the backend an empty chunk (whose
+                // "logits" would be another request's stale workspace).
+                // The batcher admitted it without a reservation, so there
+                // is nothing to release beyond the bookkeeping below.
+                let m = RequestMetrics {
+                    queue_ms,
+                    ttft_ms: queue_ms,
+                    decode_ms_per_token: 0.0,
+                    prompt_tokens: 0,
+                    generated_tokens: 0,
+                    total_ms: queue_ms,
+                };
+                self.batcher.finish(req.id, &mut self.kv);
+                self.backend.drop_session(req.id);
+                self.metrics.record(&m);
+                out.push(Response { id: req.id, generated: Vec::new(), metrics: m });
+                continue;
+            }
+            self.metrics.prefix_lookups += 1;
+            if matched_tokens > 0 {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_saved_blocks += shared_blocks as u64;
+                self.metrics.prefix_matched_tokens.add(matched_tokens as f64);
+            }
             self.prefilling.push_back(Prefilling {
                 req,
-                done: 0,
+                done: matched_tokens,
                 queue_ms,
                 started: Instant::now(),
             });
@@ -195,6 +235,10 @@ impl<B: Backend> Coordinator<B> {
                 remaining
             };
             let last = p.done + take == p.req.prompt.len();
+            // A partially matched prefix block is copied into the
+            // session's private block before its first write (idempotent;
+            // FIFO prefill guarantees the source rows exist by now).
+            self.kv.materialize_cow(p.req.id);
             let logits = self.backend.prefill_chunk(
                 &mut self.kv,
                 p.req.id,
@@ -253,12 +297,19 @@ impl<B: Backend> Coordinator<B> {
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
             self.metrics.decode_batches += 1;
             self.metrics.decode_batch_occupancy.add(entries.len() as f64);
+            // Throughput-side cost: the step's wall time amortised over
+            // the batch (what one token costs the fleet).
+            self.metrics.decode_per_token_shared.add(step_ms / entries.len() as f64);
             for ((id, token, _), lg) in entries.iter().zip(logits) {
                 let r = self.running.get_mut(id).unwrap();
                 r.generated.push(*token);
                 r.next_token = argmax(&lg) as u8;
                 r.pos += 1;
-                r.decode_ms += step_ms / entries.len() as f64;
+                // Latency-side cost: every session in the batch waits the
+                // FULL step before its next token — dividing by the batch
+                // size under-reported per-request decode latency by the
+                // occupancy factor.
+                r.decode_ms += step_ms;
             }
         }
         if !runnable.is_empty() {
@@ -278,7 +329,7 @@ impl<B: Backend> Coordinator<B> {
             .filter(|(_, r)| r.generated.len() >= r.req.max_new || r.pos >= self.backend.s_max())
             .map(|(&id, _)| id)
             .collect();
-        let mut out = Vec::with_capacity(done.len());
+        out.reserve(done.len());
         for id in done {
             let r = self.running.remove(&id).unwrap();
             self.batcher.finish(id, &mut self.kv);
@@ -318,6 +369,11 @@ impl<B: Backend> Coordinator<B> {
 
     pub fn kv_used_blocks(&self) -> usize {
         self.kv.used_blocks()
+    }
+
+    /// Distinct prompt chunks currently cached in the prefix trie.
+    pub fn kv_prefix_nodes(&self) -> usize {
+        self.kv.prefix_nodes()
     }
 }
 
@@ -451,6 +507,43 @@ mod tests {
         assert!(m.ttft_ms >= 0.0 && m.total_ms >= 0.0);
         assert!(c.metrics.throughput_tps() > 0.0);
         assert_eq!(c.metrics.prefill_chunks, 1, "whole prompt in one chunk");
+        assert_eq!(c.metrics.prefix_lookups, 1);
+        assert_eq!(c.metrics.prefix_hits, 0, "accounting-only cache never matches");
+    }
+
+    #[test]
+    fn empty_prompt_completes_without_touching_the_backend() {
+        let mut c = coordinator(2);
+        assert!(c.submit(Request::new(7, Vec::new(), 5)));
+        let r = c.run_to_completion().unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, 7);
+        assert!(
+            r[0].generated.is_empty(),
+            "no prompt token -> no logits -> no generation (not stale-workspace argmax)"
+        );
+        assert_eq!(c.metrics.prefill_chunks, 0, "backend never saw an empty chunk");
+        assert_eq!(c.backend.decode_calls, 0);
+        assert_eq!(c.backend.sessions.len(), 0);
+        assert_eq!(c.kv_used_blocks(), 0, "reservation released immediately");
+        assert_eq!(c.metrics.requests, 1, "still recorded as a served request");
+    }
+
+    #[test]
+    fn decode_latency_attributed_per_session_not_per_batch() {
+        // Every session in a batch waits the full decode step, so the
+        // occupancy-normalised (shared) number can never exceed the
+        // per-request attribution, and both are sampled.
+        let mut c = coordinator(4);
+        for i in 0..4 {
+            c.submit(Request::new(i, vec![1, 2, 3], 6));
+        }
+        c.run_to_completion().unwrap();
+        assert_eq!(c.metrics.decode_per_token_shared.n, c.metrics.decode_batches);
+        assert!(
+            c.metrics.decode_per_token_shared.mean() <= c.metrics.decode_per_token.mean() + 1e-12,
+            "shared (step/occupancy) must not exceed full-step attribution"
+        );
     }
 
     /// Toy backend with real chunked-prefill support: tracks how many

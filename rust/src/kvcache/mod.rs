@@ -22,9 +22,22 @@
 //!   `BLOCK_TOKENS` rows stays contiguous for the blocked attention
 //!   kernels (`tensor::ops::dot_rows_scaled` / `axpy_rows`).
 //!
+//! Blocks are **refcounted**: requests admitted with a prompt prefix
+//! already resident (tracked by the [`prefix::PrefixTrie`], keyed on
+//! block-aligned token chunks) attach the existing physical blocks
+//! read-only instead of allocating and recomputing them
+//! ([`PagedKvCache::reserve_prefix`]), and a block returns to the free
+//! list only when its *last* reader releases.  A partially matched block
+//! is copy-on-write: the session gets a private copy
+//! ([`PagedKvCache::materialize_cow`]) before its first prefill write.
+//! Write disjointness across concurrent sessions therefore means
+//! "refcount == 1 for written blocks" — shared blocks (refcount > 1) are
+//! only ever read.
+//!
 //! Freshly allocated blocks are zeroed at `reserve` time, so block reuse
 //! after [`PagedKvCache::release`] can never leak one session's K/V rows
-//! into another session — covered by the `no_stale_rows_across_reuse` test.
+//! into another session — covered by the `no_stale_rows_across_reuse` and
+//! `shared_blocks_survive_first_release` tests.
 //!
 //! The engine-facing read/write abstraction is [`KvLayerView`]; the dense
 //! per-sequence `model::LayerCache` implements the same trait, which is how
@@ -34,6 +47,7 @@
 //! `quant` adds int4 group quantization of latent rows (the Fig. 12
 //! orthogonality experiment: RAP + 4-bit KV).
 
+pub mod prefix;
 pub mod quant;
 
 use std::collections::BTreeMap;
@@ -112,9 +126,19 @@ pub struct LayerStore {
 }
 
 // SAFETY: the raw pointers alias only `self.k` / `self.v`, and every write
-// path goes through `PagedSeqLayer`, whose users hold disjoint blocks
-// (enforced by the allocator's free-list: a block id is owned by at most
-// one session).
+// path goes through `PagedSeqLayer`, whose users write disjoint rows.
+// Two conditions make that hold, and BOTH are load-bearing:
+//   1. spatial — at decode time every written block has refcount == 1
+//      (exclusively owned); blocks shared through the prefix trie
+//      (refcount > 1) are only read;
+//   2. temporal — a block registered in the trie IS written by its
+//      registrant's own prefill, possibly after sharers attached it
+//      (registration happens at admission, before the rows exist).  No
+//      sharer reads those rows earlier because the coordinator's prefill
+//      queue is strictly FIFO: a sharer's first chunk (and any decode)
+//      runs only after the registrant's prefill completed.  Reordering or
+//      parallelising prefill across sessions would break this even with
+//      the refcount rule intact.
 unsafe impl Send for LayerStore {}
 unsafe impl Sync for LayerStore {}
 
@@ -131,6 +155,20 @@ impl LayerStore {
         let vn = n_kv_heads * BLOCK_TOKENS * self.v_width;
         self.k[block * kn..(block + 1) * kn].fill(0.0);
         self.v[block * vn..(block + 1) * vn].fill(0.0);
+    }
+
+    /// Copy the first `tokens` rows of every KV head from block `src` to
+    /// block `dst` — copy-on-write materialisation of a partially shared
+    /// prefix block.
+    fn copy_rows(&mut self, src: usize, dst: usize, n_kv_heads: usize, tokens: usize) {
+        for hd in 0..n_kv_heads {
+            let ks = ((src * n_kv_heads + hd) * BLOCK_TOKENS) * self.k_width;
+            let kd = ((dst * n_kv_heads + hd) * BLOCK_TOKENS) * self.k_width;
+            self.k.copy_within(ks..ks + tokens * self.k_width, kd);
+            let vs = ((src * n_kv_heads + hd) * BLOCK_TOKENS) * self.v_width;
+            let vd = ((dst * n_kv_heads + hd) * BLOCK_TOKENS) * self.v_width;
+            self.v.copy_within(vs..vs + tokens * self.v_width, vd);
+        }
     }
 }
 
@@ -175,7 +213,8 @@ pub struct PagedSeqLayer<'a> {
     v_width: usize,
 }
 
-// SAFETY: see `LayerStore` — disjoint blocks per session.
+// SAFETY: see `LayerStore` — disjoint *written* blocks per session
+// (shared prefix blocks are read-only).
 unsafe impl Send for PagedSeqLayer<'_> {}
 // SAFETY: every `&self` method only reads; mutation requires `&mut self`,
 // which Rust's borrow rules keep exclusive.  Sharing a view across the
@@ -322,9 +361,14 @@ impl<'a> StorePtrs<'a> {
     ///
     /// The caller must not let two views over the *same* page table be
     /// written (or written + read) at the same time — that would alias
-    /// mutable memory.  Views over *different* sessions are always fine to
-    /// use in parallel because the allocator hands each session disjoint
-    /// blocks.
+    /// mutable memory.  Views over *different* sessions may be used in
+    /// parallel during decode: each session writes rows only at positions
+    /// at or beyond its own prefill start (`matched_tokens`), which live
+    /// in blocks it owns exclusively (refcount == 1), while prefix blocks
+    /// shared across views (refcount > 1) are only read.  The registrant
+    /// of a shared block *does* write it during its own prefill — that is
+    /// safe only because FIFO prefill ordering runs it before any
+    /// sharer's first read (see the `LayerStore` SAFETY note).
     pub unsafe fn seq_layer(&self, l: usize, blocks: &'a [usize]) -> PagedSeqLayer<'a> {
         let ls = &self.layers[l];
         PagedSeqLayer {
@@ -350,8 +394,13 @@ pub struct PagedKvCache {
     pub shape: CacheShape,
     capacity_blocks: usize,
     free: Vec<usize>,
+    /// Per-block reader count: 0 = free, 1 = exclusively owned, >1 =
+    /// shared through the prefix trie (read-only).
+    refcount: Vec<u32>,
     /// session -> block ids (one entry per BLOCK_TOKENS tokens).
     tables: BTreeMap<u64, SessionAlloc>,
+    /// Block-aligned prompt-prefix index over resident blocks.
+    trie: prefix::PrefixTrie,
     peak_used: usize,
     store: Option<Vec<LayerStore>>,
 }
@@ -360,6 +409,57 @@ pub struct PagedKvCache {
 struct SessionAlloc {
     blocks: Vec<usize>,
     tokens: usize,
+    /// Leading blocks attached from the prefix trie — read-only to this
+    /// session (their refcount counts other readers too).
+    shared_blocks: usize,
+    /// Trie nodes this session holds a reference on, in prefix order
+    /// (matched-and-attached nodes, then nodes it registered itself).
+    trie_path: Vec<usize>,
+    /// Pending copy-on-write of a partially matched prefix block.
+    cow: Option<CowPending>,
+    /// Tokens whose rows have actually been written (shared prefix at
+    /// admission + prefill progress reported via
+    /// [`PagedKvCache::note_filled`]).  Feeds the debug-time readiness
+    /// tripwire for the FIFO-ordering safety argument; not used for
+    /// accounting.
+    filled: usize,
+}
+
+impl SessionAlloc {
+    fn empty() -> SessionAlloc {
+        SessionAlloc {
+            blocks: Vec::new(),
+            tokens: 0,
+            shared_blocks: 0,
+            trie_path: Vec::new(),
+            cow: None,
+            filled: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct CowPending {
+    /// Shared source block; one refcount is held on it until release so it
+    /// cannot be recycled before (or after) the copy.
+    src_block: usize,
+    /// Session whose prefill writes the source rows (debug tripwire).
+    src_session: u64,
+    /// Rows `[0, tokens)` of the block are copied.
+    tokens: usize,
+    /// Index in `SessionAlloc::blocks` of the private destination block.
+    dst_index: usize,
+    done: bool,
+}
+
+/// Outcome of a prefix-aware reservation ([`PagedKvCache::reserve_prefix`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixReservation {
+    /// Prompt tokens covered by already-resident shared blocks — chunked
+    /// prefill can start at this position.
+    pub matched_tokens: usize,
+    /// Fully shared leading blocks (attached instead of allocated).
+    pub shared_blocks: usize,
 }
 
 impl PagedKvCache {
@@ -368,7 +468,9 @@ impl PagedKvCache {
         let capacity_blocks = capacity_bytes / shape.bytes_per_block().max(1);
         PagedKvCache {
             free: (0..capacity_blocks).rev().collect(),
+            refcount: vec![0; capacity_blocks],
             tables: BTreeMap::new(),
+            trie: prefix::PrefixTrie::new(),
             peak_used: 0,
             store: None,
             capacity_blocks,
@@ -434,11 +536,17 @@ impl PagedKvCache {
         let entry = self
             .tables
             .entry(session)
-            .or_insert(SessionAlloc { blocks: Vec::new(), tokens: 0 });
+            .or_insert_with(SessionAlloc::empty);
         let needed_tokens = entry.tokens + tokens;
         let needed_blocks = needed_tokens.div_ceil(BLOCK_TOKENS);
         let deficit = needed_blocks.saturating_sub(entry.blocks.len());
         if deficit > self.free.len() {
+            // A failed FIRST reservation must not leave its empty entry
+            // behind: `reserve_prefix` treats any existing entry as a live
+            // session, so a stale one would wedge admission retries.
+            if entry.blocks.is_empty() && entry.tokens == 0 {
+                self.tables.remove(&session);
+            }
             bail!(
                 "kv-cache exhausted: need {deficit} blocks, {} free (capacity {})",
                 self.free.len(),
@@ -447,6 +555,7 @@ impl PagedKvCache {
         }
         for _ in 0..deficit {
             let block = self.free.pop().unwrap();
+            self.refcount[block] = 1;
             // Zero recycled blocks so a new session can never observe a
             // previous session's rows (and unwritten positions read as 0).
             if let Some(store) = &mut self.store {
@@ -461,6 +570,193 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// First reservation for `session`, sharing any block-aligned prompt
+    /// prefix already resident: the longest cached prefix (capped so at
+    /// least one prompt token remains for this session to prefill — the
+    /// final token's logits must come from *its* forward pass) is attached
+    /// read-only with refcounts instead of being allocated, a partially
+    /// matched trailing block becomes a pending copy-on-write
+    /// ([`PagedKvCache::materialize_cow`]), and only the unmatched
+    /// remainder of `total_tokens` draws fresh blocks.  The session's own
+    /// full prompt chunks are registered in the trie so later admissions
+    /// can share them (their rows are computed by this session's prefill,
+    /// which FIFO chunked admission runs before any sharer's first chunk).
+    ///
+    /// Accounting-only caches (no storage to share) fall back to a plain
+    /// [`PagedKvCache::reserve`] and report no match.
+    pub fn reserve_prefix(
+        &mut self,
+        session: u64,
+        prompt: &[u8],
+        total_tokens: usize,
+    ) -> Result<PrefixReservation> {
+        if self.tables.contains_key(&session) {
+            bail!("session {session} already holds a reservation");
+        }
+        if total_tokens < prompt.len() {
+            bail!(
+                "reservation of {total_tokens} tokens smaller than the {}-token prompt",
+                prompt.len()
+            );
+        }
+        if self.store.is_none() {
+            self.reserve(session, total_tokens)?;
+            return Ok(PrefixReservation::default());
+        }
+        let path = self.trie.lookup(prompt);
+        let mut matched = (path.len() * BLOCK_TOKENS).min(prompt.len());
+        if matched == prompt.len() && matched > 0 {
+            matched -= 1;
+        }
+        let full_shared = matched / BLOCK_TOKENS;
+        let partial = matched % BLOCK_TOKENS;
+        let total_blocks = total_tokens.div_ceil(BLOCK_TOKENS);
+        let fresh = total_blocks - full_shared;
+        if fresh > self.free.len() {
+            bail!(
+                "kv-cache exhausted: need {fresh} blocks, {} free (capacity {})",
+                self.free.len(),
+                self.capacity_blocks
+            );
+        }
+        let mut blocks = Vec::with_capacity(total_blocks);
+        let mut trie_path = Vec::with_capacity(full_shared);
+        for &(node, block) in &path[..full_shared] {
+            self.trie.attach(node);
+            trie_path.push(node);
+            self.refcount[block] += 1;
+            blocks.push(block);
+        }
+        let cow = if partial > 0 {
+            // The match ends mid-block (only when the trie covered the
+            // whole prompt): hold the source block and copy its leading
+            // rows into a private block before this session's first write.
+            let (src_node, src_block) = path[full_shared];
+            self.refcount[src_block] += 1;
+            Some(CowPending {
+                src_block,
+                src_session: self.trie.node_owner(src_node),
+                tokens: partial,
+                dst_index: full_shared,
+                done: false,
+            })
+        } else {
+            None
+        };
+        for _ in full_shared..total_blocks {
+            let block = self.free.pop().unwrap();
+            self.refcount[block] = 1;
+            if let Some(store) = &mut self.store {
+                for ls in store.iter_mut() {
+                    ls.zero_block(block, self.shape.n_kv_heads);
+                }
+            }
+            blocks.push(block);
+        }
+        if cow.is_none() {
+            // Register this prompt's own full chunks beyond the matched
+            // path (none exist beyond it, or lookup would have gone
+            // deeper).  With a partial match the trie already holds every
+            // full chunk of the prompt.
+            let mut parent = path.last().map(|&(n, _)| n).unwrap_or(prefix::ROOT);
+            for j in path.len()..prompt.len() / BLOCK_TOKENS {
+                let chunk = &prompt[j * BLOCK_TOKENS..(j + 1) * BLOCK_TOKENS];
+                let node = self.trie.insert_child(parent, chunk, blocks[j], session);
+                trie_path.push(node);
+                parent = node;
+            }
+        }
+        self.tables.insert(
+            session,
+            SessionAlloc {
+                blocks,
+                tokens: total_tokens,
+                shared_blocks: full_shared,
+                trie_path,
+                cow,
+                filled: matched,
+            },
+        );
+        self.peak_used = self.peak_used.max(self.capacity_blocks - self.free.len());
+        Ok(PrefixReservation { matched_tokens: matched, shared_blocks: full_shared })
+    }
+
+    /// Perform `session`'s pending copy-on-write, if any: the partially
+    /// matched prefix block's leading rows are copied from the shared
+    /// source into the session's private block, which its first prefill
+    /// chunk then writes into.  Idempotent; a no-op without a pending copy
+    /// or on an accounting-only cache.  Must run after the source
+    /// session's prefill has produced those rows — the coordinator's FIFO
+    /// chunked prefill guarantees it by calling this right before each of
+    /// the session's own prefill chunks.
+    pub fn materialize_cow(&mut self, session: u64) {
+        #[cfg(debug_assertions)]
+        self.debug_assert_prefix_ready(session);
+        let Some(alloc) = self.tables.get_mut(&session) else { return };
+        let Some(cow) = &mut alloc.cow else { return };
+        if cow.done {
+            return;
+        }
+        cow.done = true;
+        let (src, tokens, dst) = (cow.src_block, cow.tokens, alloc.blocks[cow.dst_index]);
+        let n_kv_heads = self.shape.n_kv_heads;
+        if let Some(store) = &mut self.store {
+            for ls in store.iter_mut() {
+                ls.copy_rows(src, dst, n_kv_heads, tokens);
+            }
+        }
+    }
+
+    /// Record that rows `[0, upto)` of `session` have been written (the
+    /// serving backend reports prefill progress here).  Powers the
+    /// debug-time readiness tripwire below; a no-op for accounting.
+    pub fn note_filled(&mut self, session: u64, upto: usize) {
+        if let Some(alloc) = self.tables.get_mut(&session) {
+            alloc.filled = alloc.filled.max(upto);
+        }
+    }
+
+    /// Debug tripwire for the cross-module safety argument: sharing is
+    /// sound only because the scheduler's FIFO prefill runs a prefix
+    /// registrant's writes before any sharer's first read.  Here — called
+    /// ahead of each of `session`'s prefill chunks — every shared block
+    /// whose registrant is still live must already be filled past that
+    /// block.  A released registrant's rows are final, so it is skipped.
+    /// Fires under a scheduler change that reorders or parallelises
+    /// prefill across sessions instead of silently reading garbage.
+    #[cfg(debug_assertions)]
+    fn debug_assert_prefix_ready(&self, session: u64) {
+        let Some(alloc) = self.tables.get(&session) else { return };
+        for (i, &node) in alloc.trie_path[..alloc.shared_blocks].iter().enumerate() {
+            let owner = self.trie.node_owner(node);
+            if owner == session {
+                continue;
+            }
+            if let Some(src) = self.tables.get(&owner) {
+                debug_assert!(
+                    src.filled >= (i + 1) * BLOCK_TOKENS,
+                    "session {session} reads block {i} of prefix owner {owner}, \
+                     which has only filled {} tokens",
+                    src.filled
+                );
+            }
+        }
+        if let Some(cow) = &alloc.cow {
+            if !cow.done && cow.src_session != session {
+                if let Some(src) = self.tables.get(&cow.src_session) {
+                    debug_assert!(
+                        src.filled >= alloc.shared_blocks * BLOCK_TOKENS + cow.tokens,
+                        "session {session} copies {} rows from owner {}, \
+                         which has only filled {} tokens",
+                        cow.tokens,
+                        cow.src_session,
+                        src.filled
+                    );
+                }
+            }
+        }
+    }
+
     /// Grow `session`'s reservation so it covers at least `upto` tokens.
     /// No-op when already covered (the coordinator reserves a request's full
     /// budget at admission, making per-step calls free on that path).
@@ -473,11 +769,46 @@ impl PagedKvCache {
         }
     }
 
-    /// Release a finished session's blocks.
+    /// Release a finished session's references: trie nodes deepest-first,
+    /// then block refcounts.  A block returns to the free list (to be
+    /// zeroed on its next reservation) only when its **last** reader
+    /// releases — a shared prefix block outlives the session that created
+    /// it for as long as any other session still reads it.
     pub fn release(&mut self, session: u64) {
         if let Some(alloc) = self.tables.remove(&session) {
-            self.free.extend(alloc.blocks);
+            for &node in alloc.trie_path.iter().rev() {
+                self.trie.release(node);
+            }
+            if let Some(cow) = alloc.cow {
+                self.dec_block(cow.src_block);
+            }
+            for block in alloc.blocks {
+                self.dec_block(block);
+            }
         }
+    }
+
+    fn dec_block(&mut self, block: usize) {
+        debug_assert!(self.refcount[block] > 0, "double free of block {block}");
+        self.refcount[block] = self.refcount[block].saturating_sub(1);
+        if self.refcount[block] == 0 {
+            self.free.push(block);
+        }
+    }
+
+    /// Live reader count of a physical block (0 = free).
+    pub fn block_refs(&self, block: usize) -> u32 {
+        self.refcount[block]
+    }
+
+    /// Distinct prompt chunks currently cached in the prefix trie.
+    pub fn prefix_nodes(&self) -> usize {
+        self.trie.len()
+    }
+
+    /// Leading blocks `session` shares read-only with other readers.
+    pub fn session_shared_blocks(&self, session: u64) -> usize {
+        self.tables.get(&session).map(|t| t.shared_blocks).unwrap_or(0)
     }
 
     /// The block ids backing a session (page table), for diagnostics.
@@ -579,6 +910,21 @@ mod tests {
         assert!(c.reserve(2, 1).is_err());
         c.release(1);
         assert!(c.reserve(2, 1).is_ok());
+    }
+
+    #[test]
+    fn failed_first_reserve_leaves_no_stale_entry() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::new(sh.clone(), sh.bytes_per_block() * 2);
+        c.reserve(1, BLOCK_TOKENS * 2).unwrap();
+        assert!(c.reserve(2, BLOCK_TOKENS).is_err());
+        assert_eq!(c.sessions(), 1, "failed admission leaves no stale entry");
+        // The admission retry path goes through reserve_prefix, which
+        // refuses sessions that already hold a reservation — a stale empty
+        // entry would wedge it forever.
+        assert!(c.reserve_prefix(2, &[1, 2, 3], BLOCK_TOKENS).is_err(), "still exhausted");
+        c.release(1);
+        assert!(c.reserve_prefix(2, &[1, 2, 3], BLOCK_TOKENS).is_ok(), "retry succeeds");
     }
 
     #[test]
@@ -728,6 +1074,167 @@ mod tests {
         });
         assert_eq!(seen, n);
         assert_eq!(view.v_row(1, t0 + n - 1)[1], -((t0 + n - 1) as f32));
+    }
+
+    /// Byte prompt whose chunks are distinguishable: token = i * 7 + salt.
+    fn ptokens(len: usize, salt: usize) -> Vec<u8> {
+        (0..len).map(|i| ((i * 7 + salt * 131) % 251) as u8).collect()
+    }
+
+    /// Tag every reserved row of `session` so sharing/zeroing is visible.
+    fn fill_rows(c: &mut PagedKvCache, session: u64, tokens: usize, tag: f32) {
+        c.note_filled(session, tokens);
+        let n_layers = c.shape.n_layers;
+        let hkv = c.shape.n_kv_heads;
+        let (pages, store) = c.tables_and_ptrs().unwrap();
+        let blocks = pages.blocks(session).unwrap();
+        for l in 0..n_layers {
+            // SAFETY: one live view per session at a time.
+            let mut view = unsafe { store.seq_layer(l, blocks) };
+            for t in 0..tokens {
+                for hd in 0..hkv {
+                    view.k_row_mut(hd, t).fill(tag + t as f32);
+                    view.v_row_mut(hd, t).fill(-(tag + t as f32));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_reservation_shares_blocks_and_counts_them_once() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 32);
+        let prompt = ptokens(BLOCK_TOKENS * 2 + 8, 1); // 2 full chunks + 8
+        let total = prompt.len() + 8; // 3 blocks
+
+        let r1 = c.reserve_prefix(1, &prompt, total).unwrap();
+        assert_eq!(r1.matched_tokens, 0, "cold trie: no match");
+        assert_eq!(c.used_blocks(), 3);
+        assert_eq!(c.prefix_nodes(), 2, "both full chunks registered");
+        fill_rows(&mut c, 1, prompt.len(), 100.0);
+
+        let r2 = c.reserve_prefix(2, &prompt, total).unwrap();
+        assert_eq!(r2.matched_tokens, BLOCK_TOKENS * 2);
+        assert_eq!(r2.shared_blocks, 2);
+        // Only the 1 unmatched block is newly allocated.
+        assert_eq!(c.used_blocks(), 4);
+        let t1 = c.page_table(1).unwrap().to_vec();
+        let t2 = c.page_table(2).unwrap().to_vec();
+        assert_eq!(t1[..2], t2[..2], "prefix blocks are the same physical blocks");
+        assert_ne!(t1[2], t2[2], "suffix blocks are private");
+        assert_eq!(c.block_refs(t1[0]), 2);
+        assert_eq!(c.session_shared_blocks(2), 2);
+
+        // Session 2 reads session 1's prefix rows through its own table.
+        let (pages, store) = c.tables_and_ptrs().unwrap();
+        let view = unsafe { store.seq_layer(0, pages.blocks(2).unwrap()) };
+        assert!(view.k_row(0, 5).iter().all(|&x| x == 105.0));
+        let want = -(100.0 + (BLOCK_TOKENS + 3) as f32);
+        assert!(view.v_row(1, BLOCK_TOKENS + 3).iter().all(|&x| x == want));
+    }
+
+    #[test]
+    fn shared_blocks_survive_first_release() {
+        // Satellite: a shared block must never be zeroed or handed to the
+        // free list while any session still references it — interleaved
+        // shared-prefix sessions over the reserve/release cycle.
+        let sh = shape(5, 5);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 8);
+        let prompt = ptokens(BLOCK_TOKENS * 2, 2); // exactly 2 chunks
+        let total = BLOCK_TOKENS * 2 + BLOCK_TOKENS; // 3 blocks
+
+        c.reserve_prefix(1, &prompt, total).unwrap();
+        fill_rows(&mut c, 1, prompt.len(), 40.0);
+        // Aligned, fully matched prompt: capped to P-1 with a CoW block.
+        let r2 = c.reserve_prefix(2, &prompt, total).unwrap();
+        assert_eq!(r2.matched_tokens, BLOCK_TOKENS * 2 - 1);
+        assert_eq!(r2.shared_blocks, 1);
+        c.materialize_cow(2);
+        let shared = c.page_table(1).unwrap()[0];
+        assert_eq!(c.block_refs(shared), 2);
+
+        // Creator leaves first: the shared block stays resident and keeps
+        // its rows; only session 1's private blocks are recycled.
+        let used_before = c.used_blocks();
+        c.release(1);
+        assert_eq!(c.block_refs(shared), 1);
+        // Only session 1's private block is freed: the fully shared block
+        // and the CoW source are both still read by session 2.
+        assert_eq!(c.used_blocks(), used_before - 1);
+        // Exhaust the free list: the shared block must not be handed out.
+        while c.reserve(99, BLOCK_TOKENS).is_ok() {}
+        assert!(!c.page_table(99).unwrap_or(&[]).contains(&shared));
+        {
+            let (pages, store) = c.tables_and_ptrs().unwrap();
+            let view = unsafe { store.seq_layer(0, pages.blocks(2).unwrap()) };
+            assert!(view.k_row(0, 3).iter().all(|&x| x == 43.0), "shared rows intact");
+        }
+        c.release(99);
+
+        // Last reader leaves: the block is recycled and zeroed on reuse.
+        c.release(2);
+        assert_eq!(c.used_blocks(), 0);
+        assert_eq!(c.prefix_nodes(), 0, "trie empties with its last holder");
+        c.reserve(3, BLOCK_TOKENS * 2).unwrap();
+        let (pages, store) = c.tables_and_ptrs().unwrap();
+        let view = unsafe { store.seq_layer(0, pages.blocks(3).unwrap()) };
+        for t in 0..BLOCK_TOKENS * 2 {
+            assert!(view.k_row(0, t).iter().all(|&x| x == 0.0), "stale rows after recycle");
+        }
+    }
+
+    #[test]
+    fn cow_block_is_private_copy() {
+        let sh = shape(6, 4);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 16);
+        let prompt = ptokens(BLOCK_TOKENS * 2, 3); // aligned -> capped match
+        c.reserve_prefix(1, &prompt, prompt.len() + 4).unwrap();
+        fill_rows(&mut c, 1, prompt.len(), 7.0);
+
+        let r2 = c.reserve_prefix(2, &prompt, prompt.len() + 4).unwrap();
+        assert_eq!(r2.matched_tokens, BLOCK_TOKENS * 2 - 1);
+        c.materialize_cow(2);
+        c.materialize_cow(2); // idempotent
+        let src = c.page_table(1).unwrap()[1];
+        let dst = c.page_table(2).unwrap()[1];
+        assert_ne!(src, dst, "partial block is a private copy");
+        let last = BLOCK_TOKENS * 2 - 1;
+        {
+            // The copy carries the matched rows...
+            let (pages, store) = c.tables_and_ptrs().unwrap();
+            let mut view = unsafe { store.seq_layer(1, pages.blocks(2).unwrap()) };
+            let t = BLOCK_TOKENS * 2 - 2; // inside the copied range
+            assert!(view.k_row(0, t).iter().all(|&x| x == 7.0 + t as f32));
+            // ...and writing the session's own final row does not touch
+            // the shared source.
+            view.k_row_mut(0, last).fill(555.0);
+        }
+        let (pages, store) = c.tables_and_ptrs().unwrap();
+        let view1 = unsafe { store.seq_layer(1, pages.blocks(1).unwrap()) };
+        assert!(
+            view1.k_row(0, last).iter().all(|&x| x == 7.0 + last as f32),
+            "source unperturbed"
+        );
+    }
+
+    #[test]
+    fn prefix_reservation_respects_capacity() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 4);
+        let prompt = ptokens(BLOCK_TOKENS * 2, 4);
+        c.reserve_prefix(1, &prompt, BLOCK_TOKENS * 3).unwrap(); // 3 of 4 blocks
+        // A sharer fits in the single free block: the aligned match is
+        // capped to P-1, sharing 1 full block and CoW-copying the second.
+        let r = c.reserve_prefix(2, &prompt, BLOCK_TOKENS * 2).unwrap();
+        assert_eq!(r.shared_blocks, 1, "capped aligned match shares 1 full block");
+        assert_eq!(c.used_blocks(), 4);
+        // An unshareable request is refused without corrupting state.
+        assert!(c.reserve_prefix(3, &ptokens(BLOCK_TOKENS, 9), BLOCK_TOKENS * 2).is_err());
+        assert!(c.reserve_prefix(1, &prompt, BLOCK_TOKENS).is_err(), "double reservation refused");
+        c.release(2);
+        c.release(1);
+        assert_eq!(c.used_blocks(), 0);
+        assert_eq!(c.prefix_nodes(), 0);
     }
 
     #[test]

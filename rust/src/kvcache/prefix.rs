@@ -1,0 +1,246 @@
+//! Content-addressed prefix trie over block-aligned token chunks.
+//!
+//! Maps `BLOCK_TOKENS`-sized prompt chunks to the physical blocks holding
+//! their latent K/V rows, so concurrent requests with a common prompt
+//! prefix can *share* those blocks instead of recomputing and re-storing
+//! them — the serving-side multiplier on RAP's per-row compression.
+//!
+//! Lifetime model: a node exists only while at least one live session
+//! holds a reference on it — the session that registered the chunk (its
+//! own prompt block) or any session that matched it at admission and
+//! attached.  Releasing the last reference removes the node, and because
+//! every holder also holds a refcount on the node's physical block
+//! (`PagedKvCache` pairs the two), the trie can never point at a block
+//! that has been recycled.  Retaining nodes beyond the last session —
+//! with eviction of cold entries — is the follow-on in ROADMAP.md.
+//!
+//! Removal is always deepest-first (sessions release their path in
+//! reverse): any live descendant of a node implies a session holding the
+//! whole path through that node, so a node whose refcount reaches zero
+//! has no children left.
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::BLOCK_TOKENS;
+
+/// Index of the (empty-prefix) root node.  The root carries no chunk or
+/// block and is never removed.
+pub const ROOT: usize = 0;
+
+#[derive(Debug)]
+struct Node {
+    /// Child nodes keyed by the next `BLOCK_TOKENS` prompt tokens.
+    children: BTreeMap<Vec<u8>, usize>,
+    /// Physical block holding this chunk's latent K/V rows.
+    block: usize,
+    /// Live sessions holding this node (registrant + attachers).
+    refs: usize,
+    /// Session that registered the chunk — the one whose prefill writes
+    /// the block's rows (used by debug-time readiness checks).
+    owner: u64,
+    parent: usize,
+    /// This node's key in `parent.children` (for unlinking on removal).
+    key: Vec<u8>,
+    live: bool,
+}
+
+/// Trie over block-aligned token prefixes; see the module docs.
+#[derive(Debug)]
+pub struct PrefixTrie {
+    /// Node arena; slot 0 is the root, dead slots are recycled via `free`.
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    live_count: usize,
+}
+
+impl Default for PrefixTrie {
+    fn default() -> Self {
+        PrefixTrie::new()
+    }
+}
+
+impl PrefixTrie {
+    pub fn new() -> PrefixTrie {
+        PrefixTrie {
+            nodes: vec![Node {
+                children: BTreeMap::new(),
+                block: usize::MAX,
+                refs: 0,
+                owner: u64::MAX,
+                parent: ROOT,
+                key: Vec::new(),
+                live: true,
+            }],
+            free: Vec::new(),
+            live_count: 0,
+        }
+    }
+
+    /// Walk the full `BLOCK_TOKENS` chunks of `prompt`, returning the
+    /// longest cached path as `(node, block)` pairs in prefix order.  A
+    /// trailing partial chunk never matches (blocks are shared whole).
+    pub fn lookup(&self, prompt: &[u8]) -> Vec<(usize, usize)> {
+        let mut path = Vec::new();
+        let mut at = ROOT;
+        for chunk in prompt.chunks_exact(BLOCK_TOKENS) {
+            match self.nodes[at].children.get(chunk) {
+                Some(&next) => {
+                    path.push((next, self.nodes[next].block));
+                    at = next;
+                }
+                None => break,
+            }
+        }
+        path
+    }
+
+    /// Take one reference on `node` (a session now shares its block).
+    pub fn attach(&mut self, node: usize) {
+        debug_assert!(self.nodes[node].live, "attach to dead node {node}");
+        self.nodes[node].refs += 1;
+    }
+
+    /// Insert `chunk` below `parent` pointing at `block`, registered by
+    /// session `owner`, with one reference held by it; returns the node
+    /// index.  If the child already exists it is attached instead and
+    /// keeps its original block and owner (the caller keeps its own copy
+    /// in its page table).
+    pub fn insert_child(&mut self, parent: usize, chunk: &[u8], block: usize, owner: u64) -> usize {
+        if let Some(&existing) = self.nodes[parent].children.get(chunk) {
+            self.attach(existing);
+            return existing;
+        }
+        let node = Node {
+            children: BTreeMap::new(),
+            block,
+            refs: 1,
+            owner,
+            parent,
+            key: chunk.to_vec(),
+            live: true,
+        };
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.nodes[parent].children.insert(chunk.to_vec(), idx);
+        self.live_count += 1;
+        idx
+    }
+
+    /// Drop one reference on `node`, removing it when the last holder
+    /// leaves.  Callers release a session's path deepest-first.
+    pub fn release(&mut self, node: usize) {
+        debug_assert!(node != ROOT, "release of the trie root");
+        debug_assert!(
+            self.nodes[node].live && self.nodes[node].refs > 0,
+            "release of dead/unreferenced node {node}"
+        );
+        self.nodes[node].refs -= 1;
+        if self.nodes[node].refs == 0 {
+            debug_assert!(
+                self.nodes[node].children.is_empty(),
+                "removed trie node {node} still has children"
+            );
+            let parent = self.nodes[node].parent;
+            let key = std::mem::take(&mut self.nodes[node].key);
+            self.nodes[parent].children.remove(&key);
+            self.nodes[node].live = false;
+            self.nodes[node].children.clear();
+            self.free.push(node);
+            self.live_count -= 1;
+        }
+    }
+
+    /// Session whose prefill produces (or produced) `node`'s rows.
+    pub fn node_owner(&self, node: usize) -> u64 {
+        self.nodes[node].owner
+    }
+
+    /// Live (non-root) nodes — the number of distinct cached chunks.
+    pub fn len(&self) -> usize {
+        self.live_count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live_count == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(tag: u8) -> Vec<u8> {
+        vec![tag; BLOCK_TOKENS]
+    }
+
+    fn prompt(tags: &[u8], tail: usize) -> Vec<u8> {
+        let mut p: Vec<u8> = tags.iter().flat_map(|&t| chunk(t)).collect();
+        p.extend(std::iter::repeat(0xEE).take(tail));
+        p
+    }
+
+    #[test]
+    fn lookup_matches_longest_full_block_prefix() {
+        let mut t = PrefixTrie::new();
+        let a = t.insert_child(ROOT, &chunk(1), 10, 1);
+        let b = t.insert_child(a, &chunk(2), 11, 1);
+        assert_eq!(t.len(), 2);
+        // Full match of both chunks; the 5-token tail can't match.
+        assert_eq!(t.lookup(&prompt(&[1, 2], 5)), vec![(a, 10), (b, 11)]);
+        // Diverging second chunk stops after the first.
+        assert_eq!(t.lookup(&prompt(&[1, 3], 0)), vec![(a, 10)]);
+        // A sub-block prompt never matches.
+        assert_eq!(t.lookup(&[1u8; BLOCK_TOKENS - 1]), vec![]);
+    }
+
+    #[test]
+    fn release_removes_only_unreferenced_nodes_deepest_first() {
+        let mut t = PrefixTrie::new();
+        let a = t.insert_child(ROOT, &chunk(1), 10, 1);
+        let b = t.insert_child(a, &chunk(2), 11, 1);
+        // A second session matches both chunks and attaches.
+        t.attach(a);
+        t.attach(b);
+        // First session leaves: nodes survive on the second's refs.
+        t.release(b);
+        t.release(a);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.lookup(&prompt(&[1, 2], 0)).len(), 2);
+        // Second session leaves: the whole path dies.
+        t.release(b);
+        t.release(a);
+        assert!(t.is_empty());
+        assert_eq!(t.lookup(&prompt(&[1, 2], 0)), vec![]);
+    }
+
+    #[test]
+    fn node_slots_are_recycled() {
+        let mut t = PrefixTrie::new();
+        let a = t.insert_child(ROOT, &chunk(1), 10, 1);
+        t.release(a);
+        let b = t.insert_child(ROOT, &chunk(2), 20, 2);
+        assert_eq!(a, b, "dead slot reused");
+        assert_eq!(t.lookup(&prompt(&[2], 0)), vec![(b, 20)]);
+    }
+
+    #[test]
+    fn duplicate_insert_attaches_existing_node() {
+        let mut t = PrefixTrie::new();
+        let a = t.insert_child(ROOT, &chunk(1), 10, 1);
+        let same = t.insert_child(ROOT, &chunk(1), 99, 2);
+        assert_eq!(a, same);
+        assert_eq!(t.lookup(&prompt(&[1], 0)), vec![(a, 10)], "original block kept");
+        t.release(a);
+        assert_eq!(t.len(), 1, "second reference keeps the node alive");
+        t.release(a);
+        assert!(t.is_empty());
+    }
+}

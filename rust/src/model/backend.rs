@@ -27,15 +27,17 @@ pub struct RustBackend<'a> {
     sessions: BTreeSet<RequestId>,
     /// Optional int4 round-trip of newly written latent rows (Fig. 12).
     ///
-    /// Quantization is **chunk-granular** on the prefill path: a chunk's
-    /// rows are round-tripped after the chunk completes, so attention
-    /// within the in-flight chunk reads full-precision rows while every
-    /// earlier chunk is read quantized — the semantics of a real blocked
-    /// quantized-KV prefill (the current chunk lives in working memory,
-    /// only the cache is int4).  Decode keeps per-token granularity.
-    /// Consequently quantized prefill numerics depend on the chunk size
-    /// (`BatcherConfig::prefill_chunk_tokens`), unlike the pre-chunking
-    /// per-token round-trip.
+    /// Prefill quantization is **chunk-size-invariant**: the engine
+    /// round-trips each latent row immediately after it is projected and
+    /// written, *before* any attention reads it, so every prefill query
+    /// sees only int4 rows and the logits cannot depend on
+    /// `BatcherConfig::prefill_chunk_tokens` (propchecked in
+    /// `tests/prefill.rs`).  This reverts the chunk-granular semantics a
+    /// previous refactor introduced, where the in-flight chunk read
+    /// full-precision rows and the same prompt produced different logits
+    /// at different chunk sizes.  Decode keeps the per-token round-trip
+    /// *after* the step (a decode step reads its own just-written row
+    /// full-precision, earlier rows quantized).
     pub quantize_kv: bool,
 }
 
@@ -56,7 +58,8 @@ impl<'a> RustBackend<'a> {
     }
 
     /// int4 round-trip the rows just written at positions
-    /// `[pos0, pos0 + n)` of `sid`.
+    /// `[pos0, pos0 + n)` of `sid` — the decode path's post-step
+    /// round-trip (prefill quantizes inside the engine, pre-attention).
     fn quantize_range(&self, kv: &mut PagedKvCache, sid: RequestId, pos0: usize, n: usize) {
         if !self.quantize_kv || n == 0 {
             return;
@@ -103,15 +106,25 @@ impl<'a> Backend for RustBackend<'a> {
             // would hand back another request's stale workspace contents.
             anyhow::bail!("empty prefill chunk (session {session}, pos {pos0})");
         }
-        if pos0 == 0 {
-            self.sessions.insert(session);
-        }
+        // First chunks no longer always start at 0: a shared prompt
+        // prefix lets the coordinator begin prefill at the first
+        // unmatched token.
+        self.sessions.insert(session);
         // Under the coordinator the full budget is already reserved; this
         // only allocates blocks for standalone use.
         kv.ensure_tokens(session, pos0 + tokens.len())?;
-        self.engine
-            .prefill_chunk_paged(session, tokens, pos0, kv, &mut self.prefill_ws, last)?;
-        self.quantize_range(kv, session, pos0, tokens.len());
+        self.engine.prefill_chunk_paged(
+            session,
+            tokens,
+            pos0,
+            kv,
+            &mut self.prefill_ws,
+            last,
+            self.quantize_kv,
+        )?;
+        // Report write progress: sharers of this session's prefix blocks
+        // debug-assert the rows exist before their first read.
+        kv.note_filled(session, pos0 + tokens.len());
         Ok(if last { Some(self.prefill_ws.logits().to_vec()) } else { None })
     }
 

@@ -968,15 +968,18 @@ impl Engine {
         for (l, layer) in self.layers.iter().enumerate() {
             scoped_chunks_indexed(b, threads, |widx, range| {
                 // SAFETY: each worker owns a unique workspace index and a
-                // disjoint range of batch entries; sessions own disjoint
-                // cache blocks, so no two workers touch the same memory.
+                // disjoint range of batch entries; sessions write disjoint
+                // cache blocks (a written block has refcount 1 — prefix
+                // blocks shared across sessions are read-only), so no two
+                // workers write the same memory.
                 let ws = unsafe { &mut *ws_ptr.0.add(widx) };
                 for bi in range {
                     let (sid, _, pos) = entries[bi];
                     let x = unsafe { std::slice::from_raw_parts_mut(x_ptr.0.add(bi * d), d) };
                     // SAFETY: session ids are unique within `entries`
-                    // (checked above), so this worker holds the only live
-                    // view over this session's blocks.
+                    // (checked above), so this worker holds the only view
+                    // that *writes* this session's blocks; concurrent
+                    // views may read its shared prefix blocks.
                     let mut view = unsafe { store.seq_layer(l, pages.blocks(sid).unwrap()) };
                     self.layer_forward(l, layer, x, pos, &mut view, ws);
                 }
@@ -1022,6 +1025,7 @@ impl Engine {
         pos0: usize,
         kv: &mut L,
         ws: &mut PrefillWorkspace,
+        quantize_kv: bool,
     ) {
         let cfg = &self.cfg;
         let d = cfg.d_model;
@@ -1099,6 +1103,27 @@ impl Engine {
                     dst.copy_from_slice(&vl[(i * hkv + hd) * vw..(i * hkv + hd + 1) * vw]);
                 }
             });
+        }
+
+        // Quantized-KV mode: int4 round-trip the freshly written rows
+        // run-by-run, BEFORE any attention (or reconstruction) reads them.
+        // Every query row then sees only round-tripped K/V — including the
+        // rows of its own chunk — so prefill numerics are invariant to the
+        // chunk partition (each row's round-trip depends on that row
+        // alone, never on where a chunk boundary fell).
+        if quantize_kv {
+            for hd in 0..hkv {
+                kv.for_k_runs_mut(hd, pos0, n, |_, rows| {
+                    for row in rows.chunks_exact_mut(kw) {
+                        crate::kvcache::quant::roundtrip(row);
+                    }
+                });
+                kv.for_v_runs_mut(hd, pos0, n, |_, rows| {
+                    for row in rows.chunks_exact_mut(vw) {
+                        crate::kvcache::quant::roundtrip(row);
+                    }
+                });
+            }
         }
 
         // Reconstruction for the factorization baselines: once per chunk,
@@ -1227,7 +1252,7 @@ impl Engine {
             self.embed_into(t, &mut ws.x[i * d..(i + 1) * d]);
         }
         for (l, layer) in self.layers.iter().enumerate() {
-            self.prefill_chunk_layer(l, layer, n, pos0, &mut cache.layers[l], ws);
+            self.prefill_chunk_layer(l, layer, n, pos0, &mut cache.layers[l], ws, false);
         }
         cache.len = cache.len.max(pos0 + n);
         if want_logits {
@@ -1240,7 +1265,13 @@ impl Engine {
     /// KV-cache — the serving path behind `Backend::prefill_chunk`.  The
     /// session's reservation must already cover `pos0 + tokens.len()` (the
     /// coordinator reserves a request's full budget at admission).  Zero
-    /// heap allocations once `ws` has seen the chunk size.
+    /// heap allocations once `ws` has seen the chunk size (unless
+    /// `quantize_kv`, whose int4 round-trips allocate in `kvcache::quant`).
+    ///
+    /// With `quantize_kv` the chunk's latent rows are round-tripped
+    /// through int4 immediately after they are written and before any
+    /// attention reads them, so quantized prefill logits do not depend on
+    /// the chunk partition (`tests/prefill.rs` propchecks this).
     pub fn prefill_chunk_paged(
         &self,
         session: u64,
@@ -1249,6 +1280,7 @@ impl Engine {
         kv: &mut PagedKvCache,
         ws: &mut PrefillWorkspace,
         want_logits: bool,
+        quantize_kv: bool,
     ) -> Result<()> {
         let n = tokens.len();
         if n == 0 {
@@ -1277,7 +1309,7 @@ impl Engine {
             // SAFETY: one live view per session; the chunk's attention
             // workers only share it read-only after its writes complete.
             let mut view = unsafe { store.seq_layer(l, blocks) };
-            self.prefill_chunk_layer(l, layer, n, pos0, &mut view, ws);
+            self.prefill_chunk_layer(l, layer, n, pos0, &mut view, ws, quantize_kv);
         }
         if want_logits {
             let PrefillWorkspace { x, h, logits, .. } = ws;

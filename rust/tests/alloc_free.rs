@@ -90,7 +90,7 @@ fn steady_state_paged_decode_allocates_nothing() {
         let mut prefill_ws = PrefillWorkspace::new(&engine, s_max);
         let chunk: Vec<u8> = (0..16).map(|i| (i % 251) as u8).collect();
         engine
-            .prefill_chunk_paged(1, &chunk, pos, &mut kv, &mut prefill_ws, false)
+            .prefill_chunk_paged(1, &chunk, pos, &mut kv, &mut prefill_ws, false, false)
             .unwrap();
         let mut cpos = pos + 16;
         let before = ALLOCS.load(Ordering::Relaxed);
@@ -98,7 +98,7 @@ fn steady_state_paged_decode_allocates_nothing() {
             // Final chunk computes logits too — also allocation-free.
             let last = i == 2;
             engine
-                .prefill_chunk_paged(1, &chunk, cpos, &mut kv, &mut prefill_ws, last)
+                .prefill_chunk_paged(1, &chunk, cpos, &mut kv, &mut prefill_ws, last, false)
                 .unwrap();
             cpos += 16;
         }
@@ -108,5 +108,41 @@ fn steady_state_paged_decode_allocates_nothing() {
             0,
             "{method:?}: steady-state chunked prefill must not allocate"
         );
+
+        // Shared-prefix sessions decode through the same kernels and
+        // refcounted blocks: reading another session's prefix blocks must
+        // not change the zero-allocation contract.
+        let prompt: Vec<u8> = (0..40).map(|i| (i % 251) as u8).collect();
+        let r10 = kv.reserve_prefix(10, &prompt, 64).unwrap();
+        assert_eq!(r10.matched_tokens, 0);
+        engine
+            .prefill_chunk_paged(10, &prompt, 0, &mut kv, &mut prefill_ws, false, false)
+            .unwrap();
+        let r11 = kv.reserve_prefix(11, &prompt, 64).unwrap();
+        assert_eq!(r11.matched_tokens, 32, "40-token prompt shares its 2 full blocks");
+        engine
+            .prefill_chunk_paged(11, &prompt[32..], 32, &mut kv, &mut prefill_ws, false, false)
+            .unwrap();
+        let mut spos = 40usize;
+        let feed2 =
+            |spos: &mut usize, kv: &mut PagedKvCache, batch: &mut BatchWorkspace, n: usize| {
+                for _ in 0..n {
+                    let token = (*spos % 251) as u8;
+                    let entries = [(10u64, token, *spos), (11u64, token, *spos)];
+                    engine.decode_batch_paged(&entries, kv, batch, true).unwrap();
+                    *spos += 1;
+                }
+            };
+        feed2(&mut spos, &mut kv, &mut batch, 8); // warmup at batch size 2
+        let before = ALLOCS.load(Ordering::Relaxed);
+        feed2(&mut spos, &mut kv, &mut batch, 16);
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "{method:?}: shared-prefix batched decode must not allocate"
+        );
+        kv.release(10);
+        kv.release(11);
     }
 }

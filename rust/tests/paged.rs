@@ -117,6 +117,90 @@ fn scheduler_batched_decode_bit_identical_to_sequential() {
     }
 }
 
+/// Tentpole acceptance: 8 concurrent requests sharing a 512-token prompt
+/// prefix must (i) allocate the prefix blocks **once** — used blocks stay
+/// near prefix + 8·suffix instead of 8·(prefix + suffix) — and (ii) decode
+/// bit-identically to the unshared path (each request served alone with no
+/// resident prefix to attach).
+#[test]
+fn shared_prefix_sessions_bit_identical_and_allocate_prefix_once() {
+    const SESSIONS: usize = 8;
+    const MAX_NEW: usize = 8;
+    const PREFIX: usize = 512;
+    for method in [Method::Baseline, Method::Rap] {
+        let engine = synth_engine(method, 17);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let s_max = PREFIX + 64;
+        let common = prompt(PREFIX, 0);
+        let prompts: Vec<Vec<u8>> = (0..SESSIONS)
+            .map(|i| {
+                let mut p = common.clone();
+                p.extend(prompt(9 + i, 50 + i)); // distinct suffixes
+                p
+            })
+            .collect();
+
+        // Reference: each request served alone — nothing resident to share.
+        let mut expected = Vec::new();
+        {
+            let mut backend = RustBackend::new(&engine, s_max);
+            let mut kv = PagedKvCache::with_storage(shape.clone(), 64 << 20);
+            for (i, p) in prompts.iter().enumerate() {
+                expected.push(
+                    generate_once(&mut backend, &mut kv, 900 + i as u64, p, MAX_NEW).unwrap(),
+                );
+            }
+        }
+
+        // Shared: all 8 concurrent; requests 1..7 attach request 0's prefix.
+        let backend = RustBackend::new(&engine, s_max);
+        let mut coord = Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: SESSIONS,
+                    buckets: vec![1, 4, 8],
+                    max_queue: 64,
+                    prefill_chunk_tokens: 128,
+                },
+                kv_budget_bytes: 64 << 20,
+            },
+        );
+        for (i, p) in prompts.iter().enumerate() {
+            assert!(coord.submit(Request::new(i as u64, p.clone(), MAX_NEW)));
+        }
+        let mut responses = coord.run_to_completion().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), SESSIONS);
+        for (r, e) in responses.iter().zip(&expected) {
+            assert_eq!(
+                &r.generated, e,
+                "{method:?} session {}: shared-prefix decode must be bit-identical",
+                r.id
+            );
+        }
+
+        let prefix_blocks = PREFIX / BLOCK_TOKENS;
+        assert_eq!(coord.metrics.prefix_hits, SESSIONS as u64 - 1);
+        assert_eq!(
+            coord.metrics.prefix_saved_blocks,
+            (SESSIONS as u64 - 1) * prefix_blocks as u64
+        );
+        // Prefix allocated once + a few private suffix/generation blocks
+        // per session; the unshared path would peak at ~8x the prefix.
+        assert!(
+            coord.metrics.peak_kv_blocks >= prefix_blocks
+                && coord.metrics.peak_kv_blocks <= prefix_blocks + SESSIONS * 4,
+            "{method:?}: peak {} blocks vs prefix {}",
+            coord.metrics.peak_kv_blocks,
+            prefix_blocks
+        );
+        assert_eq!(coord.kv_used_blocks(), 0, "{method:?}: all KV released");
+        assert_eq!(coord.kv_prefix_nodes(), 0, "{method:?}: trie dies with its last session");
+    }
+}
+
 #[test]
 fn paged_sessions_are_isolated() {
     // Interleaving another session's decode must not perturb the first

@@ -89,7 +89,7 @@ fn paged_chunked_prefill_matches_dense_and_decodes_identically() {
         for (ci, &c) in chunks.iter().enumerate() {
             let last = ci + 1 == chunks.len();
             engine
-                .prefill_chunk_paged(1, &p[pos0..pos0 + c], pos0, &mut kv, &mut ws, last)
+                .prefill_chunk_paged(1, &p[pos0..pos0 + c], pos0, &mut kv, &mut ws, last, false)
                 .unwrap();
             pos0 += c;
         }
@@ -107,6 +107,72 @@ fn paged_chunked_prefill_matches_dense_and_decodes_identically() {
             dense_logits.as_slice(),
             batch.logits_row(0),
             "{method:?}: decode after chunked prefill"
+        );
+    }
+}
+
+/// Quantized prefill must be chunk-size-invariant: every latent row is
+/// int4 round-tripped right after it is written and before any attention
+/// reads it, so the partition of the prompt into chunks cannot change the
+/// logits.  Propchecked against the whole-prompt run for chunk sizes
+/// {1, 16, 64} and random partitions — the regression was chunk-granular
+/// round-trips, where the in-flight chunk read full-precision rows and
+/// `prefill_chunk_tokens` leaked into the numerics.
+#[test]
+fn quantized_prefill_is_chunk_size_invariant() {
+    for method in METHODS {
+        let engine = synth_engine(method, 31);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let s_max = 128;
+        let p = prompt(70, 7);
+
+        // Reference: the whole prompt in one quantized chunk.
+        let quantized_prefill = |chunks: &[usize]| -> Vec<f32> {
+            assert_eq!(chunks.iter().sum::<usize>(), p.len());
+            let mut kv = PagedKvCache::with_storage(shape.clone(), 8 << 20);
+            kv.reserve(1, s_max).unwrap();
+            let mut ws = PrefillWorkspace::new(&engine, s_max);
+            let mut pos0 = 0;
+            for (ci, &c) in chunks.iter().enumerate() {
+                let last = ci + 1 == chunks.len();
+                engine
+                    .prefill_chunk_paged(1, &p[pos0..pos0 + c], pos0, &mut kv, &mut ws, last, true)
+                    .unwrap();
+                pos0 += c;
+            }
+            ws.logits().to_vec()
+        };
+        let whole = quantized_prefill(&[p.len()]);
+        for fixed in [1usize, 16, 64] {
+            let mut chunks: Vec<usize> = vec![fixed; p.len() / fixed];
+            if p.len() % fixed > 0 {
+                chunks.push(p.len() % fixed);
+            }
+            assert_eq!(
+                quantized_prefill(&chunks),
+                whole,
+                "{method:?}: chunk size {fixed} diverges from whole-prompt"
+            );
+        }
+        forall_res(
+            23,
+            6,
+            |r| {
+                let mut chunks = Vec::new();
+                let mut left = p.len();
+                while left > 0 {
+                    let c = r.range(1, 33).min(left);
+                    chunks.push(c);
+                    left -= c;
+                }
+                chunks
+            },
+            |chunks| {
+                if quantized_prefill(chunks) != whole {
+                    return Err(format!("{method:?}: partition {chunks:?} diverges"));
+                }
+                Ok(())
+            },
         );
     }
 }

@@ -1,11 +1,13 @@
 //! Serving-stack integration tests: coordinator over both backends, the
 //! TCP server, and KV accounting under load.  Require `make artifacts`.
 
+use rap::config::Method;
 use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
 use rap::kvcache::CacheShape;
 use rap::manifest::Manifest;
 use rap::model::backend::RustBackend;
 use rap::model::load_engine;
+use rap::model::synth::synth_engine;
 use rap::runtime::backend::PjrtBackend;
 use rap::runtime::{PjrtContext, PjrtEngine};
 use rap::server::{client_request, serve};
@@ -146,6 +148,52 @@ fn quantized_backend_still_generates_sensibly() {
     assert_eq!(out.len(), 8);
     assert!(out.iter().all(|&c| c == b' ' || c.is_ascii_graphic() || c == b'\n'));
     assert_eq!(kv.used_blocks(), 0, "generate_once releases its session");
+}
+
+/// A zero-token request admitted through the coordinator must complete
+/// cleanly with an empty generation — the engine has no position to
+/// compute logits at, and argmaxing a stale workspace would emit garbage
+/// tokens (or, worse, another request's logits).  Runs on the real
+/// RustBackend over synthetic weights — no artifacts needed.
+#[test]
+fn empty_prompt_over_rust_backend_yields_empty_generation() {
+    let engine = synth_engine(Method::Rap, 23);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let s_max = 96;
+
+    // Reference for the non-empty request decoded alone.
+    let solo = {
+        let mut backend = RustBackend::new(&engine, s_max);
+        let mut kv = rap::kvcache::PagedKvCache::with_storage(shape.clone(), 8 << 20);
+        rap::runtime::backend::generate_once(&mut backend, &mut kv, 50, &[5, 6, 7], 6).unwrap()
+    };
+
+    let backend = RustBackend::new(&engine, s_max);
+    let mut coord = Coordinator::new(
+        backend,
+        shape,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: 4,
+                buckets: vec![1, 4],
+                max_queue: 16,
+                ..Default::default()
+            },
+            kv_budget_bytes: 8 << 20,
+        },
+    );
+    assert!(coord.submit(Request::new(1, Vec::new(), 6)));
+    assert!(coord.submit(Request::new(2, vec![5, 6, 7], 6)));
+    assert!(coord.submit(Request::new(3, Vec::new(), 0)));
+    let mut responses = coord.run_to_completion().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 3);
+    assert!(responses[0].generated.is_empty(), "no prompt -> no tokens");
+    assert_eq!(responses[0].metrics.generated_tokens, 0);
+    assert_eq!(responses[1].generated, solo, "neighbour request unperturbed");
+    assert!(responses[2].generated.is_empty());
+    assert_eq!(coord.backend.session_count(), 0, "no dangling sessions");
+    assert_eq!(coord.kv_used_blocks(), 0, "empty prompts release their reservation");
 }
 
 #[test]
