@@ -21,7 +21,8 @@ use rap::model::backend::RustBackend;
 use rap::model::synth::synth_engine;
 use rap::runtime::backend::PjrtBackend;
 use rap::runtime::{PjrtContext, PjrtEngine};
-use rap::server::{client_request, serve};
+use rap::server::{client_request, client_request_stream, serve};
+use rap::util::json::{num, obj, s};
 use rap::util::threadpool::ThreadPool;
 use rap::workload::{generate, WorkloadConfig};
 
@@ -187,6 +188,29 @@ fn drive_synth(n_requests: usize) -> Result<()> {
         "{} responses in {wall:.2}s | {:.1} gen tok/s through the paged store",
         done.load(std::sync::atomic::Ordering::SeqCst),
         toks.load(std::sync::atomic::Ordering::SeqCst) as f64 / wall,
+    );
+
+    // Serving API v2: the same server streams per-token deltas with
+    // seeded sampling and stop sequences — the first delta lands at
+    // prefill completion, long before the generation finishes.
+    let body = obj(vec![
+        ("prompt", s("the serving api streams ")),
+        ("max_new", num(24.0)),
+        ("temperature", num(0.8)),
+        ("top_k", num(40.0)),
+        ("seed", num(7.0)),
+        ("stop", rap::util::json::arr(vec![s("\n\n")])),
+    ]);
+    let sc = client_request_stream(&addr, &body)?;
+    println!(
+        "streaming: first delta {:.1} ms, {} deltas, total {:.1} ms, finish_reason={}",
+        sc.first_delta_ms,
+        sc.deltas.len(),
+        sc.total_ms,
+        sc.summary
+            .get("finish_reason")
+            .and_then(|f| f.as_str())
+            .unwrap_or("?"),
     );
     handle.shutdown();
     Ok(())

@@ -1,0 +1,181 @@
+//! Serving API v2 gate: streaming TTFT vs one-shot total latency, 8
+//! concurrent sessions through the JSON-lines TCP server over the
+//! pure-Rust paged engine (synthetic weights — no artifacts needed).
+//!
+//! A streaming client's first `{"delta"}` line lands at prefill
+//! completion, while a one-shot client waits for the whole generation —
+//! so the workload must show streamed first-token latency well below the
+//! one-shot total.  Results land in `BENCH_serving.json` (uploaded by CI
+//! next to the decode/prefill/prefix artifacts) so the serving-latency
+//! trajectory is tracked across PRs.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+use rap::config::Method;
+use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use rap::kvcache::CacheShape;
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
+use rap::server::{client_request, client_request_stream, serve, ServerHandle};
+use rap::util::json::{num, obj, s, Value};
+use rap::util::threadpool::ThreadPool;
+
+fn start_server(sessions: usize, s_max: usize) -> ServerHandle {
+    let factory = move || -> Result<Coordinator<RustBackend<'static>>> {
+        // Engine leaks deliberately: server lifetime == process lifetime.
+        let engine: &'static rap::model::Engine =
+            Box::leak(Box::new(synth_engine(Method::Rap, 11)));
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let backend = RustBackend::new(engine, s_max);
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: sessions,
+                    buckets: vec![1, 4, 8],
+                    max_queue: 64,
+                    prefill_chunk_tokens: 64,
+                },
+                kv_budget_bytes: 128 << 20,
+            },
+        ))
+    };
+    serve("127.0.0.1:0", factory, sessions).unwrap()
+}
+
+fn prompt_text(len: usize, salt: usize) -> String {
+    // The i*salt cross term keeps prompts with different salts distinct
+    // within the first KV block, so the prefix cache never shares across
+    // clients and the phases measure plain serving latency.
+    (0..len)
+        .map(|i| char::from(b'a' + ((i * 7 + salt * 13 + i * salt) % 26) as u8))
+        .collect()
+}
+
+struct Lat {
+    mean: f64,
+    max: f64,
+}
+
+fn stats(xs: &[f64]) -> Lat {
+    let n = xs.len().max(1) as f64;
+    Lat {
+        mean: xs.iter().sum::<f64>() / n,
+        max: xs.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("RAP_BENCH_FAST").is_ok();
+    let sessions = 8usize;
+    let prompt_len = if fast { 96 } else { 192 };
+    let max_new = if fast { 12 } else { 32 };
+
+    println!(
+        "== bench: serving_v2 ({sessions} concurrent sessions, prompt {prompt_len}, max_new {max_new}) =="
+    );
+    let handle = start_server(sessions, prompt_len + max_new + 64);
+    let addr = handle.addr;
+
+    // Warm the engine (workspace sizing, thread pool spin-up) off-clock.
+    // Salts stay below 26 so no two prompts are congruent mod the
+    // 26-letter alphabet (identical prompts would wake the prefix cache).
+    client_request(&addr, &prompt_text(prompt_len, 25), 4).unwrap();
+
+    // Phase 1: one-shot clients — latency is the full-generation wall.
+    // Worker threads only collect; assertions run on the main thread (a
+    // panic inside a pool job would wedge `wait_idle`).
+    let pool = ThreadPool::new(sessions);
+    let one_shot: Arc<Mutex<Vec<(usize, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+    for i in 0..sessions {
+        let one_shot = Arc::clone(&one_shot);
+        let prompt = prompt_text(prompt_len, i);
+        pool.execute(move || {
+            let t0 = Instant::now();
+            let tokens = client_request(&addr, &prompt, max_new)
+                .ok()
+                .and_then(|resp| resp.get("tokens").and_then(|t| t.as_usize()))
+                .unwrap_or(0);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            one_shot.lock().unwrap().push((tokens, wall_ms));
+        });
+    }
+    pool.wait_idle();
+
+    // Phase 2: the same workload streamed — the interesting number is the
+    // wall time to the FIRST delta line, observed client-side.
+    type StreamSample = (usize, usize, f64, f64); // (tokens, deltas, first_ms, total_ms)
+    let streamed: Arc<Mutex<Vec<StreamSample>>> = Arc::new(Mutex::new(Vec::new()));
+    for i in 0..sessions {
+        let streamed = Arc::clone(&streamed);
+        let prompt = prompt_text(prompt_len, 10 + i);
+        pool.execute(move || {
+            let body = obj(vec![("prompt", s(prompt)), ("max_new", num(max_new as f64))]);
+            let sample = client_request_stream(&addr, &body)
+                .map(|sc| {
+                    let tokens = sc
+                        .summary
+                        .get("tokens")
+                        .and_then(|t| t.as_usize())
+                        .unwrap_or(0);
+                    (tokens, sc.deltas.len(), sc.first_delta_ms, sc.total_ms)
+                })
+                .unwrap_or((0, 0, 0.0, 0.0));
+            streamed.lock().unwrap().push(sample);
+        });
+    }
+    pool.wait_idle();
+    handle.shutdown();
+
+    let one_shot = one_shot.lock().unwrap();
+    let streamed = streamed.lock().unwrap();
+    assert!(
+        one_shot.iter().all(|&(tokens, _)| tokens == max_new),
+        "every one-shot client got its full generation: {one_shot:?}"
+    );
+    assert!(
+        streamed.iter().all(|&(tokens, deltas, _, _)| tokens == max_new && deltas > 0),
+        "every streaming client got deltas plus a full summary: {streamed:?}"
+    );
+    let one = stats(&one_shot.iter().map(|&(_, ms)| ms).collect::<Vec<f64>>());
+    let ttft = stats(&streamed.iter().map(|&(_, _, f, _)| f).collect::<Vec<f64>>());
+    let stot = stats(&streamed.iter().map(|&(_, _, _, t)| t).collect::<Vec<f64>>());
+    let speedup = one.mean / ttft.mean.max(1e-9);
+    println!(
+        "one-shot:  total mean {:.1} ms (max {:.1})",
+        one.mean, one.max
+    );
+    println!(
+        "streaming: first delta mean {:.1} ms (max {:.1}), total mean {:.1} ms",
+        ttft.mean, ttft.max, stot.mean
+    );
+    println!("    -> first token {speedup:.1}x sooner than the one-shot response");
+    assert!(
+        ttft.mean < one.mean,
+        "streamed first-token latency ({:.1} ms) must beat the one-shot total ({:.1} ms)",
+        ttft.mean,
+        one.mean
+    );
+
+    let summary: Value = obj(vec![
+        ("bench", s("serving_v2")),
+        ("sessions", num(sessions as f64)),
+        ("prompt_tokens", num(prompt_len as f64)),
+        ("max_new", num(max_new as f64)),
+        ("one_shot", obj(vec![("mean_total_ms", num(one.mean)), ("max_total_ms", num(one.max))])),
+        (
+            "streaming",
+            obj(vec![
+                ("mean_first_delta_ms", num(ttft.mean)),
+                ("max_first_delta_ms", num(ttft.max)),
+                ("mean_total_ms", num(stot.mean)),
+            ]),
+        ),
+        ("ttft_speedup", num(speedup)),
+    ]);
+    let _ = std::fs::write("BENCH_serving.json", summary.to_string_pretty());
+    println!("-> BENCH_serving.json (streamed first token {speedup:.1}x sooner)");
+}

@@ -163,6 +163,15 @@ impl Batcher {
         self.running.retain(|&r| r != id);
         kv.release(id);
     }
+
+    /// Remove a still-queued request (cancellation before admission).
+    /// Queued requests hold no KV reservation, so there is nothing to
+    /// release; returns the request so the caller can build the final
+    /// `Cancelled` response from it.
+    pub fn remove_queued(&mut self, id: RequestId) -> Option<Request> {
+        let pos = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(pos)
+    }
 }
 
 #[cfg(test)]
@@ -277,6 +286,24 @@ mod tests {
         assert_eq!(b.admit(&mut kv).len(), 1);
         b.finish(1, &mut kv);
         assert!(b.submit(req(1, 8)), "id reusable once the session finished");
+    }
+
+    #[test]
+    fn remove_queued_cancels_before_admission() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let mut kv = kv(100);
+        assert!(b.submit(req(1, 8)));
+        assert!(b.submit(req(2, 8)));
+        let cancelled = b.remove_queued(1).expect("request 1 is queued");
+        assert_eq!(cancelled.id, 1);
+        assert_eq!(b.queue_len(), 1);
+        assert!(b.remove_queued(1).is_none(), "already removed");
+        // Admission proceeds normally for the survivor; the cancelled id
+        // never reserved anything, so the id is immediately reusable.
+        assert_eq!(b.admit(&mut kv).len(), 1);
+        assert_eq!(b.running_len(), 1);
+        assert!(b.submit(req(1, 8)));
+        assert!(b.remove_queued(99).is_none(), "unknown ids are a no-op");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use std::time::Duration;
 
+use crate::coordinator::request::FinishReason;
 use crate::util::stats::Welford;
 
 #[derive(Debug, Clone, Default)]
@@ -19,6 +20,9 @@ pub struct RequestMetrics {
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
     pub total_ms: f64,
+    /// Why the request ended (length / stop / cancelled / rejected) —
+    /// surfaced in the server's final summary line.
+    pub finish_reason: FinishReason,
 }
 
 #[derive(Debug, Default)]
@@ -30,7 +34,15 @@ pub struct AggregateMetrics {
     pub total_tokens: u64,
     pub wall: Duration,
     pub peak_kv_blocks: usize,
+    /// Submissions refused by queue backpressure (the server answers them
+    /// with an explicit `queue_full` rejection, never silence).
     pub rejected: u64,
+    /// Sessions torn down mid-flight by `Coordinator::cancel` — queued,
+    /// prefilling, or decoding; their KV reservation (and any shared
+    /// prefix refcounts) is released at cancellation.
+    pub cancelled: u64,
+    /// Sessions ended by a stop sequence before reaching `max_new`.
+    pub stopped_early: u64,
     pub decode_batches: u64,
     pub decode_batch_occupancy: Welford,
     /// Prefill chunks executed (Sarathi-style chunked admission).
@@ -68,6 +80,11 @@ impl AggregateMetrics {
         }
         self.queue.add(m.queue_ms);
         self.total_tokens += (m.prompt_tokens + m.generated_tokens) as u64;
+        match m.finish_reason {
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::Stop => self.stopped_early += 1,
+            FinishReason::Length | FinishReason::Rejected => {}
+        }
     }
 
     /// Fraction of admissions served a shared prompt prefix.
@@ -88,13 +105,15 @@ impl AggregateMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} rejected={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
+            "requests={} rejected={} cancelled={} stopped_early={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
              ttft: mean {:.1} ms (max {:.1})  decode: mean {:.2} ms/tok (shared {:.2})  queue: mean {:.1} ms\n\
              decode batches={} mean occupancy={:.2}  peak kv blocks={}\n\
              prefill chunks={} mean tokens={:.1}  max decode stall={} chunks\n\
              prefix cache: {}/{} hits ({:.0}%)  saved blocks={}  mean matched={:.0} tok",
             self.requests,
             self.rejected,
+            self.cancelled,
+            self.stopped_early,
             self.total_tokens,
             self.wall.as_secs_f64(),
             self.throughput_tps(),
@@ -132,6 +151,7 @@ mod tests {
             prompt_tokens: 5,
             generated_tokens: 10,
             total_ms: 30.0,
+            finish_reason: FinishReason::Length,
         });
         a.record(&RequestMetrics {
             queue_ms: 3.0,
@@ -140,12 +160,35 @@ mod tests {
             prompt_tokens: 5,
             generated_tokens: 10,
             total_ms: 60.0,
+            finish_reason: FinishReason::Length,
         });
         assert_eq!(a.requests, 2);
         assert_eq!(a.total_tokens, 30);
         assert!((a.ttft.mean() - 15.0).abs() < 1e-9);
         a.wall = Duration::from_secs(3);
         assert!((a.throughput_tps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finish_reasons_feed_the_counters() {
+        let mut a = AggregateMetrics::default();
+        for reason in [
+            FinishReason::Length,
+            FinishReason::Stop,
+            FinishReason::Stop,
+            FinishReason::Cancelled,
+        ] {
+            a.record(&RequestMetrics {
+                finish_reason: reason,
+                ..Default::default()
+            });
+        }
+        assert_eq!(a.requests, 4);
+        assert_eq!(a.stopped_early, 2);
+        assert_eq!(a.cancelled, 1);
+        let report = a.report();
+        assert!(report.contains("cancelled=1"), "{report}");
+        assert!(report.contains("stopped_early=2"), "{report}");
     }
 
     #[test]

@@ -9,9 +9,11 @@
 pub mod batcher;
 pub mod metrics;
 pub mod request;
+pub mod sampling;
 pub mod scheduler;
 
 pub use batcher::{Admission, Batcher, BatcherConfig};
 pub use metrics::{AggregateMetrics, RequestMetrics};
-pub use request::{Request, RequestId, Response};
+pub use request::{Event, FinishReason, Request, RequestId, Response};
+pub use sampling::{Sampler, SamplingParams};
 pub use scheduler::{Backend, Coordinator, CoordinatorConfig};

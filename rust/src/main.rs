@@ -55,6 +55,8 @@ fn print_usage() {
            generate  --model M --variant V --prompt P [--max-new N] [--engine rust|pjrt]\n\
            eval      --model M [--variants a,b,c] [--quant] [--windows N]\n\
            serve     --model M --variant V [--addr HOST:PORT] [--sessions N]\n\
+                     (API v2: per-token streaming, seeded sampling, stop\n\
+                      sequences, {{\"cancel\": id}}; v1 one-shot still served)\n\
            bench-serving --model M --variant V [--requests N] [--rate R]\n\
            plan      --rho R [--layers L] [--seed S]   native Alg.2 + pair-selection demo\n\
            experiments [NAME ...|--all] [--quick]      regenerate paper tables/figures\n"
@@ -183,7 +185,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let handle = rap::server::serve(&addr, factory, 4)?;
     println!(
-        "listening on {} — protocol: one JSON object per line {{\"prompt\", \"max_new\"}}",
+        "listening on {} — serving API v2, one JSON object per line:\n\
+         \x20 {{\"prompt\", \"max_new\", \"stream\", \"temperature\", \"top_k\", \"top_p\", \
+         \"seed\", \"stop\"}}\n\
+         \x20 streaming replies: {{\"delta\"}} lines then a {{\"done\", \"finish_reason\"}} \
+         summary; {{\"cancel\": id}} tears a request down mid-flight\n\
+         \x20 (v1 one-shot requests still answered in the old shape)",
         handle.addr
     );
     loop {

@@ -194,6 +194,11 @@ impl<'a> Backend for PjrtBackend<'a> {
 /// caller supplies the paged allocator the backend decodes against
 /// (storage-backed when the backend `wants_paged_storage`); the session's
 /// blocks are released before returning.
+///
+/// Deliberately an independent argmax loop, NOT a delegation to
+/// [`generate_sampled`] with greedy params: this is the v1 oracle the
+/// sampled path is asserted bit-identical against in `tests/serving.rs`,
+/// and delegating would make that identity tautological.
 pub fn generate_once(
     backend: &mut dyn Backend,
     kv: &mut PagedKvCache,
@@ -212,6 +217,37 @@ pub fn generate_once(
         pos += 1;
         if pos >= backend.s_max() {
             break;
+        }
+    }
+    backend.drop_session(id);
+    kv.release(id);
+    Ok(out)
+}
+
+/// Single-session *sampled* generation through the backend — the
+/// sequential (batch-1) reference the coordinator's batched sampled
+/// decode is propchecked against in `tests/serving.rs`.  Consumes logits
+/// in the same order as the v2 serve loop — the prompt's final prefill
+/// logits name the first token, each decode step's logits name the next —
+/// so the same `SamplingParams` reproduce the same generation.
+pub fn generate_sampled(
+    backend: &mut dyn Backend,
+    kv: &mut PagedKvCache,
+    id: RequestId,
+    prompt: &[u8],
+    n: usize,
+    params: &crate::coordinator::SamplingParams,
+) -> Result<Vec<u8>> {
+    let mut sampler = crate::coordinator::Sampler::new(params);
+    let logits = backend.prefill(kv, id, prompt)?;
+    let mut out = Vec::with_capacity(n);
+    if n > 0 {
+        out.push(sampler.sample(&logits) as u8);
+        let mut pos = prompt.len();
+        while out.len() < n && pos < backend.s_max() {
+            let lg = backend.decode_batch(kv, &[(id, *out.last().unwrap(), pos)])?;
+            pos += 1;
+            out.push(sampler.sample(&lg[0]) as u8);
         }
     }
     backend.drop_session(id);

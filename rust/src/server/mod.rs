@@ -1,13 +1,46 @@
-//! JSON-lines TCP server in front of the coordinator.
+//! JSON-lines TCP server in front of the coordinator — serving API v2.
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"prompt": "...", "max_new": 32}
-//!   <- {"id": 1, "text": "...", "ttft_ms": 12.3, "decode_ms_per_token": 1.8}
+//! Protocol (one JSON object per line; all request fields beyond
+//! `prompt` are optional):
 //!
-//! Architecture: acceptor thread + per-connection handler threads (from the
-//! in-tree `ThreadPool`) feeding an mpsc channel into the single scheduler
-//! thread that owns the backend; responses are routed back over per-request
-//! channels.  (std-only: no tokio in this offline environment.)
+//!   -> {"prompt": "...", "max_new": 32,
+//!       "stream": true,                      // per-token delta lines
+//!       "temperature": 0.8, "top_k": 40,     // sampling (0 temp = greedy,
+//!       "top_p": 0.95, "seed": 7,            //  bit-identical to v1)
+//!       "stop": ["\n\n", "END"]}             // byte-level stop sequences
+//!
+//! Streaming (`"stream": true`) responses are incremental:
+//!
+//!   <- {"id": 1, "delta": "..."}             // as each token is sampled;
+//!                                            // the first arrives at
+//!                                            // prefill completion, before
+//!                                            // the request's decode runs
+//!   <- {"id": 1, "done": true, "text": "...", "finish_reason": "length",
+//!       "tokens": 32, "ttft_ms": 12.3, "decode_ms_per_token": 1.8}
+//!
+//! v1 one-shot requests (no `"stream"`) are still accepted and answered
+//! in the old single-line shape — `{"id", "text", "ttft_ms",
+//! "decode_ms_per_token", "tokens"}` — plus an additive `finish_reason`
+//! field old clients ignore.
+//!
+//! Finish reasons: `length` (max_new / context limit), `stop` (a stop
+//! sequence matched; the matched bytes stay in the output), `cancelled`,
+//! `rejected` (queue backpressure — reported as
+//! `{"error": "queue_full", ...}` instead of silence).
+//!
+//! Cancellation: `-> {"cancel": <id>}` (acked with `{"cancel": id, "ok":
+//! true}`) tears the session down wherever it is — queued, prefilling, or
+//! decoding — and its stream ends with a `finish_reason: "cancelled"`
+//! summary line.  A client that disconnects mid-stream is cancelled
+//! automatically on the first failed delta write, releasing its KV
+//! reservation (and shared prefix-block refcounts) instead of pinning
+//! them for the rest of the generation.
+//!
+//! Architecture: acceptor thread + per-connection handler threads (from
+//! the in-tree `ThreadPool`) feeding an mpsc channel into the single
+//! scheduler thread that owns the backend; per-token [`Event`]s are
+//! routed back over per-request channels.  (std-only: no tokio in this
+//! offline environment.)
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -15,16 +48,22 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Backend, Coordinator, Request, Response};
+use crate::coordinator::{
+    Backend, Coordinator, Event, FinishReason, Request, RequestId, Response, SamplingParams,
+};
 use crate::util::json::{self, Value};
 use crate::util::threadpool::ThreadPool;
 
+/// Per-request completion deadline for clients waiting on events.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+
 enum Msg {
-    Submit(Request, Sender<Response>),
+    Submit(Request, Sender<Event>),
+    Cancel(RequestId),
     Shutdown,
 }
 
@@ -47,9 +86,11 @@ impl ServerHandle {
     }
 }
 
-/// Scheduler loop: owns the coordinator, multiplexes submissions and ticks.
+/// Scheduler loop: owns the coordinator, multiplexes submissions,
+/// cancellations and ticks, and routes per-token events to the
+/// per-request reply channels.
 fn scheduler_loop<B: Backend>(mut coord: Coordinator<B>, rx: Receiver<Msg>) {
-    let mut reply_to: HashMap<u64, Sender<Response>> = HashMap::new();
+    let mut reply_to: HashMap<u64, Sender<Event>> = HashMap::new();
     loop {
         // Drain pending submissions (non-blocking when busy, blocking when
         // idle so we don't spin).
@@ -63,24 +104,55 @@ fn scheduler_loop<B: Backend>(mut coord: Coordinator<B>, rx: Receiver<Msg>) {
         };
         match msg {
             Some(Msg::Submit(req, reply)) => {
-                reply_to.insert(req.id, reply);
+                let id = req.id;
+                reply_to.insert(id, reply);
                 if !coord.submit(req) {
-                    // queue full: synthesize an immediate empty response
-                    // (the client treats empty text + 0 tokens as a 429).
+                    // Queue full: answer with an explicit Rejected event
+                    // and drop the routing entry — the v1 code claimed to
+                    // "synthesize an immediate empty response" but sent
+                    // nothing, leaving the client to ride out its full
+                    // timeout while the reply_to entry leaked forever.
+                    if let Some(ch) = reply_to.remove(&id) {
+                        let _ = ch.send(Event::Finished { id, response: Response::rejected(id) });
+                    }
                 }
                 continue; // keep draining before ticking
+            }
+            Some(Msg::Cancel(id)) => {
+                // Cancellation of an id that already finished (or never
+                // existed) is a no-op; otherwise the terminal Cancelled
+                // event closes the request's stream.
+                if let Some(resp) = coord.cancel(id) {
+                    if let Some(ch) = reply_to.remove(&id) {
+                        let _ = ch.send(Event::Finished { id, response: resp });
+                    }
+                    // cancel() buffers the response for run_to_completion
+                    // callers; the event above already served it, and a
+                    // submit+cancel cycle may never reach a tick — drop it
+                    // here or it leaks per cancellation.
+                    coord.discard_finished();
+                }
+                continue;
             }
             Some(Msg::Shutdown) => break,
             None => {}
         }
         if coord.pending() > 0 {
             match coord.tick() {
-                Ok(done) => {
-                    for resp in done {
-                        if let Some(ch) = reply_to.remove(&resp.id) {
-                            let _ = ch.send(resp);
+                Ok(events) => {
+                    for ev in events {
+                        let id = ev.id();
+                        if ev.is_finished() {
+                            if let Some(ch) = reply_to.remove(&id) {
+                                let _ = ch.send(ev);
+                            }
+                        } else if let Some(ch) = reply_to.get(&id) {
+                            let _ = ch.send(ev);
                         }
                     }
+                    // Events were routed; don't also accumulate responses
+                    // in the coordinator's run_to_completion buffer.
+                    coord.discard_finished();
                 }
                 Err(e) => {
                     eprintln!("[server] tick error: {e:#}");
@@ -89,6 +161,118 @@ fn scheduler_loop<B: Backend>(mut coord: Coordinator<B>, rx: Receiver<Msg>) {
             }
         }
     }
+}
+
+/// Incremental UTF-8 framing for streamed deltas: tokens are single bytes,
+/// so a multi-byte character arrives across several events.  `push`
+/// returns the longest decoded prefix whose text can no longer change —
+/// everything except a trailing incomplete (so far valid) multi-byte
+/// sequence — so concatenating every delta equals
+/// `String::from_utf8_lossy` over the whole generation, with no byte-split
+/// artefacts (e.g. two replacement chars where one two-byte char stood).
+struct Utf8Stream {
+    buf: Vec<u8>,
+}
+
+impl Utf8Stream {
+    fn new() -> Utf8Stream {
+        Utf8Stream { buf: Vec::new() }
+    }
+
+    /// Byte count of a trailing incomplete-but-potentially-valid UTF-8
+    /// sequence (0 when every byte is decodable now).  Only the final
+    /// lead byte within the last 3 positions can still be in flight.
+    fn undecided_tail(buf: &[u8]) -> usize {
+        let n = buf.len();
+        for i in (n.saturating_sub(3)..n).rev() {
+            let need = match buf[i] {
+                0xC2..=0xDF => 2,
+                0xE0..=0xEF => 3,
+                0xF0..=0xF4 => 4,
+                _ => continue, // ASCII / continuation / invalid: decided
+            };
+            let have = n - i;
+            if have < need && buf[i + 1..].iter().all(|&c| (0x80..=0xBF).contains(&c)) {
+                return have;
+            }
+            break; // complete (or already invalid) sequence: decided
+        }
+        0
+    }
+
+    fn push(&mut self, byte: u8) -> Option<String> {
+        self.buf.push(byte);
+        let decided = self.buf.len() - Self::undecided_tail(&self.buf);
+        if decided == 0 {
+            return None;
+        }
+        let rest = self.buf.split_off(decided);
+        let head = std::mem::replace(&mut self.buf, rest);
+        Some(String::from_utf8_lossy(&head).into_owned())
+    }
+
+    /// End of stream: whatever is still buffered is final now.
+    fn finish(&mut self) -> Option<String> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let head = std::mem::take(&mut self.buf);
+        Some(String::from_utf8_lossy(&head).into_owned())
+    }
+}
+
+/// Parse a v2 request body (everything beyond `prompt`/`max_new` is
+/// optional, defaulting to the v1 greedy one-shot behaviour).
+fn parse_request(v: &Value, id: RequestId) -> Request {
+    let prompt = v
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .unwrap_or("")
+        .as_bytes()
+        .to_vec();
+    let max_new = v.get("max_new").and_then(|m| m.as_usize()).unwrap_or(32);
+    let sampling = SamplingParams {
+        temperature: v.get("temperature").and_then(|t| t.as_f64()).unwrap_or(0.0) as f32,
+        top_k: v.get("top_k").and_then(|t| t.as_usize()).unwrap_or(0),
+        top_p: v.get("top_p").and_then(|t| t.as_f64()).unwrap_or(1.0) as f32,
+        seed: v.get("seed").and_then(|t| t.as_i64()).unwrap_or(0) as u64,
+    };
+    let stop: Vec<Vec<u8>> = v
+        .get("stop")
+        .and_then(|s| s.as_arr())
+        .map(|a| {
+            a.iter()
+                .filter_map(|x| x.as_str())
+                .map(|s| s.as_bytes().to_vec())
+                .collect()
+        })
+        .unwrap_or_default();
+    let stream = v.get("stream").and_then(|s| s.as_bool()).unwrap_or(false);
+    Request::new(id, prompt, max_new)
+        .with_sampling(sampling)
+        .with_stop(stop)
+        .with_stream(stream)
+}
+
+/// The terminal summary line shared by both modes (v1 keeps its exact old
+/// field set; `done`/`finish_reason` are additive).
+fn summary_line(resp: &Response) -> Value {
+    if resp.metrics.finish_reason == FinishReason::Rejected {
+        return json::obj(vec![
+            ("id", json::num(resp.id as f64)),
+            ("error", json::s("queue_full")),
+            ("finish_reason", json::s("rejected")),
+        ]);
+    }
+    json::obj(vec![
+        ("id", json::num(resp.id as f64)),
+        ("done", Value::Bool(true)),
+        ("text", json::s(String::from_utf8_lossy(&resp.generated).to_string())),
+        ("finish_reason", json::s(resp.metrics.finish_reason.as_str())),
+        ("ttft_ms", json::num(resp.metrics.ttft_ms)),
+        ("decode_ms_per_token", json::num(resp.metrics.decode_ms_per_token)),
+        ("tokens", json::num(resp.metrics.generated_tokens as f64)),
+    ])
 }
 
 fn handle_conn(stream: TcpStream, tx: Sender<Msg>, ids: Arc<AtomicU64>) {
@@ -109,47 +293,120 @@ fn handle_conn(stream: TcpStream, tx: Sender<Msg>, ids: Arc<AtomicU64>) {
         if trimmed.is_empty() {
             continue;
         }
-        let reply = match json::parse(trimmed) {
-            Ok(v) => {
-                let prompt = v
-                    .get("prompt")
-                    .and_then(|p| p.as_str())
-                    .unwrap_or("")
-                    .as_bytes()
-                    .to_vec();
-                let max_new = v
-                    .get("max_new")
-                    .and_then(|m| m.as_usize())
-                    .unwrap_or(32);
-                let id = ids.fetch_add(1, Ordering::SeqCst);
-                let (rtx, rrx) = channel();
-                if tx.send(Msg::Submit(Request::new(id, prompt, max_new), rtx)).is_err() {
+        let v = match json::parse(trimmed) {
+            Ok(v) => v,
+            Err(e) => {
+                let reply = json::obj(vec![("error", json::s(format!("bad json: {e}")))]);
+                if writeln!(out, "{reply}").is_err() {
                     break;
                 }
-                match rrx.recv_timeout(Duration::from_secs(120)) {
-                    Ok(resp) => json::obj(vec![
-                        ("id", json::num(resp.id as f64)),
-                        (
-                            "text",
-                            json::s(String::from_utf8_lossy(&resp.generated).to_string()),
-                        ),
-                        ("ttft_ms", json::num(resp.metrics.ttft_ms)),
-                        (
-                            "decode_ms_per_token",
-                            json::num(resp.metrics.decode_ms_per_token),
-                        ),
-                        ("tokens", json::num(resp.metrics.generated_tokens as f64)),
-                    ]),
-                    Err(_) => json::obj(vec![("error", json::s("timeout"))]),
-                }
+                continue;
             }
-            Err(e) => json::obj(vec![("error", json::s(format!("bad json: {e}")))]),
         };
-        if writeln!(out, "{reply}").is_err() {
+        // Explicit cancellation of any in-flight request by id: the
+        // cancelled request's own stream receives the terminal line; this
+        // connection just gets an ack.
+        if let Some(cid) = v.get("cancel").and_then(|c| c.as_i64()) {
+            let _ = tx.send(Msg::Cancel(cid as u64));
+            let ack = json::obj(vec![
+                ("cancel", json::num(cid as f64)),
+                ("ok", Value::Bool(true)),
+            ]);
+            if writeln!(out, "{ack}").is_err() {
+                break;
+            }
+            continue;
+        }
+        let id = ids.fetch_add(1, Ordering::SeqCst);
+        let req = parse_request(&v, id);
+        let stream_mode = req.stream;
+        let (rtx, rrx) = channel();
+        if tx.send(Msg::Submit(req, rtx)).is_err() {
+            break;
+        }
+        let served = if stream_mode {
+            stream_reply(&mut out, &tx, id, &rrx)
+        } else {
+            oneshot_reply(&mut out, id, &rrx)
+        };
+        if !served {
             break;
         }
     }
     let _ = peer;
+}
+
+/// v2 streaming: one `{"delta"}` line per decodable text fragment, then
+/// the summary.  A failed write means the client is gone — cancel the
+/// request so its KV blocks are released instead of decoding to the wall.
+/// The timeout is per-event (idle), not total: a generation that keeps
+/// producing tokens is healthy however long it runs, so only a stall of
+/// `CLIENT_TIMEOUT` with no event tears it down.
+fn stream_reply(
+    out: &mut TcpStream,
+    tx: &Sender<Msg>,
+    id: RequestId,
+    rrx: &Receiver<Event>,
+) -> bool {
+    let mut text = Utf8Stream::new();
+    loop {
+        match rrx.recv_timeout(CLIENT_TIMEOUT) {
+            Ok(Event::Token { token, .. }) => {
+                if let Some(delta) = text.push(token) {
+                    let ev = json::obj(vec![
+                        ("id", json::num(id as f64)),
+                        ("delta", json::s(delta)),
+                    ]);
+                    if writeln!(out, "{ev}").is_err() {
+                        let _ = tx.send(Msg::Cancel(id));
+                        return false;
+                    }
+                }
+            }
+            Ok(Event::Finished { response, .. }) => {
+                if let Some(delta) = text.finish() {
+                    let ev = json::obj(vec![
+                        ("id", json::num(id as f64)),
+                        ("delta", json::s(delta)),
+                    ]);
+                    if writeln!(out, "{ev}").is_err() {
+                        return false;
+                    }
+                }
+                return writeln!(out, "{}", summary_line(&response)).is_ok();
+            }
+            Err(_) => {
+                let _ = tx.send(Msg::Cancel(id));
+                let ev = json::obj(vec![
+                    ("id", json::num(id as f64)),
+                    ("error", json::s("timeout")),
+                ]);
+                return writeln!(out, "{ev}").is_ok();
+            }
+        }
+    }
+}
+
+/// v1 one-shot: swallow token events, answer with the complete text in
+/// the original single-line shape.
+fn oneshot_reply(out: &mut TcpStream, id: RequestId, rrx: &Receiver<Event>) -> bool {
+    let deadline = Instant::now() + CLIENT_TIMEOUT;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rrx.recv_timeout(left) {
+            Ok(Event::Token { .. }) => {}
+            Ok(Event::Finished { response, .. }) => {
+                return writeln!(out, "{}", summary_line(&response)).is_ok();
+            }
+            Err(_) => {
+                let ev = json::obj(vec![
+                    ("id", json::num(id as f64)),
+                    ("error", json::s("timeout")),
+                ]);
+                return writeln!(out, "{ev}").is_ok();
+            }
+        }
+    }
 }
 
 /// Start serving on `addr` ("127.0.0.1:0" for an ephemeral port).
@@ -200,7 +457,7 @@ where
     })
 }
 
-/// Minimal client for tests/examples.
+/// Minimal v1 one-shot client for tests/examples.
 pub fn client_request(addr: &std::net::SocketAddr, prompt: &str, max_new: usize) -> Result<Value> {
     let mut stream = TcpStream::connect(addr)?;
     let req = json::obj(vec![
@@ -212,4 +469,160 @@ pub fn client_request(addr: &std::net::SocketAddr, prompt: &str, max_new: usize)
     let mut line = String::new();
     reader.read_line(&mut line)?;
     json::parse(line.trim()).map_err(|e| anyhow::anyhow!("client parse: {e}"))
+}
+
+/// Everything a streaming client saw, in order.
+#[derive(Debug)]
+pub struct StreamOutcome {
+    /// The `delta` payloads, in arrival order.
+    pub deltas: Vec<String>,
+    /// The terminal summary (or error) line.
+    pub summary: Value,
+    /// Client-side wall time from sending the request to the first delta
+    /// line — the streamed TTFT a user actually experiences.
+    pub first_delta_ms: f64,
+    /// Client-side wall time to the terminal line.
+    pub total_ms: f64,
+}
+
+/// Minimal v2 streaming client: sends `body` (any fields from the
+/// protocol above; `stream: true` is forced) and collects delta lines
+/// until the terminal `done`/`error` line.
+pub fn client_request_stream(addr: &std::net::SocketAddr, body: &Value) -> Result<StreamOutcome> {
+    let mut fields: Vec<(&str, Value)> = vec![("stream", Value::Bool(true))];
+    let owned: Vec<(String, Value)> = body
+        .as_obj()
+        .map(|m| m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+        .unwrap_or_default();
+    for (k, v) in &owned {
+        if k != "stream" {
+            fields.push((k.as_str(), v.clone()));
+        }
+    }
+    let req = json::obj(fields);
+    let mut stream = TcpStream::connect(addr)?;
+    writeln!(stream, "{req}")?;
+    let t0 = Instant::now();
+    let mut reader = BufReader::new(stream);
+    let mut deltas = Vec::new();
+    let mut first_delta_ms = 0.0f64;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the stream before the summary line");
+        }
+        let v = json::parse(line.trim()).map_err(|e| anyhow::anyhow!("client parse: {e}"))?;
+        if let Some(delta) = v.get("delta").and_then(|d| d.as_str()) {
+            if deltas.is_empty() {
+                first_delta_ms = t0.elapsed().as_secs_f64() * 1e3;
+            }
+            deltas.push(delta.to_string());
+            continue;
+        }
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        return Ok(StreamOutcome {
+            deltas,
+            summary: v,
+            first_delta_ms,
+            total_ms,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream_all(bytes: &[u8]) -> String {
+        let mut s = Utf8Stream::new();
+        let mut out = String::new();
+        for &b in bytes {
+            if let Some(d) = s.push(b) {
+                out.push_str(&d);
+            }
+        }
+        if let Some(d) = s.finish() {
+            out.push_str(&d);
+        }
+        out
+    }
+
+    #[test]
+    fn utf8_stream_matches_lossy_decoding() {
+        let cases: Vec<Vec<u8>> = vec![
+            b"plain ascii".to_vec(),
+            "héllo wörld".as_bytes().to_vec(),
+            "byte-split 😀 emoji".as_bytes().to_vec(),
+            vec![0xC3],             // dangling 2-byte lead
+            vec![0xC3, 0x41],       // broken 2-byte sequence
+            vec![0xE0, 0x80, 0x41], // invalid continuation
+            vec![0xFF, 0xFE, b'a'], // not UTF-8 at all
+            vec![0x80, 0x81],       // stray continuations
+            vec![0xF0, 0x9F, 0x98], // dangling 4-byte prefix
+            {
+                let mut v = b"mixed ".to_vec();
+                v.extend("é".as_bytes());
+                v.push(0xFF);
+                v.extend("😀".as_bytes());
+                v.push(0xC3);
+                v
+            },
+        ];
+        for bytes in cases {
+            assert_eq!(
+                stream_all(&bytes),
+                String::from_utf8_lossy(&bytes),
+                "bytes {bytes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn utf8_stream_emits_multibyte_chars_once_complete() {
+        let mut s = Utf8Stream::new();
+        let e = "é".as_bytes(); // [0xC3, 0xA9]
+        assert_eq!(s.push(e[0]), None, "incomplete char is held back");
+        assert_eq!(s.push(e[1]).as_deref(), Some("é"));
+        assert_eq!(s.finish(), None);
+    }
+
+    #[test]
+    fn parse_request_defaults_match_v1() {
+        let v = json::parse(r#"{"prompt": "hi", "max_new": 4}"#).unwrap();
+        let r = parse_request(&v, 7);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, b"hi");
+        assert_eq!(r.max_new, 4);
+        assert!(r.sampling.is_greedy());
+        assert!(r.stop.is_empty());
+        assert!(!r.stream);
+    }
+
+    #[test]
+    fn parse_request_reads_v2_fields() {
+        let v = json::parse(
+            r#"{"prompt": "x", "max_new": 8, "stream": true, "temperature": 0.5,
+                "top_k": 10, "top_p": 0.9, "seed": 99, "stop": ["ab", "c"]}"#,
+        )
+        .unwrap();
+        let r = parse_request(&v, 1);
+        assert!(r.stream);
+        assert!((r.sampling.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(r.sampling.top_k, 10);
+        assert!((r.sampling.top_p - 0.9).abs() < 1e-6);
+        assert_eq!(r.sampling.seed, 99);
+        assert_eq!(r.stop, vec![b"ab".to_vec(), b"c".to_vec()]);
+    }
+
+    #[test]
+    fn rejected_summary_is_queue_full_error() {
+        let line = summary_line(&Response::rejected(3));
+        assert_eq!(line.get("error").and_then(|e| e.as_str()), Some("queue_full"));
+        assert_eq!(
+            line.get("finish_reason").and_then(|f| f.as_str()),
+            Some("rejected")
+        );
+        assert!(line.get("done").is_none());
+    }
 }

@@ -2,15 +2,20 @@
 //! TCP server, and KV accounting under load.  Require `make artifacts`.
 
 use rap::config::Method;
-use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use rap::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, FinishReason, Request, Sampler, SamplingParams,
+};
 use rap::kvcache::CacheShape;
 use rap::manifest::Manifest;
 use rap::model::backend::RustBackend;
 use rap::model::load_engine;
 use rap::model::synth::synth_engine;
-use rap::runtime::backend::PjrtBackend;
+use rap::model::Engine;
+use rap::runtime::backend::{generate_once, generate_sampled, PjrtBackend};
 use rap::runtime::{PjrtContext, PjrtEngine};
-use rap::server::{client_request, serve};
+use rap::server::{client_request, client_request_stream, serve};
+use rap::util::json::{num, obj, s};
+use rap::util::propcheck::forall_res;
 use rap::workload::{generate, WorkloadConfig};
 
 fn manifest() -> Manifest {
@@ -194,6 +199,416 @@ fn empty_prompt_over_rust_backend_yields_empty_generation() {
     assert!(responses[2].generated.is_empty());
     assert_eq!(coord.backend.session_count(), 0, "no dangling sessions");
     assert_eq!(coord.kv_used_blocks(), 0, "empty prompts release their reservation");
+}
+
+fn synth_prompt(len: usize, salt: usize) -> Vec<u8> {
+    (0..len).map(|i| ((i * 37 + salt * 101) % 251) as u8).collect()
+}
+
+/// Dense (non-paged `Cache`) sampled generation — consumes logits in the
+/// same order as the v2 serve loop, so with equal `SamplingParams` it is
+/// the dense reference for the paged and batched paths.
+fn dense_sampled(
+    engine: &Engine,
+    prompt: &[u8],
+    n: usize,
+    params: &SamplingParams,
+    s_max: usize,
+) -> Vec<u8> {
+    let mut sampler = Sampler::new(params);
+    let mut cache = engine.new_cache(s_max);
+    let logits = engine.prefill(prompt, &mut cache);
+    let mut out = Vec::with_capacity(n);
+    if n == 0 || logits.is_empty() {
+        return out;
+    }
+    out.push(sampler.sample(&logits) as u8);
+    let mut pos = prompt.len();
+    while out.len() < n && pos < s_max {
+        let token = *out.last().unwrap();
+        let next = sampler.sample(engine.step_reuse(token, pos, &mut cache)) as u8;
+        pos += 1;
+        out.push(next);
+    }
+    out
+}
+
+/// Propcheck: the same `(prompt, SamplingParams)` generates identical
+/// bytes on the dense cache, the paged batch-1 backend, and the
+/// coordinator — sampling is a pure function of (logits, seeded RNG), and
+/// the three paths produce bit-identical logits.
+#[test]
+fn seeded_sampling_deterministic_across_dense_paged_and_coordinator_paths() {
+    let engine = synth_engine(Method::Rap, 31);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let s_max = 96;
+    forall_res(
+        77,
+        6,
+        |r| {
+            let prompt: Vec<u8> = (0..r.range(4, 24)).map(|_| r.below(251) as u8).collect();
+            let params = SamplingParams {
+                temperature: 0.25 + r.f32(),
+                top_k: [0, 8, 40][r.below(3)],
+                top_p: [1.0, 0.9][r.below(2)],
+                seed: r.next_u64(),
+            };
+            (prompt, params, r.range(4, 12))
+        },
+        |(prompt, params, n)| {
+            let dense = dense_sampled(&engine, prompt, *n, params, s_max);
+            let mut backend = RustBackend::new(&engine, s_max);
+            let mut kv = rap::kvcache::PagedKvCache::with_storage(shape.clone(), 16 << 20);
+            let paged = generate_sampled(&mut backend, &mut kv, 1, prompt, *n, params).unwrap();
+            if paged != dense {
+                return Err(format!("paged {paged:?} != dense {dense:?}"));
+            }
+            let backend = RustBackend::new(&engine, s_max);
+            let mut coord = Coordinator::new(backend, shape.clone(), coordinator_cfg(vec![1, 4]));
+            let req = Request::new(5, prompt.clone(), *n).with_sampling(params.clone());
+            assert!(coord.submit(req));
+            let served = coord.run_to_completion().unwrap().remove(0).generated;
+            if served != dense {
+                return Err(format!("coordinator {served:?} != dense {dense:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// 8 concurrent seeded requests batch-decode through the scheduler
+/// bit-identically to each one generated alone — and temperature 0
+/// through the sampler equals the v1 argmax path exactly.
+#[test]
+fn batched_seeded_sampling_matches_sequential_and_greedy_matches_argmax() {
+    const SESSIONS: usize = 8;
+    const MAX_NEW: usize = 10;
+    let engine = synth_engine(Method::Rap, 37);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let s_max = 96;
+    let params_for = |i: usize| SamplingParams {
+        temperature: if i % 2 == 0 { 0.0 } else { 0.7 + 0.1 * i as f32 },
+        top_k: if i % 3 == 0 { 0 } else { 16 },
+        top_p: if i % 4 == 0 { 1.0 } else { 0.92 },
+        seed: 1000 + i as u64,
+    };
+    let prompts: Vec<Vec<u8>> = (0..SESSIONS).map(|i| synth_prompt(6 + 2 * i, i)).collect();
+
+    // Sequential references (batch-1 paged), one per request.
+    let mut expected = Vec::new();
+    {
+        let mut backend = RustBackend::new(&engine, s_max);
+        let mut kv = rap::kvcache::PagedKvCache::with_storage(shape.clone(), 16 << 20);
+        for (i, p) in prompts.iter().enumerate() {
+            expected.push(
+                generate_sampled(&mut backend, &mut kv, 600 + i as u64, p, MAX_NEW, &params_for(i))
+                    .unwrap(),
+            );
+        }
+        // Greedy sessions must equal the pre-v2 argmax helper bitwise.
+        for (i, p) in prompts.iter().enumerate() {
+            if params_for(i).is_greedy() {
+                let greedy =
+                    generate_once(&mut backend, &mut kv, 700 + i as u64, p, MAX_NEW).unwrap();
+                assert_eq!(expected[i], greedy, "session {i}: temp 0 must equal argmax");
+            }
+        }
+    }
+
+    // All 8 live at once through the coordinator's batched decode.
+    let backend = RustBackend::new(&engine, s_max);
+    let mut coord = Coordinator::new(
+        backend,
+        shape,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: SESSIONS,
+                buckets: vec![1, 4, 8],
+                max_queue: 64,
+                ..Default::default()
+            },
+            kv_budget_bytes: 16 << 20,
+        },
+    );
+    for (i, p) in prompts.iter().enumerate() {
+        let req = Request::new(i as u64, p.clone(), MAX_NEW).with_sampling(params_for(i));
+        assert!(coord.submit(req));
+    }
+    let mut responses = coord.run_to_completion().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), SESSIONS);
+    for (r, e) in responses.iter().zip(&expected) {
+        assert_eq!(&r.generated, e, "session {}: batched must equal sequential", r.id);
+        assert_eq!(r.metrics.finish_reason, FinishReason::Length);
+    }
+    assert!(coord.metrics.decode_batch_occupancy.mean() > 1.5, "batching exercised");
+    assert_eq!(coord.kv_used_blocks(), 0);
+}
+
+/// A stop sequence ends the generation the moment the generated bytes end
+/// with it, frees the unused tail of the `prompt + max_new` reservation
+/// immediately, and reports `finish_reason: Stop`.
+#[test]
+fn stop_sequence_over_rust_backend_releases_reservation_early() {
+    let engine = synth_engine(Method::Rap, 29);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let s_max = 96;
+    let prompt = synth_prompt(12, 3);
+
+    let expected = {
+        let mut backend = RustBackend::new(&engine, s_max);
+        let mut kv = rap::kvcache::PagedKvCache::with_storage(shape.clone(), 8 << 20);
+        generate_once(&mut backend, &mut kv, 50, &prompt, 12).unwrap()
+    };
+    // Stop on the greedy chain's bytes at positions 1..3: the serve loop
+    // must cut the generation as soon as the suffix appears.
+    let stop = expected[1..3].to_vec();
+
+    let backend = RustBackend::new(&engine, s_max);
+    let mut coord = Coordinator::new(backend, shape, coordinator_cfg(vec![1, 4]));
+    assert!(coord.submit(Request::new(1, prompt, 12).with_stop(vec![stop.clone()])));
+    let responses = coord.run_to_completion().unwrap();
+    let r = &responses[0];
+    assert_eq!(r.metrics.finish_reason, FinishReason::Stop);
+    assert!(r.generated.ends_with(&stop), "{:?} !ends_with {stop:?}", r.generated);
+    assert!(r.generated.len() <= 3, "stopped after at most 3 tokens");
+    assert_eq!(r.generated[..], expected[..r.generated.len()], "a prefix of the greedy chain");
+    assert_eq!(coord.metrics.stopped_early, 1);
+    assert_eq!(coord.kv_used_blocks(), 0, "early stop released the whole reservation");
+    assert_eq!(coord.backend.session_count(), 0);
+}
+
+/// Cancelling mid-prefill and mid-decode returns `kv_used_blocks()` to its
+/// pre-admission value — including when the cancelled session holds
+/// shared prefix blocks (refcounts decremented, not freed under the
+/// surviving reader).
+#[test]
+fn cancel_mid_flight_releases_blocks_even_with_shared_prefix() {
+    let engine = synth_engine(Method::Rap, 23);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let s_max = 256;
+    let backend = RustBackend::new(&engine, s_max);
+    let mut coord = Coordinator::new(
+        backend,
+        shape,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: 4,
+                buckets: vec![1, 4],
+                max_queue: 16,
+                prefill_chunk_tokens: 32,
+            },
+            kv_budget_bytes: 32 << 20,
+        },
+    );
+
+    // Session 1: 72-token prompt (64 block-aligned + 8), fed in 32-token
+    // chunks; cancel it mid-prefill first to cover the prefilling state.
+    let common = synth_prompt(64, 0);
+    let mut p1 = common.clone();
+    p1.extend([7u8; 8]);
+    assert!(coord.submit(Request::new(9, p1.clone(), 40)));
+    coord.tick().unwrap();
+    assert!(coord.kv_used_blocks() > 0, "mid-prefill session holds blocks");
+    let r9 = coord.cancel(9).expect("session 9 is mid-prefill");
+    assert_eq!(r9.metrics.finish_reason, FinishReason::Cancelled);
+    assert!(r9.generated.is_empty());
+    assert_eq!(coord.kv_used_blocks(), 0, "mid-prefill cancel returns to baseline");
+
+    // Session 1 again, run to steady decode; its prompt chunks are now
+    // registered in the prefix trie.
+    assert!(coord.submit(Request::new(1, p1, 40)));
+    for _ in 0..4 {
+        coord.tick().unwrap();
+    }
+    let baseline = coord.kv_used_blocks();
+    assert!(baseline > 0, "session 1 decoding");
+
+    // Session 2 shares the 64-token prefix read-only and decodes.
+    let mut p2 = common.clone();
+    p2.extend([9u8; 8]);
+    assert!(coord.submit(Request::new(2, p2, 40)));
+    coord.tick().unwrap();
+    assert!(coord.metrics.prefix_hits >= 1, "session 2 attached the prefix");
+    assert!(coord.kv_used_blocks() > baseline);
+
+    // Cancel the sharer mid-decode: exactly its private blocks come back
+    // (shared prefix refcounts drop without freeing under session 1).
+    let r2 = coord.cancel(2).expect("session 2 is live");
+    assert_eq!(r2.metrics.finish_reason, FinishReason::Cancelled);
+    assert_eq!(
+        coord.kv_used_blocks(),
+        baseline,
+        "cancel returned used blocks to the pre-admission value"
+    );
+
+    // Session 1 is unperturbed and still completes; then everything frees.
+    let responses = coord.run_to_completion().unwrap();
+    assert!(responses.iter().any(|r| r.id == 1 && r.generated.len() == 40));
+    assert_eq!(coord.kv_used_blocks(), 0);
+    assert_eq!(coord.kv_prefix_nodes(), 0);
+    assert_eq!(coord.backend.session_count(), 0);
+    assert_eq!(coord.metrics.cancelled, 2);
+}
+
+/// TCP v2: streamed `{"delta"}` lines reassemble to exactly the one-shot
+/// text for the same greedy request, the summary repeats the full text,
+/// and the first delta arrives before the generation completes.
+#[test]
+fn tcp_streaming_deltas_reassemble_to_one_shot_text() {
+    let factory = move || -> anyhow::Result<Coordinator<RustBackend<'static>>> {
+        let engine: &'static Engine = Box::leak(Box::new(synth_engine(Method::Rap, 7)));
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let backend = RustBackend::new(engine, 128);
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 4,
+                    buckets: vec![1, 4],
+                    max_queue: 16,
+                    ..Default::default()
+                },
+                kv_budget_bytes: 16 << 20,
+            },
+        ))
+    };
+    let handle = serve("127.0.0.1:0", factory, 2).unwrap();
+    let addr = handle.addr;
+
+    let one = client_request(&addr, "the quick brown ", 24).unwrap();
+    let text = one.get("text").and_then(|t| t.as_str()).unwrap().to_string();
+    assert_eq!(one.get("tokens").and_then(|t| t.as_usize()), Some(24));
+    assert_eq!(
+        one.get("finish_reason").and_then(|f| f.as_str()),
+        Some("length"),
+        "v1 one-shot replies gain the additive finish_reason field"
+    );
+
+    let body = obj(vec![("prompt", s("the quick brown ")), ("max_new", num(24.0))]);
+    let sc = client_request_stream(&addr, &body).unwrap();
+    assert!(sc.deltas.len() >= 2, "per-token deltas, not one blob: {:?}", sc.deltas);
+    assert_eq!(
+        sc.deltas.concat(),
+        text,
+        "greedy streamed deltas reassemble to the one-shot text"
+    );
+    assert_eq!(sc.summary.get("text").and_then(|t| t.as_str()), Some(text.as_str()));
+    assert_eq!(sc.summary.get("finish_reason").and_then(|f| f.as_str()), Some("length"));
+    assert_eq!(sc.summary.get("tokens").and_then(|t| t.as_usize()), Some(24));
+    assert!(sc.first_delta_ms <= sc.total_ms);
+    handle.shutdown();
+}
+
+/// TCP: a queue-full submission is answered with an explicit
+/// `{"error": "queue_full"}` line immediately — the v1 code sent nothing
+/// and left the client to ride out its full timeout.
+#[test]
+fn tcp_queue_full_rejected_immediately() {
+    let factory = move || -> anyhow::Result<Coordinator<RustBackend<'static>>> {
+        let engine: &'static Engine = Box::leak(Box::new(synth_engine(Method::Rap, 13)));
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let backend = RustBackend::new(engine, 64);
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 1,
+                    buckets: vec![1],
+                    max_queue: 0, // every submission is backpressured
+                    ..Default::default()
+                },
+                kv_budget_bytes: 4 << 20,
+            },
+        ))
+    };
+    let handle = serve("127.0.0.1:0", factory, 2).unwrap();
+    let t0 = std::time::Instant::now();
+    let resp = client_request(&handle.addr, "hello", 8).unwrap();
+    assert_eq!(resp.get("error").and_then(|e| e.as_str()), Some("queue_full"));
+    assert_eq!(resp.get("finish_reason").and_then(|f| f.as_str()), Some("rejected"));
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(10),
+        "rejection must be immediate, not a timeout"
+    );
+    handle.shutdown();
+}
+
+/// TCP: `{"cancel": id}` from another connection tears down a streaming
+/// request mid-decode; its stream ends with a `finish_reason: "cancelled"`
+/// summary instead of running to max_new.
+#[test]
+fn tcp_cancel_mid_stream_ends_with_cancelled_summary() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let factory = move || -> anyhow::Result<Coordinator<RustBackend<'static>>> {
+        let engine: &'static Engine = Box::leak(Box::new(synth_engine(Method::Rap, 19)));
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let backend = RustBackend::new(engine, 4096);
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 2,
+                    buckets: vec![1],
+                    max_queue: 8,
+                    ..Default::default()
+                },
+                kv_budget_bytes: 64 << 20,
+            },
+        ))
+    };
+    let handle = serve("127.0.0.1:0", factory, 2).unwrap();
+    let addr = handle.addr;
+
+    let req = obj(vec![
+        ("prompt", s("cancel me please ")),
+        ("max_new", num(2000.0)),
+        ("stream", rap::util::json::Value::Bool(true)),
+    ]);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    writeln!(stream, "{req}").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let first = rap::util::json::parse(line.trim()).unwrap();
+    let id = first.get("id").and_then(|i| i.as_usize()).expect("first delta carries the id");
+    assert!(first.get("delta").is_some(), "line 1 is a delta: {line}");
+
+    // Cancel from a second connection.
+    let mut c2 = TcpStream::connect(addr).unwrap();
+    writeln!(c2, "{}", obj(vec![("cancel", num(id as f64))])).unwrap();
+    let mut ack = String::new();
+    BufReader::new(c2).read_line(&mut ack).unwrap();
+    assert!(ack.contains("\"ok\""), "cancel acked: {ack}");
+
+    // Drain the stream to its terminal line.
+    let mut deltas = 1usize;
+    let finish = loop {
+        line.clear();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "stream closed without summary");
+        let v = rap::util::json::parse(line.trim()).unwrap();
+        if let Some(reason) = v.get("finish_reason").and_then(|f| f.as_str()) {
+            break reason.to_string();
+        }
+        assert!(v.get("delta").is_some());
+        deltas += 1;
+    };
+    assert_eq!(finish, "cancelled");
+    assert!(
+        deltas < 2000,
+        "cancellation must end the stream early (saw {deltas} deltas)"
+    );
+    // Close the client connection before shutdown: the handler thread is
+    // parked in read_line on it, and ServerHandle::shutdown joins the
+    // handler pool.
+    drop(reader);
+    drop(stream);
+    handle.shutdown();
 }
 
 #[test]
