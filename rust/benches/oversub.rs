@@ -1,0 +1,211 @@
+//! Oversubscription gate: optimistic (prompt-only) admission vs worst-case
+//! up-front reservation on the SAME physical block budget, at 2x and 4x
+//! oversubscription (worst-case token demand over physical capacity).
+//!
+//! Worst-case reservation admits only as many sessions as could all grow
+//! to `prompt + max_new` simultaneously, leaving the cache underused while
+//! requests queue.  Optimistic admission packs sessions by their prompt
+//! footprint and lets the preemption/resume machinery absorb the (rare)
+//! exhaustion — so it must sustain strictly more concurrent decodes on the
+//! same budget.  Results land in `BENCH_oversub.json` (uploaded by CI next
+//! to the serving/prefix artifacts): per policy and level, wall-clock
+//! throughput, TTFT p50/p99, peak concurrent decodes, and the pressure
+//! counters (preemptions / resumes / evictions).
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use rap::config::Method;
+use rap::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, Event, FinishReason, Request,
+};
+use rap::kvcache::{CacheShape, BLOCK_TOKENS};
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
+
+fn prompt(len: usize, salt: usize) -> Vec<u8> {
+    // Cross term keeps prompts distinct inside the first block: no prefix
+    // sharing, every session pays its full footprint.
+    (0..len).map(|i| ((i * 37 + salt * 101 + i * salt) % 251) as u8).collect()
+}
+
+fn percentile(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[((xs.len() as f64 * p).ceil() as usize).clamp(1, xs.len()) - 1]
+}
+
+struct RunStats {
+    throughput_tok_s: f64,
+    ttft_p50_ms: f64,
+    ttft_p99_ms: f64,
+    peak_concurrent: usize,
+    preemptions: u64,
+    resumes: u64,
+    evictions: u64,
+    wall_ms: f64,
+}
+
+/// Serve `sessions` requests to completion on a `blocks`-block budget,
+/// sampling the number of distinct sessions that decoded each tick.
+fn run(
+    engine: &rap::model::Engine,
+    shape: &CacheShape,
+    sessions: usize,
+    blocks: usize,
+    prompt_len: usize,
+    max_new: usize,
+    reserve_worst_case: bool,
+) -> RunStats {
+    let s_max = prompt_len + max_new + 16;
+    let backend = RustBackend::new(engine, s_max);
+    let mut coord = Coordinator::new(
+        backend,
+        shape.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: sessions,
+                buckets: vec![1, 4, 8, 16],
+                max_queue: sessions * 2,
+                // Whole workload prefills in the first tick, so peak
+                // concurrency reflects admission policy, not prefill
+                // staggering.
+                prefill_chunk_tokens: 1024,
+                reserve_worst_case,
+            },
+            kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * blocks,
+        },
+    );
+    assert_eq!(coord.kv_capacity_blocks(), blocks);
+    for i in 0..sessions {
+        assert!(
+            coord.try_submit(Request::new(i as u64, prompt(prompt_len, 60 + i), max_new)).is_ok(),
+            "submit {i}"
+        );
+    }
+
+    let t0 = Instant::now();
+    let mut peak_concurrent = 0usize;
+    let mut done = 0usize;
+    while done < sessions {
+        let events = coord.tick().unwrap();
+        let decoding: BTreeSet<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Token { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        peak_concurrent = peak_concurrent.max(decoding.len());
+        done += events.iter().filter(|e| e.is_finished()).count();
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let responses = coord.run_to_completion().unwrap();
+    assert_eq!(responses.len(), sessions);
+    let mut tokens = 0usize;
+    let mut ttfts: Vec<f64> = Vec::with_capacity(sessions);
+    for r in &responses {
+        assert_eq!(
+            r.metrics.finish_reason,
+            FinishReason::Length,
+            "session {} must run to full length (reserve_worst_case={reserve_worst_case})",
+            r.id
+        );
+        assert_eq!(r.generated.len(), max_new, "session {}", r.id);
+        tokens += r.generated.len();
+        ttfts.push(r.metrics.ttft_ms);
+    }
+    RunStats {
+        throughput_tok_s: tokens as f64 / (wall_ms / 1e3).max(1e-9),
+        ttft_p50_ms: percentile(&mut ttfts, 0.50),
+        ttft_p99_ms: percentile(&mut ttfts, 0.99),
+        peak_concurrent,
+        preemptions: coord.metrics.preemptions,
+        resumes: coord.metrics.resumes,
+        evictions: coord.kv_evictions(),
+        wall_ms,
+    }
+}
+
+fn main() {
+    use rap::util::json::{num, obj, s, Value};
+
+    // Fixed geometry (no RAP_BENCH_FAST knob): the peak-concurrency gap
+    // between the two admission policies depends on the block arithmetic
+    // below, and the whole workload is tiny anyway.
+    let prompt_len = 32; // 2 blocks at admission
+    let max_new = 24; // worst case 56 tokens = 4 blocks per session
+    let worst_blocks = (prompt_len + max_new).div_ceil(BLOCK_TOKENS); // per session
+    let blocks = 12usize;
+
+    let engine = synth_engine(Method::Rap, 11);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+
+    println!(
+        "== bench: oversub (budget {blocks} blocks, prompt {prompt_len}, max_new {max_new}, \
+         worst case {worst_blocks} blocks/session) =="
+    );
+
+    let mut levels = Vec::new();
+    for oversub in [2usize, 4] {
+        // `sessions * worst_blocks = oversub * blocks`: worst-case token
+        // demand is `oversub` times the physical budget.
+        let sessions = oversub * blocks / worst_blocks;
+        let reserve = run(&engine, &shape, sessions, blocks, prompt_len, max_new, true);
+        let optimistic = run(&engine, &shape, sessions, blocks, prompt_len, max_new, false);
+        println!(
+            "{oversub}x ({sessions} sessions): reserve-up-front {:.0} tok/s, peak {} concurrent, \
+             ttft p99 {:.1} ms",
+            reserve.throughput_tok_s, reserve.peak_concurrent, reserve.ttft_p99_ms
+        );
+        println!(
+            "{oversub}x ({sessions} sessions): oversubscribed  {:.0} tok/s, peak {} concurrent, \
+             ttft p99 {:.1} ms ({} preemptions, {} resumes, {} evictions)",
+            optimistic.throughput_tok_s,
+            optimistic.peak_concurrent,
+            optimistic.ttft_p99_ms,
+            optimistic.preemptions,
+            optimistic.resumes,
+            optimistic.evictions
+        );
+        assert!(
+            optimistic.peak_concurrent > reserve.peak_concurrent,
+            "{oversub}x: optimistic admission must sustain more concurrent decodes \
+             ({} vs {}) on the same {blocks}-block budget",
+            optimistic.peak_concurrent,
+            reserve.peak_concurrent
+        );
+        let stats_obj = |r: &RunStats| {
+            obj(vec![
+                ("throughput_tok_s", num(r.throughput_tok_s)),
+                ("ttft_p50_ms", num(r.ttft_p50_ms)),
+                ("ttft_p99_ms", num(r.ttft_p99_ms)),
+                ("peak_concurrent", num(r.peak_concurrent as f64)),
+                ("preemptions", num(r.preemptions as f64)),
+                ("resumes", num(r.resumes as f64)),
+                ("evictions", num(r.evictions as f64)),
+                ("wall_ms", num(r.wall_ms)),
+            ])
+        };
+        levels.push(obj(vec![
+            ("oversubscription", num(oversub as f64)),
+            ("sessions", num(sessions as f64)),
+            ("reserve_worst_case", stats_obj(&reserve)),
+            ("oversubscribed", stats_obj(&optimistic)),
+        ]));
+    }
+
+    let summary: Value = obj(vec![
+        ("bench", s("oversub")),
+        ("budget_blocks", num(blocks as f64)),
+        ("prompt_tokens", num(prompt_len as f64)),
+        ("max_new", num(max_new as f64)),
+        ("worst_case_blocks_per_session", num(worst_blocks as f64)),
+        ("levels", Value::Arr(levels)),
+    ]);
+    let _ = std::fs::write("BENCH_oversub.json", summary.to_string_pretty());
+    println!("-> BENCH_oversub.json");
+}

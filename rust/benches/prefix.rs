@@ -58,6 +58,7 @@ fn run(shared: bool, sessions: usize, prefix_len: usize, suffix: usize, max_new:
                 buckets: vec![1, 4, 8],
                 max_queue: 64,
                 prefill_chunk_tokens: 128,
+                ..Default::default()
             },
             kv_budget_bytes: 256 << 20,
         },

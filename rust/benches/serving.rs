@@ -38,6 +38,7 @@ fn start_server(sessions: usize, s_max: usize) -> ServerHandle {
                     buckets: vec![1, 4, 8],
                     max_queue: 64,
                     prefill_chunk_tokens: 64,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 128 << 20,
             },

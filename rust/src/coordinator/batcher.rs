@@ -7,6 +7,16 @@
 //! are admitted as soon as cache capacity allows; running sequences never
 //! wait for stragglers because the decode graphs take per-sequence
 //! positions.
+//!
+//! Admission is **optimistic** by default: only the prompt's blocks are
+//! reserved up front, and decode-time growth allocates block-by-block on
+//! demand.  This oversubscribes the cache — admitted sessions' worst-case
+//! footprints may exceed physical capacity — trading the old "admitted
+//! implies guaranteed to finish" invariant for much higher concurrency;
+//! the scheduler's preemption path restores progress when growth fails.
+//! Set [`BatcherConfig::reserve_worst_case`] to get the old
+//! `prompt + max_new` up-front reservation back (no preemption possible,
+//! admission-limited throughput — kept as the benchmark baseline).
 
 use std::collections::VecDeque;
 
@@ -42,6 +52,11 @@ pub struct BatcherConfig {
     /// only bounds how many *prompts* one tick starts, not the length of
     /// the stall.
     pub prefill_chunk_tokens: usize,
+    /// Reserve `prompt + max_new` blocks at admission (the pre-preemption
+    /// policy) instead of the default optimistic prompt-only reservation.
+    /// With this set a session can never be preempted, at the cost of
+    /// admitting far fewer concurrent sessions on the same budget.
+    pub reserve_worst_case: bool,
 }
 
 impl Default for BatcherConfig {
@@ -51,6 +66,7 @@ impl Default for BatcherConfig {
             buckets: vec![1, 4],
             max_queue: 1024,
             prefill_chunk_tokens: 128,
+            reserve_worst_case: false,
         }
     }
 }
@@ -99,9 +115,10 @@ impl Batcher {
     /// Admission queries the prefix trie (`PagedKvCache::reserve_prefix`):
     /// a prompt whose block-aligned prefix is already resident attaches
     /// those blocks read-only and reserves fresh blocks only for the
-    /// *unmatched* suffix plus max_new; the rest of the budget is still
-    /// reserved up front so a running sequence can never be evicted
-    /// mid-generation — the no-preemption policy.
+    /// *unmatched* suffix.  By default only the prompt is reserved
+    /// (optimistic admission; decode grows on demand and may preempt);
+    /// with [`BatcherConfig::reserve_worst_case`] the whole
+    /// `prompt + max_new` budget is reserved up front.
     pub fn admit(&mut self, kv: &mut PagedKvCache) -> Vec<Admission> {
         let mut admitted: Vec<Admission> = Vec::new();
         while self.running.len() + admitted.len() < self.cfg.max_sessions {
@@ -115,7 +132,12 @@ impl Batcher {
                 admitted.push(Admission { req, matched_tokens: 0, shared_blocks: 0 });
                 continue;
             }
-            match kv.reserve_prefix(req.id, &req.prompt, req.total_tokens()) {
+            let reserve = if self.cfg.reserve_worst_case {
+                req.total_tokens()
+            } else {
+                req.prompt.len()
+            };
+            match kv.reserve_prefix(req.id, &req.prompt, reserve) {
                 Ok(m) => {
                     let req = self.queue.pop_front().unwrap();
                     admitted.push(Admission {
@@ -162,6 +184,36 @@ impl Batcher {
     pub fn finish(&mut self, id: RequestId, kv: &mut PagedKvCache) {
         self.running.retain(|&r| r != id);
         kv.release(id);
+    }
+
+    /// Put a request at the *front* of the queue (preemption of a
+    /// prefilling session: it must re-admit before anything newer).  The
+    /// caller has already released its KV state; this only rewinds the
+    /// queue position.
+    pub fn requeue_front(&mut self, req: Request) {
+        self.running.retain(|&r| r != req.id);
+        self.queue.push_front(req);
+    }
+
+    /// Register a session admitted outside [`Batcher::admit`] — the
+    /// scheduler's preemption-resume path reserves KV state itself and
+    /// then claims the slot here so the session cap and duplicate
+    /// detection keep holding.
+    pub fn note_running(&mut self, id: RequestId) {
+        if !self.running.contains(&id) {
+            self.running.push(id);
+        }
+    }
+
+    /// Ids of queued requests whose deadline has already expired — the
+    /// scheduler tears them down with `FinishReason::Timeout` before
+    /// admission can waste KV blocks on them.
+    pub fn expired_queued(&self) -> Vec<RequestId> {
+        self.queue
+            .iter()
+            .filter(|r| r.deadline_expired())
+            .map(|r| r.id)
+            .collect()
     }
 
     /// Remove a still-queued request (cancellation before admission).
@@ -211,9 +263,10 @@ mod tests {
     }
 
     #[test]
-    fn admit_respects_kv_budget() {
+    fn worst_case_admission_respects_kv_budget() {
         let mut b = Batcher::new(BatcherConfig {
             max_sessions: 10,
+            reserve_worst_case: true,
             ..Default::default()
         });
         // 3 blocks: each request needs 2 blocks (BLOCK_TOKENS*2 tokens).
@@ -227,6 +280,62 @@ mod tests {
         b.finish(adm[0].req.id, &mut kv);
         let adm2 = b.admit(&mut kv);
         assert_eq!(adm2.len(), 1);
+    }
+
+    #[test]
+    fn optimistic_admission_oversubscribes() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_sessions: 10,
+            ..Default::default()
+        });
+        // Same workload, same 3 physical blocks: optimistic admission
+        // reserves only the 1-block prompts, so all three fit even though
+        // their combined worst case (6 blocks) is 2x the capacity.
+        let mut kv = kv(3);
+        for i in 0..3 {
+            b.submit(req(i, BLOCK_TOKENS * 2));
+        }
+        let adm = b.admit(&mut kv);
+        assert_eq!(adm.len(), 3, "prompt-only reservations all fit");
+        assert_eq!(kv.used_blocks(), 3);
+    }
+
+    #[test]
+    fn requeue_front_restores_queue_priority() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_sessions: 1,
+            ..Default::default()
+        });
+        let mut kv = kv(100);
+        assert!(b.submit(req(1, 8)));
+        assert!(b.submit(req(2, 8)));
+        let adm = b.admit(&mut kv);
+        assert_eq!(adm[0].req.id, 1);
+        // Preempt 1: its KV state goes away, the request goes back to the
+        // queue FRONT — re-admitted before 2 despite 2 queueing first.
+        kv.release(1);
+        b.requeue_front(adm.into_iter().next().unwrap().req);
+        assert_eq!(b.running_len(), 0);
+        assert!(!b.submit(req(1, 8)), "requeued id still counts as queued");
+        let adm2 = b.admit(&mut kv);
+        assert_eq!(adm2[0].req.id, 1, "preempted request re-admits first");
+    }
+
+    #[test]
+    fn note_running_claims_a_slot() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_sessions: 1,
+            ..Default::default()
+        });
+        let mut kv = kv(100);
+        b.note_running(7);
+        b.note_running(7);
+        assert_eq!(b.running_len(), 1, "idempotent");
+        assert!(!b.submit(req(7, 8)), "duplicate of a noted session rejected");
+        assert!(b.submit(req(8, 8)));
+        assert_eq!(b.admit(&mut kv).len(), 0, "noted session holds the only slot");
+        b.finish(7, &mut kv);
+        assert_eq!(b.admit(&mut kv).len(), 1);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! [`FaultBackend`] — a deterministic fault-injecting [`Backend`] wrapper.
+//!
+//! Each call site (prefill chunk, decode batch) draws from its own seeded
+//! stream ([`crate::faults::FaultPlan`]); when a site fires the call fails
+//! with an [`InjectedFault`] **before** touching the inner backend, so a
+//! retry of the same chunk or decode round is always clean — the inner
+//! backend never observes a half-applied call.  Slow ticks sleep for the
+//! plan's `slow_tick_ms` before delegating, perturbing wall-clock timing
+//! (TTFT, queue times) without changing any output.
+//!
+//! `drop_session` is never faulted: teardown must always succeed, or a
+//! storm could leak backend state for sessions the coordinator already
+//! released.
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::Backend;
+use crate::coordinator::request::RequestId;
+use crate::faults::{FaultInjector, FaultPlan};
+use crate::kvcache::PagedKvCache;
+
+pub struct FaultBackend<B> {
+    inner: B,
+    prefill: FaultInjector,
+    decode: FaultInjector,
+    slow: FaultInjector,
+    slow_ms: u64,
+}
+
+impl<B: Backend> FaultBackend<B> {
+    pub fn new(inner: B, plan: &FaultPlan) -> FaultBackend<B> {
+        FaultBackend {
+            inner,
+            prefill: plan.prefill_injector(),
+            decode: plan.decode_injector(),
+            slow: plan.slow_tick_injector(),
+            slow_ms: plan.slow_tick_ms,
+        }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> B {
+        self.inner
+    }
+
+    /// (prefill faults, decode faults) fired so far — storm tests assert
+    /// the plan actually injected something.
+    pub fn injected(&self) -> (u64, u64) {
+        (self.prefill.injected(), self.decode.injected())
+    }
+
+    fn maybe_slow(&mut self) {
+        if self.slow_ms > 0 && self.slow.fires() {
+            std::thread::sleep(std::time::Duration::from_millis(self.slow_ms));
+        }
+    }
+}
+
+impl<B: Backend> Backend for FaultBackend<B> {
+    fn s_max(&self) -> usize {
+        self.inner.s_max()
+    }
+
+    fn wants_paged_storage(&self) -> bool {
+        self.inner.wants_paged_storage()
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        self.inner.supports_chunked_prefill()
+    }
+
+    fn prefill(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        prompt: &[u8],
+    ) -> Result<Vec<f32>> {
+        self.maybe_slow();
+        if self.prefill.fires() {
+            return Err(anyhow::Error::new(self.prefill.fault()));
+        }
+        self.inner.prefill(kv, session, prompt)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        tokens: &[u8],
+        pos0: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        self.maybe_slow();
+        if self.prefill.fires() {
+            return Err(anyhow::Error::new(self.prefill.fault()));
+        }
+        self.inner.prefill_chunk(kv, session, tokens, pos0, last)
+    }
+
+    fn decode_batch(
+        &mut self,
+        kv: &mut PagedKvCache,
+        entries: &[(RequestId, u8, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.maybe_slow();
+        if self.decode.fires() {
+            return Err(anyhow::Error::new(self.decode.fault()));
+        }
+        self.inner.decode_batch(kv, entries)
+    }
+
+    fn drop_session(&mut self, session: RequestId) {
+        self.inner.drop_session(session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::InjectedFault;
+
+    /// Minimal backend that records what actually reached it.
+    struct Probe {
+        prefills: usize,
+        decodes: usize,
+    }
+
+    impl Backend for Probe {
+        fn s_max(&self) -> usize {
+            64
+        }
+        fn prefill(
+            &mut self,
+            _kv: &mut PagedKvCache,
+            _session: RequestId,
+            _prompt: &[u8],
+        ) -> Result<Vec<f32>> {
+            self.prefills += 1;
+            Ok(vec![0.0; 256])
+        }
+        fn decode_batch(
+            &mut self,
+            _kv: &mut PagedKvCache,
+            entries: &[(RequestId, u8, usize)],
+        ) -> Result<Vec<Vec<f32>>> {
+            self.decodes += 1;
+            Ok(entries.iter().map(|_| vec![0.0; 256]).collect())
+        }
+        fn drop_session(&mut self, _session: RequestId) {}
+    }
+
+    fn kv() -> PagedKvCache {
+        let shape = crate::kvcache::CacheShape {
+            n_layers: 1,
+            n_kv_heads: 1,
+            k_width: vec![4],
+            v_width: vec![4],
+        };
+        PagedKvCache::new(shape, 1 << 20)
+    }
+
+    #[test]
+    fn faults_fire_before_the_inner_backend_sees_the_call() {
+        let plan = FaultPlan::new(5).with_prefill_faults(1.0).with_decode_faults(1.0);
+        let mut b = FaultBackend::new(Probe { prefills: 0, decodes: 0 }, &plan);
+        let mut kv = kv();
+        let err = b.prefill(&mut kv, 1, &[1, 2]).unwrap_err();
+        assert!(err.downcast_ref::<InjectedFault>().is_some());
+        let err = b.decode_batch(&mut kv, &[(1, 0, 2)]).unwrap_err();
+        assert!(err.downcast_ref::<InjectedFault>().is_some());
+        assert_eq!(b.inner().prefills, 0, "inner backend never touched");
+        assert_eq!(b.inner().decodes, 0);
+        assert_eq!(b.injected(), (1, 1));
+    }
+
+    #[test]
+    fn zero_rate_plan_is_transparent() {
+        let plan = FaultPlan::new(5);
+        let mut b = FaultBackend::new(Probe { prefills: 0, decodes: 0 }, &plan);
+        let mut kv = kv();
+        for _ in 0..8 {
+            b.prefill(&mut kv, 1, &[1]).unwrap();
+            b.decode_batch(&mut kv, &[(1, 0, 1)]).unwrap();
+        }
+        assert_eq!(b.injected(), (0, 0));
+        assert_eq!(b.into_inner().prefills, 8);
+    }
+
+    #[test]
+    fn same_plan_same_fault_schedule_through_the_wrapper() {
+        let run = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::new(seed).with_decode_faults(0.5);
+            let mut b = FaultBackend::new(Probe { prefills: 0, decodes: 0 }, &plan);
+            let mut kv = kv();
+            (0..32).map(|_| b.decode_batch(&mut kv, &[(1, 0, 1)]).is_err()).collect()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

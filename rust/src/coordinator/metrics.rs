@@ -69,6 +69,26 @@ pub struct AggregateMetrics {
     pub prefix_saved_blocks: u64,
     /// Prompt tokens skipped at prefill, per prefix hit.
     pub prefix_matched_tokens: Welford,
+    /// Submissions refused because the prompt alone exceeds the cache's
+    /// total physical blocks (a subset of `rejected` — these could never
+    /// be admitted, not even on an idle server).
+    pub rejected_too_large: u64,
+    /// Sessions that lost their KV blocks to memory pressure (running
+    /// sessions parked for recompute + prefilling sessions requeued).
+    pub preemptions: u64,
+    /// Parked sessions restored to decoding after prefix recompute.
+    pub resumes: u64,
+    /// Sessions ended by their `deadline_ms` budget.
+    pub timeouts: u64,
+    /// Lone sessions truncated with `Length` on a genuinely full cache
+    /// (nothing left to preempt or evict).
+    pub oom_truncations: u64,
+    /// Transient (injected) backend failures absorbed by retrying the
+    /// prefill chunk or skipping the decode round.
+    pub backend_retries: u64,
+    /// Decode-growth allocations deferred one tick by an injected
+    /// allocator fault (distinct from preemption: nothing was released).
+    pub alloc_defers: u64,
 }
 
 impl AggregateMetrics {
@@ -83,6 +103,7 @@ impl AggregateMetrics {
         match m.finish_reason {
             FinishReason::Cancelled => self.cancelled += 1,
             FinishReason::Stop => self.stopped_early += 1,
+            FinishReason::Timeout => self.timeouts += 1,
             FinishReason::Length | FinishReason::Rejected => {}
         }
     }
@@ -109,7 +130,9 @@ impl AggregateMetrics {
              ttft: mean {:.1} ms (max {:.1})  decode: mean {:.2} ms/tok (shared {:.2})  queue: mean {:.1} ms\n\
              decode batches={} mean occupancy={:.2}  peak kv blocks={}\n\
              prefill chunks={} mean tokens={:.1}  max decode stall={} chunks\n\
-             prefix cache: {}/{} hits ({:.0}%)  saved blocks={}  mean matched={:.0} tok",
+             prefix cache: {}/{} hits ({:.0}%)  saved blocks={}  mean matched={:.0} tok\n\
+             pressure: preemptions={} resumes={} timeouts={} oom_truncations={} \
+             backend_retries={} alloc_defers={} too_large={}",
             self.requests,
             self.rejected,
             self.cancelled,
@@ -133,6 +156,13 @@ impl AggregateMetrics {
             100.0 * self.prefix_hit_rate(),
             self.prefix_saved_blocks,
             self.prefix_matched_tokens.mean(),
+            self.preemptions,
+            self.resumes,
+            self.timeouts,
+            self.oom_truncations,
+            self.backend_retries,
+            self.alloc_defers,
+            self.rejected_too_large,
         )
     }
 }
@@ -177,18 +207,21 @@ mod tests {
             FinishReason::Stop,
             FinishReason::Stop,
             FinishReason::Cancelled,
+            FinishReason::Timeout,
         ] {
             a.record(&RequestMetrics {
                 finish_reason: reason,
                 ..Default::default()
             });
         }
-        assert_eq!(a.requests, 4);
+        assert_eq!(a.requests, 5);
         assert_eq!(a.stopped_early, 2);
         assert_eq!(a.cancelled, 1);
+        assert_eq!(a.timeouts, 1);
         let report = a.report();
         assert!(report.contains("cancelled=1"), "{report}");
         assert!(report.contains("stopped_early=2"), "{report}");
+        assert!(report.contains("timeouts=1"), "{report}");
     }
 
     #[test]

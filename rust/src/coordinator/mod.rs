@@ -7,13 +7,15 @@
 //! sweeps) — so every experiment exercises the identical batching logic.
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod request;
 pub mod sampling;
 pub mod scheduler;
 
 pub use batcher::{Admission, Batcher, BatcherConfig};
+pub use faults::FaultBackend;
 pub use metrics::{AggregateMetrics, RequestMetrics};
 pub use request::{Event, FinishReason, Request, RequestId, Response};
 pub use sampling::{Sampler, SamplingParams};
-pub use scheduler::{Backend, Coordinator, CoordinatorConfig};
+pub use scheduler::{Backend, Coordinator, CoordinatorConfig, SubmitError};

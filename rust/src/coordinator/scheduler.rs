@@ -26,6 +26,35 @@
 //! stored again.  Prefill strictly FIFO-orders sessions, so a sharer's
 //! first chunk always runs after the session that registered the prefix
 //! finished prefilling it (its rows exist before anyone reads them).
+//!
+//! ## Oversubscription and preemption
+//!
+//! Admission is optimistic (prompt-only reservation; see
+//! [`BatcherConfig::reserve_worst_case`]), so decode-time growth can hit
+//! a genuinely full cache.  Each tick grows every decodable session by
+//! one KV row in **admission order** (oldest first) *before* the decode
+//! round; when a growth allocation fails the scheduler preempts the
+//! newest admission instead of erroring:
+//!
+//! * a still-prefilling session (always the newest) is requeued at the
+//!   queue *front* with its KV state released — it re-admits, re-reserves
+//!   and re-prefills from scratch (usually cheaply, via the prefix cache);
+//! * otherwise the newest-seniority *running* session — possibly the very
+//!   session being grown — is parked: its blocks are released, an
+//!   [`Event::Preempted`] is emitted, and its sampler + generated tokens
+//!   are kept.  Parked sessions resume with priority over fresh
+//!   admissions: the scheduler re-reserves `prompt ++ generated[..n-1]`,
+//!   re-prefills it through the normal chunked path (discarding the final
+//!   chunk's logits — the token they name was already emitted), emits
+//!   [`Event::Resumed`], and decoding continues **bit-identically** to an
+//!   uncontended run;
+//! * a lone session on a genuinely exhausted cache (nothing to preempt,
+//!   nothing cold to evict) finishes early with `Length`.
+//!
+//! Injected faults (see [`crate::faults`]) are recognised by downcast and
+//! handled as transients: an allocator fault defers that session's decode
+//! one tick, and a backend fault retries the same prefill chunk / skips
+//! the decode round, bounded by a consecutive-failure circuit breaker.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
@@ -36,7 +65,27 @@ use crate::coordinator::batcher::{Admission, Batcher, BatcherConfig};
 use crate::coordinator::metrics::{AggregateMetrics, RequestMetrics};
 use crate::coordinator::request::{Event, FinishReason, Request, RequestId, Response};
 use crate::coordinator::sampling::Sampler;
-use crate::kvcache::{CacheShape, PagedKvCache};
+use crate::faults::{FaultPlan, InjectedFault};
+use crate::kvcache::{CacheShape, PagedKvCache, BLOCK_TOKENS};
+
+/// Consecutive injected backend failures tolerated before the scheduler
+/// stops treating them as transient and propagates the error.  Far above
+/// any plausible storm; purely a circuit breaker against a backend that
+/// fails every call forever.
+const MAX_CONSECUTIVE_BACKEND_FAULTS: u32 = 64;
+
+/// Why [`Coordinator::try_submit`] refused a request.  Both count toward
+/// `AggregateMetrics::rejected`, but the server reports them differently:
+/// `queue_full` is transient backpressure worth retrying, `too_large`
+/// never becomes admissible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity, or the id is already queued/running.
+    QueueFull,
+    /// The prompt alone needs more blocks than the cache physically has;
+    /// this request could not be admitted even on an idle server.
+    PromptTooLarge,
+}
 
 /// Model-execution backend.  The coordinator owns the paged KV allocator
 /// and passes it into every call: backends that want real paged storage
@@ -115,6 +164,10 @@ struct Running {
     sampler: Sampler,
     generated: Vec<u8>,
     pos: usize,
+    /// Admission seniority (monotonic): growth runs oldest-first and the
+    /// newest admission is always the preemption victim, so the set of
+    /// sessions that make progress under pressure is deterministic.
+    seq: u64,
     ttft_ms: f64,
     queue_ms: f64,
     decode_ms: f64,
@@ -122,6 +175,31 @@ struct Running {
     /// Set the instant a finish condition is met (length / stop); the
     /// end-of-tick sweep releases the session and emits `Finished`.
     finish: Option<FinishReason>,
+}
+
+/// A running session parked by preemption: its KV blocks are gone but its
+/// sampler state and generated tokens are intact.  Resume re-reserves and
+/// re-prefills `prompt ++ generated[..n-1]`, then decoding continues from
+/// exactly where it stopped.
+struct ParkedSession {
+    req: Request,
+    sampler: Sampler,
+    generated: Vec<u8>,
+    seq: u64,
+    ttft_ms: f64,
+    queue_ms: f64,
+    decode_ms: f64,
+    started: Instant,
+}
+
+/// State a resumed session carries through its recompute prefill; restored
+/// into [`Running`] (with the final chunk's logits discarded) when the
+/// prefill completes.
+struct ResumeCtx {
+    sampler: Sampler,
+    generated: Vec<u8>,
+    ttft_ms: f64,
+    decode_ms: f64,
 }
 
 /// Does `generated` end with any of the request's stop sequences?
@@ -145,18 +223,31 @@ fn finish_check(req: &Request, generated: &[u8], pos: usize, s_max: usize) -> Op
     }
 }
 
-/// An admitted request whose prompt is still being fed chunk-by-chunk.
-/// Its full token budget is already reserved in the paged allocator.
+/// An admitted request whose prompt (or, on resume, prompt + replayed
+/// generation) is still being fed chunk-by-chunk.
 struct Prefilling {
     req: Request,
     /// Prompt tokens already in the cache: fed to the backend by earlier
     /// chunks, or covered by shared prefix blocks at admission (prefill
     /// then starts at `matched_tokens` and never recomputes the prefix).
     done: usize,
+    /// Admission seniority, preserved across preemption and resume.
+    seq: u64,
     queue_ms: f64,
     /// Admission instant — TTFT spans from here (including any decode
     /// rounds interleaved between this prompt's chunks).
     started: Instant,
+    /// Recompute feed for a resumed session (`prompt ++ generated[..n-1]`);
+    /// `None` for a fresh admission, which prefills `req.prompt`.
+    feed: Option<Vec<u8>>,
+    /// Present iff this is a preemption resume.
+    resume: Option<ResumeCtx>,
+}
+
+impl Prefilling {
+    fn feed(&self) -> &[u8] {
+        self.feed.as_deref().unwrap_or(&self.req.prompt)
+    }
 }
 
 /// Synchronous coordinator: drives a backend over a stream of requests.
@@ -168,17 +259,29 @@ pub struct Coordinator<B: Backend> {
     /// Admitted requests still mid-prefill, oldest first.
     prefilling: VecDeque<Prefilling>,
     running: BTreeMap<RequestId, Running>,
+    /// Preempted sessions awaiting resume, oldest first.
+    preempted: VecDeque<ParkedSession>,
     pub metrics: AggregateMetrics,
     finished: Vec<Response>,
     /// Prefill chunks run since the last decode round while decodable
     /// sessions were waiting (feeds `max_prefill_chunks_between_decodes`).
     stalled_chunks: u64,
+    /// Monotonic admission counter feeding `Running::seq`.
+    admission_seq: u64,
+    /// Injected backend failures since the last successful call (circuit
+    /// breaker: past `MAX_CONSECUTIVE_BACKEND_FAULTS` they propagate).
+    consecutive_backend_faults: u32,
 }
 
 impl<B: Backend> Coordinator<B> {
     pub fn new(backend: B, shape: CacheShape, cfg: CoordinatorConfig) -> Coordinator<B> {
         let kv = if backend.wants_paged_storage() {
-            PagedKvCache::with_storage(shape, cfg.kv_budget_bytes)
+            let mut kv = PagedKvCache::with_storage(shape, cfg.kv_budget_bytes);
+            // Storage-backed caches keep released prefix chunks resident
+            // (evictable) so repeated prompts and preemption resumes skip
+            // recompute; accounting-only caches have no rows to keep.
+            kv.retain_cold_prefixes(true);
+            kv
         } else {
             PagedKvCache::new(shape, cfg.kv_budget_bytes)
         };
@@ -188,24 +291,59 @@ impl<B: Backend> Coordinator<B> {
             kv,
             prefilling: VecDeque::new(),
             running: BTreeMap::new(),
+            preempted: VecDeque::new(),
             metrics: AggregateMetrics::default(),
             finished: Vec::new(),
             stalled_chunks: 0,
+            admission_seq: 0,
+            consecutive_backend_faults: 0,
         }
     }
 
-    /// Submit a request (returns false under queue backpressure).
-    pub fn submit(&mut self, mut req: Request) -> bool {
+    /// Install (or clear) a seeded allocator fault plan; backend-call
+    /// faults are layered separately by wrapping the backend in
+    /// [`crate::coordinator::FaultBackend`].
+    pub fn set_fault_plan(&mut self, plan: Option<&FaultPlan>) {
+        self.kv.set_alloc_faults(plan.map(|p| p.alloc_injector()));
+    }
+
+    /// Toggle cold-prefix retention on the underlying allocator (on by
+    /// default for storage-backed caches).
+    pub fn retain_cold_prefixes(&mut self, on: bool) {
+        self.kv.retain_cold_prefixes(on);
+    }
+
+    /// Submit a request; `Err` carries the distinct rejection reason.
+    pub fn try_submit(&mut self, mut req: Request) -> Result<(), SubmitError> {
         req.arrival = Some(Instant::now());
-        let ok = self.batcher.submit(req);
-        if !ok {
+        // A prompt that cannot fit in the cache *empty* can never be
+        // admitted: growing the queue with it would wedge admission (every
+        // reserve_prefix fails) until its deadline or a cancel.  Reject it
+        // now, with a reason distinct from transient backpressure.
+        if req.prompt.len().div_ceil(BLOCK_TOKENS) > self.kv.capacity_blocks() {
             self.metrics.rejected += 1;
+            self.metrics.rejected_too_large += 1;
+            return Err(SubmitError::PromptTooLarge);
         }
-        ok
+        if self.batcher.submit(req) {
+            Ok(())
+        } else {
+            self.metrics.rejected += 1;
+            Err(SubmitError::QueueFull)
+        }
+    }
+
+    /// Submit a request (returns false on any rejection); see
+    /// [`Coordinator::try_submit`] for the distinguishable reasons.
+    pub fn submit(&mut self, req: Request) -> bool {
+        self.try_submit(req).is_ok()
     }
 
     pub fn pending(&self) -> usize {
-        self.batcher.queue_len() + self.prefilling.len() + self.running.len()
+        self.batcher.queue_len()
+            + self.prefilling.len()
+            + self.running.len()
+            + self.preempted.len()
     }
 
     /// One scheduler tick: admit, spend the tick's prefill-token budget in
@@ -215,9 +353,57 @@ impl<B: Backend> Coordinator<B> {
     pub fn tick(&mut self) -> Result<Vec<Event>> {
         let mut out = Vec::new();
         let s_max = self.backend.s_max();
+
+        // 0. Deadline sweep: sessions past their wall-clock budget finish
+        // with `Timeout` *now*, through the same teardown as cancellation,
+        // so their blocks are free before this tick allocates anything.
+        self.sweep_deadlines(&mut out);
+
+        // 0b. Resume preempted sessions — strictly senior to fresh
+        // admissions (they already consumed service).  Re-reserve the
+        // replay feed and push it through the chunked-prefill path; if the
+        // cache still cannot hold it, stay parked and retry next tick.
+        // (`Batcher::running_len` counts every admitted unfinished session,
+        // prefilling included, so it is the whole cap check.)
+        while self.batcher.running_len() < self.batcher.cfg.max_sessions {
+            let Some(parked) = self.preempted.front() else { break };
+            let n = parked.generated.len();
+            let mut feed =
+                Vec::with_capacity(parked.req.prompt.len() + n.saturating_sub(1));
+            feed.extend_from_slice(&parked.req.prompt);
+            feed.extend_from_slice(&parked.generated[..n - 1]);
+            match self.kv.reserve_prefix(parked.req.id, &feed, feed.len()) {
+                Ok(m) => {
+                    let parked = self.preempted.pop_front().unwrap();
+                    self.batcher.note_running(parked.req.id);
+                    self.metrics.prefix_lookups += 1;
+                    if m.matched_tokens > 0 {
+                        self.metrics.prefix_hits += 1;
+                        self.metrics.prefix_saved_blocks += m.shared_blocks as u64;
+                        self.metrics.prefix_matched_tokens.add(m.matched_tokens as f64);
+                    }
+                    self.prefilling.push_back(Prefilling {
+                        done: m.matched_tokens,
+                        seq: parked.seq,
+                        queue_ms: parked.queue_ms,
+                        started: parked.started,
+                        feed: Some(feed),
+                        resume: Some(ResumeCtx {
+                            sampler: parked.sampler,
+                            generated: parked.generated,
+                            ttft_ms: parked.ttft_ms,
+                            decode_ms: parked.decode_ms,
+                        }),
+                        req: parked.req,
+                    });
+                }
+                Err(_) => break,
+            }
+        }
+
         // 1. Admission: query the prefix trie, reserve the unmatched
-        // suffix plus the generation budget, and queue the prompt for
-        // chunked prefill starting past the shared prefix.
+        // suffix (prompt-only by default — oversubscribing admission), and
+        // queue the prompt for chunked prefill past the shared prefix.
         for adm in self.batcher.admit(&mut self.kv) {
             let Admission { req, matched_tokens, shared_blocks } = adm;
             let queue_ms = req
@@ -243,7 +429,8 @@ impl<B: Backend> Coordinator<B> {
                 self.batcher.finish(req.id, &mut self.kv);
                 self.backend.drop_session(req.id);
                 self.metrics.record(&m);
-                let resp = Response { id: req.id, generated: Vec::new(), metrics: m };
+                let resp =
+                    Response { id: req.id, generated: Vec::new(), metrics: m, reject_reason: None };
                 self.finished.push(resp.clone());
                 out.push(Event::Finished { id: req.id, response: resp });
                 continue;
@@ -254,11 +441,15 @@ impl<B: Backend> Coordinator<B> {
                 self.metrics.prefix_saved_blocks += shared_blocks as u64;
                 self.metrics.prefix_matched_tokens.add(matched_tokens as f64);
             }
+            self.admission_seq += 1;
             self.prefilling.push_back(Prefilling {
                 req,
                 done: matched_tokens,
+                seq: self.admission_seq,
                 queue_ms,
                 started: Instant::now(),
+                feed: None,
+                resume: None,
             });
         }
         self.metrics.peak_kv_blocks = self.metrics.peak_kv_blocks.max(self.kv.used_blocks());
@@ -269,7 +460,8 @@ impl<B: Backend> Coordinator<B> {
         let mut budget = self.batcher.cfg.prefill_chunk_tokens.max(1);
         while budget > 0 {
             let Some(mut p) = self.prefilling.pop_front() else { break };
-            let remaining = p.req.prompt.len() - p.done;
+            let feed_len = p.feed().len();
+            let remaining = feed_len - p.done;
             let take = if self.backend.supports_chunked_prefill() {
                 remaining.min(budget)
             } else {
@@ -277,18 +469,37 @@ impl<B: Backend> Coordinator<B> {
                 // still bills the full length against its budget.
                 remaining
             };
-            let last = p.done + take == p.req.prompt.len();
+            let last = p.done + take == feed_len;
             // A partially matched prefix block is copied into the
             // session's private block before its first write (idempotent;
             // FIFO prefill guarantees the source rows exist by now).
             self.kv.materialize_cow(p.req.id);
-            let logits = self.backend.prefill_chunk(
+            let logits = match self.backend.prefill_chunk(
                 &mut self.kv,
                 p.req.id,
-                &p.req.prompt[p.done..p.done + take],
+                &p.feed()[p.done..p.done + take],
                 p.done,
                 last,
-            )?;
+            ) {
+                Ok(l) => {
+                    self.consecutive_backend_faults = 0;
+                    l
+                }
+                Err(e)
+                    if e.downcast_ref::<InjectedFault>().is_some()
+                        && self.consecutive_backend_faults < MAX_CONSECUTIVE_BACKEND_FAULTS =>
+                {
+                    // Transient: the fault fired before the backend saw the
+                    // chunk, so re-running the identical chunk next tick is
+                    // clean.  Stop prefilling this tick (FIFO order keeps
+                    // the prefix-sharing safety argument intact).
+                    self.consecutive_backend_faults += 1;
+                    self.metrics.backend_retries += 1;
+                    self.prefilling.push_front(p);
+                    break;
+                }
+                Err(e) => return Err(e),
+            };
             p.done += take;
             budget = budget.saturating_sub(take.max(1));
             self.metrics.prefill_chunks += 1;
@@ -299,12 +510,42 @@ impl<B: Backend> Coordinator<B> {
             if last {
                 let logits =
                     logits.ok_or_else(|| anyhow!("no logits for final prefill chunk"))?;
+                if let Some(ctx) = p.resume {
+                    // Recompute complete: restore the session exactly as
+                    // preempted.  The final chunk's logits are *discarded*,
+                    // not sampled — the token they name (`generated.last()`)
+                    // was emitted before preemption; the next decode feeds
+                    // it at `pos = feed_len`, exactly as the uncontended
+                    // run would have.  The sampler was therefore called the
+                    // same number of times in both histories.
+                    drop(logits);
+                    let id = p.req.id;
+                    self.running.insert(
+                        id,
+                        Running {
+                            sampler: ctx.sampler,
+                            generated: ctx.generated,
+                            pos: feed_len,
+                            seq: p.seq,
+                            ttft_ms: ctx.ttft_ms,
+                            queue_ms: p.queue_ms,
+                            decode_ms: ctx.decode_ms,
+                            started: p.started,
+                            finish: None,
+                            req: p.req,
+                        },
+                    );
+                    self.metrics.resumes += 1;
+                    out.push(Event::Resumed { id });
+                    continue;
+                }
                 let pos = p.req.prompt.len();
                 let ttft_ms = p.queue_ms + p.started.elapsed().as_secs_f64() * 1e3;
                 let mut r = Running {
                     sampler: Sampler::new(&p.req.sampling),
                     generated: Vec::with_capacity(p.req.max_new),
                     pos,
+                    seq: p.seq,
                     ttft_ms,
                     queue_ms: p.queue_ms,
                     decode_ms: 0.0,
@@ -331,18 +572,60 @@ impl<B: Backend> Coordinator<B> {
             }
         }
 
-        // 3. Continuous decode round over all runnable sessions.  A
+        // 3. Pre-grow every decodable session's KV by one row, oldest
+        // admission first, preempting the newest admission when a growth
+        // allocation genuinely fails.  Growing *before* the decode round
+        // (in seniority order) makes the preemption choice deterministic
+        // and keeps the backend's own `ensure_tokens` calls zero-alloc.
+        let mut order: Vec<(u64, RequestId)> = self
+            .running
+            .iter()
+            .filter(|(_, r)| r.finish.is_none())
+            .map(|(&id, r)| (r.seq, id))
+            .collect();
+        order.sort_unstable();
+        let mut runnable: Vec<RequestId> = Vec::with_capacity(order.len());
+        'grow: for (_, id) in order {
+            if !self.running.contains_key(&id) {
+                continue; // parked earlier in this loop as someone's victim
+            }
+            let pos = self.running[&id].pos;
+            loop {
+                match self.kv.ensure_tokens(id, pos + 1) {
+                    Ok(()) => {
+                        runnable.push(id);
+                        continue 'grow;
+                    }
+                    Err(e) if e.downcast_ref::<InjectedFault>().is_some() => {
+                        // Planned transient: defer this session's decode one
+                        // tick.  Nothing is released — preempting on a fault
+                        // that clears by itself would thrash.
+                        self.metrics.alloc_defers += 1;
+                        continue 'grow;
+                    }
+                    Err(_) => match self.preempt_one(&mut out) {
+                        Some(victim) if victim == id => continue 'grow, // parked itself
+                        Some(_) => continue,                            // retry the growth
+                        None => {
+                            // Lone session, genuinely full cache, cold cache
+                            // already drained by the allocator: finish with
+                            // what it has.
+                            let r = self.running.get_mut(&id).unwrap();
+                            r.finish = Some(FinishReason::Length);
+                            self.metrics.oom_truncations += 1;
+                            continue 'grow;
+                        }
+                    },
+                }
+            }
+        }
+
+        // 4. Continuous decode round over all runnable sessions.  A
         // runnable session always holds at least one sampled token
         // (`generated.last()` — pushed at prefill completion) which the
         // backend consumes at `pos`; its logits sample the *next* token.
         // A finished request therefore never pays for the trailing decode
         // step whose logits the v1 loop used to throw away.
-        let runnable: Vec<RequestId> = self
-            .running
-            .iter()
-            .filter(|(_, r)| r.finish.is_none())
-            .map(|(&id, _)| id)
-            .collect();
         for group in self.batcher.decode_batches(&runnable) {
             let entries: Vec<(RequestId, u8, usize)> = group
                 .iter()
@@ -352,7 +635,24 @@ impl<B: Backend> Coordinator<B> {
                 })
                 .collect();
             let t0 = Instant::now();
-            let logits = self.backend.decode_batch(&mut self.kv, &entries)?;
+            let logits = match self.backend.decode_batch(&mut self.kv, &entries) {
+                Ok(l) => {
+                    self.consecutive_backend_faults = 0;
+                    l
+                }
+                Err(e)
+                    if e.downcast_ref::<InjectedFault>().is_some()
+                        && self.consecutive_backend_faults < MAX_CONSECUTIVE_BACKEND_FAULTS =>
+                {
+                    // Transient: the fault fired before the backend ran, so
+                    // no KV row or position advanced — the identical round
+                    // re-runs next tick.
+                    self.consecutive_backend_faults += 1;
+                    self.metrics.backend_retries += 1;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
             self.metrics.decode_batches += 1;
             self.metrics.decode_batch_occupancy.add(entries.len() as f64);
@@ -383,11 +683,10 @@ impl<B: Backend> Coordinator<B> {
             self.stalled_chunks = 0;
         }
 
-        // 4. Collect completions: sessions whose finish condition was met
+        // 5. Collect completions: sessions whose finish condition was met
         // this tick release their KV reservation (and any shared
-        // prefix-block refcounts) immediately — a stop-sequence hit frees
-        // the unused tail of the `prompt + max_new` reservation without
-        // waiting for the length limit.
+        // prefix-block refcounts) immediately — an early finish frees its
+        // blocks for the very next tick's admissions and growth.
         let done: Vec<RequestId> = self
             .running
             .iter()
@@ -417,6 +716,7 @@ impl<B: Backend> Coordinator<B> {
                 id,
                 generated: r.generated,
                 metrics: m,
+                reject_reason: None,
             };
             self.finished.push(resp.clone());
             out.push(Event::Finished { id, response: resp });
@@ -424,14 +724,105 @@ impl<B: Backend> Coordinator<B> {
         Ok(out)
     }
 
+    /// Preempt one admission to free KV blocks for older sessions.
+    /// Cheapest victim first: the newest still-prefilling admission (no
+    /// sampled state — it is requeued at the queue *front* and restarts
+    /// cleanly), otherwise the newest-seniority running session, which is
+    /// parked with its sampler and generated tokens intact.  Returns the
+    /// victim's id, or `None` when there is nothing left to preempt.
+    fn preempt_one(&mut self, out: &mut Vec<Event>) -> Option<RequestId> {
+        if let Some(p) = self.prefilling.pop_back() {
+            let id = p.req.id;
+            self.batcher.finish(id, &mut self.kv);
+            self.backend.drop_session(id);
+            self.metrics.preemptions += 1;
+            if let Some(ctx) = p.resume {
+                // A resumed session caught mid-recompute goes back to the
+                // *front* of the parked queue with its state intact — it
+                // already emitted its tokens once and must never replay
+                // them as a fresh admission.  (No second `Preempted`
+                // event: its `Resumed` was never emitted.)
+                self.preempted.push_front(ParkedSession {
+                    req: p.req,
+                    sampler: ctx.sampler,
+                    generated: ctx.generated,
+                    seq: p.seq,
+                    ttft_ms: ctx.ttft_ms,
+                    queue_ms: p.queue_ms,
+                    decode_ms: ctx.decode_ms,
+                    started: p.started,
+                });
+            } else {
+                self.batcher.requeue_front(p.req);
+            }
+            return Some(id);
+        }
+        let victim = self
+            .running
+            .iter()
+            .filter(|(_, r)| r.finish.is_none())
+            .max_by_key(|(_, r)| r.seq)
+            .map(|(&id, _)| id)?;
+        // A lone session preempting itself would just thrash; the caller
+        // handles that case as genuine exhaustion.
+        if self.running.iter().filter(|(_, r)| r.finish.is_none()).count() == 1 {
+            return None;
+        }
+        let r = self.running.remove(&victim).unwrap();
+        self.batcher.finish(victim, &mut self.kv);
+        self.backend.drop_session(victim);
+        self.metrics.preemptions += 1;
+        out.push(Event::Preempted { id: victim });
+        self.preempted.push_back(ParkedSession {
+            req: r.req,
+            sampler: r.sampler,
+            generated: r.generated,
+            seq: r.seq,
+            ttft_ms: r.ttft_ms,
+            queue_ms: r.queue_ms,
+            decode_ms: r.decode_ms,
+            started: r.started,
+        });
+        Some(victim)
+    }
+
+    /// Finish every session whose `deadline_ms` has expired — wherever it
+    /// lives — through the same teardown as cancellation, emitting the
+    /// terminal `Finished` event with `FinishReason::Timeout`.
+    fn sweep_deadlines(&mut self, out: &mut Vec<Event>) {
+        let mut expired: Vec<RequestId> = self.batcher.expired_queued();
+        expired.extend(
+            self.prefilling
+                .iter()
+                .filter(|p| p.req.deadline_expired())
+                .map(|p| p.req.id),
+        );
+        expired.extend(
+            self.running
+                .values()
+                .filter(|r| r.req.deadline_expired())
+                .map(|r| r.req.id),
+        );
+        expired.extend(
+            self.preempted
+                .iter()
+                .filter(|p| p.req.deadline_expired())
+                .map(|p| p.req.id),
+        );
+        for id in expired {
+            if let Some(response) = self.teardown(id, FinishReason::Timeout) {
+                out.push(Event::Finished { id, response });
+            }
+        }
+    }
+
     /// Tear down a request wherever it lives — still queued, mid-prefill,
-    /// or decoding.  Its KV reservation (including shared prefix-block
-    /// refcounts) is released immediately, so `kv_used_blocks()` returns
-    /// to its pre-admission value; returns the terminal `Cancelled`
-    /// response carrying any tokens generated so far, or `None` for an
-    /// unknown (or already finished) id.  The server wires this to client
-    /// disconnects and explicit `{"cancel": id}` messages.
-    pub fn cancel(&mut self, id: RequestId) -> Option<Response> {
+    /// decoding, or parked by preemption.  Its KV reservation (including
+    /// shared prefix-block refcounts) is released immediately, so
+    /// `kv_used_blocks()` returns to its pre-admission value; returns the
+    /// terminal response carrying any tokens generated so far, or `None`
+    /// for an unknown (or already finished) id.
+    fn teardown(&mut self, id: RequestId, reason: FinishReason) -> Option<Response> {
         let (req, generated, queue_ms, ttft_ms, decode_ms, started) =
             if let Some(req) = self.batcher.remove_queued(id) {
                 // Queued requests hold no reservation and no backend state.
@@ -444,11 +835,22 @@ impl<B: Backend> Coordinator<B> {
                 let p = self.prefilling.remove(i).unwrap();
                 self.batcher.finish(id, &mut self.kv);
                 self.backend.drop_session(id);
-                (p.req, Vec::new(), p.queue_ms, 0.0, 0.0, Some(p.started))
+                // A resumed session torn down mid-recompute still returns
+                // the tokens it generated before preemption.
+                let (generated, ttft, decode_ms) = match p.resume {
+                    Some(c) => (c.generated, c.ttft_ms, c.decode_ms),
+                    None => (Vec::new(), 0.0, 0.0),
+                };
+                (p.req, generated, p.queue_ms, ttft, decode_ms, Some(p.started))
             } else if let Some(r) = self.running.remove(&id) {
                 self.batcher.finish(id, &mut self.kv);
                 self.backend.drop_session(id);
                 (r.req, r.generated, r.queue_ms, r.ttft_ms, r.decode_ms, Some(r.started))
+            } else if let Some(i) = self.preempted.iter().position(|p| p.req.id == id) {
+                // Parked sessions hold no KV blocks and no backend state —
+                // preemption already released both.
+                let p = self.preempted.remove(i).unwrap();
+                (p.req, p.generated, p.queue_ms, p.ttft_ms, p.decode_ms, Some(p.started))
             } else {
                 return None;
             };
@@ -465,12 +867,21 @@ impl<B: Backend> Coordinator<B> {
             total_ms: started
                 .map(|s| s.elapsed().as_secs_f64() * 1e3)
                 .unwrap_or(queue_ms),
-            finish_reason: FinishReason::Cancelled,
+            finish_reason: reason,
         };
         self.metrics.record(&m);
-        let resp = Response { id, generated, metrics: m };
+        let resp = Response { id, generated, metrics: m, reject_reason: None };
         self.finished.push(resp.clone());
         Some(resp)
+    }
+
+    /// Cancel a request wherever it lives (see [`Coordinator::teardown`]);
+    /// the server wires this to client disconnects and explicit
+    /// `{"cancel": id}` messages.  Returns the terminal `Cancelled`
+    /// response, or `None` for an unknown (or already finished) id —
+    /// double-cancel is a no-op.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Response> {
+        self.teardown(id, FinishReason::Cancelled)
     }
 
     /// Drop buffered completed responses (the `run_to_completion` return
@@ -497,6 +908,26 @@ impl<B: Backend> Coordinator<B> {
     /// Distinct prompt chunks currently cached in the prefix trie.
     pub fn kv_prefix_nodes(&self) -> usize {
         self.kv.prefix_nodes()
+    }
+
+    /// Blocks held only by the cold-prefix cache (reclaimable on demand).
+    pub fn kv_cold_blocks(&self) -> usize {
+        self.kv.cold_blocks()
+    }
+
+    /// Cold-prefix chunks evicted under allocation pressure so far.
+    pub fn kv_evictions(&self) -> u64 {
+        self.kv.evictions()
+    }
+
+    /// Total physical blocks in the paged cache.
+    pub fn kv_capacity_blocks(&self) -> usize {
+        self.kv.capacity_blocks()
+    }
+
+    /// Allocation faults injected by the installed fault plan so far.
+    pub fn kv_alloc_faults_injected(&self) -> u64 {
+        self.kv.alloc_faults_injected()
     }
 }
 
@@ -741,6 +1172,7 @@ mod tests {
                     buckets: vec![1, 4],
                     max_queue: 16,
                     prefill_chunk_tokens: 256,
+                    reserve_worst_case: false,
                 },
                 kv_budget_bytes: 64 << 20,
             },
@@ -808,6 +1240,9 @@ mod tests {
                     Event::Finished { id, response } => {
                         finished.insert(id, response);
                     }
+                    Event::Preempted { .. } | Event::Resumed { .. } => {
+                        unreachable!("no memory pressure in this test")
+                    }
                 }
             }
         }
@@ -869,6 +1304,7 @@ mod tests {
                     buckets: vec![1, 4],
                     max_queue: 16,
                     prefill_chunk_tokens: 256,
+                    reserve_worst_case: false,
                 },
                 kv_budget_bytes: 64 << 20,
             },
@@ -907,5 +1343,214 @@ mod tests {
         let greedy = SamplingParams { temperature: 0.0, seed: 123, ..Default::default() };
         assert!(c.submit(Request::new(1, vec![1, 2, 3], 5).with_sampling(greedy)));
         assert_eq!(c.run_to_completion().unwrap()[0].generated, vec![4, 5, 6, 0, 1]);
+    }
+
+    /// Like `coordinator`, but with an exact block budget: the test shape
+    /// costs 2 layers * 2 heads * 16 tokens * (8+8) lanes * 4 bytes =
+    /// 8192 bytes per block.
+    fn tight_coordinator(max_sessions: usize, blocks: usize) -> Coordinator<ToyBackend> {
+        let shape = CacheShape {
+            n_layers: 2,
+            n_kv_heads: 2,
+            k_width: vec![8, 8],
+            v_width: vec![8, 8],
+        };
+        Coordinator::new(
+            ToyBackend::new(64),
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions,
+                    buckets: vec![1, 4],
+                    max_queue: 100,
+                    ..Default::default()
+                },
+                kv_budget_bytes: blocks * 8192,
+            },
+        )
+    }
+
+    #[test]
+    fn oversubscribed_decode_preempts_resumes_and_stays_bit_identical() {
+        // Two sessions that each peak at 3 blocks (prompt 16, max_new 33)
+        // on a 4-block cache: optimistic admission takes both, growth
+        // exhausts the cache mid-decode, the newer admission is parked and
+        // later resumed — and every emitted token must match the
+        // uncontended (100-block) run exactly.
+        let run = |blocks: usize| {
+            let mut c = tight_coordinator(2, blocks);
+            for id in 0..2u64 {
+                assert!(c.submit(Request::new(id, vec![3u8; 16], 33)));
+            }
+            let mut out = c.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            let gens: Vec<Vec<u8>> = out.iter().map(|r| r.generated.clone()).collect();
+            (gens, c.metrics.preemptions, c.metrics.resumes, c.kv_used_blocks())
+        };
+        let (baseline, p0, r0, _) = run(100);
+        assert_eq!(p0, 0, "uncontended run never preempts");
+        assert_eq!(r0, 0);
+        assert_eq!(baseline[0].len(), 33);
+        let (contended, preemptions, resumes, used) = run(4);
+        assert_eq!(contended, baseline, "preempt/resume must be bit-identical");
+        assert!(preemptions >= 1, "4 blocks cannot hold two 3-block peaks");
+        assert!(resumes >= 1);
+        assert_eq!(used, 0, "all blocks returned after the storm");
+    }
+
+    #[test]
+    fn impossible_prompts_rejected_at_submit_with_distinct_reason() {
+        let mut c = tight_coordinator(2, 2);
+        // 48 tokens need 3 blocks; the cache physically has 2.
+        let err = c.try_submit(Request::new(1, vec![0u8; BLOCK_TOKENS * 3], 4));
+        assert_eq!(err, Err(SubmitError::PromptTooLarge));
+        assert_eq!(c.metrics.rejected, 1);
+        assert_eq!(c.metrics.rejected_too_large, 1);
+        assert_eq!(c.pending(), 0, "never queued");
+
+        // Queue backpressure stays a *distinct* reason.
+        let shape = CacheShape {
+            n_layers: 2,
+            n_kv_heads: 2,
+            k_width: vec![8, 8],
+            v_width: vec![8, 8],
+        };
+        let mut c = Coordinator::new(
+            ToyBackend::new(64),
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig { max_queue: 1, ..Default::default() },
+                kv_budget_bytes: 16 << 20,
+            },
+        );
+        assert_eq!(c.try_submit(Request::new(1, vec![1, 2], 2)), Ok(()));
+        assert_eq!(c.try_submit(Request::new(2, vec![1, 2], 2)), Err(SubmitError::QueueFull));
+        assert_eq!(c.metrics.rejected, 1);
+        assert_eq!(c.metrics.rejected_too_large, 0);
+    }
+
+    #[test]
+    fn deadline_expiry_times_out_wherever_the_session_lives() {
+        // Expired while still queued: swept on the first tick, before
+        // admission could even reserve for it.
+        let mut c = coordinator(1);
+        assert!(c.submit(Request::new(1, vec![1, 2, 3], 5).with_deadline_ms(0)));
+        let out = c.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].metrics.finish_reason, FinishReason::Timeout);
+        assert!(out[0].generated.is_empty());
+        assert_eq!(c.metrics.timeouts, 1);
+
+        // Expired mid-decode: keeps the tokens generated so far, releases
+        // its blocks the same tick.
+        let mut c = coordinator(1);
+        assert!(c.submit(Request::new(2, vec![1, 2, 3], 1000).with_deadline_ms(30)));
+        for _ in 0..3 {
+            c.tick().unwrap();
+        }
+        assert_eq!(c.pending(), 1, "still decoding");
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        let out = c.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].metrics.finish_reason, FinishReason::Timeout);
+        assert!(!out[0].generated.is_empty(), "partial generation survives the timeout");
+        assert!(out[0].generated.len() < 1000);
+        assert_eq!(c.metrics.timeouts, 1);
+        assert_eq!(c.kv_used_blocks(), 0, "timed-out session fully released");
+        assert_eq!(c.backend.sessions.len(), 0);
+    }
+
+    #[test]
+    fn cancel_of_a_preempted_session_returns_blocks_and_tokens() {
+        let mut c = tight_coordinator(2, 4);
+        for id in 0..2u64 {
+            assert!(c.submit(Request::new(id, vec![3u8; 16], 33)));
+        }
+        let mut victim = None;
+        for _ in 0..200 {
+            for ev in c.tick().unwrap() {
+                if let Event::Preempted { id } = ev {
+                    victim = Some(id);
+                }
+            }
+            if victim.is_some() {
+                break;
+            }
+        }
+        let victim = victim.expect("4 blocks force a preemption");
+        let r = c.cancel(victim).expect("parked sessions are cancellable");
+        assert_eq!(r.metrics.finish_reason, FinishReason::Cancelled);
+        assert!(!r.generated.is_empty(), "tokens emitted before parking survive");
+        assert!(c.cancel(victim).is_none(), "double-cancel is a no-op");
+        let out = c.run_to_completion().unwrap();
+        let survivor = out.iter().find(|r| r.id != victim).unwrap();
+        assert_eq!(survivor.generated.len(), 33);
+        assert_eq!(c.metrics.resumes, 0, "cancelled before any resume");
+        assert_eq!(c.metrics.cancelled, 1);
+        assert_eq!(c.kv_used_blocks(), 0, "blocks back to baseline");
+        assert_eq!(c.backend.sessions.len(), 0);
+    }
+
+    #[test]
+    fn injected_alloc_faults_are_transient_and_recoverable() {
+        let mut c = coordinator(2);
+        let plan = FaultPlan::new(3).with_alloc_faults(1.0);
+        c.set_fault_plan(Some(&plan));
+        assert!(c.submit(Request::new(1, vec![1, 2, 3], 5)));
+        // Every admission reserve fails by injection; the request just
+        // stays queued — nothing is preempted, nothing errors.
+        for _ in 0..3 {
+            let ev = c.tick().unwrap();
+            assert!(ev.is_empty(), "no progress under a 100% alloc-fault storm");
+        }
+        assert_eq!(c.pending(), 1);
+        assert!(c.kv_alloc_faults_injected() >= 3);
+        c.set_fault_plan(None);
+        let out = c.run_to_completion().unwrap();
+        assert_eq!(out[0].generated, vec![4, 5, 6, 0, 1], "output unchanged by the storm");
+        assert_eq!(c.metrics.preemptions, 0, "faults defer, never preempt");
+        assert_eq!(c.kv_used_blocks(), 0);
+    }
+
+    #[test]
+    fn transient_backend_faults_retry_without_changing_output() {
+        use crate::coordinator::faults::FaultBackend;
+        let shape = CacheShape {
+            n_layers: 2,
+            n_kv_heads: 2,
+            k_width: vec![8, 8],
+            v_width: vec![8, 8],
+        };
+        let plan = FaultPlan::new(11).with_prefill_faults(0.5).with_decode_faults(0.5);
+        let mut c = Coordinator::new(
+            FaultBackend::new(ToyBackend::new(64), &plan),
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 4,
+                    buckets: vec![1, 4],
+                    max_queue: 100,
+                    ..Default::default()
+                },
+                kv_budget_bytes: 16 << 20,
+            },
+        );
+        for id in 0..4u64 {
+            assert!(c.submit(Request::new(id, vec![1, 2, 3], 8)));
+        }
+        let out = c.run_to_completion().unwrap();
+        assert_eq!(out.len(), 4);
+        for r in &out {
+            assert_eq!(r.generated, vec![4, 5, 6, 0, 1, 2, 3, 4], "faults never corrupt output");
+        }
+        let (pf, df) = c.backend.injected();
+        assert!(pf + df > 0, "a 50% plan over 4 sessions must fire");
+        assert_eq!(
+            c.metrics.backend_retries,
+            pf + df,
+            "every injected backend fault was absorbed as a retry"
+        );
+        assert_eq!(c.kv_used_blocks(), 0);
+        assert_eq!(c.backend.inner().sessions.len(), 0);
     }
 }

@@ -1,0 +1,256 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seed plus per-site failure rates.  Every injection
+//! site derives its own [`FaultInjector`] — an independent splitmix64
+//! stream keyed on `(seed, site)` — so whether site A fires never shifts
+//! site B's schedule, and a storm is exactly reproducible from its seed.
+//!
+//! Two consumer layers:
+//!
+//! * the paged allocator ([`crate::kvcache::PagedKvCache`]) consults an
+//!   alloc-site injector *only when a reservation actually needs new
+//!   blocks* (zero-deficit fast paths stay untouched, preserving the
+//!   zero-alloc decode guarantee) and fails the reservation with an
+//!   [`InjectedFault`] — exercising the coordinator's eviction/preemption
+//!   paths on demand;
+//! * [`crate::coordinator::FaultBackend`] wraps any `Backend` and injects
+//!   transient prefill/decode errors (before touching the inner backend,
+//!   so a retry is always clean) and seeded slow ticks.
+//!
+//! Injected failures are distinguishable from genuine exhaustion by
+//! downcasting to [`InjectedFault`]: the scheduler retries those instead
+//! of, e.g., truncating a lone session that merely hit a planned fault.
+
+use std::fmt;
+
+/// Marker error for a planned, injected failure (vs. genuine exhaustion
+/// or a real backend error).  Carried inside `anyhow::Error`; recover it
+/// with `err.downcast_ref::<InjectedFault>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// Which injection site fired (e.g. "alloc", "prefill", "decode").
+    pub site: &'static str,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected {} fault", self.site)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// splitmix64 — tiny, seedable, and good enough for Bernoulli draws.
+#[derive(Debug, Clone)]
+struct FaultRng {
+    state: u64,
+}
+
+impl FaultRng {
+    fn new(seed: u64) -> FaultRng {
+        FaultRng { state: seed }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Bernoulli draw with probability `p` (clamped to [0, 1]).
+    fn chance(&mut self, p: f32) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        if p >= 1.0 {
+            self.next_u64(); // keep the stream advancing uniformly
+            return true;
+        }
+        // 53-bit mantissa; bias at these rates is far below test noise.
+        let u = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        u < p as f64
+    }
+}
+
+/// Seeded description of a fault storm: one seed, per-site rates.
+/// Rates are probabilities in [0, 1]; 0 disables a site.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// P(an allocation that needs new blocks fails) — allocator site.
+    pub alloc_fault_rate: f32,
+    /// P(a prefill chunk fails transiently before execution).
+    pub prefill_fault_rate: f32,
+    /// P(a decode batch fails transiently before execution).
+    pub decode_fault_rate: f32,
+    /// P(a backend call sleeps `slow_tick_ms` first) — a seeded slow tick.
+    pub slow_tick_rate: f32,
+    pub slow_tick_ms: u64,
+}
+
+impl FaultPlan {
+    /// All sites disabled; enable with the builder methods.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            alloc_fault_rate: 0.0,
+            prefill_fault_rate: 0.0,
+            decode_fault_rate: 0.0,
+            slow_tick_rate: 0.0,
+            slow_tick_ms: 0,
+        }
+    }
+
+    pub fn with_alloc_faults(mut self, rate: f32) -> FaultPlan {
+        self.alloc_fault_rate = rate;
+        self
+    }
+
+    pub fn with_prefill_faults(mut self, rate: f32) -> FaultPlan {
+        self.prefill_fault_rate = rate;
+        self
+    }
+
+    pub fn with_decode_faults(mut self, rate: f32) -> FaultPlan {
+        self.decode_fault_rate = rate;
+        self
+    }
+
+    pub fn with_slow_ticks(mut self, rate: f32, ms: u64) -> FaultPlan {
+        self.slow_tick_rate = rate;
+        self.slow_tick_ms = ms;
+        self
+    }
+
+    /// Injector for one named site: an independent stream keyed on
+    /// `(seed, site)` so sites never perturb each other's schedules.
+    pub fn injector(&self, site: &'static str, rate: f32) -> FaultInjector {
+        let mut h = self.seed ^ 0x5AFE_FA17_u64.wrapping_mul(site.len() as u64 + 1);
+        for b in site.bytes() {
+            h = h.wrapping_mul(0x0100_0000_01B3).wrapping_add(b as u64);
+        }
+        FaultInjector {
+            rng: FaultRng::new(h),
+            rate,
+            site,
+            injected: 0,
+        }
+    }
+
+    pub fn alloc_injector(&self) -> FaultInjector {
+        self.injector("alloc", self.alloc_fault_rate)
+    }
+
+    pub fn prefill_injector(&self) -> FaultInjector {
+        self.injector("prefill", self.prefill_fault_rate)
+    }
+
+    pub fn decode_injector(&self) -> FaultInjector {
+        self.injector("decode", self.decode_fault_rate)
+    }
+
+    pub fn slow_tick_injector(&self) -> FaultInjector {
+        self.injector("slow-tick", self.slow_tick_rate)
+    }
+}
+
+/// One site's deterministic failure stream (see [`FaultPlan::injector`]).
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rng: FaultRng,
+    rate: f32,
+    site: &'static str,
+    injected: u64,
+}
+
+impl FaultInjector {
+    /// Draw once: does the fault fire at this call?
+    pub fn fires(&mut self) -> bool {
+        let hit = self.rng.chance(self.rate);
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    /// The marker error for this site (attach via `anyhow::Error::new`).
+    pub fn fault(&self) -> InjectedFault {
+        InjectedFault { site: self.site }
+    }
+
+    /// Faults fired so far — storms can assert they actually injected.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let plan = FaultPlan::new(42).with_alloc_faults(0.3);
+        let draw = |mut inj: FaultInjector| -> Vec<bool> { (0..64).map(|_| inj.fires()).collect() };
+        assert_eq!(draw(plan.alloc_injector()), draw(plan.alloc_injector()));
+        let other = FaultPlan::new(43).with_alloc_faults(0.3);
+        assert_ne!(
+            draw(plan.alloc_injector()),
+            draw(other.alloc_injector()),
+            "different seeds diverge within 64 draws"
+        );
+    }
+
+    #[test]
+    fn sites_are_independent_streams() {
+        let plan = FaultPlan::new(7)
+            .with_alloc_faults(0.5)
+            .with_decode_faults(0.5);
+        let mut a1 = plan.alloc_injector();
+        let mut d = plan.decode_injector();
+        // Interleaving decode draws must not shift the alloc schedule.
+        let solo: Vec<bool> = {
+            let mut a2 = plan.alloc_injector();
+            (0..32).map(|_| a2.fires()).collect()
+        };
+        let interleaved: Vec<bool> = (0..32)
+            .map(|_| {
+                d.fires();
+                a1.fires()
+            })
+            .collect();
+        assert_eq!(solo, interleaved);
+    }
+
+    #[test]
+    fn rates_clamp_and_count() {
+        let plan = FaultPlan::new(1).with_prefill_faults(1.0);
+        let mut inj = plan.prefill_injector();
+        for _ in 0..10 {
+            assert!(inj.fires());
+        }
+        assert_eq!(inj.injected(), 10);
+        let mut off = FaultPlan::new(1).decode_injector();
+        assert!(!off.fires(), "rate 0 never fires");
+        assert_eq!(off.injected(), 0);
+    }
+
+    #[test]
+    fn rate_roughly_respected() {
+        let plan = FaultPlan::new(1234).with_alloc_faults(0.25);
+        let mut inj = plan.alloc_injector();
+        let hits = (0..4000).filter(|_| inj.fires()).count();
+        assert!((800..1200).contains(&hits), "hits {hits} for p=0.25 over 4000");
+    }
+
+    #[test]
+    fn injected_fault_downcasts() {
+        let plan = FaultPlan::new(3).with_alloc_faults(1.0);
+        let inj = plan.alloc_injector();
+        let err = anyhow::Error::new(inj.fault());
+        assert!(err.downcast_ref::<InjectedFault>().is_some());
+        assert_eq!(err.to_string(), "injected alloc fault");
+    }
+}

@@ -39,6 +39,28 @@
 //! into another session — covered by the `no_stale_rows_across_reuse` and
 //! `shared_blocks_survive_first_release` tests.
 //!
+//! **Cold-prefix retention** (opt-in via
+//! [`PagedKvCache::retain_cold_prefixes`], used by the serving
+//! coordinator): when the last holder of a prefix-trie node releases, the
+//! node — and its block — stays resident as a *cold* cache entry instead
+//! of being freed, provided its rows were actually written
+//! (`SessionAlloc::filled` covers the chunk).  The cache itself takes
+//! over the departing session's block refcount (the "cold hold"), so a
+//! cold block never reaches the free list by accident; a later admission
+//! that matches the chunk revives it for free, and under pressure the
+//! allocator evicts cold leaves (LRU age ÷ recompute-cost depth, on a
+//! deterministic logical clock) before reporting exhaustion.  Cold
+//! blocks are *reclaimable*, so [`PagedKvCache::used_blocks`] counts hot
+//! blocks only — a warm cache still reports "all blocks returned" after
+//! every session releases.
+//!
+//! A [`crate::faults::FaultInjector`] can be threaded in via
+//! [`PagedKvCache::set_alloc_faults`]: reservations that need new blocks
+//! then fail at seeded points with a typed
+//! [`crate::faults::InjectedFault`], which the coordinator treats as
+//! transient — the hook that lets tests drive eviction/preemption storms
+//! deterministically.  Zero-deficit reservations never consult it.
+//!
 //! The engine-facing read/write abstraction is [`KvLayerView`]; the dense
 //! per-sequence `model::LayerCache` implements the same trait, which is how
 //! paged and dense decode stay bit-identical (one set of kernels, two
@@ -56,6 +78,7 @@ use std::marker::PhantomData;
 use anyhow::{bail, Result};
 
 use crate::config::{ModelConfig, VariantSpec};
+use crate::faults::FaultInjector;
 
 pub const BLOCK_TOKENS: usize = 16;
 
@@ -403,6 +426,19 @@ pub struct PagedKvCache {
     trie: prefix::PrefixTrie,
     peak_used: usize,
     store: Option<Vec<LayerStore>>,
+    /// Keep released prefix nodes resident as evictable cold entries
+    /// (see the module docs).  Off by default: unit tests and standalone
+    /// users keep the strict "last release frees everything" model.
+    retain_cold: bool,
+    /// Blocks held only by the cold-prefix cache (one per cold node).
+    cold_blocks: usize,
+    /// Deterministic logical clock for cold-entry LRU: bumped once per
+    /// reserve/release, never wall time.
+    clock: u64,
+    /// Cold entries evicted under pressure (diagnostics).
+    evictions: u64,
+    /// Seeded fault stream for allocation sites (None in production).
+    alloc_faults: Option<FaultInjector>,
 }
 
 #[derive(Debug, Clone)]
@@ -473,6 +509,11 @@ impl PagedKvCache {
             trie: prefix::PrefixTrie::new(),
             peak_used: 0,
             store: None,
+            retain_cold: false,
+            cold_blocks: 0,
+            clock: 0,
+            evictions: 0,
+            alloc_faults: None,
             capacity_blocks,
             shape,
         }
@@ -504,8 +545,22 @@ impl PagedKvCache {
         self.capacity_blocks
     }
 
+    /// Blocks held by live sessions.  Blocks parked in the cold-prefix
+    /// cache are *reclaimable* (evicted on demand) and excluded, so this
+    /// returns to its pre-admission baseline once every session releases
+    /// even while the cold cache is warm.
     pub fn used_blocks(&self) -> usize {
-        self.capacity_blocks - self.free.len()
+        self.capacity_blocks - self.free.len() - self.cold_blocks
+    }
+
+    /// Blocks resident only as cold prefix-cache entries.
+    pub fn cold_blocks(&self) -> usize {
+        self.cold_blocks
+    }
+
+    /// Cold prefix entries evicted under pressure so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 
     pub fn peak_used_blocks(&self) -> usize {
@@ -516,9 +571,29 @@ impl PagedKvCache {
         self.used_blocks() * self.shape.bytes_per_block()
     }
 
-    /// Max tokens a fresh session could hold right now.
+    /// Max tokens a fresh session could hold right now (cold blocks count:
+    /// they are evicted on demand when a reservation needs them).
     pub fn free_token_capacity(&self) -> usize {
-        self.free.len() * BLOCK_TOKENS
+        (self.free.len() + self.cold_blocks) * BLOCK_TOKENS
+    }
+
+    /// Keep released prefix nodes resident as evictable cold entries.
+    /// Only meaningful for storage-backed caches (accounting-only caches
+    /// never populate the trie); safe to set either way.
+    pub fn retain_cold_prefixes(&mut self, on: bool) {
+        self.retain_cold = on;
+    }
+
+    /// Thread a seeded allocation-fault stream in ([`FaultInjector`]):
+    /// reservations that need new blocks then fail at seeded points with
+    /// a typed [`crate::faults::InjectedFault`].  `None` disables.
+    pub fn set_alloc_faults(&mut self, inj: Option<FaultInjector>) {
+        self.alloc_faults = inj;
+    }
+
+    /// Allocation faults injected so far (0 without a fault stream).
+    pub fn alloc_faults_injected(&self) -> u64 {
+        self.alloc_faults.as_ref().map(|f| f.injected()).unwrap_or(0)
     }
 
     pub fn session_tokens(&self, session: u64) -> usize {
@@ -529,44 +604,82 @@ impl PagedKvCache {
         self.tables.len()
     }
 
-    /// Reserve capacity for `tokens` more tokens of `session`, allocating
-    /// (and, with storage, zeroing) blocks as needed.  Fails (backpressure
-    /// signal) when out of blocks.
-    pub fn reserve(&mut self, session: u64, tokens: usize) -> Result<()> {
-        let entry = self
-            .tables
-            .entry(session)
-            .or_insert_with(SessionAlloc::empty);
-        let needed_tokens = entry.tokens + tokens;
-        let needed_blocks = needed_tokens.div_ceil(BLOCK_TOKENS);
-        let deficit = needed_blocks.saturating_sub(entry.blocks.len());
-        if deficit > self.free.len() {
-            // A failed FIRST reservation must not leave its empty entry
-            // behind: `reserve_prefix` treats any existing entry as a live
-            // session, so a stale one would wedge admission retries.
-            if entry.blocks.is_empty() && entry.tokens == 0 {
-                self.tables.remove(&session);
+    /// Gate for any reservation that needs `deficit` fresh blocks: consult
+    /// the seeded fault stream (deficit > 0 only — zero-deficit fast paths
+    /// never draw), then evict cold prefix entries until the free list
+    /// covers the deficit, and only then report genuine exhaustion.
+    fn alloc_gate(&mut self, deficit: usize) -> Result<()> {
+        if deficit == 0 {
+            return Ok(());
+        }
+        if let Some(inj) = &mut self.alloc_faults {
+            if inj.fires() {
+                return Err(anyhow::Error::new(inj.fault()));
             }
+        }
+        while self.free.len() < deficit {
+            let Some(node) = self.trie.best_eviction(self.clock) else { break };
+            let block = self.trie.evict(node);
+            self.cold_blocks -= 1;
+            self.evictions += 1;
+            // Usually frees the block; a CoW reader may still hold it, in
+            // which case the loop tries the next-best cold leaf.
+            self.dec_block(block);
+        }
+        if deficit > self.free.len() {
             bail!(
                 "kv-cache exhausted: need {deficit} blocks, {} free (capacity {})",
                 self.free.len(),
                 self.capacity_blocks
             );
         }
-        for _ in 0..deficit {
-            let block = self.free.pop().unwrap();
-            self.refcount[block] = 1;
-            // Zero recycled blocks so a new session can never observe a
-            // previous session's rows (and unwritten positions read as 0).
-            if let Some(store) = &mut self.store {
-                for ls in store.iter_mut() {
-                    ls.zero_block(block, self.shape.n_kv_heads);
-                }
+        Ok(())
+    }
+
+    /// Pop one free block, mark it exclusively owned, and zero its rows.
+    /// Callers go through [`PagedKvCache::alloc_gate`] first.
+    fn take_free_block(&mut self) -> usize {
+        let block = self.free.pop().unwrap();
+        self.refcount[block] = 1;
+        // Zero recycled blocks so a new session can never observe a
+        // previous session's rows (and unwritten positions read as 0).
+        if let Some(store) = &mut self.store {
+            for ls in store.iter_mut() {
+                ls.zero_block(block, self.shape.n_kv_heads);
             }
-            entry.blocks.push(block);
         }
-        entry.tokens = needed_tokens;
-        self.peak_used = self.peak_used.max(self.capacity_blocks - self.free.len());
+        block
+    }
+
+    /// Reserve capacity for `tokens` more tokens of `session`, allocating
+    /// (and, with storage, zeroing) blocks as needed.  Fails (backpressure
+    /// signal) when out of blocks, after evicting cold prefix entries.
+    /// A failed reservation never creates (or leaves) a session entry, so
+    /// admission retries through `reserve_prefix` cannot wedge.
+    pub fn reserve(&mut self, session: u64, tokens: usize) -> Result<()> {
+        let (have_tokens, have_blocks) = self
+            .tables
+            .get(&session)
+            .map(|e| (e.tokens, e.blocks.len()))
+            .unwrap_or((0, 0));
+        let needed_tokens = have_tokens + tokens;
+        let needed_blocks = needed_tokens.div_ceil(BLOCK_TOKENS);
+        let deficit = needed_blocks.saturating_sub(have_blocks);
+        self.alloc_gate(deficit)?;
+        self.clock += 1;
+        for _ in 0..deficit {
+            let block = self.take_free_block();
+            self.tables
+                .entry(session)
+                .or_insert_with(SessionAlloc::empty)
+                .blocks
+                .push(block);
+        }
+        self.tables
+            .entry(session)
+            .or_insert_with(SessionAlloc::empty)
+            .tokens = needed_tokens;
+        self.peak_used = self.peak_used.max(self.used_blocks());
         Ok(())
     }
 
@@ -612,25 +725,31 @@ impl PagedKvCache {
         let partial = matched % BLOCK_TOKENS;
         let total_blocks = total_tokens.div_ceil(BLOCK_TOKENS);
         let fresh = total_blocks - full_shared;
-        if fresh > self.free.len() {
-            bail!(
-                "kv-cache exhausted: need {fresh} blocks, {} free (capacity {})",
-                self.free.len(),
-                self.capacity_blocks
-            );
-        }
+        // Attach the matched path (and take the CoW source hold) BEFORE
+        // the allocation gate: attaching revives cold nodes and makes
+        // them hot, so the gate's evictor can never reclaim a block this
+        // session is about to read.
         let mut blocks = Vec::with_capacity(total_blocks);
         let mut trie_path = Vec::with_capacity(full_shared);
         for &(node, block) in &path[..full_shared] {
-            self.trie.attach(node);
+            let revived = self.trie.attach(node);
             trie_path.push(node);
-            self.refcount[block] += 1;
+            if revived {
+                // The cache's cold hold on the block transfers to this
+                // session — the refcount already counts it.
+                self.cold_blocks -= 1;
+            } else {
+                self.refcount[block] += 1;
+            }
             blocks.push(block);
         }
         let cow = if partial > 0 {
             // The match ends mid-block (only when the trie covered the
             // whole prompt): hold the source block and copy its leading
             // rows into a private block before this session's first write.
+            // The raw refcount (without attaching the node) keeps the
+            // block resident even if the node itself is cold and gets
+            // evicted before the copy runs.
             let (src_node, src_block) = path[full_shared];
             self.refcount[src_block] += 1;
             Some(CowPending {
@@ -643,14 +762,30 @@ impl PagedKvCache {
         } else {
             None
         };
-        for _ in full_shared..total_blocks {
-            let block = self.free.pop().unwrap();
-            self.refcount[block] = 1;
-            if let Some(store) = &mut self.store {
-                for ls in store.iter_mut() {
-                    ls.zero_block(block, self.shape.n_kv_heads);
+        if let Err(e) = self.alloc_gate(fresh) {
+            // Roll the attaches back exactly: revived nodes return to
+            // cold (the hold goes back to the cache), plain attaches drop
+            // the refcount they added.
+            for &(node, block) in path[..full_shared].iter().rev() {
+                if self.retain_cold {
+                    if self.trie.release_to_cold(node, self.clock) {
+                        self.cold_blocks += 1;
+                    } else {
+                        self.dec_block(block);
+                    }
+                } else {
+                    self.trie.release(node);
+                    self.dec_block(block);
                 }
             }
+            if let Some(c) = &cow {
+                self.dec_block(c.src_block);
+            }
+            return Err(e);
+        }
+        self.clock += 1;
+        for _ in full_shared..total_blocks {
+            let block = self.take_free_block();
             blocks.push(block);
         }
         if cow.is_none() {
@@ -677,7 +812,7 @@ impl PagedKvCache {
                 filled: matched,
             },
         );
-        self.peak_used = self.peak_used.max(self.capacity_blocks - self.free.len());
+        self.peak_used = self.peak_used.max(self.used_blocks());
         Ok(PrefixReservation { matched_tokens: matched, shared_blocks: full_shared })
     }
 
@@ -774,15 +909,39 @@ impl PagedKvCache {
     /// zeroed on its next reservation) only when its **last** reader
     /// releases — a shared prefix block outlives the session that created
     /// it for as long as any other session still reads it.
+    ///
+    /// With [`PagedKvCache::retain_cold_prefixes`] on, a trie node whose
+    /// last holder leaves goes *cold* instead of being removed — provided
+    /// its chunk's rows were actually written (`filled` covers it; a
+    /// session torn down mid-prefill must not donate garbage rows to the
+    /// cache).  The session's refcount on that block transfers to the
+    /// cache, keeping the rows resident for future admissions until the
+    /// evictor reclaims them under pressure.
     pub fn release(&mut self, session: u64) {
+        self.clock += 1;
         if let Some(alloc) = self.tables.remove(&session) {
-            for &node in alloc.trie_path.iter().rev() {
-                self.trie.release(node);
+            // trie_path[i] pairs with blocks[i] (attached shared blocks
+            // first, then self-registered prompt chunks, in chunk order).
+            let mut kept = vec![false; alloc.trie_path.len()];
+            for (i, &node) in alloc.trie_path.iter().enumerate().rev() {
+                let chunk_written = alloc.filled >= (i + 1) * BLOCK_TOKENS;
+                if self.retain_cold && chunk_written {
+                    if self.trie.release_to_cold(node, self.clock) {
+                        self.cold_blocks += 1;
+                        kept[i] = true;
+                    }
+                } else {
+                    self.trie.release(node);
+                }
             }
             if let Some(cow) = alloc.cow {
                 self.dec_block(cow.src_block);
             }
-            for block in alloc.blocks {
+            for (i, &block) in alloc.blocks.iter().enumerate() {
+                if i < kept.len() && kept[i] {
+                    // Ownership moved to the cold cache with the node.
+                    continue;
+                }
                 self.dec_block(block);
             }
         }
@@ -801,9 +960,15 @@ impl PagedKvCache {
         self.refcount[block]
     }
 
-    /// Distinct prompt chunks currently cached in the prefix trie.
+    /// Distinct prompt chunks currently cached in the prefix trie
+    /// (hot and cold).
     pub fn prefix_nodes(&self) -> usize {
         self.trie.len()
+    }
+
+    /// Prompt chunks resident only as cold (evictable) cache entries.
+    pub fn cold_prefix_nodes(&self) -> usize {
+        self.trie.cold_len()
     }
 
     /// Leading blocks `session` shares read-only with other readers.
@@ -1235,6 +1400,128 @@ mod tests {
         c.release(1);
         assert_eq!(c.used_blocks(), 0);
         assert_eq!(c.prefix_nodes(), 0);
+    }
+
+    #[test]
+    fn cold_retention_keeps_chunks_for_revival() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 32);
+        c.retain_cold_prefixes(true);
+        let prompt = ptokens(BLOCK_TOKENS * 2, 5); // 2 aligned chunks
+        c.reserve_prefix(1, &prompt, BLOCK_TOKENS * 3).unwrap();
+        fill_rows(&mut c, 1, prompt.len(), 50.0);
+        c.release(1);
+        // Blocks return to baseline (cold blocks are reclaimable, not
+        // "used") while the chunks stay resident for revival.
+        assert_eq!(c.used_blocks(), 0, "cold cache never counts as used");
+        assert_eq!(c.cold_blocks(), 2);
+        assert_eq!(c.prefix_nodes(), 2);
+        assert_eq!(c.cold_prefix_nodes(), 2);
+
+        // A new session with the same prompt revives the cache: aligned
+        // full match capped to P-1 -> 1 shared block + CoW on the second.
+        let r = c.reserve_prefix(2, &prompt, BLOCK_TOKENS * 3).unwrap();
+        assert_eq!(r.matched_tokens, BLOCK_TOKENS * 2 - 1, "revived match");
+        assert_eq!(r.shared_blocks, 1);
+        assert_eq!(c.cold_prefix_nodes(), 1, "first chunk revived hot");
+        c.materialize_cow(2);
+        {
+            let (pages, store) = c.tables_and_ptrs().unwrap();
+            let view = unsafe { store.seq_layer(0, pages.blocks(2).unwrap()) };
+            assert!(
+                view.k_row(0, 3).iter().all(|&x| x == 53.0),
+                "revived rows are the original session's rows"
+            );
+            let t = BLOCK_TOKENS + 2; // inside the CoW copy
+            assert!(view.k_row(0, t).iter().all(|&x| x == 50.0 + t as f32));
+        }
+        c.release(2);
+        assert_eq!(c.used_blocks(), 0, "baseline again after the reviver leaves");
+        assert_eq!(c.cold_blocks(), 2, "chunks parked cold again");
+    }
+
+    #[test]
+    fn cold_blocks_are_evicted_under_pressure() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 4);
+        c.retain_cold_prefixes(true);
+        let prompt = ptokens(BLOCK_TOKENS * 2, 1);
+        c.reserve_prefix(1, &prompt, BLOCK_TOKENS * 2).unwrap();
+        fill_rows(&mut c, 1, prompt.len(), 9.0);
+        c.release(1);
+        assert_eq!(c.cold_blocks(), 2);
+        assert_eq!(c.free_token_capacity(), 4 * BLOCK_TOKENS, "cold is reclaimable");
+        // 3 blocks wanted, 2 free: the gate evicts the deepest cold leaf
+        // first (the only evictable one), keeping the shallower chunk.
+        c.reserve(9, BLOCK_TOKENS * 3).unwrap();
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(c.cold_blocks(), 1);
+        assert_eq!(c.used_blocks(), 3);
+        assert_eq!(c.prefix_nodes(), 1, "shallow chunk survives");
+        // Exhausting the rest evicts the survivor too before failing.
+        c.reserve(9, BLOCK_TOKENS).unwrap();
+        assert_eq!(c.evictions(), 2);
+        assert_eq!(c.cold_blocks(), 0);
+        assert!(c.reserve(10, BLOCK_TOKENS).is_err(), "genuinely exhausted now");
+        c.release(9);
+        assert_eq!(c.used_blocks(), 0);
+    }
+
+    #[test]
+    fn unwritten_chunks_are_never_retained_cold() {
+        // A session torn down mid-prefill must not donate chunks whose
+        // rows were never written: a future admission would read garbage.
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 8);
+        c.retain_cold_prefixes(true);
+        let prompt = ptokens(BLOCK_TOKENS * 2, 7);
+        c.reserve_prefix(1, &prompt, BLOCK_TOKENS * 2).unwrap();
+        c.note_filled(1, BLOCK_TOKENS); // only the first chunk's rows exist
+        c.release(1);
+        assert_eq!(c.prefix_nodes(), 1, "written chunk retained");
+        assert_eq!(c.cold_blocks(), 1);
+        let r = c.reserve_prefix(2, &prompt, BLOCK_TOKENS * 2).unwrap();
+        assert_eq!(r.matched_tokens, BLOCK_TOKENS, "only the written chunk matches");
+        c.release(2);
+    }
+
+    #[test]
+    fn retention_off_keeps_the_strict_release_model() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 8);
+        let prompt = ptokens(BLOCK_TOKENS * 2, 8);
+        c.reserve_prefix(1, &prompt, BLOCK_TOKENS * 2).unwrap();
+        fill_rows(&mut c, 1, prompt.len(), 3.0);
+        c.release(1);
+        assert_eq!(c.prefix_nodes(), 0, "default: trie empties with its last holder");
+        assert_eq!(c.cold_blocks(), 0);
+        assert_eq!(c.used_blocks(), 0);
+    }
+
+    #[test]
+    fn injected_alloc_faults_are_typed_and_skip_zero_deficit_paths() {
+        use crate::faults::{FaultPlan, InjectedFault};
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::new(sh.clone(), sh.bytes_per_block() * 8);
+        c.set_alloc_faults(Some(FaultPlan::new(1).with_alloc_faults(1.0).alloc_injector()));
+        let err = c.reserve(1, BLOCK_TOKENS).unwrap_err();
+        assert!(
+            err.downcast_ref::<InjectedFault>().is_some(),
+            "typed fault, distinguishable from genuine exhaustion: {err}"
+        );
+        assert_eq!(c.alloc_faults_injected(), 1);
+        assert_eq!(c.sessions(), 0, "failed first reservation leaves no entry");
+        c.set_alloc_faults(None);
+        c.reserve(1, BLOCK_TOKENS - 1).unwrap();
+        c.set_alloc_faults(Some(FaultPlan::new(1).with_alloc_faults(1.0).alloc_injector()));
+        // Growth inside the already-reserved block has zero deficit: the
+        // (fresh) fault stream must not even be consulted.
+        c.reserve(1, 1).unwrap();
+        assert_eq!(c.alloc_faults_injected(), 0, "zero-deficit paths never draw");
+        // The next block boundary does draw — and fails.
+        assert!(c.reserve(1, BLOCK_TOKENS).is_err());
+        assert_eq!(c.alloc_faults_injected(), 1);
+        c.release(1);
     }
 
     #[test]

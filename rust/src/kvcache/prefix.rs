@@ -5,19 +5,36 @@
 //! prefix can *share* those blocks instead of recomputing and re-storing
 //! them — the serving-side multiplier on RAP's per-row compression.
 //!
-//! Lifetime model: a node exists only while at least one live session
-//! holds a reference on it — the session that registered the chunk (its
-//! own prompt block) or any session that matched it at admission and
-//! attached.  Releasing the last reference removes the node, and because
-//! every holder also holds a refcount on the node's physical block
-//! (`PagedKvCache` pairs the two), the trie can never point at a block
-//! that has been recycled.  Retaining nodes beyond the last session —
-//! with eviction of cold entries — is the follow-on in ROADMAP.md.
+//! Lifetime model: a node is *hot* while at least one live session holds
+//! a reference on it — the session that registered the chunk (its own
+//! prompt block) or any session that matched it at admission and
+//! attached.  Because every holder also holds a refcount on the node's
+//! physical block (`PagedKvCache` pairs the two), the trie can never
+//! point at a block that has been recycled.
+//!
+//! When the last holder leaves there are two paths:
+//!
+//! * [`PrefixTrie::release`] — remove the node immediately (the original
+//!   lifetime model; still used when cold retention is off, and always
+//!   used for chunks whose rows were never fully written);
+//! * [`PrefixTrie::release_to_cold`] — keep the node resident as a *cold*
+//!   entry (refs == 0, still linked and matchable).  The owning
+//!   `PagedKvCache` transfers the departing session's block refcount to
+//!   the cache itself, so the block stays out of the free list while
+//!   cold.  A later admission that matches the chunk revives it
+//!   ([`PrefixTrie::attach`] returns `true`), handing the hold back to a
+//!   session; under memory pressure the evictor removes cold leaves
+//!   ([`PrefixTrie::best_eviction`] / [`PrefixTrie::evict`]) —
+//!   least-recently-cooled first, scaled by recompute cost (depth: a
+//!   deeper chunk needs its whole prefix re-prefilled to come back).
 //!
 //! Removal is always deepest-first (sessions release their path in
 //! reverse): any live descendant of a node implies a session holding the
 //! whole path through that node, so a node whose refcount reaches zero
-//! has no children left.
+//! has no children left.  Cold nodes may *gain* children while cold (a
+//! reviving session registers deeper chunks), which is why only cold
+//! leaves are evictable — evicting a mid-path node would orphan the
+//! descendants' lookup path.
 
 use std::collections::BTreeMap;
 
@@ -42,6 +59,15 @@ struct Node {
     /// This node's key in `parent.children` (for unlinking on removal).
     key: Vec<u8>,
     live: bool,
+    /// refs == 0 but retained as an evictable cache entry.
+    cold: bool,
+    /// Logical tick at which the node last went cold (LRU key for the
+    /// evictor; never wall time, so eviction order is deterministic).
+    cooled_at: u64,
+    /// Chunks from the root (1 for a top-level chunk) — the recompute
+    /// cost proxy: reviving a depth-d chunk from scratch means
+    /// re-prefilling d blocks of prompt.
+    depth: usize,
 }
 
 /// Trie over block-aligned token prefixes; see the module docs.
@@ -51,6 +77,7 @@ pub struct PrefixTrie {
     nodes: Vec<Node>,
     free: Vec<usize>,
     live_count: usize,
+    cold_count: usize,
 }
 
 impl Default for PrefixTrie {
@@ -70,9 +97,13 @@ impl PrefixTrie {
                 parent: ROOT,
                 key: Vec::new(),
                 live: true,
+                cold: false,
+                cooled_at: 0,
+                depth: 0,
             }],
             free: Vec::new(),
             live_count: 0,
+            cold_count: 0,
         }
     }
 
@@ -95,9 +126,18 @@ impl PrefixTrie {
     }
 
     /// Take one reference on `node` (a session now shares its block).
-    pub fn attach(&mut self, node: usize) {
+    /// Returns `true` when this revived a *cold* node — the caller (the
+    /// paged allocator) must then transfer the cache's block hold to the
+    /// attaching session instead of adding a fresh refcount.
+    pub fn attach(&mut self, node: usize) -> bool {
         debug_assert!(self.nodes[node].live, "attach to dead node {node}");
+        let revived = self.nodes[node].cold;
+        if revived {
+            self.nodes[node].cold = false;
+            self.cold_count -= 1;
+        }
         self.nodes[node].refs += 1;
+        revived
     }
 
     /// Insert `chunk` below `parent` pointing at `block`, registered by
@@ -118,6 +158,9 @@ impl PrefixTrie {
             parent,
             key: chunk.to_vec(),
             live: true,
+            cold: false,
+            cooled_at: 0,
+            depth: self.nodes[parent].depth + 1,
         };
         let idx = match self.free.pop() {
             Some(i) => {
@@ -144,18 +187,88 @@ impl PrefixTrie {
         );
         self.nodes[node].refs -= 1;
         if self.nodes[node].refs == 0 {
-            debug_assert!(
-                self.nodes[node].children.is_empty(),
-                "removed trie node {node} still has children"
-            );
-            let parent = self.nodes[node].parent;
-            let key = std::mem::take(&mut self.nodes[node].key);
-            self.nodes[parent].children.remove(&key);
-            self.nodes[node].live = false;
-            self.nodes[node].children.clear();
-            self.free.push(node);
-            self.live_count -= 1;
+            self.unlink(node);
         }
+    }
+
+    /// Drop one reference on `node`; when the last holder leaves, keep it
+    /// resident as a *cold* cache entry instead of removing it, stamped
+    /// `now` for LRU.  Returns `true` exactly when the node went cold —
+    /// the caller must then transfer the departing session's block
+    /// refcount to the cache (the cold hold) instead of decrementing it.
+    pub fn release_to_cold(&mut self, node: usize, now: u64) -> bool {
+        debug_assert!(node != ROOT, "release of the trie root");
+        debug_assert!(
+            self.nodes[node].live && self.nodes[node].refs > 0,
+            "release of dead/unreferenced node {node}"
+        );
+        self.nodes[node].refs -= 1;
+        if self.nodes[node].refs == 0 {
+            self.nodes[node].cold = true;
+            self.nodes[node].cooled_at = now;
+            self.cold_count += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The cold *leaf* best evicted at logical time `now`, or `None` when
+    /// nothing is evictable.  Score = age since cooling divided by depth
+    /// (the recompute-cost proxy): oldest-and-cheapest first, compared in
+    /// exact integer cross-multiplication so ties break deterministically
+    /// on the lower node index.  Only leaves qualify — see module docs.
+    pub fn best_eviction(&self, now: u64) -> Option<usize> {
+        let mut best: Option<(u128, usize)> = None;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if i == ROOT || !n.live || !n.cold || !n.children.is_empty() {
+                continue;
+            }
+            // score ~ age / depth; compare a/d > b/e as a*e > b*d.
+            let age = now.saturating_sub(n.cooled_at) as u128;
+            let better = match best {
+                None => true,
+                Some((best_score_num, best_i)) => {
+                    let lhs = age * (self.nodes[best_i].depth as u128 + 1);
+                    let rhs = best_score_num * (n.depth as u128 + 1);
+                    lhs > rhs
+                }
+            };
+            if better {
+                best = Some((age, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Remove a cold, unreferenced leaf chosen by
+    /// [`PrefixTrie::best_eviction`]; returns its physical block so the
+    /// caller can drop the cache's hold on it.
+    pub fn evict(&mut self, node: usize) -> usize {
+        debug_assert!(
+            self.nodes[node].live && self.nodes[node].cold && self.nodes[node].refs == 0,
+            "evict of non-cold node {node}"
+        );
+        self.nodes[node].cold = false;
+        self.cold_count -= 1;
+        let block = self.nodes[node].block;
+        self.unlink(node);
+        block
+    }
+
+    /// Unlink a refs == 0 node from its parent and recycle its slot.
+    fn unlink(&mut self, node: usize) {
+        debug_assert!(
+            self.nodes[node].children.is_empty(),
+            "removed trie node {node} still has children"
+        );
+        let parent = self.nodes[node].parent;
+        let key = std::mem::take(&mut self.nodes[node].key);
+        self.nodes[parent].children.remove(&key);
+        self.nodes[node].live = false;
+        self.nodes[node].children.clear();
+        self.free.push(node);
+        self.live_count -= 1;
     }
 
     /// Session whose prefill produces (or produced) `node`'s rows.
@@ -163,9 +276,19 @@ impl PrefixTrie {
         self.nodes[node].owner
     }
 
-    /// Live (non-root) nodes — the number of distinct cached chunks.
+    pub fn is_cold(&self, node: usize) -> bool {
+        self.nodes[node].live && self.nodes[node].cold
+    }
+
+    /// Live (non-root) nodes — the number of distinct cached chunks,
+    /// including cold ones.
     pub fn len(&self) -> usize {
         self.live_count
+    }
+
+    /// Cold (resident, unreferenced, evictable) nodes.
+    pub fn cold_len(&self) -> usize {
+        self.cold_count
     }
 
     pub fn is_empty(&self) -> bool {
@@ -229,6 +352,74 @@ mod tests {
         let b = t.insert_child(ROOT, &chunk(2), 20, 2);
         assert_eq!(a, b, "dead slot reused");
         assert_eq!(t.lookup(&prompt(&[2], 0)), vec![(b, 20)]);
+    }
+
+    #[test]
+    fn release_to_cold_keeps_node_matchable_and_revivable() {
+        let mut t = PrefixTrie::new();
+        let a = t.insert_child(ROOT, &chunk(1), 10, 1);
+        let b = t.insert_child(a, &chunk(2), 11, 1);
+        assert!(t.release_to_cold(b, 5), "refs 1 -> 0: went cold");
+        assert!(t.release_to_cold(a, 6));
+        assert_eq!(t.len(), 2, "cold nodes stay resident");
+        assert_eq!(t.cold_len(), 2);
+        assert!(t.is_cold(a) && t.is_cold(b));
+        // Still matchable by lookup...
+        assert_eq!(t.lookup(&prompt(&[1, 2], 0)), vec![(a, 10), (b, 11)]);
+        // ...and attach revives (returns true exactly for cold nodes).
+        assert!(t.attach(a), "revival");
+        assert!(!t.is_cold(a));
+        assert_eq!(t.cold_len(), 1);
+        assert!(!t.attach(a), "second attach of a hot node is plain");
+    }
+
+    #[test]
+    fn release_to_cold_with_other_holders_is_a_plain_release() {
+        let mut t = PrefixTrie::new();
+        let a = t.insert_child(ROOT, &chunk(1), 10, 1);
+        t.attach(a); // second holder
+        assert!(!t.release_to_cold(a, 3), "refs 2 -> 1: not cold");
+        assert!(!t.is_cold(a));
+        assert_eq!(t.cold_len(), 0);
+    }
+
+    #[test]
+    fn evictor_prefers_older_and_shallower_cold_leaves() {
+        let mut t = PrefixTrie::new();
+        // Path 1 -> 2 (depths 1, 2) and a sibling 3 (depth 1).
+        let a = t.insert_child(ROOT, &chunk(1), 10, 1);
+        let b = t.insert_child(a, &chunk(2), 11, 1);
+        let c = t.insert_child(ROOT, &chunk(3), 12, 2);
+        t.release_to_cold(b, 0); // cold leaf, depth 2, age 10 at now=10
+        t.release_to_cold(a, 0); // cold but NOT a leaf (b is its child)
+        t.release_to_cold(c, 8); // cold leaf, depth 1, age 2 at now=10
+        // b: age/depth = 10/3; c: 2/2 -> b wins despite being deeper.
+        assert_eq!(t.best_eviction(10), Some(b));
+        assert_eq!(t.evict(b), 11);
+        // a became a leaf: age 10/2 beats c's 2/2.
+        assert_eq!(t.best_eviction(10), Some(a));
+        assert_eq!(t.evict(a), 10);
+        assert_eq!(t.best_eviction(10), Some(c));
+        assert_eq!(t.evict(c), 12);
+        assert_eq!(t.best_eviction(10), None);
+        assert!(t.is_empty());
+        assert_eq!(t.cold_len(), 0);
+    }
+
+    #[test]
+    fn cold_mid_path_node_survives_leaf_eviction_and_revives() {
+        let mut t = PrefixTrie::new();
+        let a = t.insert_child(ROOT, &chunk(1), 10, 1);
+        let b = t.insert_child(a, &chunk(2), 11, 1);
+        t.release_to_cold(b, 1);
+        t.release_to_cold(a, 1);
+        t.evict(t.best_eviction(2).unwrap()); // removes b (the only leaf)
+        assert_eq!(t.lookup(&prompt(&[1, 2], 0)), vec![(a, 10)], "a still matchable");
+        // A new session revives a and registers a fresh deeper chunk.
+        assert!(t.attach(a));
+        let b2 = t.insert_child(a, &chunk(2), 20, 9);
+        assert_eq!(b2, b, "slot recycled");
+        assert_eq!(t.lookup(&prompt(&[1, 2], 0)), vec![(a, 10), (b2, 20)]);
     }
 
     #[test]

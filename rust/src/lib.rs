@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod eval;
 pub mod experiments;
+pub mod faults;
 pub mod kvcache;
 pub mod manifest;
 pub mod model;

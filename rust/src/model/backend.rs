@@ -110,8 +110,9 @@ impl<'a> Backend for RustBackend<'a> {
         // prefix lets the coordinator begin prefill at the first
         // unmatched token.
         self.sessions.insert(session);
-        // Under the coordinator the full budget is already reserved; this
-        // only allocates blocks for standalone use.
+        // Under the coordinator the prompt (or resume feed) is reserved at
+        // admission, so this is a zero-deficit no-op there; it only
+        // allocates blocks for standalone (coordinator-less) use.
         kv.ensure_tokens(session, pos0 + tokens.len())?;
         self.engine.prefill_chunk_paged(
             session,

@@ -7,7 +7,13 @@
 //!       "stream": true,                      // per-token delta lines
 //!       "temperature": 0.8, "top_k": 40,     // sampling (0 temp = greedy,
 //!       "top_p": 0.95, "seed": 7,            //  bit-identical to v1)
-//!       "stop": ["\n\n", "END"]}             // byte-level stop sequences
+//!       "stop": ["\n\n", "END"],             // byte-level stop sequences
+//!       "deadline_ms": 5000}                 // optional wall-clock budget
+//!
+//! Malformed sampling parameters (NaN/negative temperature, `top_p`
+//! outside (0, 1], `max_new` beyond any servable length, negative
+//! `deadline_ms`) are answered immediately with
+//! `{"error": "bad_request", "field": "..."}` — nothing is submitted.
 //!
 //! Streaming (`"stream": true`) responses are incremental:
 //!
@@ -25,8 +31,16 @@
 //!
 //! Finish reasons: `length` (max_new / context limit), `stop` (a stop
 //! sequence matched; the matched bytes stay in the output), `cancelled`,
-//! `rejected` (queue backpressure — reported as
-//! `{"error": "queue_full", ...}` instead of silence).
+//! `timeout` (`deadline_ms` elapsed; partial text is returned), and
+//! `rejected` — reported as `{"error": "queue_full", ...}` for transient
+//! backpressure (worth retrying) or `{"error": "too_large", ...}` for a
+//! prompt that exceeds the cache's physical capacity (never retryable).
+//!
+//! Memory pressure is visible to streaming clients: a session whose KV
+//! blocks are reclaimed for a more senior request emits
+//! `{"id": n, "event": "preempted"}`, and `{"id": n, "event": "resumed"}`
+//! once its state has been recomputed — generation continues
+//! bit-identically, so non-streaming clients never notice.
 //!
 //! Cancellation: `-> {"cancel": <id>}` (acked with `{"cancel": id, "ok":
 //! true}`) tears the session down wherever it is — queued, prefilling, or
@@ -54,6 +68,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{
     Backend, Coordinator, Event, FinishReason, Request, RequestId, Response, SamplingParams,
+    SubmitError,
 };
 use crate::util::json::{self, Value};
 use crate::util::threadpool::ThreadPool;
@@ -106,14 +121,20 @@ fn scheduler_loop<B: Backend>(mut coord: Coordinator<B>, rx: Receiver<Msg>) {
             Some(Msg::Submit(req, reply)) => {
                 let id = req.id;
                 reply_to.insert(id, reply);
-                if !coord.submit(req) {
-                    // Queue full: answer with an explicit Rejected event
-                    // and drop the routing entry — the v1 code claimed to
+                if let Err(e) = coord.try_submit(req) {
+                    // Refused: answer with an explicit Rejected event and
+                    // drop the routing entry — the v1 code claimed to
                     // "synthesize an immediate empty response" but sent
                     // nothing, leaving the client to ride out its full
                     // timeout while the reply_to entry leaked forever.
+                    // The two reasons stay distinct on the wire: a
+                    // `queue_full` is worth retrying, a `too_large` never is.
+                    let response = match e {
+                        SubmitError::QueueFull => Response::rejected(id),
+                        SubmitError::PromptTooLarge => Response::too_large(id),
+                    };
                     if let Some(ch) = reply_to.remove(&id) {
-                        let _ = ch.send(Event::Finished { id, response: Response::rejected(id) });
+                        let _ = ch.send(Event::Finished { id, response });
                     }
                 }
                 continue; // keep draining before ticking
@@ -221,20 +242,43 @@ impl Utf8Stream {
     }
 }
 
-/// Parse a v2 request body (everything beyond `prompt`/`max_new` is
-/// optional, defaulting to the v1 greedy one-shot behaviour).
-fn parse_request(v: &Value, id: RequestId) -> Request {
+/// Largest `max_new` the server will accept.  Generations are already
+/// bounded by the backend's context limit (`s_max`, a few thousand at
+/// most); anything past this is a typo or abuse, not a workload.
+const MAX_MAX_NEW: usize = 1 << 20;
+
+/// Parse and validate a v2 request body (everything beyond
+/// `prompt`/`max_new` is optional, defaulting to the v1 greedy one-shot
+/// behaviour).  `Err` names the offending field for the `bad_request`
+/// reply; a request that would poison the sampler (NaN temperature,
+/// `top_p` outside (0, 1]) or wedge the scheduler (absurd `max_new`) is
+/// refused here, before anything is submitted.
+fn parse_request(v: &Value, id: RequestId) -> Result<Request, &'static str> {
     let prompt = v
         .get("prompt")
         .and_then(|p| p.as_str())
         .unwrap_or("")
         .as_bytes()
         .to_vec();
-    let max_new = v.get("max_new").and_then(|m| m.as_usize()).unwrap_or(32);
+    let max_new = match v.get("max_new") {
+        Some(m) => match m.as_usize() {
+            Some(n) if n <= MAX_MAX_NEW => n,
+            _ => return Err("max_new"), // negative, non-numeric, or absurd
+        },
+        None => 32,
+    };
+    let temperature = v.get("temperature").and_then(|t| t.as_f64()).unwrap_or(0.0) as f32;
+    if !temperature.is_finite() || temperature < 0.0 {
+        return Err("temperature");
+    }
+    let top_p = v.get("top_p").and_then(|t| t.as_f64()).unwrap_or(1.0) as f32;
+    if !top_p.is_finite() || top_p <= 0.0 || top_p > 1.0 {
+        return Err("top_p");
+    }
     let sampling = SamplingParams {
-        temperature: v.get("temperature").and_then(|t| t.as_f64()).unwrap_or(0.0) as f32,
+        temperature,
         top_k: v.get("top_k").and_then(|t| t.as_usize()).unwrap_or(0),
-        top_p: v.get("top_p").and_then(|t| t.as_f64()).unwrap_or(1.0) as f32,
+        top_p,
         seed: v.get("seed").and_then(|t| t.as_i64()).unwrap_or(0) as u64,
     };
     let stop: Vec<Vec<u8>> = v
@@ -248,10 +292,21 @@ fn parse_request(v: &Value, id: RequestId) -> Request {
         })
         .unwrap_or_default();
     let stream = v.get("stream").and_then(|s| s.as_bool()).unwrap_or(false);
-    Request::new(id, prompt, max_new)
+    let deadline_ms = match v.get("deadline_ms") {
+        Some(d) => match d.as_i64() {
+            Some(ms) if ms >= 0 => Some(ms as u64),
+            _ => return Err("deadline_ms"),
+        },
+        None => None,
+    };
+    let mut req = Request::new(id, prompt, max_new)
         .with_sampling(sampling)
         .with_stop(stop)
-        .with_stream(stream)
+        .with_stream(stream);
+    if let Some(ms) = deadline_ms {
+        req = req.with_deadline_ms(ms);
+    }
+    Ok(req)
 }
 
 /// The terminal summary line shared by both modes (v1 keeps its exact old
@@ -260,7 +315,7 @@ fn summary_line(resp: &Response) -> Value {
     if resp.metrics.finish_reason == FinishReason::Rejected {
         return json::obj(vec![
             ("id", json::num(resp.id as f64)),
-            ("error", json::s("queue_full")),
+            ("error", json::s(resp.reject_reason.unwrap_or("queue_full"))),
             ("finish_reason", json::s("rejected")),
         ]);
     }
@@ -318,7 +373,19 @@ fn handle_conn(stream: TcpStream, tx: Sender<Msg>, ids: Arc<AtomicU64>) {
             continue;
         }
         let id = ids.fetch_add(1, Ordering::SeqCst);
-        let req = parse_request(&v, id);
+        let req = match parse_request(&v, id) {
+            Ok(r) => r,
+            Err(field) => {
+                let reply = json::obj(vec![
+                    ("error", json::s("bad_request")),
+                    ("field", json::s(field)),
+                ]);
+                if writeln!(out, "{reply}").is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
         let stream_mode = req.stream;
         let (rtx, rrx) = channel();
         if tx.send(Msg::Submit(req, rtx)).is_err() {
@@ -363,6 +430,29 @@ fn stream_reply(
                     }
                 }
             }
+            Ok(Event::Preempted { .. }) => {
+                // Memory-pressure lifecycle, surfaced so a streaming client
+                // can tell a preemption stall from a dead server.  The
+                // generation itself is unaffected (resume is bit-identical).
+                let line = json::obj(vec![
+                    ("id", json::num(id as f64)),
+                    ("event", json::s("preempted")),
+                ]);
+                if writeln!(out, "{line}").is_err() {
+                    let _ = tx.send(Msg::Cancel(id));
+                    return false;
+                }
+            }
+            Ok(Event::Resumed { .. }) => {
+                let line = json::obj(vec![
+                    ("id", json::num(id as f64)),
+                    ("event", json::s("resumed")),
+                ]);
+                if writeln!(out, "{line}").is_err() {
+                    let _ = tx.send(Msg::Cancel(id));
+                    return false;
+                }
+            }
             Ok(Event::Finished { response, .. }) => {
                 if let Some(delta) = text.finish() {
                     let ev = json::obj(vec![
@@ -394,7 +484,10 @@ fn oneshot_reply(out: &mut TcpStream, id: RequestId, rrx: &Receiver<Event>) -> b
     loop {
         let left = deadline.saturating_duration_since(Instant::now());
         match rrx.recv_timeout(left) {
-            Ok(Event::Token { .. }) => {}
+            // One-shot clients only care about the terminal line; the
+            // preemption lifecycle is invisible to them (by design — the
+            // resumed generation is bit-identical).
+            Ok(Event::Token { .. }) | Ok(Event::Preempted { .. }) | Ok(Event::Resumed { .. }) => {}
             Ok(Event::Finished { response, .. }) => {
                 return writeln!(out, "{}", summary_line(&response)).is_ok();
             }
@@ -476,6 +569,10 @@ pub fn client_request(addr: &std::net::SocketAddr, prompt: &str, max_new: usize)
 pub struct StreamOutcome {
     /// The `delta` payloads, in arrival order.
     pub deltas: Vec<String>,
+    /// Lifecycle notifications (`"preempted"` / `"resumed"`), in arrival
+    /// order — non-empty only when the request was caught by memory
+    /// pressure.
+    pub events: Vec<String>,
     /// The terminal summary (or error) line.
     pub summary: Value,
     /// Client-side wall time from sending the request to the first delta
@@ -505,6 +602,7 @@ pub fn client_request_stream(addr: &std::net::SocketAddr, body: &Value) -> Resul
     let t0 = Instant::now();
     let mut reader = BufReader::new(stream);
     let mut deltas = Vec::new();
+    let mut events = Vec::new();
     let mut first_delta_ms = 0.0f64;
     let mut line = String::new();
     loop {
@@ -520,9 +618,14 @@ pub fn client_request_stream(addr: &std::net::SocketAddr, body: &Value) -> Resul
             deltas.push(delta.to_string());
             continue;
         }
+        if let Some(ev) = v.get("event").and_then(|e| e.as_str()) {
+            events.push(ev.to_string());
+            continue;
+        }
         let total_ms = t0.elapsed().as_secs_f64() * 1e3;
         return Ok(StreamOutcome {
             deltas,
+            events,
             summary: v,
             first_delta_ms,
             total_ms,
@@ -590,29 +693,54 @@ mod tests {
     #[test]
     fn parse_request_defaults_match_v1() {
         let v = json::parse(r#"{"prompt": "hi", "max_new": 4}"#).unwrap();
-        let r = parse_request(&v, 7);
+        let r = parse_request(&v, 7).unwrap();
         assert_eq!(r.id, 7);
         assert_eq!(r.prompt, b"hi");
         assert_eq!(r.max_new, 4);
         assert!(r.sampling.is_greedy());
         assert!(r.stop.is_empty());
         assert!(!r.stream);
+        assert!(r.deadline_ms.is_none());
     }
 
     #[test]
     fn parse_request_reads_v2_fields() {
         let v = json::parse(
             r#"{"prompt": "x", "max_new": 8, "stream": true, "temperature": 0.5,
-                "top_k": 10, "top_p": 0.9, "seed": 99, "stop": ["ab", "c"]}"#,
+                "top_k": 10, "top_p": 0.9, "seed": 99, "stop": ["ab", "c"],
+                "deadline_ms": 1500}"#,
         )
         .unwrap();
-        let r = parse_request(&v, 1);
+        let r = parse_request(&v, 1).unwrap();
         assert!(r.stream);
         assert!((r.sampling.temperature - 0.5).abs() < 1e-6);
         assert_eq!(r.sampling.top_k, 10);
         assert!((r.sampling.top_p - 0.9).abs() < 1e-6);
         assert_eq!(r.sampling.seed, 99);
         assert_eq!(r.stop, vec![b"ab".to_vec(), b"c".to_vec()]);
+        assert_eq!(r.deadline_ms, Some(1500));
+    }
+
+    #[test]
+    fn parse_request_rejects_poisonous_sampling_params() {
+        let cases = [
+            (r#"{"prompt": "x", "temperature": -0.5}"#, "temperature"),
+            (r#"{"prompt": "x", "temperature": 1e999}"#, "temperature"), // json inf
+            (r#"{"prompt": "x", "top_p": 0.0}"#, "top_p"),
+            (r#"{"prompt": "x", "top_p": -1}"#, "top_p"),
+            (r#"{"prompt": "x", "top_p": 1.5}"#, "top_p"),
+            (r#"{"prompt": "x", "max_new": -3}"#, "max_new"),
+            (r#"{"prompt": "x", "max_new": 99000000}"#, "max_new"),
+            (r#"{"prompt": "x", "deadline_ms": -10}"#, "deadline_ms"),
+        ];
+        for (body, field) in cases {
+            let Ok(v) = json::parse(body) else { continue }; // 1e999 may not parse
+            assert_eq!(parse_request(&v, 1).unwrap_err(), field, "body {body}");
+        }
+        // The boundary values stay valid.
+        let v = json::parse(r#"{"prompt": "x", "temperature": 0, "top_p": 1, "max_new": 0}"#)
+            .unwrap();
+        assert!(parse_request(&v, 1).is_ok());
     }
 
     #[test]
@@ -624,5 +752,15 @@ mod tests {
             Some("rejected")
         );
         assert!(line.get("done").is_none());
+    }
+
+    #[test]
+    fn too_large_summary_is_a_distinct_error() {
+        let line = summary_line(&Response::too_large(4));
+        assert_eq!(line.get("error").and_then(|e| e.as_str()), Some("too_large"));
+        assert_eq!(
+            line.get("finish_reason").and_then(|f| f.as_str()),
+            Some("rejected")
+        );
     }
 }

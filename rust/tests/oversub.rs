@@ -1,0 +1,300 @@
+//! Oversubscription, preemption, and fault-injection integration suite
+//! over the real engine (synthetic weights — runs without `make
+//! artifacts`).
+//!
+//! The scheduler-level suite in `coordinator/scheduler.rs` proves the
+//! preemption state machine over `ToyBackend`; this file proves the same
+//! invariants end-to-end through `RustBackend`'s storage-backed paged
+//! kernels, where resume recomputes decode-written KV rows via the
+//! chunked-prefill path.  That substitution is bit-safe because
+//! `tests/prefill.rs` propchecks blocked prefill against the sequential
+//! `step_inner` oracle for every method and every chunk partition:
+//!   1. a 2x-oversubscribed storm (worst-case demand = 2x physical
+//!      blocks), with and without injected allocation faults, completes
+//!      every session **bit-identical** to an uncontended run;
+//!   2. a combined storm (allocation + prefill + decode faults at once)
+//!      recovers to the same outputs;
+//!   3. cancelling a preempted-not-yet-resumed session mid-storm returns
+//!      the cache exactly to baseline and never perturbs survivors.
+
+use rap::config::Method;
+use rap::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, Event, FaultBackend, FinishReason, Request,
+};
+use rap::faults::FaultPlan;
+use rap::kvcache::{CacheShape, PagedKvCache, BLOCK_TOKENS};
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
+use rap::runtime::backend::generate_once;
+
+const SESSIONS: usize = 6;
+const PROMPT: usize = 32; // exactly 2 blocks — admission reserves these
+const MAX_NEW: usize = 24; // worst case 56 tokens = 4 blocks per session
+const BLOCKS: usize = 12; // 6 * 4 = 24 worst-case blocks -> 2x oversubscribed
+const S_MAX: usize = 96;
+
+fn prompt(len: usize, salt: usize) -> Vec<u8> {
+    (0..len).map(|i| ((i * 37 + salt * 101) % 251) as u8).collect()
+}
+
+fn prompts() -> Vec<Vec<u8>> {
+    // Distinct salts: no shared prefixes, every session pays full freight.
+    (0..SESSIONS).map(|i| prompt(PROMPT, 60 + i)).collect()
+}
+
+/// Uncontended reference: each request served alone on an ample cache.
+fn reference(engine: &rap::model::Engine, shape: &CacheShape) -> Vec<Vec<u8>> {
+    let mut backend = RustBackend::new(engine, S_MAX);
+    let mut kv = PagedKvCache::with_storage(shape.clone(), 64 << 20);
+    prompts()
+        .iter()
+        .enumerate()
+        .map(|(i, p)| generate_once(&mut backend, &mut kv, 700 + i as u64, p, MAX_NEW).unwrap())
+        .collect()
+}
+
+fn oversub_config(shape: &CacheShape, blocks: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_sessions: SESSIONS,
+            buckets: vec![1, 4, 8],
+            max_queue: 64,
+            ..Default::default()
+        },
+        kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * blocks,
+    }
+}
+
+/// Tentpole acceptance: admission reserves prompts only, decode grows on
+/// demand, and when the 2x-oversubscribed storm exhausts the cache the
+/// scheduler preempts and later resumes sessions instead of erroring —
+/// with every output bit-identical to the uncontended run, both with a
+/// clean allocator and under a seeded allocation-fault plan.
+#[test]
+fn oversubscribed_storm_with_alloc_faults_is_bit_identical() {
+    for method in [Method::Baseline, Method::Rap] {
+        let engine = synth_engine(method, 23);
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let expected = reference(&engine, &shape);
+
+        for plan in [None, Some(FaultPlan::new(7).with_alloc_faults(0.5))] {
+            let faulted = plan.is_some();
+            let backend = RustBackend::new(&engine, S_MAX);
+            let mut coord = Coordinator::new(backend, shape.clone(), oversub_config(&shape, BLOCKS));
+            coord.set_fault_plan(plan.as_ref());
+            assert_eq!(coord.kv_capacity_blocks(), BLOCKS, "{method:?}: budget maps to blocks");
+            for (i, p) in prompts().iter().enumerate() {
+                coord.try_submit(Request::new(i as u64, p.clone(), MAX_NEW)).unwrap();
+            }
+            let mut responses = coord.run_to_completion().unwrap();
+            responses.sort_by_key(|r| r.id);
+            assert_eq!(responses.len(), SESSIONS);
+            for (r, e) in responses.iter().zip(&expected) {
+                assert_eq!(
+                    r.metrics.finish_reason,
+                    FinishReason::Length,
+                    "{method:?} session {} (faulted={faulted})",
+                    r.id
+                );
+                assert_eq!(
+                    &r.generated, e,
+                    "{method:?} session {} (faulted={faulted}): oversubscribed \
+                     decode must be bit-identical to the uncontended run",
+                    r.id
+                );
+            }
+            assert!(
+                coord.metrics.preemptions >= 1,
+                "{method:?} (faulted={faulted}): 2x oversubscription must preempt"
+            );
+            assert!(
+                coord.metrics.resumes >= 1,
+                "{method:?} (faulted={faulted}): parked sessions must resume"
+            );
+            if faulted {
+                assert!(
+                    coord.kv_alloc_faults_injected() >= 1,
+                    "{method:?}: the fault plan never fired"
+                );
+            }
+            assert_eq!(
+                coord.kv_used_blocks(),
+                0,
+                "{method:?} (faulted={faulted}): blocks back to baseline after the storm"
+            );
+        }
+    }
+}
+
+/// Combined storm: allocation faults in the kv allocator AND transient
+/// prefill/decode faults from a wrapped backend, all while 2x
+/// oversubscribed.  Every fault is retried or deferred; outputs stay
+/// bit-identical and both the allocator and the backend end empty.
+#[test]
+fn combined_fault_storm_recovers_bit_identical() {
+    let engine = synth_engine(Method::Rap, 29);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let expected = reference(&engine, &shape);
+
+    let plan = FaultPlan::new(41)
+        .with_alloc_faults(0.3)
+        .with_prefill_faults(0.3)
+        .with_decode_faults(0.3);
+    let backend = FaultBackend::new(RustBackend::new(&engine, S_MAX), &plan);
+    let mut coord = Coordinator::new(backend, shape.clone(), oversub_config(&shape, BLOCKS));
+    coord.set_fault_plan(Some(&plan));
+    for (i, p) in prompts().iter().enumerate() {
+        coord.try_submit(Request::new(i as u64, p.clone(), MAX_NEW)).unwrap();
+    }
+    let mut responses = coord.run_to_completion().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), SESSIONS);
+    for (r, e) in responses.iter().zip(&expected) {
+        assert_eq!(r.metrics.finish_reason, FinishReason::Length, "session {}", r.id);
+        assert_eq!(&r.generated, e, "session {}: faulted storm must not change outputs", r.id);
+    }
+    let (pf, df) = coord.backend.injected();
+    assert!(pf + df >= 1, "backend fault sites never fired");
+    assert_eq!(
+        coord.metrics.backend_retries,
+        pf + df,
+        "every injected backend fault is retried exactly once"
+    );
+    assert!(coord.metrics.preemptions >= 1);
+    assert_eq!(coord.kv_used_blocks(), 0, "blocks back to baseline");
+    assert_eq!(coord.backend.inner().session_count(), 0, "backend sessions all dropped");
+}
+
+/// CI fault-storm stress job: the combined storm swept across
+/// `RAP_FAULT_SEEDS` fault-plan seeds (default 8).  Every seed must
+/// complete every session bit-identical to the uncontended reference and
+/// return the allocator and backend exactly to baseline; preemption must
+/// fire somewhere in the sweep (it is driven by genuine exhaustion, not by
+/// the injected faults).  `#[ignore]`d so the default `cargo test` gate
+/// stays fast — the dedicated CI job opts in with `-- --ignored`.
+#[test]
+#[ignore = "seed-sweep stress job; run with -- --ignored (width via RAP_FAULT_SEEDS)"]
+fn fault_storm_seed_sweep() {
+    let seeds: u64 = std::env::var("RAP_FAULT_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let engine = synth_engine(Method::Rap, 23);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let expected = reference(&engine, &shape);
+
+    let mut total_preemptions = 0u64;
+    let mut total_injected = 0u64;
+    for seed in 0..seeds {
+        let plan = FaultPlan::new(seed)
+            .with_alloc_faults(0.4)
+            .with_prefill_faults(0.2)
+            .with_decode_faults(0.2);
+        let backend = FaultBackend::new(RustBackend::new(&engine, S_MAX), &plan);
+        let mut coord = Coordinator::new(backend, shape.clone(), oversub_config(&shape, BLOCKS));
+        coord.set_fault_plan(Some(&plan));
+        for (i, p) in prompts().iter().enumerate() {
+            coord.try_submit(Request::new(i as u64, p.clone(), MAX_NEW)).unwrap();
+        }
+        let mut responses = coord.run_to_completion().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), SESSIONS, "seed {seed}");
+        for (r, e) in responses.iter().zip(&expected) {
+            assert_eq!(
+                r.metrics.finish_reason,
+                FinishReason::Length,
+                "seed {seed} session {}",
+                r.id
+            );
+            assert_eq!(&r.generated, e, "seed {seed} session {}: outputs drifted", r.id);
+        }
+        assert_eq!(coord.kv_used_blocks(), 0, "seed {seed}: blocks leaked");
+        assert_eq!(coord.backend.inner().session_count(), 0, "seed {seed}: sessions leaked");
+        total_preemptions += coord.metrics.preemptions;
+        let (pf, df) = coord.backend.injected();
+        total_injected += pf + df + coord.kv_alloc_faults_injected();
+    }
+    assert!(total_preemptions >= 1, "no seed ever preempted");
+    assert!(total_injected >= seeds, "the sweep injected almost nothing");
+}
+
+/// Teardown race: cancel a victim while it is parked by preemption (before
+/// its resume), then cancel it again.  The cancel must return the tokens
+/// generated before preemption, the double-cancel must be a no-op, and the
+/// survivors must finish bit-identically with the cache exactly at
+/// baseline.
+#[test]
+fn cancel_of_parked_victim_mid_storm_restores_baseline() {
+    const TIGHT_SESSIONS: usize = 4;
+    const TIGHT_BLOCKS: usize = 8; // 4 * 4 = 16 worst-case -> 2x oversubscribed
+    let engine = synth_engine(Method::Rap, 31);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let expected = reference(&engine, &shape);
+
+    let backend = RustBackend::new(&engine, S_MAX);
+    let mut coord = Coordinator::new(
+        backend,
+        shape.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: TIGHT_SESSIONS,
+                buckets: vec![1, 4, 8],
+                max_queue: 64,
+                ..Default::default()
+            },
+            kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * TIGHT_BLOCKS,
+        },
+    );
+    for (i, p) in prompts().iter().take(TIGHT_SESSIONS).enumerate() {
+        coord.try_submit(Request::new(i as u64, p.clone(), MAX_NEW)).unwrap();
+    }
+
+    // Tick until the first preemption; the victim stays parked until at
+    // least the next tick's resume pass, so cancelling now races the
+    // park-without-resume window.
+    let mut victim = None;
+    for _ in 0..200 {
+        let events = coord.tick().unwrap();
+        victim = events.iter().find_map(|e| match e {
+            Event::Preempted { id } => Some(*id),
+            _ => None,
+        });
+        if victim.is_some() {
+            break;
+        }
+    }
+    let victim = victim.expect("2x-oversubscribed growth must preempt");
+
+    let cancelled = coord.cancel(victim).expect("parked session is cancellable");
+    assert_eq!(cancelled.metrics.finish_reason, FinishReason::Cancelled);
+    assert!(
+        !cancelled.generated.is_empty(),
+        "pre-preemption tokens survive the cancel"
+    );
+    assert_eq!(
+        cancelled.generated.as_slice(),
+        &expected[victim as usize][..cancelled.generated.len()],
+        "victim's partial generation is a bit-identical prefix of the reference"
+    );
+    assert!(coord.cancel(victim).is_none(), "double-cancel is a no-op");
+
+    let mut responses = coord.run_to_completion().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), TIGHT_SESSIONS, "cancelled victim included");
+    for r in &responses {
+        if r.id == victim {
+            assert_eq!(r.metrics.finish_reason, FinishReason::Cancelled);
+            continue;
+        }
+        assert_eq!(r.metrics.finish_reason, FinishReason::Length, "survivor {}", r.id);
+        assert_eq!(
+            &r.generated,
+            &expected[r.id as usize],
+            "survivor {}: unaffected by the victim's teardown",
+            r.id
+        );
+    }
+    assert_eq!(coord.metrics.cancelled, 1);
+    assert_eq!(coord.kv_used_blocks(), 0, "blocks back to baseline");
+    assert_eq!(coord.backend.session_count(), 0, "backend sessions all dropped");
+}

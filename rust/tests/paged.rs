@@ -163,6 +163,7 @@ fn shared_prefix_sessions_bit_identical_and_allocate_prefix_once() {
                     buckets: vec![1, 4, 8],
                     max_queue: 64,
                     prefill_chunk_tokens: 128,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 64 << 20,
             },
@@ -197,7 +198,14 @@ fn shared_prefix_sessions_bit_identical_and_allocate_prefix_once() {
             prefix_blocks
         );
         assert_eq!(coord.kv_used_blocks(), 0, "{method:?}: all KV released");
-        assert_eq!(coord.kv_prefix_nodes(), 0, "{method:?}: trie dies with its last session");
+        // Storage-backed coordinators keep the released prefix resident as
+        // evictable cold cache (reclaimed on demand under pressure), so the
+        // trie outlives its last session — as cold, not used, blocks.
+        assert!(
+            coord.kv_prefix_nodes() >= prefix_blocks,
+            "{method:?}: shared prefix retained cold"
+        );
+        assert_eq!(coord.kv_cold_blocks(), coord.kv_prefix_nodes());
     }
 }
 

@@ -210,6 +210,7 @@ fn chunked_admission_serves_bit_identical_outputs() {
                     buckets: vec![1, 4],
                     max_queue: 16,
                     prefill_chunk_tokens: 16,
+                    ..Default::default()
                 },
                 kv_budget_bytes: 16 << 20,
             },

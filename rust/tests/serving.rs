@@ -397,6 +397,7 @@ fn cancel_mid_flight_releases_blocks_even_with_shared_prefix() {
                 buckets: vec![1, 4],
                 max_queue: 16,
                 prefill_chunk_tokens: 32,
+                ..Default::default()
             },
             kv_budget_bytes: 32 << 20,
         },
@@ -442,11 +443,19 @@ fn cancel_mid_flight_releases_blocks_even_with_shared_prefix() {
         "cancel returned used blocks to the pre-admission value"
     );
 
-    // Session 1 is unperturbed and still completes; then everything frees.
+    // Session 1 is unperturbed and still completes; then nothing is *used*
+    // — but the shared prompt chunks stay resident as evictable cold cache
+    // (storage-backed coordinators retain released prefixes by default, and
+    // the allocator reclaims them on demand under pressure).
     let responses = coord.run_to_completion().unwrap();
     assert!(responses.iter().any(|r| r.id == 1 && r.generated.len() == 40));
     assert_eq!(coord.kv_used_blocks(), 0);
-    assert_eq!(coord.kv_prefix_nodes(), 0);
+    assert!(coord.kv_prefix_nodes() > 0, "prompt chunks retained cold for reuse");
+    assert_eq!(
+        coord.kv_cold_blocks(),
+        coord.kv_prefix_nodes(),
+        "with no live session every resident chunk is cold (one block each)"
+    );
     assert_eq!(coord.backend.session_count(), 0);
     assert_eq!(coord.metrics.cancelled, 2);
 }
