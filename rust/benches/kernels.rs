@@ -1,0 +1,142 @@
+//! ISSUE 7 perf gate for the selectable kernel paths: explicit 8-lane wide
+//! kernels vs the bit-exact scalar path across latent widths, plus the
+//! fused-int4 decode byte discount over packed rows.  Writes the sweep to
+//! `BENCH_kernels.json` (uploaded by CI):
+//!
+//! * Wide must beat Scalar by ≥ 1.3x on `dot_rows_scaled` / `axpy_rows`
+//!   at width ≥ 64 — asserted only when AVX2+FMA is actually available
+//!   (the portable 8-accumulator fallback is recorded, not gated);
+//! * a packed q4 row must cost ≤ 0.5x the bytes of its f32 row at every
+//!   swept width — a layout property, asserted unconditionally.
+
+use rap::experiments::bench_support::{budgets, BenchReport};
+use rap::kvcache::quant;
+use rap::tensor::ops;
+use rap::tensor::simd::{avx2_available, axpy_rows_path, dot_rows_scaled_path, KernelPath};
+use rap::util::json::{arr, num, obj, s};
+use rap::util::rng::Rng;
+use rap::util::stats::bench;
+
+const TARGET_WIDE_SPEEDUP: f64 = 1.3;
+const GATED_WIDTH: usize = 64;
+
+fn main() {
+    let (warm, budget) = budgets();
+    let mut report = BenchReport::new("kernels");
+    let rows_n: usize = if std::env::var("RAP_BENCH_FAST").is_ok() {
+        1024
+    } else {
+        4096
+    };
+    let avx2 = avx2_available();
+    println!("avx2+fma available: {avx2}; {rows_n} rows per width");
+
+    let mut rng = Rng::new(42);
+    let mut sweep = Vec::new();
+    for w in [16usize, 32, 64, 128, 256] {
+        let mut q = vec![0.0f32; w];
+        let mut rows = vec![0.0f32; rows_n * w];
+        let mut weights = vec![0.0f32; rows_n];
+        rng.fill_normal(&mut q, 1.0);
+        rng.fill_normal(&mut rows, 1.0);
+        rng.fill_normal(&mut weights, 1.0);
+        let scale = 1.0 / (w as f32).sqrt();
+        let mut scores = vec![0.0f32; rows_n];
+        let mut ctx = vec![0.0f32; w];
+
+        let dot_s = bench(&format!("dot_rows_scaled/scalar/w{w}"), warm, budget, || {
+            ops::dot_rows_scaled(&q, &rows, w, scale, &mut scores);
+        });
+        let dot_w = bench(&format!("dot_rows_scaled/wide/w{w}"), warm, budget, || {
+            dot_rows_scaled_path(KernelPath::Wide, &q, &rows, w, scale, &mut scores);
+        });
+        let axpy_s = bench(&format!("axpy_rows/scalar/w{w}"), warm, budget, || {
+            ctx.fill(0.0);
+            ops::axpy_rows(&weights, &rows, w, &mut ctx);
+        });
+        let axpy_w = bench(&format!("axpy_rows/wide/w{w}"), warm, budget, || {
+            ctx.fill(0.0);
+            axpy_rows_path(KernelPath::Wide, &weights, &rows, w, &mut ctx);
+        });
+
+        // Fused-int4: quantize the same rows into packed storage and sweep
+        // the in-register dequantizing kernels over the packed bytes.
+        let rb = quant::row_bytes(w);
+        let mut packed = vec![0u8; rows_n * rb];
+        for (r, dst) in packed.chunks_exact_mut(rb).enumerate() {
+            quant::quantize_row_into(&rows[r * w..(r + 1) * w], dst);
+        }
+        let dot_q4 = bench(&format!("dot_rows_scaled_q4/w{w}"), warm, budget, || {
+            quant::dot_rows_scaled_q4(&q, &packed, w, scale, &mut scores);
+        });
+        let axpy_q4 = bench(&format!("axpy_rows_q4/w{w}"), warm, budget, || {
+            ctx.fill(0.0);
+            quant::axpy_rows_q4(&weights, &packed, w, &mut ctx);
+        });
+
+        let dot_speedup = dot_s.mean_ns / dot_w.mean_ns;
+        let axpy_speedup = axpy_s.mean_ns / axpy_w.mean_ns;
+        let byte_ratio = rb as f64 / (4 * w) as f64;
+        println!(
+            "    -> w{w}: dot {dot_speedup:.2}x axpy {axpy_speedup:.2}x q4 bytes {:.2}x",
+            byte_ratio
+        );
+
+        // Decode-bytes gate: a packed row reads at most half the bytes of
+        // its f32 counterpart.  Pure layout — independent of the machine.
+        assert!(
+            2 * rb <= 4 * w,
+            "w{w}: packed row is {rb} bytes, f32 row {} bytes",
+            4 * w
+        );
+        if avx2 && w >= GATED_WIDTH {
+            assert!(
+                dot_speedup >= TARGET_WIDE_SPEEDUP,
+                "w{w}: wide dot_rows_scaled only {dot_speedup:.2}x over scalar"
+            );
+            assert!(
+                axpy_speedup >= TARGET_WIDE_SPEEDUP,
+                "w{w}: wide axpy_rows only {axpy_speedup:.2}x over scalar"
+            );
+        }
+
+        for (st, kind) in [
+            (&dot_s, "dot_scalar"),
+            (&dot_w, "dot_wide"),
+            (&axpy_s, "axpy_scalar"),
+            (&axpy_w, "axpy_wide"),
+            (&dot_q4, "dot_q4"),
+            (&axpy_q4, "axpy_q4"),
+        ] {
+            report.record(st, vec![("width", num(w as f64)), ("kind", s(kind))]);
+        }
+        sweep.push(obj(vec![
+            ("width", num(w as f64)),
+            ("dot_scalar_ns", num(dot_s.mean_ns)),
+            ("dot_wide_ns", num(dot_w.mean_ns)),
+            ("dot_speedup", num(dot_speedup)),
+            ("axpy_scalar_ns", num(axpy_s.mean_ns)),
+            ("axpy_wide_ns", num(axpy_w.mean_ns)),
+            ("axpy_speedup", num(axpy_speedup)),
+            ("dot_q4_ns", num(dot_q4.mean_ns)),
+            ("axpy_q4_ns", num(axpy_q4.mean_ns)),
+            ("q4_row_bytes", num(rb as f64)),
+            ("f32_row_bytes", num((4 * w) as f64)),
+            ("q4_byte_ratio", num(byte_ratio)),
+        ]));
+    }
+
+    let summary = obj(vec![
+        ("bench", s("kernels")),
+        ("avx2", s(if avx2 { "true" } else { "false" })),
+        ("rows", num(rows_n as f64)),
+        ("target_wide_speedup", num(TARGET_WIDE_SPEEDUP)),
+        ("gated_width", num(GATED_WIDTH as f64)),
+        ("max_q4_byte_ratio", num(0.5)),
+        ("sweep", arr(sweep)),
+    ]);
+    let _ = std::fs::write("BENCH_kernels.json", summary.to_string_pretty());
+    println!("-> BENCH_kernels.json");
+
+    report.finish();
+}

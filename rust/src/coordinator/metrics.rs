@@ -34,6 +34,12 @@ pub struct AggregateMetrics {
     pub total_tokens: u64,
     pub wall: Duration,
     pub peak_kv_blocks: usize,
+    /// Storage mode of the coordinator's paged cache (`KvStorageMode::name`:
+    /// "f32" or "packed-int4") — fixed at construction.
+    pub kv_storage_mode: &'static str,
+    /// Peak bytes physically resident for KV rows under that storage mode
+    /// (hot session blocks + cold prefix blocks), sampled every tick.
+    pub peak_kv_resident_bytes: usize,
     /// Submissions refused by queue backpressure (the server answers them
     /// with an explicit `queue_full` rejection, never silence).
     pub rejected: u64,
@@ -128,7 +134,7 @@ impl AggregateMetrics {
         format!(
             "requests={} rejected={} cancelled={} stopped_early={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
              ttft: mean {:.1} ms (max {:.1})  decode: mean {:.2} ms/tok (shared {:.2})  queue: mean {:.1} ms\n\
-             decode batches={} mean occupancy={:.2}  peak kv blocks={}\n\
+             decode batches={} mean occupancy={:.2}  peak kv blocks={} storage={} resident={:.2} MiB\n\
              prefill chunks={} mean tokens={:.1}  max decode stall={} chunks\n\
              prefix cache: {}/{} hits ({:.0}%)  saved blocks={}  mean matched={:.0} tok\n\
              pressure: preemptions={} resumes={} timeouts={} oom_truncations={} \
@@ -148,6 +154,8 @@ impl AggregateMetrics {
             self.decode_batches,
             self.decode_batch_occupancy.mean(),
             self.peak_kv_blocks,
+            self.kv_storage_mode,
+            self.peak_kv_resident_bytes as f64 / (1 << 20) as f64,
             self.prefill_chunks,
             self.prefill_chunk_tokens.mean(),
             self.max_prefill_chunks_between_decodes,
@@ -222,6 +230,18 @@ mod tests {
         assert!(report.contains("cancelled=1"), "{report}");
         assert!(report.contains("stopped_early=2"), "{report}");
         assert!(report.contains("timeouts=1"), "{report}");
+    }
+
+    #[test]
+    fn report_shows_kv_storage_mode_and_resident_bytes() {
+        let a = AggregateMetrics {
+            kv_storage_mode: "packed-int4",
+            peak_kv_resident_bytes: 3 << 20,
+            ..AggregateMetrics::default()
+        };
+        let report = a.report();
+        assert!(report.contains("storage=packed-int4"), "{report}");
+        assert!(report.contains("resident=3.00 MiB"), "{report}");
     }
 
     #[test]

@@ -66,7 +66,7 @@ use crate::coordinator::metrics::{AggregateMetrics, RequestMetrics};
 use crate::coordinator::request::{Event, FinishReason, Request, RequestId, Response};
 use crate::coordinator::sampling::Sampler;
 use crate::faults::{FaultPlan, InjectedFault};
-use crate::kvcache::{CacheShape, PagedKvCache, BLOCK_TOKENS};
+use crate::kvcache::{CacheShape, KvStorageMode, PagedKvCache, BLOCK_TOKENS};
 
 /// Consecutive injected backend failures tolerated before the scheduler
 /// stops treating them as transient and propagates the error.  Far above
@@ -100,6 +100,13 @@ pub trait Backend {
     /// the paged allocator (`PagedKvCache::with_storage`).
     fn wants_paged_storage(&self) -> bool {
         false
+    }
+    /// Storage mode for the coordinator-owned paged cache: plain f32 rows,
+    /// or nibble-packed int4 rows for backends whose kernels attend
+    /// directly over packed blocks (`KernelPath::FusedInt4`).  Only
+    /// meaningful together with [`Backend::wants_paged_storage`].
+    fn kv_storage_mode(&self) -> KvStorageMode {
+        KvStorageMode::F32
     }
     /// Create session state and run the prompt; returns last-token logits.
     fn prefill(&mut self, kv: &mut PagedKvCache, session: RequestId, prompt: &[u8])
@@ -276,7 +283,11 @@ pub struct Coordinator<B: Backend> {
 impl<B: Backend> Coordinator<B> {
     pub fn new(backend: B, shape: CacheShape, cfg: CoordinatorConfig) -> Coordinator<B> {
         let kv = if backend.wants_paged_storage() {
-            let mut kv = PagedKvCache::with_storage(shape, cfg.kv_budget_bytes);
+            let mut kv = PagedKvCache::with_storage_mode(
+                shape,
+                cfg.kv_budget_bytes,
+                backend.kv_storage_mode(),
+            );
             // Storage-backed caches keep released prefix chunks resident
             // (evictable) so repeated prompts and preemption resumes skip
             // recompute; accounting-only caches have no rows to keep.
@@ -285,6 +296,10 @@ impl<B: Backend> Coordinator<B> {
         } else {
             PagedKvCache::new(shape, cfg.kv_budget_bytes)
         };
+        let metrics = AggregateMetrics {
+            kv_storage_mode: kv.storage_mode().name(),
+            ..AggregateMetrics::default()
+        };
         Coordinator {
             backend,
             batcher: Batcher::new(cfg.batcher),
@@ -292,7 +307,7 @@ impl<B: Backend> Coordinator<B> {
             prefilling: VecDeque::new(),
             running: BTreeMap::new(),
             preempted: VecDeque::new(),
-            metrics: AggregateMetrics::default(),
+            metrics,
             finished: Vec::new(),
             stalled_chunks: 0,
             admission_seq: 0,
@@ -453,6 +468,10 @@ impl<B: Backend> Coordinator<B> {
             });
         }
         self.metrics.peak_kv_blocks = self.metrics.peak_kv_blocks.max(self.kv.used_blocks());
+        self.metrics.peak_kv_resident_bytes = self
+            .metrics
+            .peak_kv_resident_bytes
+            .max(self.kv.resident_kv_bytes());
 
         // 2. Chunked prefill: spend at most `prefill_chunk_tokens` prompt
         // tokens, oldest request first, then fall through to the decode

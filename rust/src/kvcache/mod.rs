@@ -82,6 +82,36 @@ use crate::faults::FaultInjector;
 
 pub const BLOCK_TOKENS: usize = 16;
 
+/// How a storage-backed cache lays latent rows out in its block buffers.
+///
+/// `F32` is the default full-precision layout.  `PackedInt4` stores every
+/// row as `quant` nibble-packed groups ([`quant::row_bytes`] bytes per
+/// row); attention reads the packed bytes directly through the fused
+/// kernels ([`quant::dot_rows_scaled_q4`] / [`quant::axpy_rows_q4`]) and
+/// f32 rows are never materialized.  The same byte budget therefore holds
+/// roughly 6x the blocks (5 bits vs 32 bits per element at `GROUP = 32`).
+/// Packed mode supports methods that attend in latent space without
+/// reconstruction (Baseline/Rap; guarded at the engine entry points).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvStorageMode {
+    #[default]
+    F32,
+    PackedInt4,
+}
+
+impl KvStorageMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            KvStorageMode::F32 => "f32",
+            KvStorageMode::PackedInt4 => "packed-int4",
+        }
+    }
+
+    pub fn is_packed(self) -> bool {
+        self == KvStorageMode::PackedInt4
+    }
+}
+
 /// Static description of one variant's per-layer cache widths.
 #[derive(Debug, Clone)]
 pub struct CacheShape {
@@ -126,6 +156,24 @@ impl CacheShape {
     pub fn bytes_per_block(&self) -> usize {
         self.bytes_per_token() * BLOCK_TOKENS
     }
+
+    /// Bytes per cached token when rows are stored nibble-packed
+    /// (`KvStorageMode::PackedInt4`): each row costs
+    /// [`quant::row_bytes`]`(width)` instead of `4 * width`.
+    pub fn packed_bytes_per_token(&self) -> usize {
+        let k: usize = self.k_width.iter().map(|&w| quant::row_bytes(w)).sum();
+        let v: usize = self.v_width.iter().map(|&w| quant::row_bytes(w)).sum();
+        self.n_kv_heads * (k + v)
+    }
+
+    /// Per-block footprint under `mode` — the divisor that turns an
+    /// operator's byte budget into a block budget.
+    pub fn bytes_per_block_for(&self, mode: KvStorageMode) -> usize {
+        match mode {
+            KvStorageMode::F32 => self.bytes_per_block(),
+            KvStorageMode::PackedInt4 => self.packed_bytes_per_token() * BLOCK_TOKENS,
+        }
+    }
 }
 
 /// One layer's latent K/V backing store, sized for the whole block budget.
@@ -146,6 +194,17 @@ pub struct LayerStore {
     v_ptr: *mut f32,
     k_width: usize,
     v_width: usize,
+    /// Packed-int4 buffers (`KvStorageMode::PackedInt4`): rows live as
+    /// `quant` nibble-packed bytes, `k_row_bytes`/`v_row_bytes`-strided,
+    /// same `[block][kv_head][token_in_block][row]` order; the f32 buffers
+    /// stay empty.  Exactly one of the two buffer families is populated.
+    kq: Vec<u8>,
+    vq: Vec<u8>,
+    kq_ptr: *mut u8,
+    vq_ptr: *mut u8,
+    k_row_bytes: usize,
+    v_row_bytes: usize,
+    packed: bool,
 }
 
 // SAFETY: the raw pointers alias only `self.k` / `self.v`, and every write
@@ -170,10 +229,60 @@ impl LayerStore {
         let mut k = vec![0.0f32; capacity_blocks * n_kv_heads * BLOCK_TOKENS * k_width];
         let mut v = vec![0.0f32; capacity_blocks * n_kv_heads * BLOCK_TOKENS * v_width];
         let (k_ptr, v_ptr) = (k.as_mut_ptr(), v.as_mut_ptr());
-        LayerStore { k, v, k_ptr, v_ptr, k_width, v_width }
+        LayerStore {
+            k,
+            v,
+            k_ptr,
+            v_ptr,
+            k_width,
+            v_width,
+            kq: Vec::new(),
+            vq: Vec::new(),
+            kq_ptr: std::ptr::null_mut(),
+            vq_ptr: std::ptr::null_mut(),
+            k_row_bytes: quant::row_bytes(k_width),
+            v_row_bytes: quant::row_bytes(v_width),
+            packed: false,
+        }
+    }
+
+    fn new_packed(
+        capacity_blocks: usize,
+        n_kv_heads: usize,
+        k_width: usize,
+        v_width: usize,
+    ) -> LayerStore {
+        let (k_row_bytes, v_row_bytes) = (quant::row_bytes(k_width), quant::row_bytes(v_width));
+        let mut kq = vec![0u8; capacity_blocks * n_kv_heads * BLOCK_TOKENS * k_row_bytes];
+        let mut vq = vec![0u8; capacity_blocks * n_kv_heads * BLOCK_TOKENS * v_row_bytes];
+        let (kq_ptr, vq_ptr) = (kq.as_mut_ptr(), vq.as_mut_ptr());
+        LayerStore {
+            k: Vec::new(),
+            v: Vec::new(),
+            k_ptr: std::ptr::null_mut(),
+            v_ptr: std::ptr::null_mut(),
+            k_width,
+            v_width,
+            kq,
+            vq,
+            kq_ptr,
+            vq_ptr,
+            k_row_bytes,
+            v_row_bytes,
+            packed: true,
+        }
     }
 
     fn zero_block(&mut self, block: usize, n_kv_heads: usize) {
+        if self.packed {
+            // An all-zero packed row decodes to a zero row (scale 0.0), so
+            // the zeroed-on-allocation contract carries over unchanged.
+            let kn = n_kv_heads * BLOCK_TOKENS * self.k_row_bytes;
+            let vn = n_kv_heads * BLOCK_TOKENS * self.v_row_bytes;
+            self.kq[block * kn..(block + 1) * kn].fill(0);
+            self.vq[block * vn..(block + 1) * vn].fill(0);
+            return;
+        }
         let kn = n_kv_heads * BLOCK_TOKENS * self.k_width;
         let vn = n_kv_heads * BLOCK_TOKENS * self.v_width;
         self.k[block * kn..(block + 1) * kn].fill(0.0);
@@ -185,6 +294,15 @@ impl LayerStore {
     /// prefix block.
     fn copy_rows(&mut self, src: usize, dst: usize, n_kv_heads: usize, tokens: usize) {
         for hd in 0..n_kv_heads {
+            if self.packed {
+                let ks = ((src * n_kv_heads + hd) * BLOCK_TOKENS) * self.k_row_bytes;
+                let kd = ((dst * n_kv_heads + hd) * BLOCK_TOKENS) * self.k_row_bytes;
+                self.kq.copy_within(ks..ks + tokens * self.k_row_bytes, kd);
+                let vs = ((src * n_kv_heads + hd) * BLOCK_TOKENS) * self.v_row_bytes;
+                let vd = ((dst * n_kv_heads + hd) * BLOCK_TOKENS) * self.v_row_bytes;
+                self.vq.copy_within(vs..vs + tokens * self.v_row_bytes, vd);
+                continue;
+            }
             let ks = ((src * n_kv_heads + hd) * BLOCK_TOKENS) * self.k_width;
             let kd = ((dst * n_kv_heads + hd) * BLOCK_TOKENS) * self.k_width;
             self.k.copy_within(ks..ks + tokens * self.k_width, kd);
@@ -219,6 +337,36 @@ pub trait KvLayerView {
     fn for_k_runs_mut<F: FnMut(usize, &mut [f32])>(&mut self, head: usize, t0: usize, n: usize, f: F);
     /// Same for V rows.
     fn for_v_runs_mut<F: FnMut(usize, &mut [f32])>(&mut self, head: usize, t0: usize, n: usize, f: F);
+
+    /// Does this view store rows nibble-packed (`KvStorageMode::PackedInt4`)?
+    /// When true, the f32 row accessors are unavailable; readers use the
+    /// `_q4` run visitors and writers go through `write_k_row`/`write_v_row`.
+    fn packed_q4(&self) -> bool {
+        false
+    }
+
+    /// Store a freshly projected K row at `(head, t)`, quantizing in place
+    /// when the store is packed.  The default (f32 stores) is a plain copy.
+    fn write_k_row(&mut self, head: usize, t: usize, row: &[f32]) {
+        self.k_row_mut(head, t).copy_from_slice(row);
+    }
+
+    /// Same for V rows.
+    fn write_v_row(&mut self, head: usize, t: usize, row: &[f32]) {
+        self.v_row_mut(head, t).copy_from_slice(row);
+    }
+
+    /// Packed-row analogue of [`KvLayerView::for_k_runs`]: visits runs of
+    /// `run_len * quant::row_bytes(k_width)` packed bytes.  Only
+    /// implemented by packed stores.
+    fn for_k_runs_q4<F: FnMut(usize, &[u8])>(&self, _head: usize, _s: usize, _f: F) {
+        unreachable!("for_k_runs_q4 on a non-packed KV view");
+    }
+
+    /// Same for V rows.
+    fn for_v_runs_q4<F: FnMut(usize, &[u8])>(&self, _head: usize, _s: usize, _f: F) {
+        unreachable!("for_v_runs_q4 on a non-packed KV view");
+    }
 }
 
 /// One session × one layer window into the paged store: rows are addressed
@@ -234,6 +382,14 @@ pub struct PagedSeqLayer<'a> {
     n_kv_heads: usize,
     k_width: usize,
     v_width: usize,
+    /// Packed-int4 addressing (`KvStorageMode::PackedInt4`): base pointers
+    /// into the byte buffers and the per-row byte strides.  When `packed`
+    /// the f32 accessors panic — readers go through the `_q4` visitors.
+    kq_base: *mut u8,
+    vq_base: *mut u8,
+    k_row_bytes: usize,
+    v_row_bytes: usize,
+    packed: bool,
 }
 
 // SAFETY: see `LayerStore` — disjoint *written* blocks per session
@@ -249,14 +405,30 @@ unsafe impl Sync for PagedSeqLayer<'_> {}
 impl PagedSeqLayer<'_> {
     #[inline]
     fn k_off(&self, head: usize, t: usize) -> usize {
+        debug_assert!(!self.packed, "f32 K access on a packed store");
         let (block, slot) = (self.blocks[t / BLOCK_TOKENS], t % BLOCK_TOKENS);
         ((block * self.n_kv_heads + head) * BLOCK_TOKENS + slot) * self.k_width
     }
 
     #[inline]
     fn v_off(&self, head: usize, t: usize) -> usize {
+        debug_assert!(!self.packed, "f32 V access on a packed store");
         let (block, slot) = (self.blocks[t / BLOCK_TOKENS], t % BLOCK_TOKENS);
         ((block * self.n_kv_heads + head) * BLOCK_TOKENS + slot) * self.v_width
+    }
+
+    #[inline]
+    fn kq_off(&self, head: usize, t: usize) -> usize {
+        debug_assert!(self.packed, "packed K access on an f32 store");
+        let (block, slot) = (self.blocks[t / BLOCK_TOKENS], t % BLOCK_TOKENS);
+        ((block * self.n_kv_heads + head) * BLOCK_TOKENS + slot) * self.k_row_bytes
+    }
+
+    #[inline]
+    fn vq_off(&self, head: usize, t: usize) -> usize {
+        debug_assert!(self.packed, "packed V access on an f32 store");
+        let (block, slot) = (self.blocks[t / BLOCK_TOKENS], t % BLOCK_TOKENS);
+        ((block * self.n_kv_heads + head) * BLOCK_TOKENS + slot) * self.v_row_bytes
     }
 }
 
@@ -346,6 +518,70 @@ impl KvLayerView for PagedSeqLayer<'_> {
             t += run;
         }
     }
+
+    fn packed_q4(&self) -> bool {
+        self.packed
+    }
+
+    fn write_k_row(&mut self, head: usize, t: usize, row: &[f32]) {
+        if self.packed {
+            debug_assert_eq!(row.len(), self.k_width);
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(
+                    self.kq_base.add(self.kq_off(head, t)),
+                    self.k_row_bytes,
+                )
+            };
+            quant::quantize_row_into(row, dst);
+        } else {
+            self.k_row_mut(head, t).copy_from_slice(row);
+        }
+    }
+
+    fn write_v_row(&mut self, head: usize, t: usize, row: &[f32]) {
+        if self.packed {
+            debug_assert_eq!(row.len(), self.v_width);
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(
+                    self.vq_base.add(self.vq_off(head, t)),
+                    self.v_row_bytes,
+                )
+            };
+            quant::quantize_row_into(row, dst);
+        } else {
+            self.v_row_mut(head, t).copy_from_slice(row);
+        }
+    }
+
+    fn for_k_runs_q4<F: FnMut(usize, &[u8])>(&self, head: usize, s: usize, mut f: F) {
+        let mut t0 = 0;
+        while t0 < s {
+            let run = (s - t0).min(BLOCK_TOKENS);
+            let rows = unsafe {
+                std::slice::from_raw_parts(
+                    self.kq_base.add(self.kq_off(head, t0)),
+                    run * self.k_row_bytes,
+                )
+            };
+            f(t0, rows);
+            t0 += run;
+        }
+    }
+
+    fn for_v_runs_q4<F: FnMut(usize, &[u8])>(&self, head: usize, s: usize, mut f: F) {
+        let mut t0 = 0;
+        while t0 < s {
+            let run = (s - t0).min(BLOCK_TOKENS);
+            let rows = unsafe {
+                std::slice::from_raw_parts(
+                    self.vq_base.add(self.vq_off(head, t0)),
+                    run * self.v_row_bytes,
+                )
+            };
+            f(t0, rows);
+            t0 += run;
+        }
+    }
 }
 
 /// Shared read view of the per-session page tables (block id lists).
@@ -401,6 +637,11 @@ impl<'a> StorePtrs<'a> {
             n_kv_heads: self.n_kv_heads,
             k_width: ls.k_width,
             v_width: ls.v_width,
+            kq_base: ls.kq_ptr,
+            vq_base: ls.vq_ptr,
+            k_row_bytes: ls.k_row_bytes,
+            v_row_bytes: ls.v_row_bytes,
+            packed: ls.packed,
         }
     }
 }
@@ -426,6 +667,8 @@ pub struct PagedKvCache {
     trie: prefix::PrefixTrie,
     peak_used: usize,
     store: Option<Vec<LayerStore>>,
+    /// Row layout of the backing store (`F32` for accounting-only caches).
+    storage_mode: KvStorageMode,
     /// Keep released prefix nodes resident as evictable cold entries
     /// (see the module docs).  Off by default: unit tests and standalone
     /// users keep the strict "last release frees everything" model.
@@ -509,6 +752,7 @@ impl PagedKvCache {
             trie: prefix::PrefixTrie::new(),
             peak_used: 0,
             store: None,
+            storage_mode: KvStorageMode::F32,
             retain_cold: false,
             cold_blocks: 0,
             clock: 0,
@@ -520,17 +764,37 @@ impl PagedKvCache {
     }
 
     /// Allocator that also owns the latent K/V storage the pure-Rust engine
-    /// decodes from.
+    /// decodes from (full-precision f32 rows).
     pub fn with_storage(shape: CacheShape, capacity_bytes: usize) -> PagedKvCache {
+        PagedKvCache::with_storage_mode(shape, capacity_bytes, KvStorageMode::F32)
+    }
+
+    /// Storage-backed allocator with an explicit row layout.  Under
+    /// `PackedInt4` the same byte budget yields proportionally more blocks
+    /// (the per-block footprint shrinks to
+    /// [`CacheShape::bytes_per_block_for`]), which is the fused-int4
+    /// capacity win the metrics report as resident KV bytes.
+    pub fn with_storage_mode(
+        shape: CacheShape,
+        capacity_bytes: usize,
+        mode: KvStorageMode,
+    ) -> PagedKvCache {
         let mut kv = PagedKvCache::new(shape, capacity_bytes);
+        if mode.is_packed() {
+            let blocks = capacity_bytes / kv.shape.bytes_per_block_for(mode).max(1);
+            kv.capacity_blocks = blocks;
+            kv.free = (0..blocks).rev().collect();
+            kv.refcount = vec![0; blocks];
+        }
+        kv.storage_mode = mode;
         let store = (0..kv.shape.n_layers)
             .map(|l| {
-                LayerStore::new(
-                    kv.capacity_blocks,
-                    kv.shape.n_kv_heads,
-                    kv.shape.k_width[l],
-                    kv.shape.v_width[l],
-                )
+                let (blocks, heads) = (kv.capacity_blocks, kv.shape.n_kv_heads);
+                let (kw, vw) = (kv.shape.k_width[l], kv.shape.v_width[l]);
+                match mode {
+                    KvStorageMode::F32 => LayerStore::new(blocks, heads, kw, vw),
+                    KvStorageMode::PackedInt4 => LayerStore::new_packed(blocks, heads, kw, vw),
+                }
             })
             .collect();
         kv.store = Some(store);
@@ -567,8 +831,21 @@ impl PagedKvCache {
         self.peak_used
     }
 
+    /// Row layout of the backing store (`F32` for accounting-only caches).
+    pub fn storage_mode(&self) -> KvStorageMode {
+        self.storage_mode
+    }
+
     pub fn used_bytes(&self) -> usize {
-        self.used_blocks() * self.shape.bytes_per_block()
+        self.used_blocks() * self.shape.bytes_per_block_for(self.storage_mode)
+    }
+
+    /// Bytes physically resident for KV rows under the active storage mode
+    /// — hot session blocks plus cold prefix-cache blocks.  Under
+    /// `PackedInt4` this is what makes the fused-int4 capacity win visible
+    /// next to `used_blocks`/`cold_blocks` in the serving report.
+    pub fn resident_kv_bytes(&self) -> usize {
+        (self.used_blocks() + self.cold_blocks) * self.shape.bytes_per_block_for(self.storage_mode)
     }
 
     /// Max tokens a fresh session could hold right now (cold blocks count:

@@ -6,6 +6,33 @@
 //! 0.5 byte/element + 4/GROUP bytes of scale — 5 bits/element at GROUP=32
 //! (4 payload + 1 scale overhead), an ~84% cut on top of whatever width
 //! reduction the pruning method already achieved.
+//!
+//! # Packed block layout (`KvStorageMode::PackedInt4`)
+//!
+//! When the paged cache stores rows packed, each latent row of width `w`
+//! occupies exactly [`row_bytes`]`(w)` bytes inside the block buffer, laid
+//! out group by group:
+//!
+//! ```text
+//! [group 0: ceil(glen/2) nibble bytes][group 0 scale: f32 LE, 4 bytes]
+//! [group 1: ...                      ][group 1 scale: ...            ]
+//! ```
+//!
+//! Element `j` of a group lives in payload byte `j / 2` — low nibble when
+//! `j` is even, high nibble when odd — biased by +8 into `[1, 15]`
+//! (`0 <-> -8` never occurs, so an all-zeroes buffer decodes to 0.0 rows,
+//! matching the zeroed-on-allocation contract of f32 blocks).
+//!
+//! **Group alignment invariant:** `GROUP` is even, every group starts at a
+//! byte boundary, and only the final group of a row may be shorter than
+//! `GROUP`.  Rows are self-contained — no nibble or scale ever spans a row
+//! boundary — so a block buffer is simply `row_bytes(w)`-strided rows and
+//! the fused kernels ([`dot_rows_scaled_q4`], [`axpy_rows_q4`]) can walk
+//! consecutive rows of a block without any side table.  The fused kernels
+//! mirror the scalar accumulation order of `tensor::ops::{dot,
+//! dot_rows_scaled, axpy_rows}` exactly, so attention over packed rows is
+//! *bitwise* equal to dequantize-then-scalar-attend (propchecked in
+//! `tests/kernels.rs`).
 
 pub const GROUP: usize = 32;
 const QMAX: f32 = 7.0;
@@ -24,31 +51,52 @@ impl QuantRow {
     }
 }
 
+/// Per-group scale for a slice of up to `GROUP` values.
+#[inline]
+fn group_scale(vals: &[f32]) -> f32 {
+    let amax = vals.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    if amax > 0.0 {
+        amax / QMAX
+    } else {
+        1.0
+    }
+}
+
+#[inline]
+fn quantize_val(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-QMAX, QMAX) as i8
+}
+
 pub fn quantize(row: &[f32]) -> QuantRow {
+    let mut q = QuantRow {
+        packed: Vec::new(),
+        scales: Vec::new(),
+        len: 0,
+    };
+    quantize_into(row, &mut q);
+    q
+}
+
+/// Allocation-free `quantize` into a reusable `QuantRow` (its vectors are
+/// cleared and refilled; steady-state callers reuse one scratch row).
+pub fn quantize_into(row: &[f32], q: &mut QuantRow) {
     let n = row.len();
-    let n_groups = n.div_ceil(GROUP);
-    let mut scales = Vec::with_capacity(n_groups);
-    let mut packed = vec![0u8; n.div_ceil(2)];
-    for g in 0..n_groups {
-        let lo = g * GROUP;
+    q.len = n;
+    q.scales.clear();
+    q.packed.clear();
+    q.packed.resize(n.div_ceil(2), 0);
+    for lo in (0..n).step_by(GROUP) {
         let hi = (lo + GROUP).min(n);
-        let amax = row[lo..hi].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-        let scale = if amax > 0.0 { amax / QMAX } else { 1.0 };
-        scales.push(scale);
+        let scale = group_scale(&row[lo..hi]);
+        q.scales.push(scale);
         for i in lo..hi {
-            let q = (row[i] / scale).round().clamp(-QMAX, QMAX) as i8;
-            let nib = (q + 8) as u8; // bias to [1, 15]
+            let nib = (quantize_val(row[i], scale) + 8) as u8; // bias to [1, 15]
             if i % 2 == 0 {
-                packed[i / 2] |= nib;
+                q.packed[i / 2] |= nib;
             } else {
-                packed[i / 2] |= nib << 4;
+                q.packed[i / 2] |= nib << 4;
             }
         }
-    }
-    QuantRow {
-        packed,
-        scales,
-        len: n,
     }
 }
 
@@ -66,16 +114,170 @@ pub fn dequantize(q: &QuantRow, out: &mut [f32]) {
 }
 
 /// Round-trip a row through int4 (what the cache stores) — used by the
-/// quantized-eval engine wrapper.
+/// quantized-eval engine wrapper and the decode post-step round-trip.
+///
+/// In place and allocation-free: arithmetically identical to
+/// `dequantize(&quantize(row))` (pinned bitwise by a test), but without
+/// the per-row heap traffic that made quantized decode allocate.
 pub fn roundtrip(row: &mut [f32]) {
-    let q = quantize(row);
-    dequantize(&q, row);
+    let n = row.len();
+    for lo in (0..n).step_by(GROUP) {
+        let hi = (lo + GROUP).min(n);
+        let scale = group_scale(&row[lo..hi]);
+        for v in row[lo..hi].iter_mut() {
+            *v = quantize_val(*v, scale) as f32 * scale;
+        }
+    }
 }
 
 /// Effective bits per element for a given row length.
 pub fn bits_per_element(n: usize) -> f64 {
     let q = n.div_ceil(2) as f64 * 8.0 + n.div_ceil(GROUP) as f64 * 32.0;
     q / n as f64
+}
+
+/// Bytes one packed row of width `w` occupies in a block buffer (see the
+/// module docs for the layout).  Equal to `quantize(row).bytes()` for any
+/// row of that width.
+pub fn row_bytes(w: usize) -> usize {
+    let full = w / GROUP;
+    let rem = w % GROUP;
+    let mut bytes = full * (GROUP / 2 + 4);
+    if rem > 0 {
+        bytes += rem.div_ceil(2) + 4;
+    }
+    bytes
+}
+
+/// Quantize `src` into the packed row layout at `dst` (exactly
+/// `row_bytes(src.len())` bytes).  Allocation-free; the paged cache's
+/// packed write path runs this once per projected row.
+pub fn quantize_row_into(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), row_bytes(src.len()));
+    let mut off = 0usize;
+    for lo in (0..src.len()).step_by(GROUP) {
+        let hi = (lo + GROUP).min(src.len());
+        let glen = hi - lo;
+        let payload = glen.div_ceil(2);
+        let scale = group_scale(&src[lo..hi]);
+        dst[off..off + payload].fill(0);
+        for (j, &v) in src[lo..hi].iter().enumerate() {
+            let nib = (quantize_val(v, scale) + 8) as u8;
+            if j % 2 == 0 {
+                dst[off + j / 2] |= nib;
+            } else {
+                dst[off + j / 2] |= nib << 4;
+            }
+        }
+        dst[off + payload..off + payload + 4].copy_from_slice(&scale.to_le_bytes());
+        off += payload + 4;
+    }
+}
+
+/// Decode one packed row (`row_bytes(out.len())` bytes) back to f32.
+/// Test/debug helper — the attention kernels below never materialize f32
+/// rows.
+pub fn dequantize_row(src: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), row_bytes(out.len()));
+    let w = out.len();
+    let mut off = 0usize;
+    let mut gi = 0usize;
+    while gi < w {
+        let glen = (w - gi).min(GROUP);
+        let payload = glen.div_ceil(2);
+        let scale = f32::from_le_bytes([
+            src[off + payload],
+            src[off + payload + 1],
+            src[off + payload + 2],
+            src[off + payload + 3],
+        ]);
+        for j in 0..glen {
+            let byte = src[off + j / 2];
+            let nib = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            out[gi] = (nib as i32 - 8) as f32 * scale;
+            gi += 1;
+        }
+        off += payload + 4;
+    }
+}
+
+/// Fused `dot_rows_scaled` over packed rows: `rows` holds
+/// `out.len()` consecutive packed rows of width `w`; nibbles are expanded
+/// in-register inside the dot loop, never into an f32 row buffer.
+///
+/// Accumulation mirrors `tensor::ops::dot` per row (4 partial sums over
+/// the 4-aligned prefix, sequential tail, `acc + s0 + s1 + s2 + s3`), so
+/// the result is **bitwise** equal to dequantizing each row and calling
+/// `tensor::ops::dot_rows_scaled` — the packed attention path inherits the
+/// scalar path's bit-identity oracle instead of an error bound.
+pub fn dot_rows_scaled_q4(q: &[f32], rows: &[u8], w: usize, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), w);
+    let rb = row_bytes(w);
+    debug_assert_eq!(rows.len(), rb * out.len());
+    let quad = (w / 4) * 4;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &rows[r * rb..(r + 1) * rb];
+        let mut sums = [0.0f32; 4];
+        let mut acc = 0.0f32;
+        let mut off = 0usize;
+        let mut gi = 0usize;
+        while gi < w {
+            let glen = (w - gi).min(GROUP);
+            let payload = glen.div_ceil(2);
+            let gscale = f32::from_le_bytes([
+                row[off + payload],
+                row[off + payload + 1],
+                row[off + payload + 2],
+                row[off + payload + 3],
+            ]);
+            for j in 0..glen {
+                let byte = row[off + j / 2];
+                let nib = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                let v = (nib as i32 - 8) as f32 * gscale;
+                let p = q[gi] * v;
+                if gi < quad {
+                    sums[gi % 4] += p;
+                } else {
+                    acc += p;
+                }
+                gi += 1;
+            }
+            off += payload + 4;
+        }
+        *o = (acc + sums[0] + sums[1] + sums[2] + sums[3]) * scale;
+    }
+}
+
+/// Fused `axpy_rows` over packed rows: `ctx[j] += weights[r] * row_r[j]`
+/// with the nibble expansion in-register.  Element-wise sequential, so
+/// bitwise equal to dequantize-then-`tensor::ops::axpy_rows`.
+pub fn axpy_rows_q4(weights: &[f32], rows: &[u8], w: usize, ctx: &mut [f32]) {
+    let rb = row_bytes(w);
+    debug_assert_eq!(rows.len(), rb * weights.len());
+    debug_assert_eq!(ctx.len(), w);
+    for (r, &wt) in weights.iter().enumerate() {
+        let row = &rows[r * rb..(r + 1) * rb];
+        let mut off = 0usize;
+        let mut gi = 0usize;
+        while gi < w {
+            let glen = (w - gi).min(GROUP);
+            let payload = glen.div_ceil(2);
+            let gscale = f32::from_le_bytes([
+                row[off + payload],
+                row[off + payload + 1],
+                row[off + payload + 2],
+                row[off + payload + 3],
+            ]);
+            for j in 0..glen {
+                let byte = row[off + j / 2];
+                let nib = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                let v = (nib as i32 - 8) as f32 * gscale;
+                ctx[gi] += wt * v;
+                gi += 1;
+            }
+            off += payload + 4;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -145,5 +347,176 @@ mod tests {
         for w in back.windows(2) {
             assert!(w[0] <= w[1] + 1e-6);
         }
+    }
+
+    /// Random row of width `n` with occasional zeros and larger values.
+    fn random_row(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                if i % 11 == 0 {
+                    0.0
+                } else {
+                    rng.normal_f32() * 3.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn inplace_roundtrip_is_bitwise_quantize_dequantize() {
+        // The allocation-free round-trip must not change quantized-decode
+        // numerics: pin it bitwise to the allocating two-step version
+        // across widths incl. non-GROUP multiples.
+        let mut rng = Rng::new(2);
+        for n in [1usize, 6, 31, 32, 33, 64, 65, 96, 100] {
+            let row = random_row(&mut rng, n);
+            let q = quantize(&row);
+            let mut two_step = vec![0.0f32; n];
+            dequantize(&q, &mut two_step);
+            let mut in_place = row.clone();
+            roundtrip(&mut in_place);
+            for i in 0..n {
+                assert_eq!(
+                    in_place[i].to_bits(),
+                    two_step[i].to_bits(),
+                    "n={n} i={i}: {} vs {}",
+                    in_place[i],
+                    two_step[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_into_reuses_and_matches() {
+        let mut rng = Rng::new(3);
+        let mut scratch = QuantRow {
+            packed: Vec::new(),
+            scales: Vec::new(),
+            len: 0,
+        };
+        for n in [40usize, 6, 33, 64] {
+            let row = random_row(&mut rng, n);
+            quantize_into(&row, &mut scratch);
+            assert_eq!(scratch, quantize(&row), "n={n}");
+        }
+    }
+
+    #[test]
+    fn width_not_multiple_of_group_round_trips() {
+        // Odd tail group, incl. odd glen (trailing half-filled byte).
+        let mut rng = Rng::new(4);
+        for n in [1usize, 5, 31, 33, 45, 63, 95] {
+            let row = random_row(&mut rng, n);
+            let mut packed = vec![0u8; row_bytes(n)];
+            quantize_row_into(&row, &mut packed);
+            let mut back = vec![0.0f32; n];
+            dequantize_row(&packed, &mut back);
+            let mut expect = row.clone();
+            roundtrip(&mut expect);
+            for i in 0..n {
+                assert_eq!(back[i].to_bits(), expect[i].to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_group_amid_nonzero_groups() {
+        // Group 1 of 3 is all zeros: its scale must be the 1.0 sentinel
+        // (not 0.0/QMAX), it must decode to exact zeros, and its
+        // neighbours must be unaffected.
+        let mut rng = Rng::new(5);
+        let mut row = random_row(&mut rng, 3 * GROUP);
+        row[GROUP..2 * GROUP].fill(0.0);
+        let q = quantize(&row);
+        assert_eq!(q.scales[1], 1.0);
+        let mut back = vec![1.0f32; row.len()];
+        dequantize(&q, &mut back);
+        assert!(back[GROUP..2 * GROUP].iter().all(|&v| v == 0.0));
+        assert!(back[..GROUP].iter().any(|&v| v != 0.0));
+        // Packed layout agrees.
+        let mut packed = vec![0u8; row_bytes(row.len())];
+        quantize_row_into(&row, &mut packed);
+        let mut back2 = vec![1.0f32; row.len()];
+        dequantize_row(&packed, &mut back2);
+        assert_eq!(back, back2);
+    }
+
+    #[test]
+    fn bits_per_element_matches_actual_bytes() {
+        // Propcheck: the documented bits/element figure must be exactly
+        // what a QuantRow (and the packed row layout) occupy, and stay at
+        // or under the documented 5-bit bound for GROUP-aligned widths.
+        let mut rng = Rng::new(6);
+        for n in [1usize, 2, 7, 31, 32, 33, 64, 96, 100, 256, 257] {
+            let row = random_row(&mut rng, n);
+            let q = quantize(&row);
+            let actual_bits = q.bytes() as f64 * 8.0;
+            assert!(
+                (bits_per_element(n) * n as f64 - actual_bits).abs() < 1e-9,
+                "n={n}: bpe says {} bits, QuantRow holds {actual_bits}",
+                bits_per_element(n) * n as f64
+            );
+            assert_eq!(q.bytes(), row_bytes(n), "packed layout size n={n}");
+            if n % GROUP == 0 {
+                assert!(bits_per_element(n) <= 5.0 + 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_q4_kernels_match_dequantized_scalar_bitwise() {
+        use crate::tensor::ops;
+        let mut rng = Rng::new(7);
+        for (n_rows, w) in [(1usize, 6usize), (3, 8), (5, 32), (4, 33), (2, 64), (3, 95)] {
+            let rb = row_bytes(w);
+            let mut rows = vec![0u8; n_rows * rb];
+            let mut deq = vec![0.0f32; n_rows * w];
+            for r in 0..n_rows {
+                let row = random_row(&mut rng, w);
+                quantize_row_into(&row, &mut rows[r * rb..(r + 1) * rb]);
+                dequantize_row(&rows[r * rb..(r + 1) * rb], &mut deq[r * w..(r + 1) * w]);
+            }
+            let q: Vec<f32> = (0..w).map(|_| rng.normal_f32()).collect();
+            let weights: Vec<f32> = (0..n_rows).map(|_| rng.normal_f32()).collect();
+            let scale = 0.173f32;
+
+            let mut fused = vec![0.0f32; n_rows];
+            dot_rows_scaled_q4(&q, &rows, w, scale, &mut fused);
+            let mut reference = vec![0.0f32; n_rows];
+            ops::dot_rows_scaled(&q, &deq, w, scale, &mut reference);
+            for r in 0..n_rows {
+                assert_eq!(
+                    fused[r].to_bits(),
+                    reference[r].to_bits(),
+                    "dot rows={n_rows} w={w} r={r}: {} vs {}",
+                    fused[r],
+                    reference[r]
+                );
+            }
+
+            let mut ctx_fused: Vec<f32> = (0..w).map(|_| rng.normal_f32()).collect();
+            let mut ctx_ref = ctx_fused.clone();
+            axpy_rows_q4(&weights, &rows, w, &mut ctx_fused);
+            ops::axpy_rows(&weights, &deq, w, &mut ctx_ref);
+            for j in 0..w {
+                assert_eq!(
+                    ctx_fused[j].to_bits(),
+                    ctx_ref[j].to_bits(),
+                    "axpy rows={n_rows} w={w} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zeroed_packed_buffer_decodes_to_zero_rows() {
+        // Blocks are zeroed on allocation; a never-written packed row must
+        // read as a zero row (scale 0.0, nibbles biased at 0 -> -8 * 0.0).
+        let w = 45;
+        let packed = vec![0u8; row_bytes(w)];
+        let mut out = vec![1.0f32; w];
+        dequantize_row(&packed, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
     }
 }

@@ -16,8 +16,27 @@ use anyhow::Result;
 
 use crate::coordinator::scheduler::Backend;
 use crate::coordinator::RequestId;
-use crate::kvcache::{KvLayerView, PagedKvCache};
+use crate::kvcache::{KvLayerView, KvStorageMode, PagedKvCache};
 use crate::model::{BatchWorkspace, Engine, PrefillWorkspace};
+use crate::tensor::simd::KernelPath;
+
+/// Configuration threaded into [`RustBackend::with_config`]: the kernel
+/// dispatch path and the optional int4 round-trip of cached latent rows.
+///
+/// [`KernelPath::FusedInt4`] additionally selects nibble-packed int4 KV
+/// storage ([`KvStorageMode::PackedInt4`]) via
+/// [`Backend::kv_storage_mode`] — but only for methods that never
+/// reconstruct K/V (baseline, RAP); SVD/PaLU read f32 latent rows during
+/// reconstruction and fall back to f32 storage with wide kernels.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BackendConfig {
+    /// Kernel implementations the engine dispatches every
+    /// matmul/dot/axpy call through.
+    pub kernel_path: KernelPath,
+    /// int4 round-trip newly written latent rows (f32 storage only;
+    /// packed storage quantizes on write and ignores this).
+    pub quantize_kv: bool,
+}
 
 pub struct RustBackend<'a> {
     pub engine: &'a Engine,
@@ -39,6 +58,10 @@ pub struct RustBackend<'a> {
     /// *after* the step (a decode step reads its own just-written row
     /// full-precision, earlier rows quantized).
     pub quantize_kv: bool,
+    /// Config captured by [`RustBackend::with_config`]; plain
+    /// [`RustBackend::new`] keeps the default (f32 storage, whatever
+    /// kernel path the engine picked up from `RAP_KERNEL_PATH`).
+    config: BackendConfig,
 }
 
 impl<'a> RustBackend<'a> {
@@ -50,7 +73,23 @@ impl<'a> RustBackend<'a> {
             s_max,
             sessions: BTreeSet::new(),
             quantize_kv: false,
+            config: BackendConfig::default(),
         }
+    }
+
+    /// Build a backend with an explicit [`BackendConfig`], overriding the
+    /// engine's env-derived kernel path.  Takes the engine mutably for the
+    /// override, then holds it shared like [`RustBackend::new`].
+    pub fn with_config(
+        engine: &'a mut Engine,
+        s_max: usize,
+        config: BackendConfig,
+    ) -> RustBackend<'a> {
+        engine.set_kernel_path(config.kernel_path);
+        let mut backend = RustBackend::new(engine, s_max);
+        backend.quantize_kv = config.quantize_kv;
+        backend.config = config;
+        backend
     }
 
     pub fn session_count(&self) -> usize {
@@ -62,6 +101,11 @@ impl<'a> RustBackend<'a> {
     /// round-trip (prefill quantizes inside the engine, pre-attention).
     fn quantize_range(&self, kv: &mut PagedKvCache, sid: RequestId, pos0: usize, n: usize) {
         if !self.quantize_kv || n == 0 {
+            return;
+        }
+        if kv.storage_mode().is_packed() {
+            // Packed rows were already quantized on write, and the f32 row
+            // accessors the round-trip uses do not exist in this mode.
             return;
         }
         let (pages, store) = kv.tables_and_ptrs().expect("storage-backed kv");
@@ -86,6 +130,15 @@ impl<'a> Backend for RustBackend<'a> {
 
     fn wants_paged_storage(&self) -> bool {
         true
+    }
+
+    fn kv_storage_mode(&self) -> KvStorageMode {
+        let m = self.engine.spec.method;
+        if self.config.kernel_path.fuses_int4() && !m.reconstructs_k() && !m.reconstructs_v() {
+            KvStorageMode::PackedInt4
+        } else {
+            KvStorageMode::F32
+        }
     }
 
     fn supports_chunked_prefill(&self) -> bool {

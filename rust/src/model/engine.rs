@@ -50,19 +50,32 @@
 //! the original token-by-token prefill as the bitwise oracle
 //! (`tests/prefill.rs`) and the `benches/attention_latency.rs` /
 //! `BENCH_prefill.json` baseline.
+//!
+//! ## Kernel paths
+//!
+//! Every dot/axpy/vecmat/GEMM call — hot paths *and* the preserved
+//! reference oracles — routes through `tensor::simd` dispatch on the
+//! engine's [`KernelPath`] (`RAP_KERNEL_PATH`): `scalar` keeps the seed's
+//! bit-exact kernels, `wide` uses explicit 8-lane f32 kernels (AVX2+FMA
+//! when available), and `fused-int4` additionally attends directly over
+//! nibble-packed int4 cache blocks via `kvcache::quant`'s fused kernels.
+//! Both sides of every bitwise oracle dispatch identically, so those
+//! propchecks hold under any forced path; Wide/FusedInt4 accuracy is
+//! instead bounded by the error-bound oracle in `tests/kernels.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
 use crate::config::{Method, ModelConfig, VariantSpec};
-use crate::kvcache::{CacheShape, KvLayerView, PagedKvCache};
+use crate::kvcache::{quant, CacheShape, KvLayerView, PagedKvCache};
 use crate::model::weights::Weights;
 use crate::rap::plan::LayerPlan;
 use crate::rope::{apply_full, apply_full_tokens};
-use crate::tensor::ops::{
-    add_inplace, axpy_rows, dot, dot_rows_scaled, kernel_threads, matmul_rows_into, rms_norm,
-    silu, softmax_inplace, vecmat, vecmat_into,
+use crate::tensor::ops::{add_inplace, kernel_threads, rms_norm, silu, softmax_inplace};
+use crate::tensor::simd::{
+    axpy_path, axpy_rows_path, dot_path, dot_rows_scaled_path, matmul_rows_into_path,
+    vecmat_into_path, vecmat_path, KernelPath,
 };
 use crate::tensor::Tensor;
 use crate::util::threadpool::scoped_chunks_indexed;
@@ -481,6 +494,11 @@ pub struct Engine {
     final_norm: Tensor,
     layers: Vec<Layer>,
     pub flops: Flops,
+    /// Kernel implementations every matmul/dot/axpy call site routes
+    /// through — hot paths AND the preserved reference oracles, so the
+    /// existing bitwise propchecks compare like against like under any
+    /// forced path.  Defaults from `RAP_KERNEL_PATH` (scalar when unset).
+    kernel_path: KernelPath,
 }
 
 fn split_heads(b_k: &Tensor, n_heads: usize) -> Vec<Tensor> {
@@ -553,7 +571,19 @@ impl Engine {
             cfg,
             spec,
             flops: Flops::default(),
+            kernel_path: KernelPath::from_env(),
         })
+    }
+
+    /// The kernel path all engine arithmetic is dispatched through.
+    pub fn kernel_path(&self) -> KernelPath {
+        self.kernel_path
+    }
+
+    /// Force a kernel path (tests and the serving `BackendConfig`;
+    /// production engines inherit `RAP_KERNEL_PATH` at construction).
+    pub fn set_kernel_path(&mut self, path: KernelPath) {
+        self.kernel_path = path;
     }
 
     /// Width of one rotated Q row at layer `l` (latent for RAP, full head
@@ -593,7 +623,7 @@ impl Engine {
     fn vecmat_counted_into(&self, x: &[f32], w: &Tensor, out: &mut [f32]) {
         let (k, n) = w.dims2();
         self.flops.add(2 * (k * n) as u64);
-        vecmat_into(x, w, out);
+        vecmat_into_path(self.kernel_path, x, w, out);
     }
 
     fn embed_into(&self, token: u8, x: &mut [f32]) {
@@ -608,7 +638,7 @@ impl Engine {
         // tied embedding head: logits = h @ tok_emb^T
         self.flops.add(2 * (d * v) as u64);
         for t in 0..v {
-            logits[t] = dot(h, &self.tok_emb.data[t * d..(t + 1) * d]);
+            logits[t] = dot_path(self.kernel_path, h, &self.tok_emb.data[t * d..(t + 1) * d]);
         }
     }
 
@@ -638,11 +668,10 @@ impl Engine {
                 self.vecmat_counted_into(h, wk, kl);
                 self.vecmat_counted_into(h, wv, vl);
                 for hd in 0..cfg.n_kv_heads {
-                    let krow = kv.k_row_mut(hd, pos);
-                    krow.copy_from_slice(&kl[hd * dh..(hd + 1) * dh]);
+                    let krow = &mut kl[hd * dh..(hd + 1) * dh];
                     apply_full(krow, pos, cfg.pairing, cfg.rope_theta);
-                    kv.v_row_mut(hd, pos)
-                        .copy_from_slice(&vl[hd * dh..(hd + 1) * dh]);
+                    kv.write_k_row(hd, pos, krow);
+                    kv.write_v_row(hd, pos, &vl[hd * dh..(hd + 1) * dh]);
                 }
                 q_rows.copy_from_slice(q);
                 for hq in 0..cfg.n_heads {
@@ -664,10 +693,8 @@ impl Engine {
                 self.vecmat_counted_into(h, a_k, kl);
                 self.vecmat_counted_into(h, a_v, vl);
                 for hd in 0..cfg.n_kv_heads {
-                    kv.k_row_mut(hd, pos)
-                        .copy_from_slice(&kl[hd * kw..(hd + 1) * kw]);
-                    kv.v_row_mut(hd, pos)
-                        .copy_from_slice(&vl[hd * vw..(hd + 1) * vw]);
+                    kv.write_k_row(hd, pos, &kl[hd * kw..(hd + 1) * kw]);
+                    kv.write_v_row(hd, pos, &vl[hd * vw..(hd + 1) * vw]);
                 }
                 q_rows.copy_from_slice(q);
                 for hq in 0..cfg.n_heads {
@@ -690,13 +717,12 @@ impl Engine {
                 self.vecmat_counted_into(h, a_k, kl);
                 self.vecmat_counted_into(h, a_v, vl);
                 for hd in 0..cfg.n_kv_heads {
-                    let krow = kv.k_row_mut(hd, pos);
-                    krow.copy_from_slice(&kl[hd * kw..(hd + 1) * kw]);
+                    let krow = &mut kl[hd * kw..(hd + 1) * kw];
                     // Index-aware RoPE directly on the latent — the fused
                     // hot path (no reconstruction, no gather).
                     plan.k_table.apply_fused(hd, krow, pos);
-                    kv.v_row_mut(hd, pos)
-                        .copy_from_slice(&vl[hd * vw..(hd + 1) * vw]);
+                    kv.write_k_row(hd, pos, krow);
+                    kv.write_v_row(hd, pos, &vl[hd * vw..(hd + 1) * vw]);
                 }
                 q_rows.copy_from_slice(q);
                 for hq in 0..cfg.n_heads {
@@ -749,16 +775,45 @@ impl Engine {
             _ => (false, false),
         };
 
+        // Packed-int4 caches dequantize in-register inside the fused q4
+        // kernels; the f32 rows are never materialized.
+        let packed = kv.packed_q4();
+        let (krb, vrb) = if packed {
+            (quant::row_bytes(kw), quant::row_bytes(vw))
+        } else {
+            (0, 0)
+        };
+
         for hq in 0..cfg.n_heads {
             let hk = hq / group;
             let q = &q_rows[hq * qw..(hq + 1) * qw];
             if use_rk {
-                dot_rows_scaled(q, &recon_k[hk * s * dh..(hk + 1) * s * dh], dh, scale, &mut scores[..s]);
+                dot_rows_scaled_path(
+                    self.kernel_path,
+                    q,
+                    &recon_k[hk * s * dh..(hk + 1) * s * dh],
+                    dh,
+                    scale,
+                    &mut scores[..s],
+                );
                 self.flops.add(2 * (s * dh) as u64);
+            } else if packed {
+                kv.for_k_runs_q4(hk, s, |t0, rows| {
+                    let n = rows.len() / krb;
+                    quant::dot_rows_scaled_q4(q, rows, kw, scale, &mut scores[t0..t0 + n]);
+                });
+                self.flops.add(2 * (s * kw) as u64);
             } else {
                 kv.for_k_runs(hk, s, |t0, rows| {
                     let n = rows.len() / kw;
-                    dot_rows_scaled(q, rows, kw, scale, &mut scores[t0..t0 + n]);
+                    dot_rows_scaled_path(
+                        self.kernel_path,
+                        q,
+                        rows,
+                        kw,
+                        scale,
+                        &mut scores[t0..t0 + n],
+                    );
                 });
                 self.flops.add(2 * (s * kw) as u64);
             }
@@ -766,11 +821,22 @@ impl Engine {
             let c = &mut ctx[hq * cw..(hq + 1) * cw];
             c.fill(0.0);
             if use_rv {
-                axpy_rows(&scores[..s], &recon_v[hk * s * dh..(hk + 1) * s * dh], dh, c);
+                axpy_rows_path(
+                    self.kernel_path,
+                    &scores[..s],
+                    &recon_v[hk * s * dh..(hk + 1) * s * dh],
+                    dh,
+                    c,
+                );
+            } else if packed {
+                kv.for_v_runs_q4(hk, s, |t0, rows| {
+                    let n = rows.len() / vrb;
+                    quant::axpy_rows_q4(&scores[t0..t0 + n], rows, vw, c);
+                });
             } else {
                 kv.for_v_runs(hk, s, |t0, rows| {
                     let n = rows.len() / vw;
-                    axpy_rows(&scores[t0..t0 + n], rows, vw, c);
+                    axpy_rows_path(self.kernel_path, &scores[t0..t0 + n], rows, vw, c);
                 });
             }
             self.flops.add(2 * (s * cw) as u64);
@@ -800,7 +866,7 @@ impl Engine {
                 dst.fill(0.0);
                 for (p, &lv) in lat.iter().enumerate().take(w) {
                     if lv != 0.0 {
-                        crate::tensor::ops::axpy(lv, bw.row(p), dst);
+                        axpy_path(self.kernel_path, lv, bw.row(p), dst);
                     }
                 }
             }
@@ -939,6 +1005,14 @@ impl Engine {
         let b = entries.len();
         if b == 0 {
             return Ok(());
+        }
+        if kv.storage_mode().is_packed()
+            && (self.spec.method.reconstructs_k() || self.spec.method.reconstructs_v())
+        {
+            bail!(
+                "packed-int4 KV storage cannot back {:?}: reconstruction reads f32 latent rows",
+                self.spec.method
+            );
         }
         batch.ensure(self, b);
         for (i, &(sid, _, pos)) in entries.iter().enumerate() {
@@ -1089,20 +1163,30 @@ impl Engine {
         }
 
         // Write the chunk's K/V rows into the cache in one pass per head
-        // (run-by-run through the page table for the paged layout).
-        for hd in 0..hkv {
-            kv.for_k_runs_mut(hd, pos0, n, |t0, rows| {
-                for (j, dst) in rows.chunks_exact_mut(kw).enumerate() {
-                    let i = t0 - pos0 + j;
-                    dst.copy_from_slice(&kl[(i * hkv + hd) * kw..(i * hkv + hd + 1) * kw]);
+        // (run-by-run through the page table for the paged layout).  Packed
+        // caches quantize each row into its nibble-packed slot on write.
+        if kv.packed_q4() {
+            for hd in 0..hkv {
+                for i in 0..n {
+                    kv.write_k_row(hd, pos0 + i, &kl[(i * hkv + hd) * kw..(i * hkv + hd + 1) * kw]);
+                    kv.write_v_row(hd, pos0 + i, &vl[(i * hkv + hd) * vw..(i * hkv + hd + 1) * vw]);
                 }
-            });
-            kv.for_v_runs_mut(hd, pos0, n, |t0, rows| {
-                for (j, dst) in rows.chunks_exact_mut(vw).enumerate() {
-                    let i = t0 - pos0 + j;
-                    dst.copy_from_slice(&vl[(i * hkv + hd) * vw..(i * hkv + hd + 1) * vw]);
-                }
-            });
+            }
+        } else {
+            for hd in 0..hkv {
+                kv.for_k_runs_mut(hd, pos0, n, |t0, rows| {
+                    for (j, dst) in rows.chunks_exact_mut(kw).enumerate() {
+                        let i = t0 - pos0 + j;
+                        dst.copy_from_slice(&kl[(i * hkv + hd) * kw..(i * hkv + hd + 1) * kw]);
+                    }
+                });
+                kv.for_v_runs_mut(hd, pos0, n, |t0, rows| {
+                    for (j, dst) in rows.chunks_exact_mut(vw).enumerate() {
+                        let i = t0 - pos0 + j;
+                        dst.copy_from_slice(&vl[(i * hkv + hd) * vw..(i * hkv + hd + 1) * vw]);
+                    }
+                });
+            }
         }
 
         // Quantized-KV mode: int4 round-trip the freshly written rows
@@ -1110,17 +1194,18 @@ impl Engine {
         // Every query row then sees only round-tripped K/V — including the
         // rows of its own chunk — so prefill numerics are invariant to the
         // chunk partition (each row's round-trip depends on that row
-        // alone, never on where a chunk boundary fell).
-        if quantize_kv {
+        // alone, never on where a chunk boundary fell).  Packed storage
+        // already quantized on write, so the round-trip would be a no-op.
+        if quantize_kv && !kv.packed_q4() {
             for hd in 0..hkv {
                 kv.for_k_runs_mut(hd, pos0, n, |_, rows| {
                     for row in rows.chunks_exact_mut(kw) {
-                        crate::kvcache::quant::roundtrip(row);
+                        quant::roundtrip(row);
                     }
                 });
                 kv.for_v_runs_mut(hd, pos0, n, |_, rows| {
                     for row in rows.chunks_exact_mut(vw) {
-                        crate::kvcache::quant::roundtrip(row);
+                        quant::roundtrip(row);
                     }
                 });
             }
@@ -1148,6 +1233,12 @@ impl Engine {
         let group = cfg.group_size();
         let scale = 1.0 / (dh as f32).sqrt();
         let kv_r: &L = kv;
+        let packed = kv_r.packed_q4();
+        let (krb, vrb) = if packed {
+            (quant::row_bytes(kw), quant::row_bytes(vw))
+        } else {
+            (0, 0)
+        };
         let q_r: &[f32] = &q[..n * h_n * qw];
         let recon_k_r: &[f32] = recon_k;
         let recon_v_r: &[f32] = recon_v;
@@ -1168,7 +1259,8 @@ impl Engine {
                     let hk = hq / group;
                     let qrow = &q_r[(i * h_n + hq) * qw..(i * h_n + hq + 1) * qw];
                     if use_rk {
-                        dot_rows_scaled(
+                        dot_rows_scaled_path(
+                            self.kernel_path,
                             qrow,
                             &recon_k_r[hk * s_end * dh..hk * s_end * dh + s * dh],
                             dh,
@@ -1176,10 +1268,23 @@ impl Engine {
                             &mut sc[..s],
                         );
                         self.flops.add(2 * (s * dh) as u64);
+                    } else if packed {
+                        kv_r.for_k_runs_q4(hk, s, |t0, rows| {
+                            let m = rows.len() / krb;
+                            quant::dot_rows_scaled_q4(qrow, rows, kw, scale, &mut sc[t0..t0 + m]);
+                        });
+                        self.flops.add(2 * (s * kw) as u64);
                     } else {
                         kv_r.for_k_runs(hk, s, |t0, rows| {
                             let m = rows.len() / kw;
-                            dot_rows_scaled(qrow, rows, kw, scale, &mut sc[t0..t0 + m]);
+                            dot_rows_scaled_path(
+                                self.kernel_path,
+                                qrow,
+                                rows,
+                                kw,
+                                scale,
+                                &mut sc[t0..t0 + m],
+                            );
                         });
                         self.flops.add(2 * (s * kw) as u64);
                     }
@@ -1187,11 +1292,22 @@ impl Engine {
                     let c = &mut ctx_i[hq * cw..(hq + 1) * cw];
                     c.fill(0.0);
                     if use_rv {
-                        axpy_rows(&sc[..s], &recon_v_r[hk * s_end * dh..hk * s_end * dh + s * dh], dh, c);
+                        axpy_rows_path(
+                            self.kernel_path,
+                            &sc[..s],
+                            &recon_v_r[hk * s_end * dh..hk * s_end * dh + s * dh],
+                            dh,
+                            c,
+                        );
+                    } else if packed {
+                        kv_r.for_v_runs_q4(hk, s, |t0, rows| {
+                            let m = rows.len() / vrb;
+                            quant::axpy_rows_q4(&sc[t0..t0 + m], rows, vw, c);
+                        });
                     } else {
                         kv_r.for_v_runs(hk, s, |t0, rows| {
                             let m = rows.len() / vw;
-                            axpy_rows(&sc[t0..t0 + m], rows, vw, c);
+                            axpy_rows_path(self.kernel_path, &sc[t0..t0 + m], rows, vw, c);
                         });
                     }
                     self.flops.add(2 * (s * cw) as u64);
@@ -1225,7 +1341,7 @@ impl Engine {
     fn gemm_counted(&self, a: &[f32], w: &Tensor, out: &mut [f32], threads: usize) {
         let (k, nn) = w.dims2();
         self.flops.add(2 * ((a.len() / k) * k * nn) as u64);
-        matmul_rows_into(a, w, out, threads);
+        matmul_rows_into_path(self.kernel_path, a, w, out, threads);
     }
 
     /// Blocked prefill of `tokens` at positions `[pos0, pos0 + len)` over a
@@ -1265,8 +1381,8 @@ impl Engine {
     /// KV-cache — the serving path behind `Backend::prefill_chunk`.  The
     /// session's reservation must already cover `pos0 + tokens.len()` (the
     /// coordinator reserves a request's full budget at admission).  Zero
-    /// heap allocations once `ws` has seen the chunk size (unless
-    /// `quantize_kv`, whose int4 round-trips allocate in `kvcache::quant`).
+    /// heap allocations once `ws` has seen the chunk size — including under
+    /// `quantize_kv`, whose int4 round-trips run in place.
     ///
     /// With `quantize_kv` the chunk's latent rows are round-tripped
     /// through int4 immediately after they are written and before any
@@ -1285,6 +1401,14 @@ impl Engine {
         let n = tokens.len();
         if n == 0 {
             return Ok(());
+        }
+        if kv.storage_mode().is_packed()
+            && (self.spec.method.reconstructs_k() || self.spec.method.reconstructs_v())
+        {
+            bail!(
+                "packed-int4 KV storage cannot back {:?}: reconstruction reads f32 latent rows",
+                self.spec.method
+            );
         }
         if pos0 + n > ws.s_max {
             bail!("session {session}: chunk end {} exceeds workspace s_max {}", pos0 + n, ws.s_max);
@@ -1432,7 +1556,7 @@ impl Engine {
     fn vecmat_counted(&self, x: &[f32], w: &Tensor) -> Vec<f32> {
         let (k, n) = w.dims2();
         self.flops.add(2 * (k * n) as u64);
-        vecmat(x, w)
+        vecmat_path(self.kernel_path, x, w)
     }
 
     fn project_token_ref(
@@ -1530,7 +1654,7 @@ impl Engine {
                 let dst = &mut rows[t * dh..(t + 1) * dh];
                 for (p, &lv) in lat.iter().enumerate().take(w) {
                     if lv != 0.0 {
-                        crate::tensor::ops::axpy(lv, bw.row(p), dst);
+                        axpy_path(self.kernel_path, lv, bw.row(p), dst);
                     }
                 }
             }
@@ -1584,14 +1708,15 @@ impl Engine {
                 Some(k_full) => {
                     let krows = &k_full[hk];
                     for t in 0..s {
-                        scores[t] = dot(q, &krows[t * dh..(t + 1) * dh]) * scale;
+                        scores[t] =
+                            dot_path(self.kernel_path, q, &krows[t * dh..(t + 1) * dh]) * scale;
                     }
                     self.flops.add(2 * (s * dh) as u64);
                 }
                 None => {
                     let w = cache.k_width;
                     for t in 0..s {
-                        scores[t] = dot(q, cache.k_row(hk, t)) * scale;
+                        scores[t] = dot_path(self.kernel_path, q, cache.k_row(hk, t)) * scale;
                     }
                     self.flops.add(2 * (s * w) as u64);
                 }
@@ -1606,12 +1731,17 @@ impl Engine {
                 Some(v_full) => {
                     let vrows = &v_full[hk];
                     for t in 0..s {
-                        crate::tensor::ops::axpy(scores[t], &vrows[t * dh..(t + 1) * dh], &mut ctx);
+                        axpy_path(
+                            self.kernel_path,
+                            scores[t],
+                            &vrows[t * dh..(t + 1) * dh],
+                            &mut ctx,
+                        );
                     }
                 }
                 None => {
                     for t in 0..s {
-                        crate::tensor::ops::axpy(scores[t], cache.v_row(hk, t), &mut ctx);
+                        axpy_path(self.kernel_path, scores[t], cache.v_row(hk, t), &mut ctx);
                     }
                 }
             }
@@ -1662,7 +1792,7 @@ impl Engine {
         self.flops.add(2 * (d * v) as u64);
         let mut logits = vec![0.0f32; v];
         for t in 0..v {
-            logits[t] = dot(&hn, &self.tok_emb.data[t * d..(t + 1) * d]);
+            logits[t] = dot_path(self.kernel_path, &hn, &self.tok_emb.data[t * d..(t + 1) * d]);
         }
         logits
     }

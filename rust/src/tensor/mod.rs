@@ -9,6 +9,7 @@
 
 pub mod linalg;
 pub mod ops;
+pub mod simd;
 
 pub use linalg::{cholesky, solve_lower_triangular, svd_thin};
 

@@ -1,0 +1,424 @@
+//! Selectable kernel paths: 8-lane f32 wide variants of the hot engine
+//! kernels (`dot`, `axpy`, `dot_rows_scaled`, `axpy_rows`, `vecmat_into`,
+//! `matmul_rows_into`), runtime-dispatched to AVX2/FMA on x86_64 with a
+//! portable 8-accumulator fallback.
+//!
+//! Contract (see ROADMAP "Bit-identity discipline"): the scalar kernels in
+//! `tensor::ops` remain the preserved bit-identity oracle.  The wide paths
+//! change accumulation order (8 partial sums + a fixed pairwise horizontal
+//! reduction; FMA fuses the multiply-add rounding on AVX2), so they are
+//! covered by an explicit error-bound oracle instead (`tests/kernels.rs`:
+//! per-logit abs/rel tolerance vs the scalar path plus temperature-0
+//! argmax agreement).  Within one process the dispatch decision is fixed
+//! (`OnceLock`), so a given path is self-consistent: per-row wide dots are
+//! bitwise equal to the wide single-vector dot, which the engine's
+//! ref-vs-blocked propchecks rely on when a wide path is forced via
+//! `RAP_KERNEL_PATH`.
+
+use std::sync::OnceLock;
+
+use crate::tensor::ops;
+use crate::tensor::Tensor;
+use crate::util::threadpool::scoped_chunks;
+
+/// Which kernel implementations the engine routes through.
+///
+/// `Scalar` is the preserved seed oracle; `Wide` uses the f32x8 kernels in
+/// this module; `FusedInt4` uses the same wide f32 kernels *and* (when the
+/// cache is built with `KvStorageMode::PackedInt4`) reads nibble-packed KV
+/// rows directly via `kvcache::quant::{dot_rows_scaled_q4, axpy_rows_q4}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    #[default]
+    Scalar,
+    Wide,
+    FusedInt4,
+}
+
+impl KernelPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Wide => "wide",
+            KernelPath::FusedInt4 => "fused-int4",
+        }
+    }
+
+    /// Parse a path name (`RAP_KERNEL_PATH` values); `None` for unknown.
+    pub fn parse(s: &str) -> Option<KernelPath> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelPath::Scalar),
+            "wide" => Some(KernelPath::Wide),
+            "fused-int4" | "fused_int4" | "fusedint4" => Some(KernelPath::FusedInt4),
+            _ => None,
+        }
+    }
+
+    /// Process-wide default from `RAP_KERNEL_PATH` (read once; unset or
+    /// unrecognized values fall back to `Scalar`).
+    pub fn from_env() -> KernelPath {
+        static PATH: OnceLock<KernelPath> = OnceLock::new();
+        *PATH.get_or_init(|| {
+            std::env::var("RAP_KERNEL_PATH")
+                .ok()
+                .and_then(|v| KernelPath::parse(&v))
+                .unwrap_or_default()
+        })
+    }
+
+    /// Does this path read packed-int4 KV rows in-register?
+    pub fn fuses_int4(self) -> bool {
+        self == KernelPath::FusedInt4
+    }
+}
+
+/// Is the AVX2+FMA fast path available on this machine?  Decided once per
+/// process so every wide call in a run takes the same arm.
+pub fn avx2_available() -> bool {
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+const LANES: usize = 8;
+
+/// Portable 8-accumulator dot: one partial sum per lane, fixed pairwise
+/// reduction.  Mirrors the AVX2 horizontal-sum tree so both arms agree in
+/// reduction *shape* (not bitwise — FMA differs), keeping the error bound
+/// uniform.
+fn dot_wide_portable(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut lanes = [0.0f32; LANES];
+    for c in 0..chunks {
+        let i = c * LANES;
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += x[i + l] * y[i + l];
+        }
+    }
+    let mut acc = 0.0f32;
+    for i in chunks * LANES..n {
+        acc += x[i] * y[i];
+    }
+    acc + (((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7])))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * LANES;
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        acc = _mm256_fmadd_ps(xv, yv, acc);
+    }
+    // Pairwise horizontal sum: (lo+hi) -> 4 lanes -> 2 -> 1.
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let s4 = _mm_add_ps(lo, hi);
+    let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+    let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 0b01));
+    let mut out = _mm_cvtss_f32(s1);
+    for i in chunks * LANES..n {
+        out += x[i] * y[i];
+    }
+    out
+}
+
+/// Wide dot product (AVX2/FMA when available, portable 8-lane otherwise).
+pub fn dot_wide(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: avx2_available() checked avx2+fma at runtime.
+        return unsafe { dot_avx2(x, y) };
+    }
+    dot_wide_portable(x, y)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx2(a: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let chunks = n / LANES;
+    let av = _mm256_set1_ps(a);
+    for c in 0..chunks {
+        let i = c * LANES;
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(av, xv, yv));
+    }
+    for i in chunks * LANES..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Wide `y += a * x`.  Element-wise, so the portable arm is bitwise equal
+/// to `ops::axpy`; the AVX2 arm fuses the multiply-add rounding.
+pub fn axpy_wide(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: avx2_available() checked avx2+fma at runtime.
+        unsafe { axpy_avx2(a, x, y) };
+        return;
+    }
+    for (yo, &xv) in y.iter_mut().zip(x.iter()) {
+        *yo += a * xv;
+    }
+}
+
+/// Wide `dot_rows_scaled`: per row bitwise equal to `dot_wide(q, row) *
+/// scale`, which the paged-vs-reference propchecks rely on when this path
+/// is forced.
+pub fn dot_rows_scaled_wide(q: &[f32], rows: &[f32], w: usize, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), w);
+    debug_assert_eq!(rows.len() % w, 0);
+    debug_assert_eq!(out.len(), rows.len() / w);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot_wide(q, &rows[r * w..(r + 1) * w]) * scale;
+    }
+}
+
+/// Wide `axpy_rows`: sequential per-row `axpy_wide`, so a blocked call is
+/// bitwise equal to row-at-a-time accumulation on the same path.
+pub fn axpy_rows_wide(weights: &[f32], rows: &[f32], w: usize, ctx: &mut [f32]) {
+    debug_assert_eq!(rows.len() % w, 0);
+    debug_assert_eq!(weights.len(), rows.len() / w);
+    debug_assert_eq!(ctx.len(), w);
+    for (r, &wt) in weights.iter().enumerate() {
+        axpy_wide(wt, &rows[r * w..(r + 1) * w], ctx);
+    }
+}
+
+/// Wide `y = x * B` (B row-major `k x n`): row-axpy accumulation so each
+/// output element is touched by the 8-lane kernels; zero coefficients are
+/// skipped exactly like the scalar tail loop.
+pub fn vecmat_into_wide(x: &[f32], b: &Tensor, y: &mut [f32]) {
+    let (k, n) = b.dims2();
+    assert_eq!(x.len(), k);
+    assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        axpy_wide(xv, &b.data[i * n..(i + 1) * n], y);
+    }
+}
+
+/// Wide allocating vecmat (reference-path convenience).
+pub fn vecmat_wide(x: &[f32], b: &Tensor) -> Vec<f32> {
+    let n = b.dims2().1;
+    let mut y = vec![0.0f32; n];
+    vecmat_into_wide(x, b, &mut y);
+    y
+}
+
+struct OutPtr(*mut f32);
+unsafe impl Sync for OutPtr {}
+
+/// Wide row-blocked GEMM: `out[r] = a_row[r] * B`, rows fanned across the
+/// scoped pool exactly like `ops::matmul_rows_into` (disjoint row ranges
+/// per worker).
+pub fn matmul_rows_into_wide(a: &[f32], b: &Tensor, out: &mut [f32], threads: usize) {
+    let (k, n) = b.dims2();
+    debug_assert_eq!(a.len() % k, 0);
+    let m = a.len() / k;
+    debug_assert_eq!(out.len(), m * n);
+    let out_ptr = OutPtr(out.as_mut_ptr());
+    scoped_chunks(m, threads, |range| {
+        for r in range {
+            // SAFETY: workers receive disjoint row ranges of `out`.
+            let row_out =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r * n), n) };
+            vecmat_into_wide(&a[r * k..(r + 1) * k], b, row_out);
+        }
+    });
+}
+
+// ---- dispatch wrappers -------------------------------------------------
+//
+// Every engine call site routes through these with the engine's configured
+// `KernelPath`, hot paths and preserved reference oracles alike — so a
+// forced non-default path moves *both* sides of every existing bitwise
+// propcheck onto the same kernels.  `FusedInt4` uses the wide f32 kernels
+// here; its packed-row reads live in `kvcache::quant`.
+
+#[inline]
+pub fn dot_path(path: KernelPath, x: &[f32], y: &[f32]) -> f32 {
+    match path {
+        KernelPath::Scalar => ops::dot(x, y),
+        _ => dot_wide(x, y),
+    }
+}
+
+#[inline]
+pub fn axpy_path(path: KernelPath, a: f32, x: &[f32], y: &mut [f32]) {
+    match path {
+        KernelPath::Scalar => ops::axpy(a, x, y),
+        _ => axpy_wide(a, x, y),
+    }
+}
+
+#[inline]
+pub fn dot_rows_scaled_path(
+    path: KernelPath,
+    q: &[f32],
+    rows: &[f32],
+    w: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    match path {
+        KernelPath::Scalar => ops::dot_rows_scaled(q, rows, w, scale, out),
+        _ => dot_rows_scaled_wide(q, rows, w, scale, out),
+    }
+}
+
+#[inline]
+pub fn axpy_rows_path(path: KernelPath, weights: &[f32], rows: &[f32], w: usize, ctx: &mut [f32]) {
+    match path {
+        KernelPath::Scalar => ops::axpy_rows(weights, rows, w, ctx),
+        _ => axpy_rows_wide(weights, rows, w, ctx),
+    }
+}
+
+#[inline]
+pub fn vecmat_into_path(path: KernelPath, x: &[f32], b: &Tensor, y: &mut [f32]) {
+    match path {
+        KernelPath::Scalar => ops::vecmat_into(x, b, y),
+        _ => vecmat_into_wide(x, b, y),
+    }
+}
+
+#[inline]
+pub fn vecmat_path(path: KernelPath, x: &[f32], b: &Tensor) -> Vec<f32> {
+    match path {
+        KernelPath::Scalar => ops::vecmat(x, b),
+        _ => vecmat_wide(x, b),
+    }
+}
+
+#[inline]
+pub fn matmul_rows_into_path(
+    path: KernelPath,
+    a: &[f32],
+    b: &Tensor,
+    out: &mut [f32],
+    threads: usize,
+) {
+    match path {
+        KernelPath::Scalar => ops::matmul_rows_into(a, b, out, threads),
+        _ => matmul_rows_into_wide(a, b, out, threads),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn close(a: f32, b: f32, n: usize) -> bool {
+        let tol = 1e-5 * (n as f32).sqrt() * (1.0 + a.abs().max(b.abs()));
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn kernel_path_parses() {
+        assert_eq!(KernelPath::parse("scalar"), Some(KernelPath::Scalar));
+        assert_eq!(KernelPath::parse("Wide"), Some(KernelPath::Wide));
+        assert_eq!(KernelPath::parse("fused-int4"), Some(KernelPath::FusedInt4));
+        assert_eq!(KernelPath::parse("fused_int4"), Some(KernelPath::FusedInt4));
+        assert_eq!(KernelPath::parse("avx512"), None);
+        assert_eq!(KernelPath::default(), KernelPath::Scalar);
+    }
+
+    #[test]
+    fn wide_dot_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 100, 192, 257] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let s = ops::dot(&x, &y);
+            let w = dot_wide(&x, &y);
+            assert!(close(s, w, n.max(1)), "n={n}: scalar {s} wide {w}");
+        }
+    }
+
+    #[test]
+    fn wide_rows_kernels_are_per_row_consistent() {
+        // Blocked wide calls must equal row-at-a-time wide calls bitwise:
+        // the engine's ref-vs-blocked identity under a forced wide path
+        // stands on exactly this.
+        let mut rng = Rng::new(12);
+        for (n_rows, w) in [(1usize, 6usize), (3, 8), (5, 16), (7, 33), (4, 64)] {
+            let q: Vec<f32> = (0..w).map(|_| rng.normal_f32()).collect();
+            let rows: Vec<f32> = (0..n_rows * w).map(|_| rng.normal_f32()).collect();
+            let weights: Vec<f32> = (0..n_rows).map(|_| rng.normal_f32()).collect();
+            let scale = 0.37f32;
+
+            let mut blocked = vec![0.0f32; n_rows];
+            dot_rows_scaled_wide(&q, &rows, w, scale, &mut blocked);
+            for r in 0..n_rows {
+                let one = dot_wide(&q, &rows[r * w..(r + 1) * w]) * scale;
+                assert_eq!(blocked[r].to_bits(), one.to_bits(), "row {r} w={w}");
+            }
+
+            let mut ctx_blocked = vec![0.0f32; w];
+            axpy_rows_wide(&weights, &rows, w, &mut ctx_blocked);
+            let mut ctx_seq = vec![0.0f32; w];
+            for r in 0..n_rows {
+                axpy_wide(weights[r], &rows[r * w..(r + 1) * w], &mut ctx_seq);
+            }
+            assert_eq!(ctx_blocked, ctx_seq, "axpy_rows w={w}");
+        }
+    }
+
+    #[test]
+    fn wide_vecmat_and_gemm_match_scalar_within_tolerance() {
+        let mut rng = Rng::new(13);
+        for (m, k, n) in [(1usize, 5usize, 9usize), (4, 32, 48), (3, 33, 17)] {
+            let b = Tensor::randn(vec![k, n], 1.0, &mut rng);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let mut scalar = vec![0.0f32; m * n];
+            ops::matmul_rows_into(&a, &b, &mut scalar, 1);
+            let mut wide = vec![0.0f32; m * n];
+            matmul_rows_into_wide(&a, &b, &mut wide, 1);
+            for i in 0..m * n {
+                assert!(close(scalar[i], wide[i], k), "({m},{k},{n})[{i}]");
+            }
+            let y = vecmat_wide(&a[..k], &b);
+            assert_eq!(y.len(), n);
+            for j in 0..n {
+                assert_eq!(y[j].to_bits(), wide[j].to_bits(), "vecmat row 0 col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_dispatch_is_bitwise_scalar() {
+        let mut rng = Rng::new(14);
+        let x: Vec<f32> = (0..100).map(|_| rng.normal_f32()).collect();
+        let y: Vec<f32> = (0..100).map(|_| rng.normal_f32()).collect();
+        assert_eq!(
+            dot_path(KernelPath::Scalar, &x, &y).to_bits(),
+            ops::dot(&x, &y).to_bits()
+        );
+    }
+}

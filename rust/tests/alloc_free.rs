@@ -13,7 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use rap::config::Method;
-use rap::kvcache::{CacheShape, PagedKvCache};
+use rap::kvcache::{quant, CacheShape, KvLayerView, KvStorageMode, PagedKvCache};
 use rap::model::synth::synth_engine;
 use rap::model::{BatchWorkspace, PrefillWorkspace};
 
@@ -144,5 +144,114 @@ fn steady_state_paged_decode_allocates_nothing() {
         );
         kv.release(10);
         kv.release(11);
+        kv.release(1);
+
+        // Quantized decode: the backend's post-step int4 round-trip runs in
+        // place (`kvcache::quant::roundtrip`), so quantize_kv serving keeps
+        // the zero-allocation contract.  Mirrors
+        // `RustBackend::quantize_range` without the logits vectors the
+        // Backend trait returns.
+        kv.reserve(2, s_max).unwrap();
+        let mut qpos = 0usize;
+        let feed_q =
+            |qpos: &mut usize, kv: &mut PagedKvCache, batch: &mut BatchWorkspace, n: usize| {
+                for _ in 0..n {
+                    let token = (*qpos % 251) as u8;
+                    engine
+                        .decode_batch_paged(&[(2, token, *qpos)], kv, batch, true)
+                        .unwrap();
+                    let (pages, store) = kv.tables_and_ptrs().unwrap();
+                    let blocks = pages.blocks(2).unwrap();
+                    for l in 0..engine.cfg.n_layers {
+                        // SAFETY: one view at a time, single-threaded loop.
+                        let mut view = unsafe { store.seq_layer(l, blocks) };
+                        for h in 0..engine.cfg.n_kv_heads {
+                            quant::roundtrip(view.k_row_mut(h, *qpos));
+                            quant::roundtrip(view.v_row_mut(h, *qpos));
+                        }
+                    }
+                    *qpos += 1;
+                }
+            };
+        feed_q(&mut qpos, &mut kv, &mut batch, 32);
+        let before = ALLOCS.load(Ordering::Relaxed);
+        feed_q(&mut qpos, &mut kv, &mut batch, 64);
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "{method:?}: steady-state quantized decode must not allocate"
+        );
+
+        // Quantized chunked prefill: the engine round-trips rows in place
+        // pre-attention — same contract with quantize_kv on.
+        engine
+            .prefill_chunk_paged(2, &chunk, qpos, &mut kv, &mut prefill_ws, false, true)
+            .unwrap();
+        let mut qcpos = qpos + 16;
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for i in 0..3 {
+            let last = i == 2;
+            engine
+                .prefill_chunk_paged(2, &chunk, qcpos, &mut kv, &mut prefill_ws, last, true)
+                .unwrap();
+            qcpos += 16;
+        }
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "{method:?}: steady-state quantized chunked prefill must not allocate"
+        );
+        kv.release(2);
+
+        // Packed-int4 storage (methods that never reconstruct): decode and
+        // prefill quantize on write into nibble-packed blocks and attend
+        // through the fused q4 kernels — also allocation-free.
+        if !method.reconstructs_k() && !method.reconstructs_v() {
+            let pshape = CacheShape::of(&engine.cfg, &engine.spec);
+            let mut pkv =
+                PagedKvCache::with_storage_mode(pshape, 8 << 20, KvStorageMode::PackedInt4);
+            pkv.reserve(3, s_max).unwrap();
+            let mut ppos = 0usize;
+            let feed_p =
+                |ppos: &mut usize, pkv: &mut PagedKvCache, batch: &mut BatchWorkspace, n: usize| {
+                    for _ in 0..n {
+                        let token = (*ppos % 251) as u8;
+                        engine
+                            .decode_batch_paged(&[(3, token, *ppos)], pkv, batch, true)
+                            .unwrap();
+                        *ppos += 1;
+                    }
+                };
+            feed_p(&mut ppos, &mut pkv, &mut batch, 32);
+            let before = ALLOCS.load(Ordering::Relaxed);
+            feed_p(&mut ppos, &mut pkv, &mut batch, 64);
+            let after = ALLOCS.load(Ordering::Relaxed);
+            assert_eq!(
+                after - before,
+                0,
+                "{method:?}: steady-state packed-int4 decode must not allocate"
+            );
+
+            engine
+                .prefill_chunk_paged(3, &chunk, ppos, &mut pkv, &mut prefill_ws, false, false)
+                .unwrap();
+            let mut pcpos = ppos + 16;
+            let before = ALLOCS.load(Ordering::Relaxed);
+            for i in 0..3 {
+                let last = i == 2;
+                engine
+                    .prefill_chunk_paged(3, &chunk, pcpos, &mut pkv, &mut prefill_ws, last, false)
+                    .unwrap();
+                pcpos += 16;
+            }
+            let after = ALLOCS.load(Ordering::Relaxed);
+            assert_eq!(
+                after - before,
+                0,
+                "{method:?}: steady-state packed-int4 chunked prefill must not allocate"
+            );
+        }
     }
 }
