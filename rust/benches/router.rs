@@ -1,0 +1,323 @@
+//! Router gate: prefix-affinity routing vs seeded-random routing across a
+//! 3-replica fleet under skewed (zipf) prefix popularity, plus a
+//! saturation burst for queue-full behaviour.  Pure-Rust synthetic
+//! engine — no artifacts needed.
+//!
+//! The claim under test is the router's reason to exist: rendezvous
+//! prefix affinity sends every repeat of a popular prompt prefix to the
+//! replica already holding it warm, so after one warm pass the measured
+//! phase takes **zero** prefix-cache misses — while random routing keeps
+//! re-paying cold prefills on whichever replica the dice pick, which is
+//! exactly what the TTFT p99 tail shows.  Results land in
+//! `BENCH_router.json` (uploaded by the router-chaos CI job); the bench
+//! asserts affinity wins on both fleet hit-rate and TTFT p99, so a
+//! routing regression fails the gate instead of drifting.
+
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+use rap::config::Method;
+use rap::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use rap::kvcache::CacheShape;
+use rap::model::backend::RustBackend;
+use rap::model::synth::synth_engine;
+use rap::router::{serve_router, HealthConfig, RetryConfig, RoutePolicy, RouterConfig};
+use rap::server::{client_request_stream, serve_with_config, ServerConfig, ServerHandle};
+use rap::util::json::{num, obj, s, Value};
+use rap::util::rng::Rng;
+use rap::util::threadpool::ThreadPool;
+
+const REPLICAS: usize = 3;
+
+fn start_replica(max_sessions: usize, max_queue: usize, s_max: usize) -> ServerHandle {
+    let factory = move || -> Result<Coordinator<RustBackend<'static>>> {
+        // Engine leaks deliberately: server lifetime == process lifetime.
+        // Every replica shares the seed, so any replica serves any prompt
+        // identically — what makes re-routing transparent.
+        let engine: &'static rap::model::Engine =
+            Box::leak(Box::new(synth_engine(Method::Rap, 11)));
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let backend = RustBackend::new(engine, s_max);
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions,
+                    buckets: vec![1, 4],
+                    max_queue,
+                    prefill_chunk_tokens: 64,
+                    ..Default::default()
+                },
+                kv_budget_bytes: 128 << 20,
+            },
+        ))
+    };
+    serve_with_config(
+        "127.0.0.1:0",
+        factory,
+        ServerConfig {
+            conn_threads: 8,
+            idle_read_timeout: Duration::from_secs(10),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// The shared per-class prompt prefix — long enough (12 KV blocks) that a
+/// cold prefill visibly dominates TTFT.  Classes diverge within the first
+/// affinity block, so every class carries a distinct affinity key.
+fn class_prefix(class: usize, len: usize) -> String {
+    (0..len)
+        .map(|i| char::from(b'a' + ((i * 7 + class * 13 + i * class) % 26) as u8))
+        .collect()
+}
+
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[idx.saturating_sub(1).min(v.len() - 1)]
+}
+
+struct PhaseResult {
+    ttft: Vec<f64>,
+    hits: u64,
+    lookups: u64,
+    hit_rate: f64,
+    errors: usize,
+}
+
+/// One routed phase: fresh fleet, one warm request per class through the
+/// router, then `n_requests` zipf-drawn sequential requests (same class
+/// sequence for every policy — the rng is phase-local and fixed-seed).
+fn run_phase(
+    policy: RoutePolicy,
+    n_requests: usize,
+    classes: usize,
+    prefix_len: usize,
+    max_new: usize,
+) -> PhaseResult {
+    let handles: Vec<ServerHandle> = (0..REPLICAS)
+        .map(|_| start_replica(8, 64, prefix_len + max_new + 64))
+        .collect();
+    let addrs: Vec<SocketAddr> = handles.iter().map(|h| h.addr).collect();
+    let router = serve_router(
+        "127.0.0.1:0",
+        &addrs,
+        RouterConfig {
+            policy,
+            health: HealthConfig {
+                interval: Duration::from_millis(200),
+                ..HealthConfig::default()
+            },
+            ..RouterConfig::default()
+        },
+    )
+    .unwrap();
+
+    // Warm pass: each class once, wherever the policy sends it.  For
+    // affinity this seeds every class at its rendezvous owner; for random
+    // it warms one arbitrary (class, replica) pairing of the many the
+    // measured phase will hit.
+    for c in 0..classes {
+        let body = obj(vec![
+            ("prompt", s(format!("{}|warm", class_prefix(c, prefix_len)))),
+            ("max_new", num(4.0)),
+        ]);
+        client_request_stream(&router.addr, &body).unwrap();
+    }
+
+    let mut rng = Rng::new(0xAFF1);
+    let mut ttft = Vec::with_capacity(n_requests);
+    let mut errors = 0usize;
+    for i in 0..n_requests {
+        let c = rng.zipf(classes, 1.2);
+        let body = obj(vec![
+            ("prompt", s(format!("{}|r{i:04}", class_prefix(c, prefix_len)))),
+            ("max_new", num(max_new as f64)),
+        ]);
+        match client_request_stream(&router.addr, &body) {
+            Ok(sc) if sc.summary.get("error").is_none() => ttft.push(sc.first_delta_ms),
+            _ => errors += 1,
+        }
+    }
+
+    // Gauges publish from the scheduler loop; give the final iteration a
+    // beat before reading.
+    std::thread::sleep(Duration::from_millis(100));
+    let (hits, lookups) = handles.iter().fold((0u64, 0u64), |(h, l), hd| {
+        let st = hd.stats();
+        (
+            h + st.prefix_hits.load(Ordering::Relaxed),
+            l + st.prefix_lookups.load(Ordering::Relaxed),
+        )
+    });
+    router.shutdown();
+    for h in handles {
+        h.shutdown();
+    }
+    PhaseResult {
+        ttft,
+        hits,
+        lookups,
+        hit_rate: hits as f64 / lookups.max(1) as f64,
+        errors,
+    }
+}
+
+/// Saturation burst: tiny replicas, a thick wave of concurrent clients,
+/// and the question of how much backpressure escapes past the router's
+/// bounded retry as a classified error.
+fn run_burst(n_clients: usize) -> (usize, usize) {
+    let handles: Vec<ServerHandle> = (0..2).map(|_| start_replica(2, 2, 256)).collect();
+    let addrs: Vec<SocketAddr> = handles.iter().map(|h| h.addr).collect();
+    let router = serve_router(
+        "127.0.0.1:0",
+        &addrs,
+        RouterConfig {
+            policy: RoutePolicy::LeastLoaded,
+            retry: RetryConfig {
+                max_attempts: 2,
+                base: Duration::from_millis(5),
+                cap: Duration::from_millis(20),
+                seed: 1,
+            },
+            ..RouterConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = router.addr;
+
+    let outcomes: Arc<Mutex<Vec<bool>>> = Arc::new(Mutex::new(Vec::new()));
+    let pool = ThreadPool::new(16);
+    for i in 0..n_clients {
+        let outcomes = Arc::clone(&outcomes);
+        pool.execute(move || {
+            let body = obj(vec![
+                ("prompt", s(format!("burst client {i:03} says hello "))),
+                ("max_new", num(16.0)),
+            ]);
+            let ok = client_request_stream(&addr, &body)
+                .map(|sc| sc.summary.get("error").is_none())
+                .unwrap_or(false);
+            outcomes.lock().unwrap().push(ok);
+        });
+    }
+    pool.wait_idle();
+    router.shutdown();
+    for h in handles {
+        h.shutdown();
+    }
+    let outcomes = outcomes.lock().unwrap();
+    let served = outcomes.iter().filter(|&&ok| ok).count();
+    (served, outcomes.len() - served)
+}
+
+fn main() {
+    let fast = std::env::var("RAP_BENCH_FAST").is_ok();
+    let classes = 8usize;
+    let prefix_len = 192usize;
+    let max_new = 8usize;
+    let n_requests = if fast { 48 } else { 96 };
+    let burst_clients = if fast { 16 } else { 32 };
+
+    println!(
+        "== bench: router ({REPLICAS} replicas, {classes} prefix classes x {prefix_len} bytes, \
+         {n_requests} zipf requests per policy) =="
+    );
+
+    let aff = run_phase(RoutePolicy::Affinity, n_requests, classes, prefix_len, max_new);
+    let rnd = run_phase(
+        RoutePolicy::Random { seed: 99 },
+        n_requests,
+        classes,
+        prefix_len,
+        max_new,
+    );
+    assert_eq!(aff.errors, 0, "healthy affinity fleet refused requests");
+    assert_eq!(rnd.errors, 0, "healthy random fleet refused requests");
+
+    let (aff_p50, aff_p99) = (percentile(&aff.ttft, 50.0), percentile(&aff.ttft, 99.0));
+    let (rnd_p50, rnd_p99) = (percentile(&rnd.ttft, 50.0), percentile(&rnd.ttft, 99.0));
+    println!(
+        "affinity: hit-rate {:.3} ({}/{}), TTFT p50 {:.2} ms p99 {:.2} ms",
+        aff.hit_rate, aff.hits, aff.lookups, aff_p50, aff_p99
+    );
+    println!(
+        "random:   hit-rate {:.3} ({}/{}), TTFT p50 {:.2} ms p99 {:.2} ms",
+        rnd.hit_rate, rnd.hits, rnd.lookups, rnd_p50, rnd_p99
+    );
+    assert!(
+        aff.hit_rate > rnd.hit_rate,
+        "affinity must strictly beat random routing on fleet prefix-cache hit-rate \
+         ({:.3} vs {:.3})",
+        aff.hit_rate,
+        rnd.hit_rate
+    );
+    assert!(
+        aff_p99 < rnd_p99,
+        "affinity must strictly beat random routing on TTFT p99 ({aff_p99:.2} ms vs \
+         {rnd_p99:.2} ms) — warm owners should never re-pay the cold prefill"
+    );
+
+    let (served, refused) = run_burst(burst_clients);
+    let queue_full_rate = refused as f64 / (served + refused).max(1) as f64;
+    println!(
+        "burst: {served}/{} served through saturation, queue-full rate {queue_full_rate:.3}",
+        served + refused
+    );
+    assert!(served > 0, "saturation burst must not starve everyone");
+
+    let summary: Value = obj(vec![
+        ("bench", s("router")),
+        ("replicas", num(REPLICAS as f64)),
+        ("classes", num(classes as f64)),
+        ("prefix_bytes", num(prefix_len as f64)),
+        ("requests_per_policy", num(n_requests as f64)),
+        (
+            "affinity",
+            obj(vec![
+                ("hit_rate", num(aff.hit_rate)),
+                ("prefix_hits", num(aff.hits as f64)),
+                ("prefix_lookups", num(aff.lookups as f64)),
+                ("ttft_p50_ms", num(aff_p50)),
+                ("ttft_p99_ms", num(aff_p99)),
+            ]),
+        ),
+        (
+            "random",
+            obj(vec![
+                ("hit_rate", num(rnd.hit_rate)),
+                ("prefix_hits", num(rnd.hits as f64)),
+                ("prefix_lookups", num(rnd.lookups as f64)),
+                ("ttft_p50_ms", num(rnd_p50)),
+                ("ttft_p99_ms", num(rnd_p99)),
+            ]),
+        ),
+        ("ttft_p99_speedup", num(rnd_p99 / aff_p99.max(1e-9))),
+        (
+            "burst",
+            obj(vec![
+                ("clients", num((served + refused) as f64)),
+                ("served", num(served as f64)),
+                ("refused", num(refused as f64)),
+                ("queue_full_rate", num(queue_full_rate)),
+            ]),
+        ),
+    ]);
+    let _ = std::fs::write("BENCH_router.json", summary.to_string_pretty());
+    println!(
+        "-> BENCH_router.json (affinity hit-rate {:.3} vs {:.3}, TTFT p99 {:.1}x better)",
+        aff.hit_rate,
+        rnd.hit_rate,
+        rnd_p99 / aff_p99.max(1e-9)
+    );
+}

@@ -18,4 +18,4 @@ pub use faults::FaultBackend;
 pub use metrics::{AggregateMetrics, RequestMetrics};
 pub use request::{Event, FinishReason, Request, RequestId, Response};
 pub use sampling::{Sampler, SamplingParams};
-pub use scheduler::{Backend, Coordinator, CoordinatorConfig, SubmitError};
+pub use scheduler::{Backend, CoordSnapshot, Coordinator, CoordinatorConfig, SubmitError};

@@ -948,6 +948,43 @@ impl<B: Backend> Coordinator<B> {
     pub fn kv_alloc_faults_injected(&self) -> u64 {
         self.kv.alloc_faults_injected()
     }
+
+    /// Cheap point-in-time gauges for load reporting.  The server publishes
+    /// this after every scheduler iteration so health probes (and the
+    /// multi-replica router's least-loaded fallback) can read replica load
+    /// without a round-trip through the scheduler thread.
+    pub fn snapshot(&self) -> CoordSnapshot {
+        CoordSnapshot {
+            queued: self.batcher.queue_len(),
+            prefilling: self.prefilling.len(),
+            running: self.running.len(),
+            preempted: self.preempted.len(),
+            used_blocks: self.kv.used_blocks(),
+            capacity_blocks: self.kv.capacity_blocks(),
+            prefix_hits: self.metrics.prefix_hits,
+            prefix_lookups: self.metrics.prefix_lookups,
+        }
+    }
+}
+
+/// Point-in-time coordinator gauges (see [`Coordinator::snapshot`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoordSnapshot {
+    pub queued: usize,
+    pub prefilling: usize,
+    pub running: usize,
+    pub preempted: usize,
+    pub used_blocks: usize,
+    pub capacity_blocks: usize,
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+}
+
+impl CoordSnapshot {
+    /// Requests anywhere in the coordinator — the replica's load gauge.
+    pub fn in_flight(&self) -> usize {
+        self.queued + self.prefilling + self.running + self.preempted
+    }
 }
 
 #[cfg(test)]
@@ -1043,6 +1080,29 @@ mod tests {
         }
         assert_eq!(c.metrics.requests, 10);
         assert_eq!(c.backend.sessions.len(), 0, "all sessions dropped");
+    }
+
+    #[test]
+    fn snapshot_tracks_load_and_empties_at_completion() {
+        let mut c = coordinator(2);
+        let s0 = c.snapshot();
+        assert_eq!(s0.in_flight(), 0);
+        assert_eq!(s0.used_blocks, 0);
+        assert!(s0.capacity_blocks > 0);
+        for i in 0..4 {
+            assert!(c.submit(Request::new(i, vec![1, 2, 3], 5)));
+        }
+        assert_eq!(c.snapshot().in_flight(), 4, "queued requests count as load");
+        c.tick().unwrap();
+        let mid = c.snapshot();
+        assert_eq!(mid.in_flight(), 4, "admitted + still-queued");
+        assert!(mid.running + mid.prefilling >= 1);
+        assert!(mid.used_blocks > 0);
+        c.run_to_completion().unwrap();
+        let end = c.snapshot();
+        assert_eq!(end.in_flight(), 0);
+        assert_eq!(end.used_blocks, 0);
+        assert_eq!(end.prefix_lookups, c.metrics.prefix_lookups);
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod manifest;
 pub mod model;
 pub mod rap;
 pub mod rope;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

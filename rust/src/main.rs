@@ -6,6 +6,7 @@
 //!   generate  --model --variant --prompt --max-new [--engine rust|pjrt]
 //!   eval      --model [--variants a,b] [--quant]
 //!   serve     --model --variant [--addr 127.0.0.1:7433]
+//!   route     --replicas H:P,H:P [--addr 127.0.0.1:7432] [--policy affinity]
 //!   bench-serving --model --variant [--requests N] [--rate R]
 //!   plan      --rho 0.3          — run the native RAP planner on a config
 //!   experiments [name|--all] [--quick]
@@ -20,6 +21,7 @@ use rap::kvcache::CacheShape;
 use rap::manifest::Manifest;
 use rap::model::load_engine;
 use rap::rap::budget::{allocate, ranks_from_ratios, GroupScores};
+use rap::router::{serve_router, RoutePolicy, RouterConfig};
 use rap::runtime::backend::PjrtBackend;
 use rap::runtime::{session::Session, PjrtContext, PjrtEngine};
 use rap::util::cli::Args;
@@ -32,6 +34,7 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
         Some("bench-serving") => cmd_bench_serving(&args),
         Some("plan") => cmd_plan(&args),
         Some("experiments") => cmd_experiments(&args),
@@ -57,6 +60,11 @@ fn print_usage() {
            serve     --model M --variant V [--addr HOST:PORT] [--sessions N]\n\
                      (API v2: per-token streaming, seeded sampling, stop\n\
                       sequences, {{\"cancel\": id}}; v1 one-shot still served)\n\
+           route     --replicas H:P,H:P [--addr HOST:PORT] [--policy affinity]\n\
+                     (fronts `serve` replicas: prefix-affinity or\n\
+                      least-loaded/random routing, health probing, bounded\n\
+                      retry of never-streamed requests, proxied cancel;\n\
+                      admin lines {{\"admin\": \"status\"|\"register\"|\"drain\"}})\n\
            bench-serving --model M --variant V [--requests N] [--rate R]\n\
            plan      --rho R [--layers L] [--seed S]   native Alg.2 + pair-selection demo\n\
            experiments [NAME ...|--all] [--quick]      regenerate paper tables/figures\n"
@@ -192,6 +200,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
          summary; {{\"cancel\": id}} tears a request down mid-flight\n\
          \x20 (v1 one-shot requests still answered in the old shape)",
         handle.addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7432").to_string();
+    let replicas: Vec<std::net::SocketAddr> = args
+        .get_list("replicas", &[])
+        .iter()
+        .map(|r| r.parse().with_context(|| format!("replica address {r:?}")))
+        .collect::<Result<_>>()?;
+    let policy = match args.get_or("policy", "affinity") {
+        "least-loaded" => RoutePolicy::LeastLoaded,
+        "random" => RoutePolicy::Random {
+            seed: args.get_usize("seed", 0) as u64,
+        },
+        _ => RoutePolicy::Affinity,
+    };
+    let handle = serve_router(
+        &addr,
+        &replicas,
+        RouterConfig {
+            policy,
+            ..RouterConfig::default()
+        },
+    )?;
+    println!(
+        "router on {} fronting {} replica(s) ({:?} routing)\n\
+         \x20 requests: serving API v2 lines, relayed with bounded retry —\n\
+         \x20 a request that has streamed nothing re-routes on replica failure,\n\
+         \x20 one that already streamed surfaces {{\"error\": \"replica_failed\",\n\
+         \x20 \"deltas_streamed\": n}} so the caller knows the replay boundary\n\
+         \x20 {{\"cancel\": id}} is proxied to the owning replica\n\
+         \x20 admin: {{\"admin\": \"status\"}}, {{\"admin\": \"register\", \"replica\": \
+         \"H:P\"}},\n\
+         \x20        {{\"admin\": \"drain\", \"replica\": \"H:P\"}} (finish in-flight, \
+         then drop)\n\
+         \x20 health: {{\"health\": true}} returns fleet gauges",
+        handle.addr,
+        replicas.len(),
+        policy,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

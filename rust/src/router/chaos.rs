@@ -1,0 +1,396 @@
+//! Deterministic replica-fault harness for router storm tests.
+//!
+//! Two pieces, seeded like [`crate::faults::FaultPlan`]:
+//!
+//! * [`ChaosPlan`] — a precomputed, replayable schedule of fleet-level
+//!   actions (kill / restart / stall / unstall, one batch per request
+//!   index).  Generation is stateful so the schedule is always
+//!   *survivable*: at least one replica stays alive **and** unstalled at
+//!   every step, which is what lets the storm test demand that every
+//!   request terminates deterministically.
+//! * [`StallBackend`] — a [`Backend`] wrapper whose [`StallSwitch`] can
+//!   freeze the scheduler thread mid-prefill or mid-decode from outside.
+//!   A stalled replica keeps accepting connections and answering health
+//!   probes from its handler threads (with going-stale gauges) — the
+//!   realistic "alive but wedged" failure the router's per-request
+//!   timeout exists for, distinct from the connection-refused failure of
+//!   a killed replica.
+//!
+//! The harness itself (spawning real servers, applying the actions) lives
+//! in `tests/router.rs`, where the engine factories are.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::Backend;
+use crate::coordinator::RequestId;
+use crate::kvcache::PagedKvCache;
+use crate::router::retry::mix;
+use crate::util::rng::Rng;
+
+/// One fleet-level action, applied just before dispatching the request
+/// with the matching index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Shut the replica's server down (connections start failing).
+    Kill { replica: usize },
+    /// Bring a killed replica back (fresh server, cold caches).
+    Restart { replica: usize },
+    /// Flip the replica's [`StallSwitch`] on — its scheduler freezes at
+    /// the next backend call.
+    Stall { replica: usize },
+    /// Release a stalled replica.
+    Unstall { replica: usize },
+}
+
+impl ChaosAction {
+    pub fn replica(&self) -> usize {
+        match *self {
+            ChaosAction::Kill { replica }
+            | ChaosAction::Restart { replica }
+            | ChaosAction::Stall { replica }
+            | ChaosAction::Unstall { replica } => replica,
+        }
+    }
+}
+
+/// Per-step action probabilities.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    pub kill_rate: f64,
+    /// Chance per step that one dead replica restarts.
+    pub restart_rate: f64,
+    pub stall_rate: f64,
+    /// Chance per step that one stalled replica is released.
+    pub unstall_rate: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            kill_rate: 0.10,
+            restart_rate: 0.45,
+            stall_rate: 0.10,
+            unstall_rate: 0.45,
+        }
+    }
+}
+
+/// A replayable fleet-fault schedule: `steps[i]` is applied before
+/// request `i` is dispatched.
+#[derive(Debug, Clone)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    steps: Vec<Vec<ChaosAction>>,
+}
+
+impl ChaosPlan {
+    /// Generate the schedule.  Requires at least two replicas — with one
+    /// there is nothing to fail over to, so every kill would be vetoed
+    /// and the plan degenerates.
+    pub fn generate(
+        seed: u64,
+        n_replicas: usize,
+        n_steps: usize,
+        cfg: &ChaosConfig,
+    ) -> ChaosPlan {
+        assert!(n_replicas >= 2, "chaos needs a failover target");
+        let mut rng = Rng::new(mix(seed, 0x4348_414F_535F_5631)); // "CHAOS_V1"
+        let mut alive = vec![true; n_replicas];
+        let mut stalled = vec![false; n_replicas];
+        let mut steps = Vec::with_capacity(n_steps);
+        // A replica can serve traffic iff alive and not stalled; the
+        // generator refuses any action that would leave zero such
+        // replicas, keeping every schedule survivable.
+        let serviceable = |alive: &[bool], stalled: &[bool]| {
+            alive.iter().zip(stalled).filter(|(a, s)| **a && !**s).count()
+        };
+        let pick = |rng: &mut Rng, mask: &[bool]| -> Option<usize> {
+            let cands: Vec<usize> = (0..mask.len()).filter(|&i| mask[i]).collect();
+            if cands.is_empty() {
+                None
+            } else {
+                Some(cands[rng.below(cands.len())])
+            }
+        };
+        for _ in 0..n_steps {
+            let mut acts = Vec::new();
+            // Recoveries first so a step can free capacity before it
+            // breaks something else.
+            if rng.f64() < cfg.restart_rate {
+                let dead: Vec<bool> = alive.iter().map(|a| !a).collect();
+                if let Some(r) = pick(&mut rng, &dead) {
+                    alive[r] = true;
+                    stalled[r] = false;
+                    acts.push(ChaosAction::Restart { replica: r });
+                }
+            }
+            if rng.f64() < cfg.unstall_rate {
+                if let Some(r) = pick(&mut rng, &stalled) {
+                    stalled[r] = false;
+                    acts.push(ChaosAction::Unstall { replica: r });
+                }
+            }
+            if rng.f64() < cfg.kill_rate {
+                let can_kill: Vec<bool> = (0..n_replicas)
+                    .map(|i| {
+                        alive[i] && {
+                            let margin = if stalled[i] { 0 } else { 1 };
+                            serviceable(&alive, &stalled) > margin
+                        }
+                    })
+                    .collect();
+                if let Some(r) = pick(&mut rng, &can_kill) {
+                    alive[r] = false;
+                    acts.push(ChaosAction::Kill { replica: r });
+                }
+            }
+            if rng.f64() < cfg.stall_rate {
+                let can_stall: Vec<bool> = (0..n_replicas)
+                    .map(|i| alive[i] && !stalled[i] && serviceable(&alive, &stalled) > 1)
+                    .collect();
+                if let Some(r) = pick(&mut rng, &can_stall) {
+                    stalled[r] = true;
+                    acts.push(ChaosAction::Stall { replica: r });
+                }
+            }
+            steps.push(acts);
+        }
+        ChaosPlan { seed, steps }
+    }
+
+    pub fn actions_at(&self, step: usize) -> &[ChaosAction] {
+        self.steps.get(step).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// (kills, restarts, stalls, unstalls) across the whole schedule —
+    /// storm tests assert the plan actually exercised something.
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for a in self.steps.iter().flatten() {
+            match a {
+                ChaosAction::Kill { .. } => c.0 += 1,
+                ChaosAction::Restart { .. } => c.1 += 1,
+                ChaosAction::Stall { .. } => c.2 += 1,
+                ChaosAction::Unstall { .. } => c.3 += 1,
+            }
+        }
+        c
+    }
+}
+
+/// Shared on/off switch a test can flip to freeze a replica's backend.
+#[derive(Debug, Clone, Default)]
+pub struct StallSwitch(Arc<AtomicBool>);
+
+impl StallSwitch {
+    pub fn new() -> StallSwitch {
+        StallSwitch::default()
+    }
+
+    pub fn set(&self, stalled: bool) {
+        self.0.store(stalled, Ordering::SeqCst);
+    }
+
+    pub fn is_stalled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// [`Backend`] wrapper that blocks every compute call while its switch
+/// is on.  Unlike `FaultBackend`'s seeded slow ticks (bounded, baked
+/// into the plan), this is an externally controlled freeze of unbounded
+/// length — the shape of a replica wedged on a sick accelerator.
+pub struct StallBackend<B> {
+    inner: B,
+    switch: StallSwitch,
+    poll: Duration,
+}
+
+impl<B: Backend> StallBackend<B> {
+    pub fn new(inner: B, switch: StallSwitch) -> StallBackend<B> {
+        StallBackend {
+            inner,
+            switch,
+            poll: Duration::from_millis(2),
+        }
+    }
+
+    fn hold(&self) {
+        while self.switch.is_stalled() {
+            std::thread::sleep(self.poll);
+        }
+    }
+}
+
+impl<B: Backend> Backend for StallBackend<B> {
+    fn s_max(&self) -> usize {
+        self.inner.s_max()
+    }
+
+    fn wants_paged_storage(&self) -> bool {
+        self.inner.wants_paged_storage()
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        self.inner.supports_chunked_prefill()
+    }
+
+    fn prefill(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        prompt: &[u8],
+    ) -> Result<Vec<f32>> {
+        self.hold();
+        self.inner.prefill(kv, session, prompt)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        tokens: &[u8],
+        pos0: usize,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        self.hold();
+        self.inner.prefill_chunk(kv, session, tokens, pos0, last)
+    }
+
+    fn decode_batch(
+        &mut self,
+        kv: &mut PagedKvCache,
+        entries: &[(RequestId, u8, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.hold();
+        self.inner.decode_batch(kv, entries)
+    }
+
+    fn drop_session(&mut self, session: RequestId) {
+        // Teardown is never stalled, mirroring FaultBackend: the
+        // coordinator must always be able to release a session.
+        self.inner.drop_session(session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_replay_and_seeds_differ() {
+        let cfg = ChaosConfig::default();
+        let a = ChaosPlan::generate(3, 3, 64, &cfg);
+        let b = ChaosPlan::generate(3, 3, 64, &cfg);
+        assert_eq!(a.steps, b.steps, "same seed, same schedule");
+        let c = ChaosPlan::generate(4, 3, 64, &cfg);
+        assert_ne!(a.steps, c.steps, "different seed, different schedule");
+    }
+
+    #[test]
+    fn every_schedule_keeps_one_serviceable_replica() {
+        for seed in 0..20u64 {
+            let plan = ChaosPlan::generate(seed, 3, 128, &ChaosConfig::default());
+            let mut alive = [true; 3];
+            let mut stalled = [false; 3];
+            for step in 0..plan.len() {
+                for a in plan.actions_at(step) {
+                    match *a {
+                        ChaosAction::Kill { replica } => alive[replica] = false,
+                        ChaosAction::Restart { replica } => {
+                            assert!(!alive[replica], "seed {seed}: restart of a live replica");
+                            alive[replica] = true;
+                            stalled[replica] = false;
+                        }
+                        ChaosAction::Stall { replica } => {
+                            assert!(alive[replica], "seed {seed}: stall of a dead replica");
+                            stalled[replica] = true;
+                        }
+                        ChaosAction::Unstall { replica } => stalled[replica] = false,
+                    }
+                }
+                let serviceable = alive
+                    .iter()
+                    .zip(&stalled)
+                    .filter(|(a, s)| **a && !**s)
+                    .count();
+                assert!(serviceable >= 1, "seed {seed} step {step} wedged the fleet");
+            }
+        }
+    }
+
+    #[test]
+    fn default_rates_exercise_kills_and_stalls() {
+        let plan = ChaosPlan::generate(7, 3, 200, &ChaosConfig::default());
+        let (kills, restarts, stalls, _) = plan.counts();
+        assert!(kills >= 3, "got {kills} kills");
+        assert!(restarts >= 1, "got {restarts} restarts");
+        assert!(stalls >= 3, "got {stalls} stalls");
+    }
+
+    /// Minimal backend for the stall test.
+    struct Instant0;
+
+    impl Backend for Instant0 {
+        fn s_max(&self) -> usize {
+            64
+        }
+        fn prefill(
+            &mut self,
+            _kv: &mut PagedKvCache,
+            _session: RequestId,
+            _prompt: &[u8],
+        ) -> Result<Vec<f32>> {
+            Ok(vec![0.0; 256])
+        }
+        fn decode_batch(
+            &mut self,
+            _kv: &mut PagedKvCache,
+            entries: &[(RequestId, u8, usize)],
+        ) -> Result<Vec<Vec<f32>>> {
+            Ok(entries.iter().map(|_| vec![0.0; 256]).collect())
+        }
+        fn drop_session(&mut self, _session: RequestId) {}
+    }
+
+    #[test]
+    fn stall_switch_freezes_and_releases_backend_calls() {
+        let switch = StallSwitch::new();
+        switch.set(true);
+        let sw2 = switch.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let t = std::thread::spawn(move || {
+            let mut b = StallBackend::new(Instant0, sw2);
+            let shape = crate::kvcache::CacheShape {
+                n_layers: 1,
+                n_kv_heads: 1,
+                k_width: vec![4],
+                v_width: vec![4],
+            };
+            let mut kv = PagedKvCache::new(shape, 1 << 20);
+            b.prefill(&mut kv, 1, &[1, 2]).unwrap();
+            let _ = tx.send(());
+        });
+        // While stalled, the call must not complete.
+        assert!(
+            rx.recv_timeout(Duration::from_millis(50)).is_err(),
+            "stalled backend completed a call"
+        );
+        switch.set(false);
+        rx.recv_timeout(Duration::from_secs(5))
+            .expect("released backend never completed");
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,105 @@
+//! Graceful drain: stop admitting, let in-flight sessions finish, then
+//! remove the replica from the table.
+//!
+//! Draining is a three-step contract spread across the router:
+//!
+//! 1. an admin marks the replica [`HealthState::Draining`] (here) — the
+//!    routing policy in [`super::table`] stops offering it new work the
+//!    same instant, while its in-flight relays keep streaming;
+//! 2. every relay completion calls [`super::table::RoutingTable::note_done`],
+//!    which reports when a draining replica's in-flight count hits zero;
+//! 3. the reporter (relay path or prober sweep) then removes the entry —
+//!    the prober sweep covers the case where the replica was already idle
+//!    when the drain was requested, so `note_done` never fires.
+
+use std::net::SocketAddr;
+
+use crate::router::health::HealthState;
+use crate::router::table::{ReplicaId, RoutingTable};
+
+impl RoutingTable {
+    /// Begin draining the replica with this id.  Idempotent; `false` if
+    /// the id is unknown.
+    pub fn drain(&mut self, id: ReplicaId) -> bool {
+        match self.get_mut(id) {
+            Some(r) => {
+                r.health = HealthState::Draining;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// [`RoutingTable::drain`] addressed by socket address (the admin
+    /// endpoint speaks addresses, not internal ids).
+    pub fn drain_addr(&mut self, addr: SocketAddr) -> Option<ReplicaId> {
+        let id = self.by_addr_mut(addr)?.id;
+        self.drain(id);
+        Some(id)
+    }
+
+    /// Remove every draining replica whose in-flight count has reached
+    /// zero.  Called from the prober loop so an idle replica leaves the
+    /// table promptly even when no relay completion is left to notice.
+    pub fn sweep_drained(&mut self) -> Vec<ReplicaId> {
+        let done: Vec<ReplicaId> = self
+            .replicas
+            .iter()
+            .filter(|r| r.health == HealthState::Draining && r.in_flight == 0)
+            .map(|r| r.id)
+            .collect();
+        for &id in &done {
+            self.remove(id);
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::table::RoutePolicy;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    #[test]
+    fn draining_replica_stops_receiving_work_immediately() {
+        let mut t = RoutingTable::new(RoutePolicy::LeastLoaded, 4, 4);
+        let a = t.register(addr(9100));
+        let b = t.register(addr(9101));
+        // Make `a` the clear least-loaded winner, then drain it.
+        for _ in 0..3 {
+            t.note_dispatch(b);
+        }
+        assert_eq!(t.route(b"", &[]), Some(a));
+        assert!(t.drain(a));
+        assert_eq!(t.route(b"", &[]), Some(b), "drained replica is unroutable");
+    }
+
+    #[test]
+    fn busy_drained_replica_leaves_only_after_last_completion() {
+        let mut t = RoutingTable::new(RoutePolicy::LeastLoaded, 4, 4);
+        let a = t.register(addr(9102));
+        t.note_dispatch(a);
+        t.drain(a);
+        assert!(t.sweep_drained().is_empty(), "in-flight work pins the entry");
+        assert_eq!(t.len(), 1);
+        assert!(t.note_done(a), "last completion signals removal");
+        t.remove(a);
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn idle_drained_replica_is_swept() {
+        let mut t = RoutingTable::new(RoutePolicy::LeastLoaded, 4, 4);
+        let a = t.register(addr(9103));
+        let b = t.register(addr(9104));
+        assert_eq!(t.drain_addr(addr(9103)), Some(a));
+        assert_eq!(t.drain_addr(addr(9999)), None, "unknown address");
+        assert_eq!(t.sweep_drained(), vec![a]);
+        assert_eq!(t.len(), 1);
+        assert!(t.addr_of(b).is_some());
+    }
+}

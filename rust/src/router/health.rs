@@ -1,0 +1,177 @@
+//! Replica health tracking with hysteresis.
+//!
+//! Every replica carries a [`HealthState`] driven by two signal sources:
+//! the periodic prober (a `{"health": true}` round-trip per interval) and
+//! dispatch-time transport failures observed by the relay path.  The
+//! state machine is deliberately asymmetric — one failure is enough to
+//! *suspect* a replica (stop preferring it), but it takes
+//! `down_after` consecutive failures to declare it down and `up_after`
+//! consecutive successes to trust it again — so a single dropped probe
+//! doesn't flap the routing table, and a replica that just came back
+//! must prove itself before traffic returns.
+//!
+//! `Draining` is administrative, not observational: probes never enter
+//! or leave it.  A draining replica accepts no new work and is removed
+//! from the table once its in-flight count reaches zero (see
+//! [`super::drain`]).
+
+use std::time::Duration;
+
+/// Replica lifecycle state.  Routability: `Healthy` replicas are
+/// preferred, `Suspect` ones are a last resort, `Down` and `Draining`
+/// never receive new work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Probes passing; full routing weight.
+    Healthy,
+    /// At least one recent failure — deprioritised but not abandoned
+    /// (used only when no healthy replica remains).
+    Suspect,
+    /// `down_after` consecutive failures; receives no traffic until
+    /// `up_after` consecutive probe successes.
+    Down,
+    /// Administratively draining: no new work, in-flight sessions finish,
+    /// then the replica is removed from the table.
+    Draining,
+}
+
+impl HealthState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Down => "down",
+            HealthState::Draining => "draining",
+        }
+    }
+}
+
+/// Prober tuning.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Time between probe rounds.
+    pub interval: Duration,
+    /// Per-probe connect/read budget — probes want a short leash so a
+    /// wedged replica can't stall the prober round.
+    pub probe_timeout: Duration,
+    /// Consecutive failures before `Suspect` becomes `Down`.
+    pub down_after: u32,
+    /// Consecutive successes before a `Suspect`/`Down` replica is
+    /// trusted (`Healthy`) again.
+    pub up_after: u32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            interval: Duration::from_secs(1),
+            probe_timeout: Duration::from_millis(500),
+            down_after: 3,
+            up_after: 2,
+        }
+    }
+}
+
+/// Hysteresis counters, one set per replica.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hysteresis {
+    pub consecutive_failures: u32,
+    pub consecutive_successes: u32,
+}
+
+/// Apply a successful probe.  Returns the next state.
+pub fn note_success(state: HealthState, h: &mut Hysteresis, cfg: &HealthConfig) -> HealthState {
+    h.consecutive_failures = 0;
+    h.consecutive_successes = h.consecutive_successes.saturating_add(1);
+    match state {
+        HealthState::Draining => HealthState::Draining,
+        HealthState::Healthy => HealthState::Healthy,
+        HealthState::Suspect | HealthState::Down => {
+            if h.consecutive_successes >= cfg.up_after {
+                HealthState::Healthy
+            } else {
+                state
+            }
+        }
+    }
+}
+
+/// Apply a failed probe (or a dispatch-time transport failure — both
+/// mean "the replica did not answer").  Returns the next state.
+pub fn note_failure(state: HealthState, h: &mut Hysteresis, cfg: &HealthConfig) -> HealthState {
+    h.consecutive_successes = 0;
+    h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+    match state {
+        HealthState::Draining => HealthState::Draining,
+        HealthState::Healthy => HealthState::Suspect,
+        HealthState::Suspect => {
+            if h.consecutive_failures >= cfg.down_after {
+                HealthState::Down
+            } else {
+                HealthState::Suspect
+            }
+        }
+        HealthState::Down => HealthState::Down,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            down_after: 3,
+            up_after: 2,
+            ..HealthConfig::default()
+        }
+    }
+
+    #[test]
+    fn one_failure_suspects_three_down() {
+        let cfg = cfg();
+        let mut h = Hysteresis::default();
+        let mut s = HealthState::Healthy;
+        s = note_failure(s, &mut h, &cfg);
+        assert_eq!(s, HealthState::Suspect, "first failure demotes immediately");
+        s = note_failure(s, &mut h, &cfg);
+        assert_eq!(s, HealthState::Suspect);
+        s = note_failure(s, &mut h, &cfg);
+        assert_eq!(s, HealthState::Down, "down_after consecutive failures");
+    }
+
+    #[test]
+    fn recovery_needs_up_after_consecutive_successes() {
+        let cfg = cfg();
+        let mut h = Hysteresis::default();
+        let mut s = HealthState::Down;
+        h.consecutive_failures = 5;
+        s = note_success(s, &mut h, &cfg);
+        assert_eq!(s, HealthState::Down, "one success is not trust");
+        s = note_success(s, &mut h, &cfg);
+        assert_eq!(s, HealthState::Healthy);
+        // A failure mid-recovery resets the success streak.
+        let mut h = Hysteresis::default();
+        let mut s = HealthState::Down;
+        s = note_success(s, &mut h, &cfg);
+        s = note_failure(s, &mut h, &cfg);
+        s = note_success(s, &mut h, &cfg);
+        assert_eq!(s, HealthState::Down, "streak was broken");
+    }
+
+    #[test]
+    fn draining_is_sticky_under_probes() {
+        let cfg = cfg();
+        let mut h = Hysteresis::default();
+        assert_eq!(
+            note_success(HealthState::Draining, &mut h, &cfg),
+            HealthState::Draining
+        );
+        for _ in 0..10 {
+            assert_eq!(
+                note_failure(HealthState::Draining, &mut h, &cfg),
+                HealthState::Draining
+            );
+        }
+    }
+}

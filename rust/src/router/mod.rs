@@ -1,0 +1,837 @@
+//! Multi-replica front-end router: prefix-affinity routing, health
+//! checks, bounded retry, proxied cancellation, graceful drain.
+//!
+//! The router fronts N replicas — each a [`crate::coordinator::Coordinator`]
+//! behind the v2 JSON-lines protocol of [`crate::server`] — and speaks
+//! the *same* protocol to clients, so a client cannot tell one replica
+//! from a fleet.  Per request it:
+//!
+//! 1. picks a replica ([`table`]): prefix-affinity rendezvous hashing
+//!    over the first `BLOCK_TOKENS`-aligned prompt chunks (requests
+//!    sharing a system prompt land on the replica already holding it
+//!    warm), overflowing to least-loaded past a slack bound; `Down` /
+//!    `Draining` replicas never route;
+//! 2. relays the stream with every `id` rewritten to the router-global
+//!    one, always requesting replica mode upstream (`"ack": true`, see
+//!    the server module docs) so cancellation can be proxied from any
+//!    client connection even while the request is still queued;
+//! 3. on failure, classifies: a fault with **zero relayed deltas**
+//!    (connect refused, timeout, reset, replica `queue_full`) retries on
+//!    another replica with exponential backoff + seeded jitter, bounded
+//!    by [`retry::RetryConfig::max_attempts`]; a fault **after** deltas
+//!    were relayed is never silently re-run — the client gets an
+//!    explicit `{"error": "replica_failed", "retryable": false,
+//!    "deltas_streamed": n}` marking the replay boundary.
+//!
+//! Error lines the router itself can emit (all carry the global `id`):
+//! `no_replicas` (nothing routable), `replica_unavailable` (+`attempts`,
+//! retry budget exhausted), `replica_failed` (+`deltas_streamed`).
+//! Replica-origin request errors (`bad_request`, `too_large`, and
+//! `queue_full`/`timeout` once retries are spent or deltas flowed) are
+//! relayed as-is.
+//!
+//! A prober thread drives per-replica health with hysteresis
+//! ([`health`]: `Healthy → Suspect → Down` and back, `Draining` is
+//! admin-only), and admin lines manage the fleet over the same socket:
+//! `{"admin": "status"}`, `{"admin": "register", "replica": "h:p"}`,
+//! `{"admin": "drain", "replica": "h:p"}`.  `{"health": true}` answers
+//! with fleet-level gauges.  [`chaos`] provides the seeded kill /
+//! restart / stall harness the storm tests drive.
+
+pub mod chaos;
+pub mod drain;
+pub mod health;
+pub mod retry;
+pub mod table;
+
+pub use health::{HealthConfig, HealthState};
+pub use retry::RetryConfig;
+pub use table::{ReplicaId, RoutePolicy, RoutingTable};
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::router::health::{note_failure, note_success};
+use crate::router::retry::Backoff;
+use crate::router::table::ProbeGauges;
+use crate::server::{client_health, drain_oversized_line, read_line_bounded, LineRead};
+use crate::util::json::{self, Value};
+use crate::util::threadpool::ThreadPool;
+
+/// Router tuning.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub policy: RoutePolicy,
+    /// Client-connection handler threads.
+    pub conn_threads: usize,
+    /// Client request-line byte cap (same hardening as the server).
+    pub max_line_bytes: usize,
+    /// Idle budget between client request lines.
+    pub idle_read_timeout: Duration,
+    /// Per-attempt TCP connect budget to a replica.
+    pub connect_timeout: Duration,
+    /// Per-event idle budget on an upstream stream.  Upstream relays are
+    /// always streaming, so this bounds the gap between *events*, not a
+    /// whole generation — a healthy long generation keeps renewing it.
+    pub request_timeout: Duration,
+    /// Prompt blocks hashed into the affinity key.
+    pub affinity_blocks: usize,
+    /// Affinity yields to least-loaded when the affine replica is this
+    /// many requests busier.
+    pub load_slack: usize,
+    pub health: HealthConfig,
+    pub retry: RetryConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            policy: RoutePolicy::Affinity,
+            conn_threads: 8,
+            max_line_bytes: 256 * 1024,
+            idle_read_timeout: Duration::from_secs(120),
+            connect_timeout: Duration::from_secs(2),
+            request_timeout: Duration::from_secs(120),
+            affinity_blocks: 4,
+            load_slack: 4,
+            health: HealthConfig::default(),
+            retry: RetryConfig::default(),
+        }
+    }
+}
+
+/// Router-level counters (monotonic; exposed via `{"admin": "status"}`).
+#[derive(Debug, Default)]
+pub struct RouterMetrics {
+    /// Generation requests accepted from clients.
+    pub requests: AtomicU64,
+    /// Requests whose terminal line was relayed (including
+    /// replica-reported request errors — the request *got its answer*).
+    pub completed: AtomicU64,
+    /// Re-route attempts performed.
+    pub retries: AtomicU64,
+    /// Streams that failed after deltas were relayed (`replica_failed`).
+    pub broken_streams: AtomicU64,
+    /// Requests that spent the whole retry budget (`replica_unavailable`).
+    pub exhausted: AtomicU64,
+    /// Requests refused because nothing was routable (`no_replicas`).
+    pub no_replicas: AtomicU64,
+    /// Cancellations forwarded to an owning replica.
+    pub cancels_proxied: AtomicU64,
+}
+
+/// In-flight request registry entry: which replica owns the request and
+/// (once the upstream ack arrives) its replica-local id.
+struct ProxyEntry {
+    replica_addr: SocketAddr,
+    remote: Option<u64>,
+    /// A cancel arrived before the upstream ack: the relay thread issues
+    /// the upstream cancel itself as soon as it learns the remote id.
+    cancel_requested: bool,
+}
+
+struct RouterState {
+    table: Mutex<RoutingTable>,
+    proxy: Mutex<HashMap<u64, ProxyEntry>>,
+    metrics: RouterMetrics,
+    cfg: RouterConfig,
+    ids: AtomicU64,
+}
+
+pub struct RouterHandle {
+    pub addr: SocketAddr,
+    state: Arc<RouterState>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    /// Add a replica to the fleet (new requests may route to it
+    /// immediately).
+    pub fn register(&self, addr: SocketAddr) -> ReplicaId {
+        self.state.table.lock().unwrap().register(addr)
+    }
+
+    /// Begin a graceful drain: no new work, in-flight finishes, then the
+    /// replica leaves the table.  `None` if the address is unknown.
+    pub fn drain(&self, addr: SocketAddr) -> Option<ReplicaId> {
+        self.state.table.lock().unwrap().drain_addr(addr)
+    }
+
+    /// Replicas currently in the table (drained ones leave once idle).
+    pub fn replica_count(&self) -> usize {
+        self.state.table.lock().unwrap().len()
+    }
+
+    pub fn metrics(&self) -> &RouterMetrics {
+        &self.state.metrics
+    }
+
+    /// The same JSON the `{"admin": "status"}` endpoint serves.
+    pub fn status(&self) -> Value {
+        status_value(&self.state)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the acceptor so it notices the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the router on `addr` ("127.0.0.1:0" for an ephemeral port)
+/// fronting `replicas` (more can be registered later).
+pub fn serve_router(
+    addr: &str,
+    replicas: &[SocketAddr],
+    cfg: RouterConfig,
+) -> Result<RouterHandle> {
+    let listener = TcpListener::bind(addr).context("bind router")?;
+    let local = listener.local_addr()?;
+    let mut table = RoutingTable::new(cfg.policy, cfg.affinity_blocks, cfg.load_slack);
+    for &r in replicas {
+        table.register(r);
+    }
+    let state = Arc::new(RouterState {
+        table: Mutex::new(table),
+        proxy: Mutex::new(HashMap::new()),
+        metrics: RouterMetrics::default(),
+        cfg,
+        ids: AtomicU64::new(1),
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let st = Arc::clone(&state);
+    let sp = Arc::clone(&stop);
+    let prober = std::thread::Builder::new()
+        .name("rap-router-prober".into())
+        .spawn(move || prober_loop(st, sp))?;
+
+    let st = Arc::clone(&state);
+    let sp = Arc::clone(&stop);
+    let acceptor = std::thread::Builder::new()
+        .name("rap-router-acceptor".into())
+        .spawn(move || {
+            let pool = ThreadPool::new(st.cfg.conn_threads.max(1));
+            for stream in listener.incoming() {
+                if sp.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let st = Arc::clone(&st);
+                pool.execute(move || handle_client(stream, st));
+            }
+        })?;
+
+    Ok(RouterHandle {
+        addr: local,
+        state,
+        stop,
+        threads: vec![prober, acceptor],
+    })
+}
+
+/// Health prober: one `{"health": true}` round-trip per replica per
+/// interval, applied through the hysteresis machine; also sweeps idle
+/// drained replicas out of the table.  Probes run without the table
+/// lock so a slow replica can't stall routing.
+fn prober_loop(state: Arc<RouterState>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        let targets: Vec<(ReplicaId, SocketAddr)> = {
+            let t = state.table.lock().unwrap();
+            t.replicas
+                .iter()
+                .filter(|r| r.health != HealthState::Draining)
+                .map(|r| (r.id, r.addr))
+                .collect()
+        };
+        for (id, addr) in targets {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let probe = client_health(&addr, state.cfg.health.probe_timeout);
+            let mut t = state.table.lock().unwrap();
+            if let Some(r) = t.get_mut(id) {
+                match probe {
+                    Ok(v) => {
+                        r.health = note_success(r.health, &mut r.hysteresis, &state.cfg.health);
+                        r.gauges = Some(gauges_from(&v));
+                    }
+                    Err(_) => {
+                        r.health = note_failure(r.health, &mut r.hysteresis, &state.cfg.health);
+                    }
+                }
+            }
+        }
+        state.table.lock().unwrap().sweep_drained();
+        // Sleep in slices so shutdown stays prompt.
+        let mut slept = Duration::ZERO;
+        while slept < state.cfg.health.interval && !stop.load(Ordering::SeqCst) {
+            let step = Duration::from_millis(10).min(state.cfg.health.interval - slept);
+            std::thread::sleep(step);
+            slept += step;
+        }
+    }
+}
+
+fn gauges_from(v: &Value) -> ProbeGauges {
+    let n = |k: &str| v.get(k).and_then(|x| x.as_i64()).unwrap_or(0) as u64;
+    ProbeGauges {
+        pending: n("pending"),
+        used_blocks: n("used_blocks"),
+        capacity_blocks: n("capacity_blocks"),
+        prefix_hits: n("prefix_hits"),
+        prefix_lookups: n("prefix_lookups"),
+    }
+}
+
+fn status_value(state: &RouterState) -> Value {
+    let replicas: Vec<Value> = {
+        let t = state.table.lock().unwrap();
+        t.replicas
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("addr", json::s(r.addr.to_string())),
+                    ("state", json::s(r.health.as_str())),
+                    ("in_flight", json::num(r.in_flight as f64)),
+                    ("dispatched", json::num(r.dispatched as f64)),
+                    ("completed", json::num(r.completed as f64)),
+                ];
+                if let Some(g) = r.gauges {
+                    fields.push(("pending", json::num(g.pending as f64)));
+                    fields.push(("used_blocks", json::num(g.used_blocks as f64)));
+                    fields.push(("prefix_hits", json::num(g.prefix_hits as f64)));
+                    fields.push(("prefix_lookups", json::num(g.prefix_lookups as f64)));
+                }
+                json::obj(fields)
+            })
+            .collect()
+    };
+    let m = &state.metrics;
+    let c = |a: &AtomicU64| json::num(a.load(Ordering::Relaxed) as f64);
+    json::obj(vec![
+        ("replicas", json::arr(replicas)),
+        ("requests", c(&m.requests)),
+        ("completed", c(&m.completed)),
+        ("retries", c(&m.retries)),
+        ("broken_streams", c(&m.broken_streams)),
+        ("exhausted", c(&m.exhausted)),
+        ("no_replicas", c(&m.no_replicas)),
+        ("cancels_proxied", c(&m.cancels_proxied)),
+    ])
+}
+
+/// Clone `v` with its `"id"` replaced — every relayed line carries the
+/// router-global id, never the replica-local one.
+fn with_id(v: &Value, id: u64) -> Value {
+    match v {
+        Value::Obj(m) => {
+            let mut m = m.clone();
+            m.insert("id".to_string(), json::num(id as f64));
+            Value::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
+/// Open a fresh connection to the replica and cancel `remote` there.  A
+/// fresh connection is required: the connection relaying the request is
+/// single-duplex by protocol (the replica reads the next line only after
+/// the current request's stream ends).
+fn send_upstream_cancel(addr: &SocketAddr, remote: u64, timeout: Duration) -> bool {
+    let Ok(mut s) = TcpStream::connect_timeout(addr, timeout) else {
+        return false;
+    };
+    let _ = s.set_read_timeout(Some(timeout));
+    let req = json::obj(vec![("cancel", json::num(remote as f64))]);
+    if writeln!(s, "{req}").is_err() {
+        return false;
+    }
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+    matches!(reader.read_line(&mut line), Ok(n) if n > 0)
+}
+
+/// Proxy `{"cancel": gid}` to whichever replica owns the request.  An
+/// unknown id (already finished, never existed) is an acked no-op, same
+/// as the single-server semantics.
+fn proxy_cancel(state: &RouterState, gid: u64) {
+    let target = {
+        let mut proxy = state.proxy.lock().unwrap();
+        match proxy.get_mut(&gid) {
+            None => None,
+            Some(e) => match e.remote {
+                Some(remote) => Some((e.replica_addr, remote)),
+                None => {
+                    // Upstream id not known yet: flag it; the relay
+                    // thread cancels as soon as the ack arrives.
+                    e.cancel_requested = true;
+                    None
+                }
+            },
+        }
+    };
+    if let Some((addr, remote)) = target {
+        state.metrics.cancels_proxied.fetch_add(1, Ordering::Relaxed);
+        let _ = send_upstream_cancel(&addr, remote, state.cfg.connect_timeout);
+    }
+}
+
+fn handle_admin(state: &RouterState, v: &Value, cmd: &str) -> Value {
+    let replica_addr = || -> Option<SocketAddr> {
+        v.get("replica")
+            .and_then(|r| r.as_str())
+            .and_then(|s| s.parse().ok())
+    };
+    match cmd {
+        "status" => status_value(state),
+        "register" => match replica_addr() {
+            Some(addr) => {
+                let id = state.table.lock().unwrap().register(addr);
+                json::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("registered", json::s(addr.to_string())),
+                    ("replica_id", json::num(id as f64)),
+                ])
+            }
+            None => json::obj(vec![
+                ("error", json::s("bad_request")),
+                ("field", json::s("replica")),
+            ]),
+        },
+        "drain" => match replica_addr() {
+            Some(addr) => match state.table.lock().unwrap().drain_addr(addr) {
+                Some(_) => json::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("draining", json::s(addr.to_string())),
+                ]),
+                None => json::obj(vec![("error", json::s("unknown_replica"))]),
+            },
+            None => json::obj(vec![
+                ("error", json::s("bad_request")),
+                ("field", json::s("replica")),
+            ]),
+        },
+        _ => json::obj(vec![
+            ("error", json::s("bad_request")),
+            ("field", json::s("admin")),
+        ]),
+    }
+}
+
+fn handle_client(stream: TcpStream, state: Arc<RouterState>) {
+    let _ = stream.set_read_timeout(Some(state.cfg.idle_read_timeout));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match read_line_bounded(&mut reader, &mut line, state.cfg.max_line_bytes) {
+            LineRead::Closed => break,
+            LineRead::TooLong => {
+                let reply = json::obj(vec![
+                    ("error", json::s("bad_request")),
+                    ("field", json::s("line")),
+                ]);
+                let _ = writeln!(out, "{reply}");
+                drain_oversized_line(&mut reader, state.cfg.max_line_bytes);
+                break;
+            }
+            LineRead::Line => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let v = match json::parse(trimmed) {
+            Ok(v) => v,
+            Err(e) => {
+                let reply = json::obj(vec![("error", json::s(format!("bad json: {e}")))]);
+                if writeln!(out, "{reply}").is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
+        if let Some(cmd) = v.get("admin").and_then(|a| a.as_str()) {
+            let reply = handle_admin(&state, &v, cmd);
+            if writeln!(out, "{reply}").is_err() {
+                break;
+            }
+            continue;
+        }
+        if v.get("health").and_then(|h| h.as_bool()).unwrap_or(false) {
+            let (total, healthy) = {
+                let t = state.table.lock().unwrap();
+                let healthy = t
+                    .replicas
+                    .iter()
+                    .filter(|r| r.health == HealthState::Healthy)
+                    .count();
+                (t.len(), healthy)
+            };
+            let reply = json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("replicas", json::num(total as f64)),
+                ("healthy", json::num(healthy as f64)),
+            ]);
+            if writeln!(out, "{reply}").is_err() {
+                break;
+            }
+            continue;
+        }
+        if let Some(cid) = v.get("cancel").and_then(|c| c.as_i64()) {
+            proxy_cancel(&state, cid as u64);
+            let ack = json::obj(vec![
+                ("cancel", json::num(cid as f64)),
+                ("ok", Value::Bool(true)),
+            ]);
+            if writeln!(out, "{ack}").is_err() {
+                break;
+            }
+            continue;
+        }
+        let gid = state.ids.fetch_add(1, Ordering::SeqCst);
+        if !relay_request(&state, &mut out, gid, &v) {
+            break;
+        }
+    }
+}
+
+/// How one relay attempt ended.
+enum RelayEnd {
+    /// The terminal line reached the client — the request is answered.
+    Served,
+    /// The client connection died; upstream was cancelled.
+    ClientGone,
+    /// Replayable: the failure provably produced no client-visible
+    /// output.  `transport` distinguishes a replica-health signal
+    /// (connect/reset/timeout) from mere backpressure (`queue_full`).
+    Retry {
+        reason: &'static str,
+        transport: bool,
+    },
+    /// Failed *after* deltas were relayed: never replayed; the client
+    /// gets an explicit error marking the boundary.
+    Broken { reason: String, deltas: usize },
+}
+
+/// Relay one generation request end to end, retrying across replicas
+/// while that is provably safe.  Returns `false` when the client
+/// connection itself is gone.
+fn relay_request(state: &Arc<RouterState>, out: &mut TcpStream, gid: u64, body: &Value) -> bool {
+    state.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    let prompt: Vec<u8> = body
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .unwrap_or("")
+        .as_bytes()
+        .to_vec();
+    let client_stream = body.get("stream").and_then(|s| s.as_bool()).unwrap_or(false);
+    let client_ack = body.get("ack").and_then(|a| a.as_bool()).unwrap_or(false);
+    let mut backoff = Backoff::new(&state.cfg.retry, gid);
+    let mut tried: Vec<ReplicaId> = Vec::new();
+    let mut last_reason = "";
+    let max_attempts = state.cfg.retry.max_attempts.max(1);
+    for attempt in 0..max_attempts {
+        let pick = {
+            let mut t = state.table.lock().unwrap();
+            let picked = t
+                .route(&prompt, &tried)
+                // Every candidate already tried: allow repeats (a replica
+                // that answered queue_full may have drained by now)
+                // rather than giving up early.
+                .or_else(|| t.route(&prompt, &[]));
+            picked.and_then(|id| t.addr_of(id).map(|a| (id, a)))
+        };
+        let Some((rid, raddr)) = pick else {
+            state.metrics.no_replicas.fetch_add(1, Ordering::Relaxed);
+            let reply = json::obj(vec![
+                ("id", json::num(gid as f64)),
+                ("error", json::s("no_replicas")),
+                ("retryable", Value::Bool(true)),
+            ]);
+            return writeln!(out, "{reply}").is_ok();
+        };
+        state.table.lock().unwrap().note_dispatch(rid);
+        state.proxy.lock().unwrap().insert(
+            gid,
+            ProxyEntry {
+                replica_addr: raddr,
+                remote: None,
+                cancel_requested: false,
+            },
+        );
+        let end = relay_once(state, out, gid, body, raddr, client_stream, client_ack);
+        state.proxy.lock().unwrap().remove(&gid);
+        {
+            let mut t = state.table.lock().unwrap();
+            if t.note_done(rid) {
+                t.sweep_drained();
+            }
+        }
+        match end {
+            RelayEnd::Served => {
+                state.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+            RelayEnd::ClientGone => return false,
+            RelayEnd::Broken { reason, deltas } => {
+                note_transport_failure(state, rid);
+                state.metrics.broken_streams.fetch_add(1, Ordering::Relaxed);
+                let reply = json::obj(vec![
+                    ("id", json::num(gid as f64)),
+                    ("error", json::s("replica_failed")),
+                    ("retryable", Value::Bool(false)),
+                    ("deltas_streamed", json::num(deltas as f64)),
+                    ("reason", json::s(reason)),
+                ]);
+                return writeln!(out, "{reply}").is_ok();
+            }
+            RelayEnd::Retry { reason, transport } => {
+                tried.push(rid);
+                last_reason = reason;
+                if transport {
+                    note_transport_failure(state, rid);
+                }
+                if attempt + 1 < max_attempts {
+                    state.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(backoff.next_delay());
+                }
+            }
+        }
+    }
+    state.metrics.exhausted.fetch_add(1, Ordering::Relaxed);
+    let reply = json::obj(vec![
+        ("id", json::num(gid as f64)),
+        ("error", json::s("replica_unavailable")),
+        ("retryable", Value::Bool(true)),
+        ("attempts", json::num(max_attempts as f64)),
+        ("reason", json::s(last_reason)),
+    ]);
+    writeln!(out, "{reply}").is_ok()
+}
+
+/// A dispatch-time transport failure is a health signal, same as a
+/// failed probe.
+fn note_transport_failure(state: &RouterState, id: ReplicaId) {
+    let mut t = state.table.lock().unwrap();
+    if let Some(r) = t.get_mut(id) {
+        r.health = note_failure(r.health, &mut r.hysteresis, &state.cfg.health);
+    }
+}
+
+/// One attempt against one replica: forward the request (forced
+/// streaming + ack upstream), relay lines back with the id rewritten,
+/// classify whatever ends the exchange.
+fn relay_once(
+    state: &Arc<RouterState>,
+    out: &mut TcpStream,
+    gid: u64,
+    body: &Value,
+    raddr: SocketAddr,
+    client_stream: bool,
+    client_ack: bool,
+) -> RelayEnd {
+    let cfg = &state.cfg;
+    // Upstream body: the client's fields, with streaming + replica-mode
+    // ack forced on.  Streaming upstream even for one-shot clients turns
+    // `request_timeout` into a per-event liveness bound instead of a
+    // whole-generation one.
+    let mut fields: Vec<(&str, Value)> =
+        vec![("stream", Value::Bool(true)), ("ack", Value::Bool(true))];
+    let owned: Vec<(String, Value)> = body
+        .as_obj()
+        .map(|m| m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+        .unwrap_or_default();
+    for (k, v) in &owned {
+        if k != "stream" && k != "ack" {
+            fields.push((k.as_str(), v.clone()));
+        }
+    }
+    let upstream_body = json::obj(fields);
+    let up = match TcpStream::connect_timeout(&raddr, cfg.connect_timeout) {
+        Ok(s) => s,
+        Err(_) => {
+            return RelayEnd::Retry {
+                reason: "connect",
+                transport: true,
+            }
+        }
+    };
+    let _ = up.set_read_timeout(Some(cfg.request_timeout));
+    let mut reader = BufReader::new(match up.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            return RelayEnd::Retry {
+                reason: "connect",
+                transport: true,
+            }
+        }
+    });
+    let mut up_w = up;
+    if writeln!(up_w, "{upstream_body}").is_err() {
+        return RelayEnd::Retry {
+            reason: "write",
+            transport: true,
+        };
+    }
+    let mut remote: Option<u64> = None;
+    let mut deltas_relayed = 0usize;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(_) => {
+                return upstream_failed(&raddr, remote, deltas_relayed, "upstream_timeout", cfg);
+            }
+        };
+        if n == 0 {
+            return upstream_failed(&raddr, remote, deltas_relayed, "upstream_closed", cfg);
+        }
+        let v = match json::parse(line.trim()) {
+            Ok(v) => v,
+            Err(_) => {
+                // Protocol violation — never replayed (a rerun can't fix
+                // a broken peer), surfaced like a post-delta break.
+                if let Some(r) = remote {
+                    let _ = send_upstream_cancel(&raddr, r, cfg.connect_timeout);
+                }
+                return RelayEnd::Broken {
+                    reason: "malformed_frame".to_string(),
+                    deltas: deltas_relayed,
+                };
+            }
+        };
+        if v.get("ack").and_then(|a| a.as_bool()).unwrap_or(false) {
+            remote = v.get("id").and_then(|i| i.as_i64()).map(|i| i as u64);
+            let cancel_now = {
+                let mut proxy = state.proxy.lock().unwrap();
+                match proxy.get_mut(&gid) {
+                    Some(e) => {
+                        e.remote = remote;
+                        e.cancel_requested
+                    }
+                    None => false,
+                }
+            };
+            if cancel_now {
+                if let Some(r) = remote {
+                    state.metrics.cancels_proxied.fetch_add(1, Ordering::Relaxed);
+                    let _ = send_upstream_cancel(&raddr, r, cfg.connect_timeout);
+                }
+            }
+            if client_ack && writeln!(out, "{}", with_id(&v, gid)).is_err() {
+                if let Some(r) = remote {
+                    let _ = send_upstream_cancel(&raddr, r, cfg.connect_timeout);
+                }
+                return RelayEnd::ClientGone;
+            }
+            continue;
+        }
+        let is_delta = v.get("delta").is_some();
+        if is_delta || v.get("event").is_some() {
+            // One-shot clients never see deltas/lifecycle lines — and
+            // since nothing was relayed, their requests stay replayable
+            // for the whole generation.
+            if client_stream {
+                if writeln!(out, "{}", with_id(&v, gid)).is_err() {
+                    if let Some(r) = remote {
+                        let _ = send_upstream_cancel(&raddr, r, cfg.connect_timeout);
+                    }
+                    return RelayEnd::ClientGone;
+                }
+                if is_delta {
+                    deltas_relayed += 1;
+                }
+            }
+            continue;
+        }
+        // Terminal line.  Replica-side backpressure and nothing-streamed
+        // timeouts are replayable; everything else is the request's
+        // answer and gets relayed.
+        if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
+            if err == "queue_full" {
+                return RelayEnd::Retry {
+                    reason: "queue_full",
+                    transport: false,
+                };
+            }
+            if err == "timeout" && deltas_relayed == 0 {
+                return RelayEnd::Retry {
+                    reason: "replica_timeout",
+                    transport: true,
+                };
+            }
+        }
+        return if writeln!(out, "{}", with_id(&v, gid)).is_ok() {
+            RelayEnd::Served
+        } else {
+            RelayEnd::ClientGone
+        };
+    }
+}
+
+/// The upstream connection failed (timeout / reset / close).  The
+/// replica may still be computing — cancel explicitly so a retry can't
+/// leave duplicate work running — then classify by whether the client
+/// saw output.
+fn upstream_failed(
+    raddr: &SocketAddr,
+    remote: Option<u64>,
+    deltas_relayed: usize,
+    reason: &'static str,
+    cfg: &RouterConfig,
+) -> RelayEnd {
+    if let Some(r) = remote {
+        let _ = send_upstream_cancel(raddr, r, cfg.connect_timeout);
+    }
+    if deltas_relayed == 0 {
+        RelayEnd::Retry {
+            reason,
+            transport: true,
+        }
+    } else {
+        RelayEnd::Broken {
+            reason: reason.to_string(),
+            deltas: deltas_relayed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_id_rewrites_preserving_other_fields() {
+        let v = json::parse(r#"{"id": 4, "delta": "ab"}"#).unwrap();
+        let w = with_id(&v, 99);
+        assert_eq!(w.get("id").and_then(|i| i.as_i64()), Some(99));
+        assert_eq!(w.get("delta").and_then(|d| d.as_str()), Some("ab"));
+        // The original is untouched.
+        assert_eq!(v.get("id").and_then(|i| i.as_i64()), Some(4));
+    }
+
+    #[test]
+    fn default_config_is_affinity_with_bounded_retry() {
+        let cfg = RouterConfig::default();
+        assert_eq!(cfg.policy, RoutePolicy::Affinity);
+        assert!(cfg.retry.max_attempts >= 2, "retry must actually retry");
+        assert!(cfg.connect_timeout < cfg.request_timeout);
+    }
+}

@@ -1,0 +1,134 @@
+//! Bounded retry with exponential backoff and seeded full jitter.
+//!
+//! A request is re-routed only while it is provably unstarted from the
+//! client's point of view — zero relayed deltas (see
+//! [`crate::server::ClientError::is_retryable`]).  Backoff delays are
+//! drawn from the deterministic in-tree RNG, streamed per request id, so
+//! a seeded storm test replays the exact same retry timing.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Retry tuning.
+#[derive(Debug, Clone)]
+pub struct RetryConfig {
+    /// Total attempts per request, including the first (>= 1).
+    pub max_attempts: usize,
+    /// First backoff window; doubles each retry.
+    pub base: Duration,
+    /// Backoff window ceiling.
+    pub cap: Duration,
+    /// Jitter seed; combined with the request id so concurrent requests
+    /// draw independent (but reproducible) delays.
+    pub seed: u64,
+}
+
+impl Default for RetryConfig {
+    fn default() -> RetryConfig {
+        RetryConfig {
+            max_attempts: 3,
+            base: Duration::from_millis(20),
+            cap: Duration::from_secs(1),
+            seed: 0,
+        }
+    }
+}
+
+/// SplitMix64 finalizer — decorrelates (seed, request id) into an RNG
+/// stream, mirroring how `faults::FaultPlan` keys its per-site streams.
+pub(crate) fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.rotate_left(31) ^ 0x9E37_79B9_7F4A_7C15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-request backoff schedule: full jitter, i.e. each delay is uniform
+/// in `[0, min(cap, base << attempt))`.
+pub struct Backoff {
+    rng: Rng,
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+}
+
+impl Backoff {
+    pub fn new(cfg: &RetryConfig, request_id: u64) -> Backoff {
+        Backoff {
+            rng: Rng::new(mix(cfg.seed, request_id)),
+            base: cfg.base,
+            cap: cfg.cap,
+            attempt: 0,
+        }
+    }
+
+    /// The delay to sleep before the next attempt.
+    pub fn next_delay(&mut self) -> Duration {
+        let window = self
+            .base
+            .saturating_mul(1u32 << self.attempt.min(16))
+            .min(self.cap);
+        self.attempt = self.attempt.saturating_add(1);
+        let nanos = window.as_nanos() as u64;
+        if nanos == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.rng.below(nanos as usize + 1) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_are_bounded_by_doubling_window_and_cap() {
+        let cfg = RetryConfig {
+            max_attempts: 8,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(50),
+            seed: 7,
+        };
+        let mut b = Backoff::new(&cfg, 1);
+        for attempt in 0..8u32 {
+            let window = cfg.base.saturating_mul(1 << attempt).min(cfg.cap);
+            let d = b.next_delay();
+            assert!(d <= window, "attempt {attempt}: {d:?} > {window:?}");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_request_replays_identically() {
+        let cfg = RetryConfig {
+            seed: 42,
+            ..RetryConfig::default()
+        };
+        let a: Vec<Duration> = {
+            let mut b = Backoff::new(&cfg, 9);
+            (0..5).map(|_| b.next_delay()).collect()
+        };
+        let b2: Vec<Duration> = {
+            let mut b = Backoff::new(&cfg, 9);
+            (0..5).map(|_| b.next_delay()).collect()
+        };
+        assert_eq!(a, b2);
+    }
+
+    #[test]
+    fn different_requests_draw_independent_streams() {
+        let cfg = RetryConfig {
+            seed: 42,
+            ..RetryConfig::default()
+        };
+        let a: Vec<Duration> = {
+            let mut b = Backoff::new(&cfg, 1);
+            (0..4).map(|_| b.next_delay()).collect()
+        };
+        let c: Vec<Duration> = {
+            let mut b = Backoff::new(&cfg, 2);
+            (0..4).map(|_| b.next_delay()).collect()
+        };
+        assert_ne!(a, c, "request ids must decorrelate the jitter");
+    }
+}

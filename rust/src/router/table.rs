@@ -1,0 +1,369 @@
+//! The routing table: replica registry + prefix-affinity route choice.
+//!
+//! Affinity keying deliberately mirrors the prefix cache's granularity
+//! (`kvcache::BLOCK_TOKENS`): the key hashes only the first
+//! block-*aligned* bytes of the prompt (up to `affinity_blocks` blocks),
+//! so two requests that share a system prompt — identical through at
+//! least one full block — map to the same key even when their suffixes
+//! differ, and land on the replica already holding those blocks warm.
+//! Placement is rendezvous (highest-random-weight) hashing over the live
+//! replica set: adding or removing one replica only remaps the keys that
+//! pointed at it, so a drain or a crash doesn't cold-start the whole
+//! fleet's prefix caches.
+//!
+//! Affinity yields to load: when the affine replica is more than
+//! `load_slack` requests busier than the least-loaded candidate, the
+//! request overflows to the least-loaded one — a popular prefix can
+//! saturate one replica but not the router.
+
+use std::net::SocketAddr;
+
+use crate::kvcache::BLOCK_TOKENS;
+use crate::router::health::{HealthState, Hysteresis};
+use crate::router::retry::mix;
+use crate::util::rng::Rng;
+
+pub type ReplicaId = u64;
+
+/// How the router picks a replica for a fresh request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Prefix-affinity rendezvous hashing with least-loaded overflow
+    /// (the default; what the prefix cache wants).
+    Affinity,
+    /// Seeded uniform choice — the control arm in `benches/router.rs`.
+    Random { seed: u64 },
+    /// Pure least-loaded, ignoring prefixes.
+    LeastLoaded,
+}
+
+/// Last successful probe's gauges (from the replica's `{"health": true}`
+/// line), for status reporting and load-aware routing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProbeGauges {
+    pub pending: u64,
+    pub used_blocks: u64,
+    pub capacity_blocks: u64,
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+}
+
+#[derive(Debug)]
+pub struct Replica {
+    pub id: ReplicaId,
+    pub addr: SocketAddr,
+    pub health: HealthState,
+    pub hysteresis: Hysteresis,
+    /// Requests this router currently has relayed onto the replica.
+    pub in_flight: usize,
+    pub gauges: Option<ProbeGauges>,
+    pub dispatched: u64,
+    pub completed: u64,
+}
+
+pub struct RoutingTable {
+    pub(crate) replicas: Vec<Replica>,
+    next_id: ReplicaId,
+    pub(crate) policy: RoutePolicy,
+    pub(crate) affinity_blocks: usize,
+    pub(crate) load_slack: usize,
+    /// RNG for `RoutePolicy::Random` draws.
+    rng: Rng,
+}
+
+impl RoutingTable {
+    pub fn new(policy: RoutePolicy, affinity_blocks: usize, load_slack: usize) -> RoutingTable {
+        let seed = match policy {
+            RoutePolicy::Random { seed } => seed,
+            _ => 0,
+        };
+        RoutingTable {
+            replicas: Vec::new(),
+            next_id: 1,
+            policy,
+            affinity_blocks: affinity_blocks.max(1),
+            load_slack,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn register(&mut self, addr: SocketAddr) -> ReplicaId {
+        if let Some(r) = self.replicas.iter_mut().find(|r| r.addr == addr) {
+            // Re-registering a known address revives it (e.g. a restarted
+            // replica on the same port) but makes it prove itself first.
+            if r.health == HealthState::Down || r.health == HealthState::Draining {
+                r.health = HealthState::Suspect;
+                r.hysteresis = Hysteresis::default();
+            }
+            return r.id;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.replicas.push(Replica {
+            id,
+            addr,
+            health: HealthState::Healthy,
+            hysteresis: Hysteresis::default(),
+            in_flight: 0,
+            gauges: None,
+            dispatched: 0,
+            completed: 0,
+        });
+        id
+    }
+
+    pub fn remove(&mut self, id: ReplicaId) -> bool {
+        let before = self.replicas.len();
+        self.replicas.retain(|r| r.id != id);
+        self.replicas.len() != before
+    }
+
+    pub fn get_mut(&mut self, id: ReplicaId) -> Option<&mut Replica> {
+        self.replicas.iter_mut().find(|r| r.id == id)
+    }
+
+    pub fn by_addr_mut(&mut self, addr: SocketAddr) -> Option<&mut Replica> {
+        self.replicas.iter_mut().find(|r| r.addr == addr)
+    }
+
+    pub fn addr_of(&self, id: ReplicaId) -> Option<SocketAddr> {
+        self.replicas.iter().find(|r| r.id == id).map(|r| r.addr)
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// The affinity key: FNV-1a over the longest block-aligned prompt
+    /// prefix, capped at `affinity_blocks` blocks.  `None` when the
+    /// prompt doesn't cover even one block — sub-block prompts can't hit
+    /// the prefix cache, so they route by load instead of all piling
+    /// onto one rendezvous winner.
+    pub fn affinity_key(&self, prompt: &[u8]) -> Option<u64> {
+        let aligned = (prompt.len() / BLOCK_TOKENS) * BLOCK_TOKENS;
+        let take = aligned.min(self.affinity_blocks * BLOCK_TOKENS);
+        if take == 0 {
+            return None;
+        }
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for &b in &prompt[..take] {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        Some(h)
+    }
+
+    /// Pick a replica for `prompt`, skipping `exclude` (already-tried
+    /// replicas on a retry).  `None` when nothing is routable.
+    pub fn route(&mut self, prompt: &[u8], exclude: &[ReplicaId]) -> Option<ReplicaId> {
+        let candidate_ids = |table: &RoutingTable, state: HealthState| -> Vec<usize> {
+            table
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.health == state && !exclude.contains(&r.id))
+                .map(|(i, _)| i)
+                .collect()
+        };
+        // Healthy first; a fleet with nothing healthy falls back to
+        // Suspect (still plausibly alive).  Down/Draining never route.
+        let mut cands = candidate_ids(self, HealthState::Healthy);
+        if cands.is_empty() {
+            cands = candidate_ids(self, HealthState::Suspect);
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        let idx = match self.policy {
+            RoutePolicy::Random { .. } => cands[self.rng.below(cands.len())],
+            RoutePolicy::LeastLoaded => self.least_loaded_of(&cands),
+            RoutePolicy::Affinity => match self.affinity_key(prompt) {
+                None => self.least_loaded_of(&cands),
+                Some(key) => {
+                    // Rendezvous: the candidate with the highest
+                    // mix(key, id) owns this key.
+                    let affine = *cands
+                        .iter()
+                        .max_by_key(|&&i| mix(key, self.replicas[i].id))
+                        .expect("cands non-empty");
+                    let least = self.least_loaded_of(&cands);
+                    let slack = self.replicas[least].in_flight + self.load_slack;
+                    if self.replicas[affine].in_flight > slack {
+                        least // popular prefix saturating its owner: overflow
+                    } else {
+                        affine
+                    }
+                }
+            },
+        };
+        Some(self.replicas[idx].id)
+    }
+
+    /// Index (into `self.replicas`) of the least-loaded candidate;
+    /// ties break to the lowest id for determinism.
+    fn least_loaded_of(&self, cands: &[usize]) -> usize {
+        *cands
+            .iter()
+            .min_by_key(|&&i| (self.replicas[i].in_flight, self.replicas[i].id))
+            .expect("cands non-empty")
+    }
+
+    pub fn note_dispatch(&mut self, id: ReplicaId) {
+        if let Some(r) = self.get_mut(id) {
+            r.in_flight += 1;
+            r.dispatched += 1;
+        }
+    }
+
+    /// Decrement the in-flight count.  Returns `true` when this was the
+    /// last in-flight request of a draining replica — the caller should
+    /// then [`RoutingTable::remove`] it (see [`super::drain`]).
+    pub fn note_done(&mut self, id: ReplicaId) -> bool {
+        if let Some(r) = self.get_mut(id) {
+            r.in_flight = r.in_flight.saturating_sub(1);
+            r.completed += 1;
+            return r.health == HealthState::Draining && r.in_flight == 0;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn table_with(n: u16, policy: RoutePolicy) -> RoutingTable {
+        let mut t = RoutingTable::new(policy, 4, 4);
+        for p in 0..n {
+            t.register(addr(9000 + p));
+        }
+        t
+    }
+
+    #[test]
+    fn affinity_key_ignores_suffix_past_aligned_prefix() {
+        let t = table_with(3, RoutePolicy::Affinity);
+        let mut a = vec![b'S'; 64]; // 4 blocks of shared system prompt
+        let mut b = a.clone();
+        a.extend_from_slice(b"user question one");
+        b.extend_from_slice(b"completely different tail");
+        assert_eq!(t.affinity_key(&a), t.affinity_key(&b));
+        // A different system prompt keys differently.
+        let mut c = vec![b'T'; 64];
+        c.extend_from_slice(b"user question one");
+        assert_ne!(t.affinity_key(&a), t.affinity_key(&c));
+        // Sub-block prompts have no affinity.
+        assert_eq!(t.affinity_key(&[b'x'; BLOCK_TOKENS - 1]), None);
+    }
+
+    #[test]
+    fn affinity_is_sticky_per_key() {
+        let mut t = table_with(4, RoutePolicy::Affinity);
+        let prompt = vec![b'p'; 48];
+        let first = t.route(&prompt, &[]).unwrap();
+        for _ in 0..10 {
+            assert_eq!(t.route(&prompt, &[]), Some(first));
+        }
+    }
+
+    #[test]
+    fn rendezvous_remaps_only_the_lost_replicas_keys() {
+        let mut t = table_with(4, RoutePolicy::Affinity);
+        let prompts: Vec<Vec<u8>> = (0..40u8).map(|i| vec![i; 32]).collect();
+        let before: Vec<ReplicaId> =
+            prompts.iter().map(|p| t.route(p, &[]).unwrap()).collect();
+        let victim = before[0];
+        t.remove(victim);
+        for (p, &owner) in prompts.iter().zip(&before) {
+            let after = t.route(p, &[]).unwrap();
+            if owner != victim {
+                assert_eq!(after, owner, "surviving replicas keep their keys");
+            } else {
+                assert_ne!(after, victim);
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_overflows_to_least_loaded_past_slack() {
+        let mut t = table_with(2, RoutePolicy::Affinity);
+        let prompt = vec![b'h'; 32]; // hot prefix
+        let owner = t.route(&prompt, &[]).unwrap();
+        for _ in 0..=t.load_slack {
+            t.note_dispatch(owner);
+        }
+        let spill = t.route(&prompt, &[]).unwrap();
+        assert_ne!(spill, owner, "saturated owner overflows");
+        // Draining the owner's load restores affinity.
+        for _ in 0..=t.load_slack {
+            t.note_done(owner);
+        }
+        assert_eq!(t.route(&prompt, &[]), Some(owner));
+    }
+
+    #[test]
+    fn routing_skips_down_draining_and_excluded() {
+        let mut t = table_with(3, RoutePolicy::LeastLoaded);
+        let ids: Vec<ReplicaId> = t.replicas.iter().map(|r| r.id).collect();
+        t.get_mut(ids[0]).unwrap().health = HealthState::Down;
+        t.get_mut(ids[1]).unwrap().health = HealthState::Draining;
+        assert_eq!(t.route(b"", &[]), Some(ids[2]));
+        assert_eq!(t.route(b"", &[ids[2]]), None, "everything excluded or unroutable");
+    }
+
+    #[test]
+    fn suspect_is_a_last_resort() {
+        let mut t = table_with(2, RoutePolicy::LeastLoaded);
+        let ids: Vec<ReplicaId> = t.replicas.iter().map(|r| r.id).collect();
+        t.get_mut(ids[0]).unwrap().health = HealthState::Suspect;
+        // A healthy replica wins even when busier.
+        for _ in 0..5 {
+            t.note_dispatch(ids[1]);
+        }
+        assert_eq!(t.route(b"", &[]), Some(ids[1]));
+        // With no healthy replica left, suspect still serves.
+        t.get_mut(ids[1]).unwrap().health = HealthState::Down;
+        assert_eq!(t.route(b"", &[]), Some(ids[0]));
+    }
+
+    #[test]
+    fn random_policy_is_seeded_and_spreads() {
+        let runs = |seed: u64| -> Vec<ReplicaId> {
+            let mut t = table_with(3, RoutePolicy::Random { seed });
+            (0..30).map(|_| t.route(b"same prompt", &[]).unwrap()).collect()
+        };
+        assert_eq!(runs(5), runs(5), "seeded draws replay");
+        let picks = runs(5);
+        let distinct: std::collections::BTreeSet<_> = picks.iter().collect();
+        assert!(distinct.len() > 1, "random routing spreads the same prompt");
+    }
+
+    #[test]
+    fn reregistering_a_down_replica_makes_it_suspect() {
+        let mut t = table_with(1, RoutePolicy::Affinity);
+        let id = t.replicas[0].id;
+        t.get_mut(id).unwrap().health = HealthState::Down;
+        let again = t.register(addr(9000));
+        assert_eq!(again, id, "same address keeps its id");
+        assert_eq!(t.replicas[0].health, HealthState::Suspect);
+    }
+
+    #[test]
+    fn note_done_flags_drained_replicas() {
+        let mut t = table_with(1, RoutePolicy::Affinity);
+        let id = t.replicas[0].id;
+        t.note_dispatch(id);
+        t.note_dispatch(id);
+        t.get_mut(id).unwrap().health = HealthState::Draining;
+        assert!(!t.note_done(id), "still one in flight");
+        assert!(t.note_done(id), "last one out signals removal");
+    }
+}

@@ -50,6 +50,24 @@
 //! reservation (and shared prefix-block refcounts) instead of pinning
 //! them for the rest of the generation.
 //!
+//! Replica mode (used by the multi-replica [`crate::router`]):
+//!
+//! * `-> {"health": true}` answers immediately with load gauges sampled
+//!   off the scheduler thread — `{"ok": true, "pending", "used_blocks",
+//!   "capacity_blocks", "prefix_hits", "prefix_lookups"}` — so health
+//!   probes never queue behind generation work;
+//! * a request carrying `"ack": true` is acknowledged with
+//!   `{"id": n, "ack": true}` the moment it is submitted, *before* any
+//!   delta — giving a proxy the id it needs to cancel a request that is
+//!   still queued or prefilling.
+//!
+//! Hardening: request lines are capped (`ServerConfig::max_line_bytes`,
+//! default 256 KiB) — an oversized line answers
+//! `{"error": "bad_request", "field": "line"}` and closes the connection
+//! instead of buffering without bound — and reads carry an idle timeout
+//! (`ServerConfig::idle_read_timeout`) so a silent or byte-dribbling
+//! client cannot pin a connection worker forever.
+//!
 //! Architecture: acceptor thread + per-connection handler threads (from
 //! the in-tree `ThreadPool`) feeding an mpsc channel into the single
 //! scheduler thread that owns the backend; per-token [`Event`]s are
@@ -57,7 +75,7 @@
 //! offline environment.)
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -76,6 +94,84 @@ use crate::util::threadpool::ThreadPool;
 /// Per-request completion deadline for clients waiting on events.
 const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// Tunable limits for [`serve_with_config`]; [`serve`] uses the defaults.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Connection-handler threads (= concurrently served clients).
+    pub conn_threads: usize,
+    /// Longest accepted request line in bytes; anything larger answers
+    /// `{"error": "bad_request", "field": "line"}` and closes the
+    /// connection instead of buffering without bound.
+    pub max_line_bytes: usize,
+    /// How long a connection may sit idle between request lines before
+    /// the worker drops it (a byte-dribbling client resets the clock but
+    /// still hits `max_line_bytes`).
+    pub idle_read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            conn_threads: 8,
+            max_line_bytes: 256 * 1024,
+            idle_read_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Load gauges published by the scheduler thread on every loop iteration
+/// and served to `{"health": true}` probes straight off the connection
+/// handler — a probe never queues behind generation work, so a *stalled*
+/// scheduler shows up as stale-but-answered gauges while a *dead* process
+/// shows up as a connect failure (the router treats both via timeouts).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    /// Requests queued + prefilling + running + preempted.
+    pub pending: AtomicU64,
+    /// Hot KV blocks in use (excludes the cold prefix cache).
+    pub used_blocks: AtomicU64,
+    /// Physical KV capacity in blocks.
+    pub capacity_blocks: AtomicU64,
+    /// Prefix-cache hits since start.
+    pub prefix_hits: AtomicU64,
+    /// Prefix-cache lookups since start.
+    pub prefix_lookups: AtomicU64,
+}
+
+impl ServerStats {
+    fn publish(&self, snap: &crate::coordinator::CoordSnapshot) {
+        self.pending.store(snap.in_flight() as u64, Ordering::Relaxed);
+        self.used_blocks.store(snap.used_blocks as u64, Ordering::Relaxed);
+        self.capacity_blocks
+            .store(snap.capacity_blocks as u64, Ordering::Relaxed);
+        self.prefix_hits.store(snap.prefix_hits, Ordering::Relaxed);
+        self.prefix_lookups.store(snap.prefix_lookups, Ordering::Relaxed);
+    }
+
+    fn health_line(&self) -> Value {
+        json::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("pending", json::num(self.pending.load(Ordering::Relaxed) as f64)),
+            (
+                "used_blocks",
+                json::num(self.used_blocks.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "capacity_blocks",
+                json::num(self.capacity_blocks.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "prefix_hits",
+                json::num(self.prefix_hits.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "prefix_lookups",
+                json::num(self.prefix_lookups.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
 enum Msg {
     Submit(Request, Sender<Event>),
     Cancel(RequestId),
@@ -84,12 +180,19 @@ enum Msg {
 
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
+    stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
     tx: Sender<Msg>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
+    /// The live load gauges this server publishes (same numbers the
+    /// `{"health": true}` endpoint serves).
+    pub fn stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         let _ = self.tx.send(Msg::Shutdown);
@@ -104,9 +207,17 @@ impl ServerHandle {
 /// Scheduler loop: owns the coordinator, multiplexes submissions,
 /// cancellations and ticks, and routes per-token events to the
 /// per-request reply channels.
-fn scheduler_loop<B: Backend>(mut coord: Coordinator<B>, rx: Receiver<Msg>) {
+fn scheduler_loop<B: Backend>(
+    mut coord: Coordinator<B>,
+    rx: Receiver<Msg>,
+    stats: Arc<ServerStats>,
+) {
     let mut reply_to: HashMap<u64, Sender<Event>> = HashMap::new();
     loop {
+        // Publish load gauges every iteration — including right before the
+        // idle blocking recv, so health probes see the drained state rather
+        // than the last busy one.
+        stats.publish(&coord.snapshot());
         // Drain pending submissions (non-blocking when busy, blocking when
         // idle so we don't spin).
         let msg = if coord.pending() == 0 {
@@ -247,6 +358,90 @@ impl Utf8Stream {
 /// most); anything past this is a typo or abuse, not a workload.
 const MAX_MAX_NEW: usize = 1 << 20;
 
+/// Outcome of one bounded line read.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum LineRead {
+    /// A complete line is in the caller's buffer (no trailing newline).
+    Line,
+    /// The line blew past the cap before a newline arrived; nothing was
+    /// delivered and the connection should be answered and closed.
+    TooLong,
+    /// Clean EOF with nothing buffered, an I/O error, or the idle read
+    /// timeout elapsed.
+    Closed,
+}
+
+/// `read_line` with a byte cap: `BufRead::read_line` happily buffers an
+/// endless newline-free stream, letting one malicious client OOM the
+/// server.  This reads through `fill_buf`/`consume` and gives up at
+/// `max_bytes`.  EOF with a partial (unterminated) line still delivers
+/// the line, matching `read_line` semantics; a read timeout (the idle
+/// hardening) surfaces as `Closed`.
+pub(crate) fn read_line_bounded<R: BufRead>(
+    reader: &mut R,
+    line: &mut String,
+    max_bytes: usize,
+) -> LineRead {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = match reader.fill_buf() {
+            Ok(c) => c,
+            Err(_) => return LineRead::Closed, // includes idle-timeout kinds
+        };
+        if chunk.is_empty() {
+            // EOF: a final unterminated line is still a line.
+            if buf.is_empty() {
+                return LineRead::Closed;
+            }
+            line.push_str(&String::from_utf8_lossy(&buf));
+            return LineRead::Line;
+        }
+        if let Some(nl) = chunk.iter().position(|&b| b == b'\n') {
+            if buf.len() + nl > max_bytes {
+                reader.consume(nl + 1);
+                return LineRead::TooLong;
+            }
+            buf.extend_from_slice(&chunk[..nl]);
+            reader.consume(nl + 1);
+            line.push_str(&String::from_utf8_lossy(&buf));
+            return LineRead::Line;
+        }
+        let n = chunk.len();
+        if buf.len() + n > max_bytes {
+            // Over the cap with no newline in sight: stop buffering.  The
+            // unread tail dies with the socket.
+            return LineRead::TooLong;
+        }
+        buf.extend_from_slice(chunk);
+        reader.consume(n);
+    }
+}
+
+/// After refusing an oversized line, consume its remainder — up to
+/// `budget` extra bytes — before closing.  Without this, the unread tail
+/// turns the close into a TCP reset, which discards the already-sent
+/// `bad_request` reply from the peer's receive queue; a moderately
+/// oversized client then sees a bare reset instead of the answer.  A
+/// line still unfinished past the budget is abuse and gets cut off.
+pub(crate) fn drain_oversized_line<R: BufRead>(reader: &mut R, budget: usize) {
+    let mut spent = 0usize;
+    while spent <= budget {
+        let (n, done) = match reader.fill_buf() {
+            Err(_) => return,
+            Ok(chunk) if chunk.is_empty() => return,
+            Ok(chunk) => match chunk.iter().position(|&b| b == b'\n') {
+                Some(nl) => (nl + 1, true),
+                None => (chunk.len(), false),
+            },
+        };
+        reader.consume(n);
+        if done {
+            return;
+        }
+        spent += n;
+    }
+}
+
 /// Parse and validate a v2 request body (everything beyond
 /// `prompt`/`max_new` is optional, defaulting to the v1 greedy one-shot
 /// behaviour).  `Err` names the offending field for the `bad_request`
@@ -330,8 +525,18 @@ fn summary_line(resp: &Response) -> Value {
     ])
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Msg>, ids: Arc<AtomicU64>) {
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Msg>,
+    ids: Arc<AtomicU64>,
+    stats: Arc<ServerStats>,
+    cfg: ServerConfig,
+) {
     let peer = stream.peer_addr().ok();
+    // Idle hardening: a connection that goes silent between request lines
+    // times out instead of pinning this worker forever.  (While a request
+    // streams, the worker blocks on the event channel, not this socket.)
+    let _ = stream.set_read_timeout(Some(cfg.idle_read_timeout));
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -340,9 +545,18 @@ fn handle_conn(stream: TcpStream, tx: Sender<Msg>, ids: Arc<AtomicU64>) {
     let mut line = String::new();
     loop {
         line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
+        match read_line_bounded(&mut reader, &mut line, cfg.max_line_bytes) {
+            LineRead::Closed => break,
+            LineRead::TooLong => {
+                let reply = json::obj(vec![
+                    ("error", json::s("bad_request")),
+                    ("field", json::s("line")),
+                ]);
+                let _ = writeln!(out, "{reply}");
+                drain_oversized_line(&mut reader, cfg.max_line_bytes);
+                break;
+            }
+            LineRead::Line => {}
         }
         let trimmed = line.trim();
         if trimmed.is_empty() {
@@ -358,6 +572,14 @@ fn handle_conn(stream: TcpStream, tx: Sender<Msg>, ids: Arc<AtomicU64>) {
                 continue;
             }
         };
+        // Health probe: answered from the published gauges without a
+        // scheduler round-trip, so it stays fast under load.
+        if v.get("health").and_then(|h| h.as_bool()).unwrap_or(false) {
+            if writeln!(out, "{}", stats.health_line()).is_err() {
+                break;
+            }
+            continue;
+        }
         // Explicit cancellation of any in-flight request by id: the
         // cancelled request's own stream receives the terminal line; this
         // connection just gets an ack.
@@ -387,9 +609,22 @@ fn handle_conn(stream: TcpStream, tx: Sender<Msg>, ids: Arc<AtomicU64>) {
             }
         };
         let stream_mode = req.stream;
+        let want_ack = v.get("ack").and_then(|a| a.as_bool()).unwrap_or(false);
         let (rtx, rrx) = channel();
         if tx.send(Msg::Submit(req, rtx)).is_err() {
             break;
+        }
+        // Replica mode: hand the proxy the id *now*, before any delta, so
+        // a cancel can reach a request that is still queued or prefilling.
+        if want_ack {
+            let ack = json::obj(vec![
+                ("id", json::num(id as f64)),
+                ("ack", Value::Bool(true)),
+            ]);
+            if writeln!(out, "{ack}").is_err() {
+                let _ = tx.send(Msg::Cancel(id));
+                break;
+            }
         }
         let served = if stream_mode {
             stream_reply(&mut out, &tx, id, &rrx)
@@ -502,7 +737,8 @@ fn oneshot_reply(out: &mut TcpStream, id: RequestId, rrx: &Receiver<Event>) -> b
     }
 }
 
-/// Start serving on `addr` ("127.0.0.1:0" for an ephemeral port).
+/// Start serving on `addr` ("127.0.0.1:0" for an ephemeral port) with
+/// default limits.
 ///
 /// The coordinator is built *inside* the scheduler thread by `factory`
 /// (PJRT handles are `!Send`: raw PJRT pointers and `Rc` internals must
@@ -512,24 +748,40 @@ where
     B: Backend + 'static,
     F: FnOnce() -> Result<Coordinator<B>> + Send + 'static,
 {
+    let cfg = ServerConfig {
+        conn_threads: n_conn_threads,
+        ..ServerConfig::default()
+    };
+    serve_with_config(addr, factory, cfg)
+}
+
+/// [`serve`] with explicit [`ServerConfig`] limits.
+pub fn serve_with_config<B, F>(addr: &str, factory: F, cfg: ServerConfig) -> Result<ServerHandle>
+where
+    B: Backend + 'static,
+    F: FnOnce() -> Result<Coordinator<B>> + Send + 'static,
+{
     let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let stats = Arc::new(ServerStats::default());
     let (tx, rx) = channel::<Msg>();
 
+    let sched_stats = Arc::clone(&stats);
     let sched = std::thread::Builder::new()
         .name("rap-scheduler".into())
         .spawn(move || match factory() {
-            Ok(coord) => scheduler_loop(coord, rx),
+            Ok(coord) => scheduler_loop(coord, rx, sched_stats),
             Err(e) => eprintln!("[server] backend init failed: {e:#}"),
         })?;
 
     let stop2 = Arc::clone(&stop);
     let tx2 = tx.clone();
+    let conn_stats = Arc::clone(&stats);
     let acceptor = std::thread::Builder::new()
         .name("rap-acceptor".into())
         .spawn(move || {
-            let pool = ThreadPool::new(n_conn_threads);
+            let pool = ThreadPool::new(cfg.conn_threads.max(1));
             let ids = Arc::new(AtomicU64::new(1));
             for stream in listener.incoming() {
                 if stop2.load(Ordering::SeqCst) {
@@ -538,12 +790,15 @@ where
                 let Ok(stream) = stream else { continue };
                 let tx = tx2.clone();
                 let ids = Arc::clone(&ids);
-                pool.execute(move || handle_conn(stream, tx, ids));
+                let stats = Arc::clone(&conn_stats);
+                let cfg = cfg.clone();
+                pool.execute(move || handle_conn(stream, tx, ids, stats, cfg));
             }
         })?;
 
     Ok(ServerHandle {
         addr: local,
+        stats,
         stop,
         tx,
         threads: vec![sched, acceptor],
@@ -582,10 +837,109 @@ pub struct StreamOutcome {
     pub total_ms: f64,
 }
 
+/// Classified client-side failure.  The router's retry logic pivots on
+/// this split: a failure that provably produced no output can be replayed
+/// on another replica, one that already streamed deltas cannot (replaying
+/// would duplicate text the caller has seen).
+#[derive(Debug)]
+pub enum ClientError {
+    /// TCP connect failed — the replica is unreachable.  Always
+    /// retryable: nothing was ever submitted.
+    Connect(io::Error),
+    /// An established connection failed mid-exchange (reset, broken
+    /// pipe, ...).
+    Io {
+        source: io::Error,
+        /// Delta lines already received when the failure hit.
+        deltas_seen: usize,
+    },
+    /// No line arrived within the read timeout.
+    Timeout { deltas_seen: usize },
+    /// The server closed the stream before the terminal summary line.
+    Disconnected { deltas_seen: usize },
+    /// The server sent a line that is not JSON — a protocol violation,
+    /// never retryable (a rerun can't fix a broken peer).
+    MalformedFrame { line: String },
+}
+
+impl ClientError {
+    /// Whether re-routing to another replica is safe: only failures
+    /// where zero deltas were streamed can be replayed without
+    /// duplicating output.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            ClientError::Connect(_) => true,
+            ClientError::Io { deltas_seen, .. }
+            | ClientError::Timeout { deltas_seen }
+            | ClientError::Disconnected { deltas_seen } => *deltas_seen == 0,
+            ClientError::MalformedFrame { .. } => false,
+        }
+    }
+
+    /// Delta lines already received when the failure hit (the replay
+    /// boundary a proxy must surface to its client).
+    pub fn deltas_seen(&self) -> usize {
+        match self {
+            ClientError::Connect(_) | ClientError::MalformedFrame { .. } => 0,
+            ClientError::Io { deltas_seen, .. }
+            | ClientError::Timeout { deltas_seen }
+            | ClientError::Disconnected { deltas_seen } => *deltas_seen,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Connect(e) => write!(f, "connect failed: {e}"),
+            ClientError::Io { source, deltas_seen } => {
+                write!(f, "i/o error after {deltas_seen} deltas: {source}")
+            }
+            ClientError::Timeout { deltas_seen } => {
+                write!(f, "read timeout after {deltas_seen} deltas")
+            }
+            ClientError::Disconnected { deltas_seen } => {
+                write!(f, "stream closed before summary after {deltas_seen} deltas")
+            }
+            ClientError::MalformedFrame { line } => write!(f, "malformed frame: {line:?}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Connect(e) | ClientError::Io { source: e, .. } => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// `true` for the error kinds a read timeout surfaces as (platform
+/// dependent: unix says WouldBlock, windows TimedOut).
+fn is_timeout_kind(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
 /// Minimal v2 streaming client: sends `body` (any fields from the
 /// protocol above; `stream: true` is forced) and collects delta lines
-/// until the terminal `done`/`error` line.
-pub fn client_request_stream(addr: &std::net::SocketAddr, body: &Value) -> Result<StreamOutcome> {
+/// until the terminal `done`/`error` line.  Failures come back
+/// classified ([`ClientError`]) so callers can tell retryable transport
+/// faults from terminal protocol errors.
+pub fn client_request_stream(
+    addr: &std::net::SocketAddr,
+    body: &Value,
+) -> std::result::Result<StreamOutcome, ClientError> {
+    client_request_stream_timeout(addr, body, CLIENT_TIMEOUT)
+}
+
+/// [`client_request_stream`] with an explicit per-read timeout (the
+/// router wants a much shorter leash than interactive clients).
+pub fn client_request_stream_timeout(
+    addr: &std::net::SocketAddr,
+    body: &Value,
+    read_timeout: Duration,
+) -> std::result::Result<StreamOutcome, ClientError> {
     let mut fields: Vec<(&str, Value)> = vec![("stream", Value::Bool(true))];
     let owned: Vec<(String, Value)> = body
         .as_obj()
@@ -597,8 +951,12 @@ pub fn client_request_stream(addr: &std::net::SocketAddr, body: &Value) -> Resul
         }
     }
     let req = json::obj(fields);
-    let mut stream = TcpStream::connect(addr)?;
-    writeln!(stream, "{req}")?;
+    let mut stream = TcpStream::connect(addr).map_err(ClientError::Connect)?;
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    writeln!(stream, "{req}").map_err(|e| ClientError::Io {
+        source: e,
+        deltas_seen: 0,
+    })?;
     let t0 = Instant::now();
     let mut reader = BufReader::new(stream);
     let mut deltas = Vec::new();
@@ -607,10 +965,31 @@ pub fn client_request_stream(addr: &std::net::SocketAddr, body: &Value) -> Resul
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            anyhow::bail!("server closed the stream before the summary line");
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                return Err(ClientError::Disconnected {
+                    deltas_seen: deltas.len(),
+                })
+            }
+            Ok(_) => {}
+            Err(e) if is_timeout_kind(&e) => {
+                return Err(ClientError::Timeout {
+                    deltas_seen: deltas.len(),
+                })
+            }
+            Err(e) => {
+                return Err(ClientError::Io {
+                    source: e,
+                    deltas_seen: deltas.len(),
+                })
+            }
         }
-        let v = json::parse(line.trim()).map_err(|e| anyhow::anyhow!("client parse: {e}"))?;
+        let v = json::parse(line.trim()).map_err(|_| ClientError::MalformedFrame {
+            line: line.trim().to_string(),
+        })?;
+        if v.get("ack").is_some() {
+            continue; // replica-mode submit ack (when the body asked for it)
+        }
         if let Some(delta) = v.get("delta").and_then(|d| d.as_str()) {
             if deltas.is_empty() {
                 first_delta_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -631,6 +1010,40 @@ pub fn client_request_stream(addr: &std::net::SocketAddr, body: &Value) -> Resul
             total_ms,
         });
     }
+}
+
+/// One-shot health probe: sends `{"health": true}` and returns the gauge
+/// line (`{"ok", "pending", "used_blocks", "capacity_blocks",
+/// "prefix_hits", "prefix_lookups"}`).  `timeout` bounds connect, write
+/// and read — probers want a short leash.
+pub fn client_health(
+    addr: &std::net::SocketAddr,
+    timeout: Duration,
+) -> std::result::Result<Value, ClientError> {
+    let mut stream = TcpStream::connect_timeout(addr, timeout).map_err(ClientError::Connect)?;
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    let req = json::obj(vec![("health", Value::Bool(true))]);
+    writeln!(stream, "{req}").map_err(|e| ClientError::Io {
+        source: e,
+        deltas_seen: 0,
+    })?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return Err(ClientError::Disconnected { deltas_seen: 0 }),
+        Ok(_) => {}
+        Err(e) if is_timeout_kind(&e) => return Err(ClientError::Timeout { deltas_seen: 0 }),
+        Err(e) => {
+            return Err(ClientError::Io {
+                source: e,
+                deltas_seen: 0,
+            })
+        }
+    }
+    json::parse(line.trim()).map_err(|_| ClientError::MalformedFrame {
+        line: line.trim().to_string(),
+    })
 }
 
 #[cfg(test)]
@@ -761,6 +1174,85 @@ mod tests {
         assert_eq!(
             line.get("finish_reason").and_then(|f| f.as_str()),
             Some("rejected")
+        );
+    }
+
+    fn bounded(input: &[u8], max: usize) -> (LineRead, String) {
+        let mut reader = std::io::Cursor::new(input.to_vec());
+        let mut line = String::new();
+        let r = read_line_bounded(&mut reader, &mut line, max);
+        (r, line)
+    }
+
+    #[test]
+    fn bounded_reader_delivers_lines_under_the_cap() {
+        let (r, line) = bounded(b"hello\nworld\n", 64);
+        assert_eq!(r, LineRead::Line);
+        assert_eq!(line, "hello");
+        // Exactly at the cap is still accepted.
+        let (r, line) = bounded(b"abcde\n", 5);
+        assert_eq!(r, LineRead::Line);
+        assert_eq!(line, "abcde");
+    }
+
+    #[test]
+    fn bounded_reader_refuses_oversized_lines() {
+        // One byte over the cap, newline present.
+        let (r, line) = bounded(b"abcdef\n", 5);
+        assert_eq!(r, LineRead::TooLong);
+        assert!(line.is_empty(), "nothing delivered on TooLong");
+        // No newline at all: must give up instead of buffering forever.
+        let big = vec![b'x'; 1024];
+        let (r, _) = bounded(&big, 100);
+        assert_eq!(r, LineRead::TooLong);
+    }
+
+    #[test]
+    fn bounded_reader_matches_read_line_at_eof() {
+        // Clean EOF, nothing buffered.
+        let (r, _) = bounded(b"", 64);
+        assert_eq!(r, LineRead::Closed);
+        // EOF with an unterminated final line still delivers it.
+        let (r, line) = bounded(b"partial", 64);
+        assert_eq!(r, LineRead::Line);
+        assert_eq!(line, "partial");
+    }
+
+    #[test]
+    fn bounded_reader_consumes_across_reads() {
+        let mut reader = std::io::Cursor::new(b"first\nsecond\nthird".to_vec());
+        let mut seen = Vec::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match read_line_bounded(&mut reader, &mut line, 64) {
+                LineRead::Line => seen.push(line.clone()),
+                LineRead::Closed => break,
+                LineRead::TooLong => panic!("unexpected TooLong"),
+            }
+        }
+        assert_eq!(seen, vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn client_error_retryability_matrix() {
+        let io_err = || io::Error::new(io::ErrorKind::ConnectionReset, "reset");
+        // Nothing streamed yet: safe to replay elsewhere.
+        assert!(ClientError::Connect(io_err()).is_retryable());
+        assert!(ClientError::Io { source: io_err(), deltas_seen: 0 }.is_retryable());
+        assert!(ClientError::Timeout { deltas_seen: 0 }.is_retryable());
+        assert!(ClientError::Disconnected { deltas_seen: 0 }.is_retryable());
+        // Output already streamed: a replay would duplicate it.
+        assert!(!ClientError::Io { source: io_err(), deltas_seen: 3 }.is_retryable());
+        assert!(!ClientError::Timeout { deltas_seen: 1 }.is_retryable());
+        assert!(!ClientError::Disconnected { deltas_seen: 7 }.is_retryable());
+        // Protocol violations are never retryable.
+        let mal = ClientError::MalformedFrame { line: "not json".into() };
+        assert!(!mal.is_retryable());
+        assert_eq!(mal.deltas_seen(), 0);
+        assert_eq!(
+            ClientError::Disconnected { deltas_seen: 7 }.deltas_seen(),
+            7
         );
     }
 }
