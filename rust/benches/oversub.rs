@@ -74,6 +74,7 @@ fn run(
                 // staggering.
                 prefill_chunk_tokens: 1024,
                 reserve_worst_case,
+                default_retention: None,
             },
             kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * blocks,
         },

@@ -21,6 +21,7 @@
 use std::collections::VecDeque;
 
 use crate::coordinator::request::{Request, RequestId};
+use crate::kvcache::retention::RetentionSpec;
 use crate::kvcache::PagedKvCache;
 
 /// One admitted request plus its prefix-cache outcome.
@@ -57,6 +58,11 @@ pub struct BatcherConfig {
     /// With this set a session can never be preempted, at the cost of
     /// admitting far fewer concurrent sessions on the same budget.
     pub reserve_worst_case: bool,
+    /// Fleet-wide KV retention default applied at admission to requests
+    /// that did not carry their own `retention` field.  `None` (the
+    /// default when `RAP_RETENTION` is unset) = retain-all, which is
+    /// bit-identical to the pre-retention stack.
+    pub default_retention: Option<RetentionSpec>,
 }
 
 impl Default for BatcherConfig {
@@ -67,6 +73,7 @@ impl Default for BatcherConfig {
             max_queue: 1024,
             prefill_chunk_tokens: 128,
             reserve_worst_case: false,
+            default_retention: RetentionSpec::from_env(),
         }
     }
 }
@@ -123,12 +130,14 @@ impl Batcher {
         let mut admitted: Vec<Admission> = Vec::new();
         while self.running.len() + admitted.len() < self.cfg.max_sessions {
             let Some(req) = self.queue.front() else { break };
+            let retention = req.retention.or(self.cfg.default_retention);
             // Zero-token requests complete at admission without touching
             // the allocator: reserving (and zeroing) max_new blocks just
             // to release them in the same tick would let an empty prompt
             // head-of-line block admission under KV pressure.
             if req.prompt.is_empty() {
-                let req = self.queue.pop_front().unwrap();
+                let mut req = self.queue.pop_front().unwrap();
+                req.retention = retention;
                 admitted.push(Admission { req, matched_tokens: 0, shared_blocks: 0 });
                 continue;
             }
@@ -139,7 +148,8 @@ impl Batcher {
             };
             match kv.reserve_prefix(req.id, &req.prompt, reserve) {
                 Ok(m) => {
-                    let req = self.queue.pop_front().unwrap();
+                    let mut req = self.queue.pop_front().unwrap();
+                    req.retention = retention;
                     admitted.push(Admission {
                         req,
                         matched_tokens: m.matched_tokens,
@@ -368,6 +378,24 @@ mod tests {
         assert_eq!(adm[2].matched_tokens, 0, "different prefix never matches");
         // 1 and 2 share the two prefix blocks: 3 + 1 + 3 blocks, not 3+3+3.
         assert_eq!(kv.used_blocks(), 7);
+    }
+
+    #[test]
+    fn admit_fills_in_fleet_default_retention() {
+        use crate::kvcache::retention::{Press, RetentionSpec};
+        let fleet = RetentionSpec { press: Press::Window, ratio: 0.5 };
+        let own = RetentionSpec { press: Press::L2Norm, ratio: 0.25 };
+        let mut b = Batcher::new(BatcherConfig {
+            default_retention: Some(fleet),
+            ..Default::default()
+        });
+        let mut kv = kv(100);
+        assert!(b.submit(req(1, 8)));
+        assert!(b.submit(req(2, 8).with_retention(own)));
+        let adm = b.admit(&mut kv);
+        assert_eq!(adm.len(), 2);
+        assert_eq!(adm[0].req.retention, Some(fleet), "default fills the gap");
+        assert_eq!(adm[1].req.retention, Some(own), "per-request wins");
     }
 
     #[test]

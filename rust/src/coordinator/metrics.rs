@@ -95,6 +95,10 @@ pub struct AggregateMetrics {
     /// Decode-growth allocations deferred one tick by an injected
     /// allocator fault (distinct from preemption: nothing was released).
     pub alloc_defers: u64,
+    /// Retention presses executed (one per session compaction).
+    pub retention_presses: u64,
+    /// Token rows evicted by retention presses across all sessions.
+    pub retention_evicted_tokens: u64,
 }
 
 impl AggregateMetrics {
@@ -138,7 +142,8 @@ impl AggregateMetrics {
              prefill chunks={} mean tokens={:.1}  max decode stall={} chunks\n\
              prefix cache: {}/{} hits ({:.0}%)  saved blocks={}  mean matched={:.0} tok\n\
              pressure: preemptions={} resumes={} timeouts={} oom_truncations={} \
-             backend_retries={} alloc_defers={} too_large={}",
+             backend_retries={} alloc_defers={} too_large={}\n\
+             retention: presses={} evicted_tokens={}",
             self.requests,
             self.rejected,
             self.cancelled,
@@ -171,6 +176,8 @@ impl AggregateMetrics {
             self.backend_retries,
             self.alloc_defers,
             self.rejected_too_large,
+            self.retention_presses,
+            self.retention_evicted_tokens,
         )
     }
 }
@@ -230,6 +237,18 @@ mod tests {
         assert!(report.contains("cancelled=1"), "{report}");
         assert!(report.contains("stopped_early=2"), "{report}");
         assert!(report.contains("timeouts=1"), "{report}");
+    }
+
+    #[test]
+    fn report_shows_retention_counters() {
+        let a = AggregateMetrics {
+            retention_presses: 3,
+            retention_evicted_tokens: 4096,
+            ..AggregateMetrics::default()
+        };
+        let report = a.report();
+        assert!(report.contains("presses=3"), "{report}");
+        assert!(report.contains("evicted_tokens=4096"), "{report}");
     }
 
     #[test]

@@ -66,6 +66,7 @@ use crate::coordinator::metrics::{AggregateMetrics, RequestMetrics};
 use crate::coordinator::request::{Event, FinishReason, Request, RequestId, Response};
 use crate::coordinator::sampling::Sampler;
 use crate::faults::{FaultPlan, InjectedFault};
+use crate::kvcache::retention::Press;
 use crate::kvcache::{CacheShape, KvStorageMode, PagedKvCache, BLOCK_TOKENS};
 
 /// Consecutive injected backend failures tolerated before the scheduler
@@ -197,6 +198,11 @@ struct ParkedSession {
     queue_ms: f64,
     decode_ms: f64,
     started: Instant,
+    /// Logical positions of the KV rows that survived this session's
+    /// retention presses, captured at preemption (restricted to the replay
+    /// feed `[0, prompt + generated - 1)`).  `None` for retain-all
+    /// sessions, which resume through the seed recompute path.
+    survivors: Option<Vec<u32>>,
 }
 
 /// State a resumed session carries through its recompute prefill; restored
@@ -207,6 +213,13 @@ struct ResumeCtx {
     generated: Vec<u8>,
     ttft_ms: f64,
     decode_ms: f64,
+    /// Logical decode position to restore (`prompt + generated - 1`); for
+    /// retain-all resumes this equals the replay feed length, for pruned
+    /// resumes it exceeds the (survivor-only) feed length.
+    pos: usize,
+    /// Survivor positions (pruned resume only), kept so a session
+    /// re-parked mid-recompute replays the same survivor set.
+    survivors: Option<Vec<u32>>,
 }
 
 /// Does `generated` end with any of the request's stop sequences?
@@ -247,6 +260,11 @@ struct Prefilling {
     /// Recompute feed for a resumed session (`prompt ++ generated[..n-1]`);
     /// `None` for a fresh admission, which prefills `req.prompt`.
     feed: Option<Vec<u8>>,
+    /// Whether `done` indexes *rows* rather than logical positions: true
+    /// only for a pruned session's survivor replay, whose feed holds one
+    /// token per surviving row (`reserve_with_positions` carries the
+    /// logical positions).  Retain-all feeds are logical (row == position).
+    row_feed: bool,
     /// Present iff this is a preemption resume.
     resume: Option<ResumeCtx>,
 }
@@ -383,6 +401,53 @@ impl<B: Backend> Coordinator<B> {
         while self.batcher.running_len() < self.batcher.cfg.max_sessions {
             let Some(parked) = self.preempted.front() else { break };
             let n = parked.generated.len();
+            let resume_pos = parked.req.prompt.len() + n - 1;
+            if let Some(sv) = &parked.survivors {
+                // Pruned session: replay only the tokens whose rows
+                // survived its presses, at their preserved logical
+                // positions.  The survivor set is gapped, so it cannot
+                // attach prefix-trie blocks — reserve rows directly.
+                let prompt_len = parked.req.prompt.len();
+                let feed: Vec<u8> = sv
+                    .iter()
+                    .map(|&p| {
+                        let p = p as usize;
+                        if p < prompt_len {
+                            parked.req.prompt[p]
+                        } else {
+                            parked.generated[p - prompt_len]
+                        }
+                    })
+                    .collect();
+                match self.kv.reserve_with_positions(parked.req.id, sv) {
+                    Ok(()) => {
+                        let parked = self.preempted.pop_front().unwrap();
+                        self.batcher.note_running(parked.req.id);
+                        if parked.req.retention.is_some_and(|s| s.press == Press::AttnScore) {
+                            self.kv.set_score_tracking(parked.req.id, true);
+                        }
+                        self.prefilling.push_back(Prefilling {
+                            done: 0,
+                            seq: parked.seq,
+                            queue_ms: parked.queue_ms,
+                            started: parked.started,
+                            feed: Some(feed),
+                            row_feed: true,
+                            resume: Some(ResumeCtx {
+                                sampler: parked.sampler,
+                                generated: parked.generated,
+                                ttft_ms: parked.ttft_ms,
+                                decode_ms: parked.decode_ms,
+                                pos: resume_pos,
+                                survivors: parked.survivors,
+                            }),
+                            req: parked.req,
+                        });
+                    }
+                    Err(_) => break,
+                }
+                continue;
+            }
             let mut feed =
                 Vec::with_capacity(parked.req.prompt.len() + n.saturating_sub(1));
             feed.extend_from_slice(&parked.req.prompt);
@@ -391,23 +456,30 @@ impl<B: Backend> Coordinator<B> {
                 Ok(m) => {
                     let parked = self.preempted.pop_front().unwrap();
                     self.batcher.note_running(parked.req.id);
+                    if parked.req.retention.is_some_and(|s| s.press == Press::AttnScore) {
+                        self.kv.set_score_tracking(parked.req.id, true);
+                    }
                     self.metrics.prefix_lookups += 1;
                     if m.matched_tokens > 0 {
                         self.metrics.prefix_hits += 1;
                         self.metrics.prefix_saved_blocks += m.shared_blocks as u64;
                         self.metrics.prefix_matched_tokens.add(m.matched_tokens as f64);
                     }
+                    let feed_len = feed.len();
                     self.prefilling.push_back(Prefilling {
                         done: m.matched_tokens,
                         seq: parked.seq,
                         queue_ms: parked.queue_ms,
                         started: parked.started,
                         feed: Some(feed),
+                        row_feed: false,
                         resume: Some(ResumeCtx {
                             sampler: parked.sampler,
                             generated: parked.generated,
                             ttft_ms: parked.ttft_ms,
                             decode_ms: parked.decode_ms,
+                            pos: feed_len,
+                            survivors: None,
                         }),
                         req: parked.req,
                     });
@@ -457,6 +529,12 @@ impl<B: Backend> Coordinator<B> {
                 self.metrics.prefix_matched_tokens.add(matched_tokens as f64);
             }
             self.admission_seq += 1;
+            if req.retention.is_some_and(|s| s.press == Press::AttnScore) {
+                // Per-row attention-mass accounting feeds this press; turn
+                // it on while the reservation is fresh so decode rounds
+                // accumulate from the first step.
+                self.kv.set_score_tracking(req.id, true);
+            }
             self.prefilling.push_back(Prefilling {
                 req,
                 done: matched_tokens,
@@ -464,6 +542,7 @@ impl<B: Backend> Coordinator<B> {
                 queue_ms,
                 started: Instant::now(),
                 feed: None,
+                row_feed: false,
                 resume: None,
             });
         }
@@ -493,11 +572,19 @@ impl<B: Backend> Coordinator<B> {
             // session's private block before its first write (idempotent;
             // FIFO prefill guarantees the source rows exist by now).
             self.kv.materialize_cow(p.req.id);
+            // The backend writes rows: a survivor replay's `done` already
+            // is a row index, and a session pressed mid-prefill maps its
+            // next logical position to the row after its survivors.
+            let row0 = if p.row_feed {
+                p.done
+            } else {
+                self.kv.row_index_of(p.req.id, p.done).unwrap_or(p.done)
+            };
             let logits = match self.backend.prefill_chunk(
                 &mut self.kv,
                 p.req.id,
                 &p.feed()[p.done..p.done + take],
-                p.done,
+                row0,
                 last,
             ) {
                 Ok(l) => {
@@ -526,6 +613,19 @@ impl<B: Backend> Coordinator<B> {
             if !self.running.is_empty() {
                 self.stalled_chunks += 1;
             }
+            // 2b. Mid-prefill press: long prompts shed rows between
+            // chunks, bounding peak residency during prefill itself.
+            // Survivor replays (row-space feed) and attention-score
+            // presses (no decode scores yet) wait for decode rounds.
+            if !p.row_feed {
+                if let Some(spec) = p.req.retention.filter(|s| s.press.works_during_prefill()) {
+                    let evicted = self.kv.apply_press(p.req.id, &spec, p.done)?;
+                    if evicted > 0 {
+                        self.metrics.retention_presses += 1;
+                        self.metrics.retention_evicted_tokens += evicted as u64;
+                    }
+                }
+            }
             if last {
                 let logits =
                     logits.ok_or_else(|| anyhow!("no logits for final prefill chunk"))?;
@@ -544,7 +644,10 @@ impl<B: Backend> Coordinator<B> {
                         Running {
                             sampler: ctx.sampler,
                             generated: ctx.generated,
-                            pos: feed_len,
+                            // Logical position, not the feed length: a
+                            // survivor replay feeds fewer tokens than the
+                            // session has logically consumed.
+                            pos: ctx.pos,
                             seq: p.seq,
                             ttft_ms: ctx.ttft_ms,
                             queue_ms: p.queue_ms,
@@ -702,6 +805,23 @@ impl<B: Backend> Coordinator<B> {
             self.stalled_chunks = 0;
         }
 
+        // 4b. Post-decode retention presses: every session that decoded
+        // this round sheds rows down to its spec's budget.  Runs after the
+        // round so `AttnScore` sees this step's attention mass; finishing
+        // sessions release everything in step 5 anyway and are skipped.
+        for &id in &runnable {
+            let Some(r) = self.running.get(&id) else { continue };
+            if r.finish.is_some() {
+                continue;
+            }
+            let Some(spec) = r.req.retention else { continue };
+            let evicted = self.kv.apply_press(id, &spec, r.pos)?;
+            if evicted > 0 {
+                self.metrics.retention_presses += 1;
+                self.metrics.retention_evicted_tokens += evicted as u64;
+            }
+        }
+
         // 5. Collect completions: sessions whose finish condition was met
         // this tick release their KV reservation (and any shared
         // prefix-block refcounts) immediately — an early finish frees its
@@ -770,6 +890,7 @@ impl<B: Backend> Coordinator<B> {
                     queue_ms: p.queue_ms,
                     decode_ms: ctx.decode_ms,
                     started: p.started,
+                    survivors: ctx.survivors,
                 });
             } else {
                 self.batcher.requeue_front(p.req);
@@ -788,6 +909,14 @@ impl<B: Backend> Coordinator<B> {
             return None;
         }
         let r = self.running.remove(&victim).unwrap();
+        // A pruned victim must replay only its surviving rows on resume;
+        // capture their logical positions before the release below frees
+        // the page table.  The replay feed spans `[0, pos)`, so a row the
+        // grow phase reserved at `pos` this tick is excluded.
+        let survivors: Option<Vec<u32>> = self.kv.row_positions(victim).map(|pv| {
+            let limit = r.pos as u32;
+            pv.iter().copied().filter(|&p| p < limit).collect()
+        });
         self.batcher.finish(victim, &mut self.kv);
         self.backend.drop_session(victim);
         self.metrics.preemptions += 1;
@@ -801,6 +930,7 @@ impl<B: Backend> Coordinator<B> {
             queue_ms: r.queue_ms,
             decode_ms: r.decode_ms,
             started: r.started,
+            survivors,
         });
         Some(victim)
     }
@@ -949,6 +1079,28 @@ impl<B: Backend> Coordinator<B> {
         self.kv.alloc_faults_injected()
     }
 
+    /// Token rows evicted by retention presses so far.
+    pub fn kv_evicted_tokens(&self) -> u64 {
+        self.kv.evicted_tokens()
+    }
+
+    /// Token rows currently resident across all live sessions.
+    pub fn kv_resident_rows(&self) -> usize {
+        self.kv.resident_rows()
+    }
+
+    /// Bytes physically resident for KV rows right now (hot + cold).
+    pub fn kv_resident_bytes(&self) -> usize {
+        self.kv.resident_kv_bytes()
+    }
+
+    /// Surviving logical positions of a pruned session's rows (`None` for
+    /// retain-all sessions) — lets tests and the quality ablation check
+    /// which planted tokens a press kept.
+    pub fn kv_row_positions(&self, id: RequestId) -> Option<&[u32]> {
+        self.kv.row_positions(id)
+    }
+
     /// Cheap point-in-time gauges for load reporting.  The server publishes
     /// this after every scheduler iteration so health probes (and the
     /// multi-replica router's least-loaded fallback) can read replica load
@@ -963,6 +1115,9 @@ impl<B: Backend> Coordinator<B> {
             capacity_blocks: self.kv.capacity_blocks(),
             prefix_hits: self.metrics.prefix_hits,
             prefix_lookups: self.metrics.prefix_lookups,
+            retained_tokens: self.kv.resident_rows() as u64,
+            evicted_tokens: self.kv.evicted_tokens(),
+            resident_kv_bytes: self.kv.resident_kv_bytes(),
         }
     }
 }
@@ -978,6 +1133,12 @@ pub struct CoordSnapshot {
     pub capacity_blocks: usize,
     pub prefix_hits: u64,
     pub prefix_lookups: u64,
+    /// Token rows currently resident across live sessions (post-press).
+    pub retained_tokens: u64,
+    /// Token rows evicted by retention presses since start.
+    pub evicted_tokens: u64,
+    /// Bytes physically resident for KV rows (post-press, hot + cold).
+    pub resident_kv_bytes: usize,
 }
 
 impl CoordSnapshot {
@@ -1252,6 +1413,7 @@ mod tests {
                     max_queue: 16,
                     prefill_chunk_tokens: 256,
                     reserve_worst_case: false,
+                    default_retention: None,
                 },
                 kv_budget_bytes: 64 << 20,
             },
@@ -1384,6 +1546,7 @@ mod tests {
                     max_queue: 16,
                     prefill_chunk_tokens: 256,
                     reserve_worst_case: false,
+                    default_retention: None,
                 },
                 kv_budget_bytes: 64 << 20,
             },

@@ -46,7 +46,7 @@ impl ExpContext {
 }
 
 /// All experiment names, in a sensible execution order.
-pub const ALL: [&str; 13] = [
+pub const ALL: [&str; 14] = [
     "table2",
     "params",
     "flops",
@@ -55,6 +55,7 @@ pub const ALL: [&str; 13] = [
     "longbench",
     "quant",
     "ablation",
+    "retention-recall",
     "kd",
     "rope-kernel",
     "latency",
@@ -73,6 +74,7 @@ pub fn run(ctx: &ExpContext, name: &str) -> Result<()> {
         "longbench" => accuracy::longbench(ctx),
         "quant" => accuracy::quant(ctx),
         "ablation" => quality_ablation::strategy_ablation(ctx),
+        "retention-recall" => quality_ablation::retention_recall(ctx),
         "kd" => kd::kd_ablation(ctx),
         "rope-kernel" => rope_kernel::rope_kernel(ctx),
         "latency" => latency::latency(ctx),

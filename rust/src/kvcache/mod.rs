@@ -66,11 +66,23 @@
 //! paged and dense decode stay bit-identical (one set of kernels, two
 //! layouts).
 //!
+//! **Logical→physical token indirection** (`retention`): by default a
+//! session's cache is the identity map — row `t` holds logical position
+//! `t`, and every seed code path runs unchanged (bit-identical).  A
+//! retention press ([`PagedKvCache::apply_press`]) may evict token rows
+//! mid-flight: surviving rows are compacted in place
+//! ([`PagedKvCache::apply_retention`]), fully drained blocks return to the
+//! free pool, and the session's `positions` vector records each surviving
+//! row's original RoPE position so attention scores stay correct.  The
+//! engine reads positions through [`KvLayerView::row_pos`]; `None`
+//! positions mean identity and select the exact seed arithmetic.
+//!
 //! `quant` adds int4 group quantization of latent rows (the Fig. 12
 //! orthogonality experiment: RAP + 4-bit KV).
 
 pub mod prefix;
 pub mod quant;
+pub mod retention;
 
 use std::collections::BTreeMap;
 use std::marker::PhantomData;
@@ -311,6 +323,37 @@ impl LayerStore {
             self.v.copy_within(vs..vs + tokens * self.v_width, vd);
         }
     }
+
+    /// Copy one token row (every KV head) from `(src_block, src_slot)` to
+    /// `(dst_block, dst_slot)` — the retention compaction move.  Handles
+    /// both storage families; src and dst may be the same block (slots
+    /// never overlap: compaction only moves rows to strictly lower slots).
+    fn copy_row(
+        &mut self,
+        src_block: usize,
+        src_slot: usize,
+        dst_block: usize,
+        dst_slot: usize,
+        n_kv_heads: usize,
+    ) {
+        for hd in 0..n_kv_heads {
+            if self.packed {
+                let ks = ((src_block * n_kv_heads + hd) * BLOCK_TOKENS + src_slot) * self.k_row_bytes;
+                let kd = ((dst_block * n_kv_heads + hd) * BLOCK_TOKENS + dst_slot) * self.k_row_bytes;
+                self.kq.copy_within(ks..ks + self.k_row_bytes, kd);
+                let vs = ((src_block * n_kv_heads + hd) * BLOCK_TOKENS + src_slot) * self.v_row_bytes;
+                let vd = ((dst_block * n_kv_heads + hd) * BLOCK_TOKENS + dst_slot) * self.v_row_bytes;
+                self.vq.copy_within(vs..vs + self.v_row_bytes, vd);
+                continue;
+            }
+            let ks = ((src_block * n_kv_heads + hd) * BLOCK_TOKENS + src_slot) * self.k_width;
+            let kd = ((dst_block * n_kv_heads + hd) * BLOCK_TOKENS + dst_slot) * self.k_width;
+            self.k.copy_within(ks..ks + self.k_width, kd);
+            let vs = ((src_block * n_kv_heads + hd) * BLOCK_TOKENS + src_slot) * self.v_width;
+            let vd = ((dst_block * n_kv_heads + hd) * BLOCK_TOKENS + dst_slot) * self.v_width;
+            self.v.copy_within(vs..vs + self.v_width, vd);
+        }
+    }
 }
 
 /// Read/write access to one sequence's latent K/V rows for one layer.
@@ -356,6 +399,26 @@ pub trait KvLayerView {
         self.v_row_mut(head, t).copy_from_slice(row);
     }
 
+    /// Logical (RoPE) position of physical row `t`.  Dense caches and
+    /// retain-all paged sessions are the identity map; a pressed session
+    /// reports each surviving row's original position so attention scores
+    /// stay correct after compaction.
+    fn row_pos(&self, t: usize) -> usize {
+        t
+    }
+
+    /// Does this view carry an explicit (non-identity) logical→physical
+    /// map?  The engine uses this to pick between the seed chunk-RoPE fast
+    /// path and per-row position application.
+    fn has_positions(&self) -> bool {
+        false
+    }
+
+    /// Accumulate one query's post-softmax attention mass `scores[0..s]`
+    /// into the session's per-row score accounting (feeds the `AttnScore`
+    /// press).  Default: no accounting (dense caches, untracked sessions).
+    fn score_accum(&self, _s: usize, _scores: &[f32]) {}
+
     /// Packed-row analogue of [`KvLayerView::for_k_runs`]: visits runs of
     /// `run_len * quant::row_bytes(k_width)` packed bytes.  Only
     /// implemented by packed stores.
@@ -390,6 +453,14 @@ pub struct PagedSeqLayer<'a> {
     k_row_bytes: usize,
     v_row_bytes: usize,
     packed: bool,
+    /// Logical position of each physical row, `None` for identity
+    /// (retain-all) sessions — see [`KvLayerView::row_pos`].
+    positions: Option<&'a [u32]>,
+    /// Per-row attention-mass sink (null unless the session tracks scores
+    /// for the `AttnScore` press).  Written through `&self` under the same
+    /// disjoint-session argument as the row stores.
+    scores: *mut f32,
+    rows: usize,
 }
 
 // SAFETY: see `LayerStore` — disjoint *written* blocks per session
@@ -523,6 +594,33 @@ impl KvLayerView for PagedSeqLayer<'_> {
         self.packed
     }
 
+    #[inline]
+    fn row_pos(&self, t: usize) -> usize {
+        match self.positions {
+            Some(pv) => pv[t] as usize,
+            None => t,
+        }
+    }
+
+    fn has_positions(&self) -> bool {
+        self.positions.is_some()
+    }
+
+    fn score_accum(&self, s: usize, scores: &[f32]) {
+        if self.scores.is_null() {
+            return;
+        }
+        debug_assert!(s <= self.rows && s <= scores.len());
+        // SAFETY: `scores` points at the session's `row_scores` buffer,
+        // sized to its row count; decode parallelism is across sessions,
+        // so no two writers target the same buffer.
+        unsafe {
+            for (t, &w) in scores.iter().enumerate().take(s) {
+                *self.scores.add(t) += w;
+            }
+        }
+    }
+
     fn write_k_row(&mut self, head: usize, t: usize, row: &[f32]) {
         if self.packed {
             debug_assert_eq!(row.len(), self.k_width);
@@ -598,7 +696,36 @@ impl<'a> PageTables<'a> {
     pub fn tokens(&self, session: u64) -> usize {
         self.tables.get(&session).map(|t| t.tokens).unwrap_or(0)
     }
+
+    /// Full per-session view: page table plus the logical→physical token
+    /// map and score sink the engine threads into [`PagedSeqLayer`].
+    pub fn view(&self, session: u64) -> Option<SessionKvView<'a>> {
+        self.tables.get(&session).map(|t| SessionKvView {
+            blocks: t.blocks.as_slice(),
+            positions: t.positions.as_deref(),
+            scores: if t.track_scores { t.scores_ptr } else { std::ptr::null_mut() },
+            rows: t.tokens,
+        })
+    }
 }
+
+/// One session's engine-facing KV identity: its page table, its
+/// logical→physical token map (`None` = identity / retain-all), and its
+/// per-row attention-score sink (null unless tracked).
+#[derive(Clone, Copy)]
+pub struct SessionKvView<'a> {
+    pub blocks: &'a [usize],
+    pub positions: Option<&'a [u32]>,
+    scores: *mut f32,
+    pub rows: usize,
+}
+
+// SAFETY: the score pointer targets the session's own `row_scores` buffer;
+// decode workers operate on disjoint sessions (same argument as
+// `PagedSeqLayer`), and the buffer is never resized while `StorePtrs`
+// borrows the cache exclusively.
+unsafe impl Send for SessionKvView<'_> {}
+unsafe impl Sync for SessionKvView<'_> {}
 
 /// Raw per-layer handles into the backing store, witnessed by an exclusive
 /// borrow of the owning `PagedKvCache` (so no other reader/writer of the
@@ -642,7 +769,25 @@ impl<'a> StorePtrs<'a> {
             k_row_bytes: ls.k_row_bytes,
             v_row_bytes: ls.v_row_bytes,
             packed: ls.packed,
+            positions: None,
+            scores: std::ptr::null_mut(),
+            rows: blocks.len() * BLOCK_TOKENS,
         }
+    }
+
+    /// Session-aware variant of [`StorePtrs::seq_layer`]: threads the
+    /// session's logical→physical map and score sink into the view.  With
+    /// identity positions and no tracking this is exactly `seq_layer`.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`StorePtrs::seq_layer`].
+    pub unsafe fn session_layer(&self, l: usize, sv: &SessionKvView<'a>) -> PagedSeqLayer<'a> {
+        let mut view = unsafe { self.seq_layer(l, sv.blocks) };
+        view.positions = sv.positions;
+        view.scores = sv.scores;
+        view.rows = sv.rows;
+        view
     }
 }
 
@@ -680,6 +825,10 @@ pub struct PagedKvCache {
     clock: u64,
     /// Cold entries evicted under pressure (diagnostics).
     evictions: u64,
+    /// Retention presses that evicted at least one row.
+    presses: u64,
+    /// Token rows evicted by retention presses (cumulative).
+    evicted_rows: u64,
     /// Seeded fault stream for allocation sites (None in production).
     alloc_faults: Option<FaultInjector>,
 }
@@ -700,9 +849,37 @@ struct SessionAlloc {
     /// admission + prefill progress reported via
     /// [`PagedKvCache::note_filled`]).  Feeds the debug-time readiness
     /// tripwire for the FIFO-ordering safety argument; not used for
-    /// accounting.
+    /// accounting.  After a retention press this counts *rows*, remapped
+    /// through the keep set.
     filled: usize,
+    /// Logical position of each physical row, ascending.  `None` means the
+    /// identity map (retain-all) — the seed fast paths key off this being
+    /// `None`, which is what keeps the default bit-identical.  Set once by
+    /// the first press (or a pruned resume) and maintained thereafter.
+    positions: Option<Vec<u32>>,
+    /// Logical sequence length: the next position `ensure_tokens` would
+    /// materialise.  Equals `tokens` for identity sessions; after a press
+    /// it exceeds `tokens` by the number of evicted rows.
+    next_pos: usize,
+    /// Accumulate post-softmax attention mass per row (the `AttnScore`
+    /// press input).  Off by default; enabled per session at admission.
+    track_scores: bool,
+    /// Cumulative attention mass per physical row (compacted alongside the
+    /// rows).  Empty unless `track_scores`.
+    row_scores: Vec<f32>,
+    /// Cached `row_scores.as_mut_ptr()`, refreshed by
+    /// [`PagedKvCache::tables_and_ptrs`] so decode workers can accumulate
+    /// through the shared `PageTables` borrow — same idiom as
+    /// `LayerStore`'s base pointers.
+    scores_ptr: *mut f32,
 }
+
+// SAFETY: `scores_ptr` aliases only this session's own `row_scores`
+// buffer; it is refreshed under `&mut self` before every decode and only
+// dereferenced by that decode's disjoint-session workers (see
+// `LayerStore`'s SAFETY note for the full argument).
+unsafe impl Send for SessionAlloc {}
+unsafe impl Sync for SessionAlloc {}
 
 impl SessionAlloc {
     fn empty() -> SessionAlloc {
@@ -713,6 +890,11 @@ impl SessionAlloc {
             trie_path: Vec::new(),
             cow: None,
             filled: 0,
+            positions: None,
+            next_pos: 0,
+            track_scores: false,
+            row_scores: Vec::new(),
+            scores_ptr: std::ptr::null_mut(),
         }
     }
 }
@@ -757,6 +939,8 @@ impl PagedKvCache {
             cold_blocks: 0,
             clock: 0,
             evictions: 0,
+            presses: 0,
+            evicted_rows: 0,
             alloc_faults: None,
             capacity_blocks,
             shape,
@@ -952,10 +1136,16 @@ impl PagedKvCache {
                 .blocks
                 .push(block);
         }
-        self.tables
-            .entry(session)
-            .or_insert_with(SessionAlloc::empty)
-            .tokens = needed_tokens;
+        let e = self.tables.entry(session).or_insert_with(SessionAlloc::empty);
+        debug_assert!(
+            e.positions.is_none(),
+            "reserve() on a pruned session {session} (grow through ensure_tokens)"
+        );
+        e.tokens = needed_tokens;
+        e.next_pos = needed_tokens;
+        if e.track_scores {
+            e.row_scores.resize(needed_tokens, 0.0);
+        }
         self.peak_used = self.peak_used.max(self.used_blocks());
         Ok(())
     }
@@ -1087,6 +1277,8 @@ impl PagedKvCache {
                 trie_path,
                 cow,
                 filled: matched,
+                next_pos: total_tokens,
+                ..SessionAlloc::empty()
             },
         );
         self.peak_used = self.peak_used.max(self.used_blocks());
@@ -1169,16 +1361,84 @@ impl PagedKvCache {
         }
     }
 
-    /// Grow `session`'s reservation so it covers at least `upto` tokens.
-    /// No-op when already covered (the coordinator reserves a request's full
-    /// budget at admission, making per-step calls free on that path).
+    /// Grow `session`'s reservation so it covers at least `upto` *logical*
+    /// tokens.  No-op when already covered (the coordinator reserves a
+    /// request's full budget at admission, making per-step calls free on
+    /// that path).  For a pressed (pruned) session, logical positions
+    /// `[next_pos, upto)` each append one physical row at the tail of the
+    /// compacted table.
     pub fn ensure_tokens(&mut self, session: u64, upto: usize) -> Result<()> {
+        if self.tables.get(&session).is_some_and(|a| a.positions.is_some()) {
+            return self.grow_pruned(session, upto);
+        }
         let have = self.session_tokens(session);
         if upto > have {
             self.reserve(session, upto - have)
         } else {
             Ok(())
         }
+    }
+
+    /// Logical growth of a pruned session: one physical row per new
+    /// logical position, appended in order at the compacted tail.
+    fn grow_pruned(&mut self, session: u64, upto: usize) -> Result<()> {
+        let (rows, have_blocks, next_pos) = {
+            let a = &self.tables[&session];
+            (a.tokens, a.blocks.len(), a.next_pos)
+        };
+        if upto <= next_pos {
+            return Ok(());
+        }
+        let add = upto - next_pos;
+        let deficit = (rows + add).div_ceil(BLOCK_TOKENS).saturating_sub(have_blocks);
+        self.alloc_gate(deficit)?;
+        self.clock += 1;
+        for _ in 0..deficit {
+            let block = self.take_free_block();
+            self.tables.get_mut(&session).unwrap().blocks.push(block);
+        }
+        let a = self.tables.get_mut(&session).unwrap();
+        let pv = a.positions.as_mut().unwrap();
+        pv.extend((next_pos..upto).map(|p| p as u32));
+        a.tokens = rows + add;
+        a.next_pos = upto;
+        if a.track_scores {
+            a.row_scores.resize(rows + add, 0.0);
+        }
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(())
+    }
+
+    /// First reservation for a session resuming from a pressed (pruned)
+    /// past life: one physical row per surviving logical position, plain
+    /// allocation (no prefix sharing — compacted rows are not block-aligned
+    /// prompt chunks).  `positions` must be strictly ascending.
+    pub fn reserve_with_positions(&mut self, session: u64, positions: &[u32]) -> Result<()> {
+        if self.tables.contains_key(&session) {
+            bail!("session {session} already holds a reservation");
+        }
+        debug_assert!(positions.windows(2).all(|w| w[0] < w[1]));
+        let rows = positions.len();
+        let needed = rows.div_ceil(BLOCK_TOKENS);
+        self.alloc_gate(needed)?;
+        self.clock += 1;
+        let mut blocks = Vec::with_capacity(needed);
+        for _ in 0..needed {
+            blocks.push(self.take_free_block());
+        }
+        let next_pos = positions.last().map(|&p| p as usize + 1).unwrap_or(0);
+        self.tables.insert(
+            session,
+            SessionAlloc {
+                blocks,
+                tokens: rows,
+                positions: Some(positions.to_vec()),
+                next_pos,
+                ..SessionAlloc::empty()
+            },
+        );
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(())
     }
 
     /// Release a finished session's references: trie nodes deepest-first,
@@ -1258,6 +1518,259 @@ impl PagedKvCache {
         self.tables.get(&session).map(|t| t.blocks.as_slice())
     }
 
+    /// Logical sequence length of `session` — the number of positions its
+    /// context represents, including pressed-out tokens.  Equals
+    /// [`PagedKvCache::session_tokens`] until the first press.
+    pub fn logical_tokens(&self, session: u64) -> usize {
+        self.tables
+            .get(&session)
+            .map(|a| if a.positions.is_some() { a.next_pos } else { a.tokens })
+            .unwrap_or(0)
+    }
+
+    /// The session's explicit logical→physical map, `None` while it is
+    /// still the identity (retain-all).
+    pub fn row_positions(&self, session: u64) -> Option<&[u32]> {
+        self.tables.get(&session).and_then(|a| a.positions.as_deref())
+    }
+
+    /// Physical row currently holding logical position `pos`, if resident.
+    pub fn row_index_of(&self, session: u64, pos: usize) -> Option<usize> {
+        let a = self.tables.get(&session)?;
+        match &a.positions {
+            None => (pos < a.tokens).then_some(pos),
+            Some(pv) => pv.binary_search(&(pos as u32)).ok(),
+        }
+    }
+
+    /// Enable (or disable) per-row attention-mass accounting for
+    /// `session` — the `AttnScore` press input.  Idempotent.
+    pub fn set_score_tracking(&mut self, session: u64, on: bool) {
+        if let Some(a) = self.tables.get_mut(&session) {
+            a.track_scores = on;
+            if on {
+                a.row_scores.resize(a.tokens, 0.0);
+            } else {
+                a.row_scores = Vec::new();
+            }
+        }
+    }
+
+    /// Rows of `session` that a retention press must keep at their current
+    /// (identity) slots: everything up to and including the last block
+    /// shared through the prefix trie (refcount > 1).  Compaction never
+    /// writes into a shared block, and rows past the last shared block can
+    /// always compact into blocks this session owns exclusively.
+    pub fn protected_rows(&self, session: u64) -> usize {
+        let Some(a) = self.tables.get(&session) else { return 0 };
+        let mut protected = 0;
+        for (i, &b) in a.blocks.iter().enumerate() {
+            if self.refcount[b] > 1 {
+                protected = (i + 1) * BLOCK_TOKENS;
+            }
+        }
+        // A pending copy-on-write destination also pins its block: the
+        // copy targets fixed slots.
+        if let Some(c) = &a.cow {
+            if !c.done {
+                protected = protected.max((c.dst_index + 1) * BLOCK_TOKENS);
+            }
+        }
+        protected.min(a.tokens)
+    }
+
+    /// Rows evicted by retention presses so far (cumulative, all sessions).
+    pub fn evicted_tokens(&self) -> u64 {
+        self.evicted_rows
+    }
+
+    /// Retention presses that evicted at least one row.
+    pub fn presses(&self) -> u64 {
+        self.presses
+    }
+
+    /// Physical token rows resident across all live sessions (the
+    /// "retained tokens" gauge: logical minus evicted).
+    pub fn resident_rows(&self) -> usize {
+        self.tables.values().map(|a| a.tokens).sum()
+    }
+
+    /// Sum over layers of each row's squared key L2 norm — the `L2Norm`
+    /// press criterion (low-norm keys attract attention and are kept).
+    /// Packed rows are dequantized into a scratch row first.
+    pub fn row_key_norms(&mut self, session: u64) -> Vec<f32> {
+        let rows = self.session_tokens(session);
+        let mut out = vec![0.0f32; rows];
+        if rows == 0 || self.store.is_none() {
+            return out;
+        }
+        let (n_layers, n_kv_heads) = (self.shape.n_layers, self.shape.n_kv_heads);
+        let max_kw = self.shape.k_width.iter().copied().max().unwrap_or(0);
+        let mut scratch = vec![0.0f32; max_kw];
+        let Ok((pages, store)) = self.tables_and_ptrs() else { return out };
+        let Some(sv) = pages.view(session) else { return out };
+        for l in 0..n_layers {
+            // SAFETY: read-only sweep under the exclusive cache borrow.
+            let view = unsafe { store.session_layer(l, &sv) };
+            let kw = view.k_width;
+            for hd in 0..n_kv_heads {
+                if view.packed_q4() {
+                    view.for_k_runs_q4(hd, rows, |t0, bytes| {
+                        let rb = bytes.len() / (rows - t0).min(BLOCK_TOKENS);
+                        for (j, row) in bytes.chunks_exact(rb).enumerate() {
+                            quant::dequantize_row(row, &mut scratch[..kw]);
+                            out[t0 + j] += scratch[..kw].iter().map(|x| x * x).sum::<f32>();
+                        }
+                    });
+                } else {
+                    view.for_k_runs(hd, rows, |t0, run| {
+                        for (j, row) in run.chunks_exact(kw).enumerate() {
+                            out[t0 + j] += row.iter().map(|x| x * x).sum::<f32>();
+                        }
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Compact `session` down to the rows in `keep` (strictly ascending
+    /// physical row indices).  Surviving rows slide forward in place,
+    /// their logical RoPE positions move with them, fully drained blocks
+    /// return to the free pool, and trie registrations past the preserved
+    /// identity prefix are dropped (their blocks' rows are stale after
+    /// compaction).  The caller (the press planner) must keep every
+    /// protected row — see [`PagedKvCache::protected_rows`].
+    pub fn apply_retention(&mut self, session: u64, keep: &[usize]) -> Result<()> {
+        let Some(a) = self.tables.get(&session) else {
+            bail!("apply_retention on unknown session {session}")
+        };
+        if a.cow.as_ref().is_some_and(|c| !c.done) {
+            bail!("retention press on session {session} before its copy-on-write resolved");
+        }
+        let rows = a.tokens;
+        if keep.last().is_some_and(|&r| r >= rows) || keep.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("retention keep set must be strictly ascending rows below {rows}");
+        }
+        let protected = self.protected_rows(session);
+        if keep.len() < protected || keep.iter().take(protected).enumerate().any(|(j, &r)| r != j) {
+            bail!(
+                "retention keep set evicts protected rows (first {protected} must survive in place)"
+            );
+        }
+        if keep.len() == rows {
+            return Ok(());
+        }
+        let n_kv_heads = self.shape.n_kv_heads;
+        let mut a = self.tables.remove(&session).unwrap();
+        // Forward in-place row moves: dest j <= keep[j] and every earlier
+        // dest is strictly below the current source, so no read ever sees
+        // an overwritten row.
+        if let Some(store) = &mut self.store {
+            for (j, &src) in keep.iter().enumerate() {
+                if src == j {
+                    continue;
+                }
+                let (sb, ss) = (a.blocks[src / BLOCK_TOKENS], src % BLOCK_TOKENS);
+                let (db, ds) = (a.blocks[j / BLOCK_TOKENS], j % BLOCK_TOKENS);
+                for ls in store.iter_mut() {
+                    ls.copy_row(sb, ss, db, ds, n_kv_heads);
+                }
+            }
+        }
+        // Logical positions ride along with their rows.
+        let old_pos = a.positions.take();
+        if old_pos.is_none() {
+            a.next_pos = rows;
+        }
+        a.positions = Some(
+            keep.iter()
+                .map(|&i| old_pos.as_ref().map(|p| p[i]).unwrap_or(i as u32))
+                .collect(),
+        );
+        if a.track_scores && !a.row_scores.is_empty() {
+            let old = std::mem::take(&mut a.row_scores);
+            a.row_scores = keep.iter().map(|&i| old[i]).collect();
+        }
+        a.filled = keep.partition_point(|&r| r < a.filled);
+        // Trie nodes whose chunks are no longer verbatim resident must go:
+        // a future admission matching them would attach compacted rows.
+        let ident = keep.iter().enumerate().take_while(|&(j, &r)| r == j).count();
+        let preserved_chunks = ident / BLOCK_TOKENS;
+        while a.trie_path.len() > preserved_chunks {
+            let node = a.trie_path.pop().unwrap();
+            self.trie.release(node);
+        }
+        a.shared_blocks = a.shared_blocks.min(preserved_chunks);
+        a.tokens = keep.len();
+        let needed = a.tokens.div_ceil(BLOCK_TOKENS);
+        while a.blocks.len() > needed {
+            let block = a.blocks.pop().unwrap();
+            self.dec_block(block);
+        }
+        self.presses += 1;
+        self.evicted_rows += (rows - keep.len()) as u64;
+        self.tables.insert(session, a);
+        Ok(())
+    }
+
+    /// Run a retention press over `session`: plan a keep set under `spec`
+    /// (budget, protected prefix, unwritten rows and the recency window
+    /// all honoured) and compact if it evicts anything.  `written_upto` is
+    /// the logical position below which rows have been written (mid-prefill
+    /// presses must not evict-or-move rows prefill has yet to fill).
+    /// Returns the number of rows evicted; 0 on accounting-only caches.
+    pub fn apply_press(
+        &mut self,
+        session: u64,
+        spec: &retention::RetentionSpec,
+        written_upto: usize,
+    ) -> Result<usize> {
+        if self.store.is_none() {
+            return Ok(0);
+        }
+        let Some(a) = self.tables.get(&session) else { return Ok(0) };
+        if a.cow.as_ref().is_some_and(|c| !c.done) {
+            return Ok(0);
+        }
+        let rows = a.tokens;
+        let logical = if a.positions.is_some() { a.next_pos } else { rows };
+        if !retention::press_due(spec, rows, logical) {
+            return Ok(0);
+        }
+        let written_rows = match &a.positions {
+            None => written_upto.min(rows),
+            Some(pv) => pv.partition_point(|&p| (p as usize) < written_upto),
+        };
+        let protected = self.protected_rows(session);
+        let norms = if spec.press == retention::Press::L2Norm {
+            self.row_key_norms(session)
+        } else {
+            Vec::new()
+        };
+        let a = self.tables.get(&session).unwrap();
+        let keep = {
+            let inputs = retention::PressInputs {
+                rows,
+                written_rows,
+                protected_rows: protected,
+                logical_len: logical,
+                positions: a.positions.as_deref(),
+                scores: if a.track_scores { &a.row_scores } else { &[] },
+                key_norms: &norms,
+                session,
+            };
+            retention::plan_keep(spec, &inputs)
+        };
+        let Some(keep) = keep else { return Ok(0) };
+        let evicted = rows - keep.len();
+        if evicted == 0 {
+            return Ok(0);
+        }
+        self.apply_retention(session, &keep)?;
+        Ok(evicted)
+    }
+
     /// Split into the page-table read view and the raw storage handles the
     /// engine decodes through.  Errors on an accounting-only cache.
     ///
@@ -1265,6 +1778,15 @@ impl PagedKvCache {
     /// path to the storage; per-session write disjointness is then
     /// guaranteed by block ownership (see [`StorePtrs::seq_layer`]).
     pub fn tables_and_ptrs(&mut self) -> Result<(PageTables<'_>, StorePtrs<'_>)> {
+        // Refresh every tracked session's score-sink pointer: `row_scores`
+        // may have been resized/compacted since the last decode.
+        for a in self.tables.values_mut() {
+            a.scores_ptr = if a.track_scores {
+                a.row_scores.as_mut_ptr()
+            } else {
+                std::ptr::null_mut()
+            };
+        }
         let Some(store) = &self.store else {
             bail!("PagedKvCache was built accounting-only (use with_storage for engine decode)")
         };

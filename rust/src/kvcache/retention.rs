@@ -1,0 +1,332 @@
+//! Token-level retention presses over the paged KV cache.
+//!
+//! A *press* (terminology from the kvpress line of work) decides which
+//! token rows of a session's cache survive as the context grows; the
+//! cache then compacts the survivors in place
+//! ([`super::PagedKvCache::apply_retention`]), keeping their original
+//! RoPE positions so attention scores are computed over the true
+//! logical positions.  Four policies:
+//!
+//! * [`Press::Window`] — keep the most recent rows (sliding window with
+//!   the shared-prefix rows pinned).
+//! * [`Press::L2Norm`] — keep rows whose keys have the *lowest* L2 norm
+//!   (low-norm keys attract attention mass; Devoto et al.).
+//! * [`Press::AttnScore`] — keep rows with the highest cumulative
+//!   post-softmax attention mass, fed from the engine's decode pass.
+//! * [`Press::AnchorReservoir`] — keep the leading anchor rows, the
+//!   recency window, and a seeded uniform reservoir of the middle.
+//!
+//! Every plan honours three hard floors regardless of policy: protected
+//! rows (shared prefix blocks and pending copy-on-write destinations)
+//! survive *in place*, unwritten rows (mid-prefill) survive, and the
+//! most recent [`RECENT_TOKENS`] written rows survive.  Budgets below
+//! [`MIN_TOKENS`] never press at all, which is what keeps short-context
+//! workloads (and the whole tier-1 suite) untouched even when a policy
+//! is forced on globally via `RAP_RETENTION`.
+
+use crate::util::rng::Rng;
+
+/// Contexts at or below this many resident rows are never pressed.
+pub const MIN_TOKENS: usize = 512;
+
+/// A press fires only once the resident rows exceed the budget by this
+/// slack — hysteresis that amortises the O(rows) compaction.
+pub const SLACK_TOKENS: usize = 128;
+
+/// The most recent written rows are always retained (the local window
+/// every policy needs for coherent next-token prediction).
+pub const RECENT_TOKENS: usize = super::BLOCK_TOKENS * 4;
+
+/// Leading rows the `AnchorReservoir` press pins (attention-sink
+/// anchors), beyond whatever the protected prefix already pins.
+pub const ANCHOR_TOKENS: usize = super::BLOCK_TOKENS * 4;
+
+/// Retention policy for one session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Press {
+    /// Keep the most recent rows.
+    Window,
+    /// Keep rows with the lowest key L2 norm.
+    L2Norm,
+    /// Keep rows with the highest cumulative attention mass.
+    AttnScore,
+    /// Anchors + recency window + seeded reservoir of the middle.
+    AnchorReservoir,
+}
+
+impl Press {
+    /// Parse the wire/env name (`window`, `l2norm`, `attn-score`,
+    /// `anchor-reservoir`).
+    pub fn parse(name: &str) -> Option<Press> {
+        match name {
+            "window" => Some(Press::Window),
+            "l2norm" => Some(Press::L2Norm),
+            "attn-score" => Some(Press::AttnScore),
+            "anchor-reservoir" => Some(Press::AnchorReservoir),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Press::Window => "window",
+            Press::L2Norm => "l2norm",
+            Press::AttnScore => "attn-score",
+            Press::AnchorReservoir => "anchor-reservoir",
+        }
+    }
+
+    /// Presses that need no engine-fed score stream can run mid-prefill;
+    /// `AttnScore` has nothing to rank by until decode feeds it.
+    pub fn works_during_prefill(&self) -> bool {
+        !matches!(self, Press::AttnScore)
+    }
+}
+
+/// Per-request retention policy: retain `ratio` of the logical context
+/// (clamped below by [`MIN_TOKENS`]) under `press`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetentionSpec {
+    pub press: Press,
+    /// Fraction of the logical context retained, in (0, 1].
+    pub ratio: f32,
+}
+
+impl RetentionSpec {
+    /// Parse `"<policy>:<ratio>"` (e.g. `window:0.5`).  A bare policy
+    /// name defaults to ratio 0.5.
+    pub fn parse(s: &str) -> Option<RetentionSpec> {
+        let (name, ratio) = match s.split_once(':') {
+            Some((n, r)) => (n, r.parse::<f32>().ok()?),
+            None => (s, 0.5),
+        };
+        if !ratio.is_finite() || ratio <= 0.0 || ratio > 1.0 {
+            return None;
+        }
+        Some(RetentionSpec { press: Press::parse(name)?, ratio })
+    }
+
+    /// Default policy from the `RAP_RETENTION` environment variable
+    /// (`None` when unset or unparsable — retain-all).
+    pub fn from_env() -> Option<RetentionSpec> {
+        std::env::var("RAP_RETENTION").ok().as_deref().and_then(RetentionSpec::parse)
+    }
+
+    /// Row budget for a context of `logical_len` positions.
+    pub fn budget(&self, logical_len: usize) -> usize {
+        (((logical_len as f64) * self.ratio as f64).ceil() as usize).max(MIN_TOKENS)
+    }
+}
+
+/// Everything a press plan needs about one session, read-only.
+pub struct PressInputs<'a> {
+    /// Physical rows currently resident.
+    pub rows: usize,
+    /// Rows `[0, written_rows)` hold written K/V; the tail is unwritten
+    /// (mid-prefill) and must survive untouched.
+    pub written_rows: usize,
+    /// Rows `[0, protected_rows)` must survive in place (shared blocks).
+    pub protected_rows: usize,
+    /// Logical context length (drives the budget).
+    pub logical_len: usize,
+    /// Logical position per row (`None` = identity).
+    pub positions: Option<&'a [u32]>,
+    /// Cumulative attention mass per row (empty unless tracked).
+    pub scores: &'a [f32],
+    /// Squared key L2 norm per row (empty unless the policy needs it).
+    pub key_norms: &'a [f32],
+    /// Session id — seeds the reservoir press deterministically.
+    pub session: u64,
+}
+
+/// Cheap pre-check: would a press over this session evict anything?
+/// Lets the cache skip norm computation and planning entirely.
+pub fn press_due(spec: &RetentionSpec, rows: usize, logical_len: usize) -> bool {
+    rows > spec.budget(logical_len) + SLACK_TOKENS
+}
+
+/// Plan the keep set (ascending physical rows) for one press, or `None`
+/// when nothing would be evicted.  The plan always satisfies the
+/// [`super::PagedKvCache::apply_retention`] contract: ascending, within
+/// range, protected prefix identical.
+pub fn plan_keep(spec: &RetentionSpec, inp: &PressInputs) -> Option<Vec<usize>> {
+    let rows = inp.rows;
+    let budget = spec.budget(inp.logical_len);
+    if rows <= budget + SLACK_TOKENS {
+        return None;
+    }
+    let written = inp.written_rows.min(rows);
+    let recent_floor = written.saturating_sub(RECENT_TOKENS).max(inp.protected_rows);
+    // Forced rows: protected prefix, recency window, unwritten tail.
+    // Candidates (evictable): written rows between the two.
+    let forced_head = inp.protected_rows;
+    let forced_tail = rows - recent_floor;
+    let forced = forced_head + forced_tail;
+    let candidates: Vec<usize> = (forced_head..recent_floor).collect();
+    if candidates.is_empty() {
+        return None;
+    }
+    let n_choose = budget.saturating_sub(forced).min(candidates.len());
+    if n_choose == candidates.len() {
+        return None;
+    }
+    let mut chosen: Vec<usize> = match spec.press {
+        Press::Window => {
+            // Most recent candidates win.
+            candidates[candidates.len() - n_choose..].to_vec()
+        }
+        Press::L2Norm => {
+            // Lowest squared key norm wins; ties resolve to recency.
+            let mut order = candidates.clone();
+            order.sort_by(|&a, &b| {
+                let (na, nb) = (inp.key_norms[a], inp.key_norms[b]);
+                na.partial_cmp(&nb).unwrap_or(std::cmp::Ordering::Equal).then(b.cmp(&a))
+            });
+            order.truncate(n_choose);
+            order
+        }
+        Press::AttnScore => {
+            // Highest cumulative attention mass wins; ties to recency.
+            let score = |r: usize| inp.scores.get(r).copied().unwrap_or(0.0);
+            let mut order = candidates.clone();
+            order.sort_by(|&a, &b| {
+                score(b)
+                    .partial_cmp(&score(a))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.cmp(&a))
+            });
+            order.truncate(n_choose);
+            order
+        }
+        Press::AnchorReservoir => {
+            let anchors = ANCHOR_TOKENS.min(n_choose).min(candidates.len());
+            let mut keep: Vec<usize> = candidates[..anchors].to_vec();
+            let middle = &candidates[anchors..];
+            let want = n_choose - anchors;
+            if want >= middle.len() {
+                keep.extend_from_slice(middle);
+            } else if want > 0 {
+                // Algorithm R, seeded from (session, logical_len): stable
+                // within a press, fresh across context growth.
+                let mut rng =
+                    Rng::new(inp.session ^ (inp.logical_len as u64).wrapping_mul(0x9E37));
+                let mut res: Vec<usize> = middle[..want].to_vec();
+                for (i, &r) in middle.iter().enumerate().skip(want) {
+                    let j = rng.below(i + 1);
+                    if j < want {
+                        res[j] = r;
+                    }
+                }
+                keep.extend_from_slice(&res);
+            }
+            keep
+        }
+    };
+    chosen.sort_unstable();
+    let mut keep = Vec::with_capacity(forced + chosen.len());
+    keep.extend(0..forced_head);
+    keep.extend(chosen);
+    keep.extend(recent_floor..rows);
+    debug_assert!(keep.windows(2).all(|w| w[0] < w[1]));
+    if keep.len() == rows {
+        return None;
+    }
+    Some(keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(rows: usize) -> PressInputs<'static> {
+        PressInputs {
+            rows,
+            written_rows: rows,
+            protected_rows: 0,
+            logical_len: rows,
+            positions: None,
+            scores: &[],
+            key_norms: &[],
+            session: 7,
+        }
+    }
+
+    #[test]
+    fn parse_specs() {
+        let s = RetentionSpec::parse("window:0.5").unwrap();
+        assert_eq!(s.press, Press::Window);
+        assert_eq!(s.ratio, 0.5);
+        assert_eq!(RetentionSpec::parse("anchor-reservoir").unwrap().ratio, 0.5);
+        assert!(RetentionSpec::parse("window:0.0").is_none());
+        assert!(RetentionSpec::parse("window:1.5").is_none());
+        assert!(RetentionSpec::parse("window:nan").is_none());
+        assert!(RetentionSpec::parse("bogus:0.5").is_none());
+    }
+
+    #[test]
+    fn short_contexts_are_never_pressed() {
+        let spec = RetentionSpec { press: Press::Window, ratio: 0.1 };
+        assert!(plan_keep(&spec, &inputs(MIN_TOKENS)).is_none());
+        assert!(plan_keep(&spec, &inputs(MIN_TOKENS + SLACK_TOKENS)).is_none());
+    }
+
+    #[test]
+    fn window_keeps_recent_and_respects_budget() {
+        let spec = RetentionSpec { press: Press::Window, ratio: 0.25 };
+        let rows = 4096;
+        let keep = plan_keep(&spec, &inputs(rows)).unwrap();
+        assert_eq!(keep.len(), spec.budget(rows));
+        // The tail is intact.
+        assert!(keep.ends_with(&[rows - 2, rows - 1]));
+        assert!(keep.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn protected_and_unwritten_rows_always_survive() {
+        let spec = RetentionSpec { press: Press::Window, ratio: 0.25 };
+        let mut inp = inputs(4096);
+        inp.protected_rows = 48;
+        inp.written_rows = 3000;
+        let keep = plan_keep(&spec, &inp).unwrap();
+        for j in 0..48 {
+            assert_eq!(keep[j], j);
+        }
+        // Every unwritten row survives.
+        assert!((3000..4096).all(|r| keep.binary_search(&r).is_ok()));
+    }
+
+    #[test]
+    fn l2norm_prefers_low_norm_rows() {
+        let spec = RetentionSpec { press: Press::L2Norm, ratio: 0.25 };
+        let rows = 2048;
+        let norms: Vec<f32> = (0..rows).map(|r| if r % 2 == 0 { 0.1 } else { 9.0 }).collect();
+        let mut inp = inputs(rows);
+        inp.key_norms = &norms;
+        let keep = plan_keep(&spec, &inp).unwrap();
+        let evictable_end = rows - RECENT_TOKENS;
+        let kept_mid: Vec<usize> =
+            keep.iter().copied().filter(|&r| r < evictable_end).collect();
+        assert!(kept_mid.iter().all(|&r| r % 2 == 0), "only low-norm rows kept");
+    }
+
+    #[test]
+    fn attn_score_keeps_heavy_rows() {
+        let spec = RetentionSpec { press: Press::AttnScore, ratio: 0.25 };
+        let rows = 2048;
+        let scores: Vec<f32> = (0..rows).map(|r| if r < 100 { 5.0 } else { 0.0 }).collect();
+        let mut inp = inputs(rows);
+        inp.scores = &scores;
+        let keep = plan_keep(&spec, &inp).unwrap();
+        assert!((0..100).all(|r| keep.binary_search(&r).is_ok()));
+    }
+
+    #[test]
+    fn anchor_reservoir_is_deterministic() {
+        let spec = RetentionSpec { press: Press::AnchorReservoir, ratio: 0.25 };
+        let a = plan_keep(&spec, &inputs(4096)).unwrap();
+        let b = plan_keep(&spec, &inputs(4096)).unwrap();
+        assert_eq!(a, b);
+        // Anchors survive.
+        assert!((0..ANCHOR_TOKENS).all(|r| a.binary_search(&r).is_ok()));
+    }
+}

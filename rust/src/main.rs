@@ -59,7 +59,9 @@ fn print_usage() {
            eval      --model M [--variants a,b,c] [--quant] [--windows N]\n\
            serve     --model M --variant V [--addr HOST:PORT] [--sessions N]\n\
                      (API v2: per-token streaming, seeded sampling, stop\n\
-                      sequences, {{\"cancel\": id}}; v1 one-shot still served)\n\
+                      sequences, {{\"cancel\": id}}, per-request KV retention\n\
+                      {{\"retention\": {{\"policy\", \"ratio\"}}}}; v1 one-shot\n\
+                      still served)\n\
            route     --replicas H:P,H:P [--addr HOST:PORT] [--policy affinity]\n\
                      (fronts `serve` replicas: prefix-affinity or\n\
                       least-loaded/random routing, health probing, bounded\n\
@@ -195,9 +197,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "listening on {} — serving API v2, one JSON object per line:\n\
          \x20 {{\"prompt\", \"max_new\", \"stream\", \"temperature\", \"top_k\", \"top_p\", \
-         \"seed\", \"stop\"}}\n\
+         \"seed\", \"stop\", \"retention\"}}\n\
          \x20 streaming replies: {{\"delta\"}} lines then a {{\"done\", \"finish_reason\"}} \
          summary; {{\"cancel\": id}} tears a request down mid-flight\n\
+         \x20 retention: {{\"policy\": \"window\"|\"l2norm\"|\"attn-score\"|\
+         \"anchor-reservoir\", \"ratio\": (0,1]}} prunes the request's KV \
+         cache to ratio x context once it clears the press floor\n\
+         \x20 rejected before admission as {{\"error\": \"bad_request\", \"field\": \
+         \"retention.policy\"}} (unknown policy) or \"retention.ratio\" \
+         (ratio outside (0,1])\n\
          \x20 (v1 one-shot requests still answered in the old shape)",
         handle.addr
     );

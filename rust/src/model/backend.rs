@@ -165,7 +165,11 @@ impl<'a> Backend for RustBackend<'a> {
         self.sessions.insert(session);
         // Under the coordinator the prompt (or resume feed) is reserved at
         // admission, so this is a zero-deficit no-op there; it only
-        // allocates blocks for standalone (coordinator-less) use.
+        // allocates blocks for standalone (coordinator-less) use.  `pos0`
+        // is row-space: identical to the logical position for retain-all
+        // sessions, and for a pruned session's survivor replay the rows
+        // were reserved up front (`reserve_with_positions`), so this call
+        // never grows a pruned table (`pos0 + len <= rows <= next_pos`).
         kv.ensure_tokens(session, pos0 + tokens.len())?;
         self.engine.prefill_chunk_paged(
             session,
@@ -203,7 +207,10 @@ impl<'a> Backend for RustBackend<'a> {
         self.engine
             .decode_batch_paged(entries, kv, &mut self.batch, true)?;
         for &(sid, _, pos) in entries {
-            self.quantize_range(kv, sid, pos, 1);
+            // Pruned sessions store the just-written token at the last
+            // resident row, not at its logical position.
+            let row = kv.row_index_of(sid, pos).unwrap_or(pos);
+            self.quantize_range(kv, sid, row, 1);
         }
         Ok((0..entries.len())
             .map(|i| self.batch.logits_row(i).to_vec())

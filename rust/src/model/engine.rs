@@ -341,6 +341,9 @@ pub struct BatchWorkspace {
     /// Logits, packed [B, vocab].
     logits: Vec<f32>,
     workers: Vec<DecodeWorkspace>,
+    /// Per-entry physical cache row for this step (== pos for retain-all
+    /// sessions; last row of the compacted table after a retention press).
+    rows: Vec<usize>,
     batch_capacity: usize,
 }
 
@@ -353,6 +356,7 @@ impl BatchWorkspace {
             x: Vec::new(),
             logits: Vec::new(),
             workers: Vec::new(),
+            rows: Vec::new(),
             batch_capacity: 0,
         }
     }
@@ -374,6 +378,7 @@ impl BatchWorkspace {
         if b > self.batch_capacity {
             self.x.resize(b * self.d_model, 0.0);
             self.logits.resize(b * self.vocab, 0.0);
+            self.rows.reserve(b.saturating_sub(self.rows.capacity()));
             self.batch_capacity = b;
         }
     }
@@ -643,13 +648,17 @@ impl Engine {
     }
 
     /// Project ONE token's normed hidden state into the cacheable K/V rows
-    /// at `pos` (written through `kv`) and the rotated Q rows (`q_rows`,
-    /// packed [H, q_width(l)]).
+    /// at physical row `row` (written through `kv`) and the rotated Q rows
+    /// (`q_rows`, packed [H, q_width(l)]).  RoPE rotates at the *logical*
+    /// position `pos`; for identity (retain-all) sessions `row == pos` and
+    /// this is exactly the seed arithmetic.
+    #[allow(clippy::too_many_arguments)]
     fn project_into<L: KvLayerView>(
         &self,
         l: usize,
         layer: &Layer,
         h: &[f32],
+        row: usize,
         pos: usize,
         kv: &mut L,
         q: &mut [f32],
@@ -670,8 +679,8 @@ impl Engine {
                 for hd in 0..cfg.n_kv_heads {
                     let krow = &mut kl[hd * dh..(hd + 1) * dh];
                     apply_full(krow, pos, cfg.pairing, cfg.rope_theta);
-                    kv.write_k_row(hd, pos, krow);
-                    kv.write_v_row(hd, pos, &vl[hd * dh..(hd + 1) * dh]);
+                    kv.write_k_row(hd, row, krow);
+                    kv.write_v_row(hd, row, &vl[hd * dh..(hd + 1) * dh]);
                 }
                 q_rows.copy_from_slice(q);
                 for hq in 0..cfg.n_heads {
@@ -693,8 +702,8 @@ impl Engine {
                 self.vecmat_counted_into(h, a_k, kl);
                 self.vecmat_counted_into(h, a_v, vl);
                 for hd in 0..cfg.n_kv_heads {
-                    kv.write_k_row(hd, pos, &kl[hd * kw..(hd + 1) * kw]);
-                    kv.write_v_row(hd, pos, &vl[hd * vw..(hd + 1) * vw]);
+                    kv.write_k_row(hd, row, &kl[hd * kw..(hd + 1) * kw]);
+                    kv.write_v_row(hd, row, &vl[hd * vw..(hd + 1) * vw]);
                 }
                 q_rows.copy_from_slice(q);
                 for hq in 0..cfg.n_heads {
@@ -721,8 +730,8 @@ impl Engine {
                     // Index-aware RoPE directly on the latent — the fused
                     // hot path (no reconstruction, no gather).
                     plan.k_table.apply_fused(hd, krow, pos);
-                    kv.write_k_row(hd, pos, krow);
-                    kv.write_v_row(hd, pos, &vl[hd * vw..(hd + 1) * vw]);
+                    kv.write_k_row(hd, row, krow);
+                    kv.write_v_row(hd, row, &vl[hd * vw..(hd + 1) * vw]);
                 }
                 q_rows.copy_from_slice(q);
                 for hq in 0..cfg.n_heads {
@@ -733,16 +742,19 @@ impl Engine {
         }
     }
 
-    /// Attention for ONE query token at `pos` over cache rows `[0, pos]`,
-    /// writing the per-head context vectors into `ctx` (packed
-    /// [H, ctx_width(l)]).  Scores sweep the cache run-by-run through the
-    /// blocked kernels — identical arithmetic for dense and paged layouts.
+    /// Attention for ONE query token over cache rows `[0, s)`, writing the
+    /// per-head context vectors into `ctx` (packed [H, ctx_width(l)]).
+    /// `s` is the visible *row* count (for identity sessions, `pos + 1`).
+    /// Scores sweep the cache run-by-run through the blocked kernels —
+    /// identical arithmetic for dense and paged layouts.  Post-softmax
+    /// mass is fed to the view's score accounting (a no-op unless the
+    /// session tracks scores for the `AttnScore` retention press).
     #[allow(clippy::too_many_arguments)]
     fn attend_into<L: KvLayerView>(
         &self,
         l: usize,
         layer: &Layer,
-        pos: usize,
+        s: usize,
         kv: &L,
         q_rows: &[f32],
         scores: &mut [f32],
@@ -754,7 +766,6 @@ impl Engine {
         let dh = cfg.head_dim;
         let group = cfg.group_size();
         let scale = 1.0 / (dh as f32).sqrt();
-        let s = pos + 1;
         let qw = q_rows.len() / cfg.n_heads;
         let cw = ctx.len() / cfg.n_heads;
         let (kw, vw) = (self.spec.k_rank[l], self.spec.v_rank[l]);
@@ -818,6 +829,7 @@ impl Engine {
                 self.flops.add(2 * (s * kw) as u64);
             }
             softmax_inplace(&mut scores[..s]);
+            kv.score_accum(s, &scores[..s]);
             let c = &mut ctx[hq * cw..(hq + 1) * cw];
             c.fill(0.0);
             if use_rv {
@@ -872,11 +884,13 @@ impl Engine {
             }
             self.flops.add(2 * (s * w * dh) as u64);
             if is_k {
-                // RoPE the reconstructed K at its token positions.
+                // RoPE the reconstructed K at its token positions — the
+                // view's logical positions, which for identity sessions
+                // are the row indices themselves.
                 for t in 0..s {
                     apply_full(
                         &mut rows[t * dh..(t + 1) * dh],
-                        t,
+                        kv.row_pos(t),
                         self.cfg.pairing,
                         self.cfg.rope_theta,
                     );
@@ -886,12 +900,16 @@ impl Engine {
     }
 
     /// One full transformer layer for one token: attention (through `kv`)
-    /// plus MLP, accumulated into the hidden state `x`.
+    /// plus MLP, accumulated into the hidden state `x`.  `row` is the
+    /// physical cache row the token's K/V lands in; `pos` its logical RoPE
+    /// position (`row == pos` for dense caches and retain-all sessions).
+    #[allow(clippy::too_many_arguments)]
     fn layer_forward<L: KvLayerView>(
         &self,
         l: usize,
         layer: &Layer,
         x: &mut [f32],
+        row: usize,
         pos: usize,
         kv: &mut L,
         ws: &mut DecodeWorkspace,
@@ -916,11 +934,11 @@ impl Engine {
         let cw = self.ctx_width(l);
 
         rms_norm(x, &layer.attn_norm.data, cfg.norm_eps, h);
-        self.project_into(l, layer, h, pos, kv, q, kl, vl, &mut q_rows[..cfg.n_heads * qw]);
+        self.project_into(l, layer, h, row, pos, kv, q, kl, vl, &mut q_rows[..cfg.n_heads * qw]);
         self.attend_into(
             l,
             layer,
-            pos,
+            row + 1,
             kv,
             &q_rows[..cfg.n_heads * qw],
             scores,
@@ -956,7 +974,7 @@ impl Engine {
         let Cache { layers, len, x, ws, .. } = cache;
         self.embed_into(token, x);
         for (l, layer) in self.layers.iter().enumerate() {
-            self.layer_forward(l, layer, x, pos, &mut layers[l], ws);
+            self.layer_forward(l, layer, x, pos, pos, &mut layers[l], ws);
         }
         *len = (*len).max(pos + 1);
         let DecodeWorkspace { h, logits, .. } = ws;
@@ -1015,16 +1033,38 @@ impl Engine {
             );
         }
         batch.ensure(self, b);
+        batch.rows.clear();
         for (i, &(sid, _, pos)) in entries.iter().enumerate() {
             if pos >= batch.s_max {
                 bail!("session {sid}: pos {pos} exceeds workspace s_max {}", batch.s_max);
             }
-            if kv.session_tokens(sid) <= pos {
-                bail!(
-                    "session {sid}: pos {pos} beyond its {}-token reservation",
-                    kv.session_tokens(sid)
-                );
-            }
+            // The token's physical cache row: its position for identity
+            // (retain-all) sessions — the seed invariant — or the tail of
+            // the compacted table for a pressed session, whose last
+            // surviving row must be the previous logical position.
+            let row = match kv.row_positions(sid) {
+                None => {
+                    if kv.session_tokens(sid) <= pos {
+                        bail!(
+                            "session {sid}: pos {pos} beyond its {}-token reservation",
+                            kv.session_tokens(sid)
+                        );
+                    }
+                    pos
+                }
+                Some(pv) => {
+                    let rows = pv.len();
+                    if rows == 0 || pv[rows - 1] as usize != pos {
+                        bail!(
+                            "session {sid}: decode pos {pos} does not extend its retained \
+                             rows (last resident position {:?})",
+                            pv.last()
+                        );
+                    }
+                    rows - 1
+                }
+            };
+            batch.rows.push(row);
             // A duplicated session id would give two workers overlapping
             // views of the same blocks — reject it before any write.
             if entries[..i].iter().any(|&(other, _, _)| other == sid) {
@@ -1039,6 +1079,7 @@ impl Engine {
         let threads = kernel_threads().min(b);
         let ws_ptr = SendPtr(batch.workers.as_mut_ptr());
         let x_ptr = SendPtr(batch.x.as_mut_ptr());
+        let entry_rows: &[usize] = &batch.rows;
         for (l, layer) in self.layers.iter().enumerate() {
             scoped_chunks_indexed(b, threads, |widx, range| {
                 // SAFETY: each worker owns a unique workspace index and a
@@ -1054,8 +1095,9 @@ impl Engine {
                     // (checked above), so this worker holds the only view
                     // that *writes* this session's blocks; concurrent
                     // views may read its shared prefix blocks.
-                    let mut view = unsafe { store.seq_layer(l, pages.blocks(sid).unwrap()) };
-                    self.layer_forward(l, layer, x, pos, &mut view, ws);
+                    let sv = pages.view(sid).unwrap();
+                    let mut view = unsafe { store.session_layer(l, &sv) };
+                    self.layer_forward(l, layer, x, entry_rows[bi], pos, &mut view, ws);
                 }
             });
         }
@@ -1135,20 +1177,49 @@ impl Engine {
         // Q/K/V projections: one GEMM per weight for the whole chunk, then
         // RoPE over the chunk in place (same per-row rotation the token
         // loop applies after copying each row into the cache).
+        // `pos0` is the chunk's first *row*.  Retain-all sessions are the
+        // identity map (row == logical position) and take the seed
+        // chunk-RoPE fast path bit-for-bit; a pressed session rotates each
+        // row at its preserved logical position instead.
+        let gapped = kv.has_positions();
         match &layer.attn {
             AttnKind::Baseline { wq, wk, wv, .. } => {
                 self.gemm_counted(&h[..n * d], wq, &mut q[..n * h_n * dh], threads);
                 self.gemm_counted(&h[..n * d], wk, &mut kl[..n * hkv * dh], threads);
                 self.gemm_counted(&h[..n * d], wv, &mut vl[..n * hkv * dh], threads);
-                apply_full_tokens(&mut q[..n * h_n * dh], h_n, dh, pos0, cfg.pairing, cfg.rope_theta);
-                apply_full_tokens(&mut kl[..n * hkv * dh], hkv, dh, pos0, cfg.pairing, cfg.rope_theta);
+                if gapped {
+                    for i in 0..n {
+                        let p = kv.row_pos(pos0 + i);
+                        for hq in 0..h_n {
+                            let r = &mut q[(i * h_n + hq) * dh..(i * h_n + hq + 1) * dh];
+                            apply_full(r, p, cfg.pairing, cfg.rope_theta);
+                        }
+                        for hd in 0..hkv {
+                            let r = &mut kl[(i * hkv + hd) * dh..(i * hkv + hd + 1) * dh];
+                            apply_full(r, p, cfg.pairing, cfg.rope_theta);
+                        }
+                    }
+                } else {
+                    apply_full_tokens(&mut q[..n * h_n * dh], h_n, dh, pos0, cfg.pairing, cfg.rope_theta);
+                    apply_full_tokens(&mut kl[..n * hkv * dh], hkv, dh, pos0, cfg.pairing, cfg.rope_theta);
+                }
             }
             AttnKind::Svd { wq, a_k, a_v, .. } | AttnKind::Palu { wq, a_k, a_v, .. } => {
                 self.gemm_counted(&h[..n * d], wq, &mut q[..n * h_n * dh], threads);
                 self.gemm_counted(&h[..n * d], a_k, &mut kl[..n * hkv * kw], threads);
                 self.gemm_counted(&h[..n * d], a_v, &mut vl[..n * hkv * vw], threads);
                 // Pre-RoPE latents cached; only Q rotates.
-                apply_full_tokens(&mut q[..n * h_n * dh], h_n, dh, pos0, cfg.pairing, cfg.rope_theta);
+                if gapped {
+                    for i in 0..n {
+                        let p = kv.row_pos(pos0 + i);
+                        for hq in 0..h_n {
+                            let r = &mut q[(i * h_n + hq) * dh..(i * h_n + hq + 1) * dh];
+                            apply_full(r, p, cfg.pairing, cfg.rope_theta);
+                        }
+                    }
+                } else {
+                    apply_full_tokens(&mut q[..n * h_n * dh], h_n, dh, pos0, cfg.pairing, cfg.rope_theta);
+                }
             }
             AttnKind::Rap {
                 wq_t, a_k, a_v, plan, ..
@@ -1157,8 +1228,20 @@ impl Engine {
                 self.gemm_counted(&h[..n * d], a_k, &mut kl[..n * hkv * kw], threads);
                 self.gemm_counted(&h[..n * d], a_v, &mut vl[..n * hkv * vw], threads);
                 // Index-aware RoPE on the latent chunk — the fused hot path.
-                plan.q_table.apply_fused_chunk(&mut q[..n * h_n * kw], h_n, pos0);
-                plan.k_table.apply_fused_chunk(&mut kl[..n * hkv * kw], hkv, pos0);
+                if gapped {
+                    for i in 0..n {
+                        let p = kv.row_pos(pos0 + i);
+                        for hq in 0..h_n {
+                            plan.q_table.apply_fused(hq, &mut q[(i * h_n + hq) * kw..(i * h_n + hq + 1) * kw], p);
+                        }
+                        for hd in 0..hkv {
+                            plan.k_table.apply_fused(hd, &mut kl[(i * hkv + hd) * kw..(i * hkv + hd + 1) * kw], p);
+                        }
+                    }
+                } else {
+                    plan.q_table.apply_fused_chunk(&mut q[..n * h_n * kw], h_n, pos0);
+                    plan.k_table.apply_fused_chunk(&mut kl[..n * hkv * kw], hkv, pos0);
+                }
             }
         }
 
@@ -1251,8 +1334,9 @@ impl Engine {
             // reconstruction are only read.
             let sc = unsafe { std::slice::from_raw_parts_mut(scores_ptr.0.add(widx * s_cap), s_cap) };
             for i in range {
-                let pos = pos0 + i;
-                let s = pos + 1;
+                // Row-space: query row pos0 + i attends rows [0, pos0 + i]
+                // (for identity sessions this is exactly pos + 1).
+                let s = pos0 + i + 1;
                 let ctx_i =
                     unsafe { std::slice::from_raw_parts_mut(ctx_ptr.0.add(i * h_n * cw), h_n * cw) };
                 for hq in 0..h_n {
@@ -1426,13 +1510,13 @@ impl Engine {
             self.embed_into(t, &mut ws.x[i * d..(i + 1) * d]);
         }
         let (pages, store) = kv.tables_and_ptrs()?;
-        let blocks = pages
-            .blocks(session)
+        let sv = pages
+            .view(session)
             .ok_or_else(|| anyhow::anyhow!("session {session} has no page table"))?;
         for (l, layer) in self.layers.iter().enumerate() {
             // SAFETY: one live view per session; the chunk's attention
             // workers only share it read-only after its writes complete.
-            let mut view = unsafe { store.seq_layer(l, blocks) };
+            let mut view = unsafe { store.session_layer(l, &sv) };
             self.prefill_chunk_layer(l, layer, n, pos0, &mut view, ws, quantize_kv);
         }
         if want_logits {

@@ -88,6 +88,7 @@ use crate::coordinator::{
     Backend, Coordinator, Event, FinishReason, Request, RequestId, Response, SamplingParams,
     SubmitError,
 };
+use crate::kvcache::retention::{Press, RetentionSpec};
 use crate::util::json::{self, Value};
 use crate::util::threadpool::ThreadPool;
 
@@ -136,6 +137,10 @@ pub struct ServerStats {
     pub prefix_hits: AtomicU64,
     /// Prefix-cache lookups since start.
     pub prefix_lookups: AtomicU64,
+    /// Token rows evicted by retention presses since start.
+    pub evicted_tokens: AtomicU64,
+    /// Bytes physically resident for KV rows (post-press).
+    pub resident_kv_bytes: AtomicU64,
 }
 
 impl ServerStats {
@@ -146,6 +151,9 @@ impl ServerStats {
             .store(snap.capacity_blocks as u64, Ordering::Relaxed);
         self.prefix_hits.store(snap.prefix_hits, Ordering::Relaxed);
         self.prefix_lookups.store(snap.prefix_lookups, Ordering::Relaxed);
+        self.evicted_tokens.store(snap.evicted_tokens, Ordering::Relaxed);
+        self.resident_kv_bytes
+            .store(snap.resident_kv_bytes as u64, Ordering::Relaxed);
     }
 
     fn health_line(&self) -> Value {
@@ -167,6 +175,14 @@ impl ServerStats {
             (
                 "prefix_lookups",
                 json::num(self.prefix_lookups.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "evicted_tokens",
+                json::num(self.evicted_tokens.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "resident_kv_bytes",
+                json::num(self.resident_kv_bytes.load(Ordering::Relaxed) as f64),
             ),
         ])
     }
@@ -494,12 +510,34 @@ fn parse_request(v: &Value, id: RequestId) -> Result<Request, &'static str> {
         },
         None => None,
     };
+    // Optional KV retention spec, validated before admission so a bogus
+    // policy or ratio never reaches the scheduler (mirrors the
+    // sampling-params validation above): `{"policy": "window", "ratio":
+    // 0.5}`.  Omitted ratio defaults to the policy's bare-name default;
+    // omitted object = retain-all.
+    let retention = match v.get("retention") {
+        Some(r) => {
+            let press = match r.get("policy").and_then(|p| p.as_str()).map(Press::parse) {
+                Some(Some(p)) => p,
+                _ => return Err("retention.policy"), // missing or unknown
+            };
+            let ratio = r.get("ratio").and_then(|x| x.as_f64()).unwrap_or(0.5) as f32;
+            if !ratio.is_finite() || ratio <= 0.0 || ratio > 1.0 {
+                return Err("retention.ratio");
+            }
+            Some(RetentionSpec { press, ratio })
+        }
+        None => None,
+    };
     let mut req = Request::new(id, prompt, max_new)
         .with_sampling(sampling)
         .with_stop(stop)
         .with_stream(stream);
     if let Some(ms) = deadline_ms {
         req = req.with_deadline_ms(ms);
+    }
+    if let Some(spec) = retention {
+        req = req.with_retention(spec);
     }
     Ok(req)
 }
@@ -1145,6 +1183,24 @@ mod tests {
             (r#"{"prompt": "x", "max_new": -3}"#, "max_new"),
             (r#"{"prompt": "x", "max_new": 99000000}"#, "max_new"),
             (r#"{"prompt": "x", "deadline_ms": -10}"#, "deadline_ms"),
+            (r#"{"prompt": "x", "retention": {}}"#, "retention.policy"),
+            (r#"{"prompt": "x", "retention": {"ratio": 0.5}}"#, "retention.policy"),
+            (
+                r#"{"prompt": "x", "retention": {"policy": "lru"}}"#,
+                "retention.policy",
+            ),
+            (
+                r#"{"prompt": "x", "retention": {"policy": "window", "ratio": 0}}"#,
+                "retention.ratio",
+            ),
+            (
+                r#"{"prompt": "x", "retention": {"policy": "window", "ratio": -0.5}}"#,
+                "retention.ratio",
+            ),
+            (
+                r#"{"prompt": "x", "retention": {"policy": "window", "ratio": 1.5}}"#,
+                "retention.ratio",
+            ),
         ];
         for (body, field) in cases {
             let Ok(v) = json::parse(body) else { continue }; // 1e999 may not parse
@@ -1153,6 +1209,30 @@ mod tests {
         // The boundary values stay valid.
         let v = json::parse(r#"{"prompt": "x", "temperature": 0, "top_p": 1, "max_new": 0}"#)
             .unwrap();
+        assert!(parse_request(&v, 1).is_ok());
+    }
+
+    #[test]
+    fn parse_request_reads_retention() {
+        let v = json::parse(
+            r#"{"prompt": "x", "retention": {"policy": "l2norm", "ratio": 0.25}}"#,
+        )
+        .unwrap();
+        let r = parse_request(&v, 1).unwrap();
+        let spec = r.retention.expect("retention parsed");
+        assert_eq!(spec.press, Press::L2Norm);
+        assert!((spec.ratio - 0.25).abs() < 1e-6);
+        // Omitted ratio defaults; omitted object = retain-all; ratio 1.0
+        // (retain-all through the press machinery) is a valid boundary.
+        let v = json::parse(r#"{"prompt": "x", "retention": {"policy": "window"}}"#).unwrap();
+        let r = parse_request(&v, 1).unwrap();
+        assert_eq!(r.retention.map(|s| s.press), Some(Press::Window));
+        let v = json::parse(r#"{"prompt": "x"}"#).unwrap();
+        assert!(parse_request(&v, 1).unwrap().retention.is_none());
+        let v = json::parse(
+            r#"{"prompt": "x", "retention": {"policy": "anchor-reservoir", "ratio": 1.0}}"#,
+        )
+        .unwrap();
         assert!(parse_request(&v, 1).is_ok());
     }
 

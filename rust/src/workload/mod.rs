@@ -58,6 +58,80 @@ pub fn generate(cfg: &WorkloadConfig, corpus: &[u8]) -> Vec<TimedRequest> {
     out
 }
 
+/// The token value planted at needle positions.  Filler is drawn from
+/// `[0, NEEDLE_TOKEN)`, so a needle can never be confused with filler and
+/// recall over a pressed cache is unambiguous.
+pub const NEEDLE_TOKEN: u8 = 250;
+
+#[derive(Debug, Clone)]
+pub struct NeedleConfig {
+    /// Total prompt length (filler + needles).
+    pub total_len: usize,
+    /// How many recall tokens to plant.
+    pub n_needles: usize,
+    /// Needles land in `[margin, total_len - margin)` so they are neither
+    /// trivially protected by a press's head pin nor by its recency tail.
+    pub margin: usize,
+    pub seed: u64,
+}
+
+impl Default for NeedleConfig {
+    fn default() -> Self {
+        NeedleConfig {
+            total_len: 1024,
+            n_needles: 16,
+            margin: 64,
+            seed: 7,
+        }
+    }
+}
+
+/// A needle-in-a-haystack prompt: seeded filler with `NEEDLE_TOKEN`
+/// planted at known, sorted positions.
+#[derive(Debug, Clone)]
+pub struct NeedlePrompt {
+    pub prompt: Vec<u8>,
+    /// Sorted logical positions of the planted needles.
+    pub positions: Vec<usize>,
+}
+
+impl NeedlePrompt {
+    /// Fraction of planted needles whose logical positions appear in
+    /// `survivors` (a session's post-press `row_positions`).  1.0 for a
+    /// retain-all cache by construction.
+    pub fn recall(&self, survivors: &[u32]) -> f64 {
+        if self.positions.is_empty() {
+            return 1.0;
+        }
+        let hit = self
+            .positions
+            .iter()
+            .filter(|&&p| survivors.binary_search(&(p as u32)).is_ok())
+            .count();
+        hit as f64 / self.positions.len() as f64
+    }
+}
+
+/// Build a deterministic needle prompt: filler in `[0, NEEDLE_TOKEN)`,
+/// needles at `n_needles` distinct seeded positions inside the margins.
+pub fn generate_needles(cfg: &NeedleConfig) -> NeedlePrompt {
+    assert!(cfg.total_len > 2 * cfg.margin, "margins leave no interior");
+    let mut rng = Rng::new(cfg.seed);
+    let mut prompt: Vec<u8> = (0..cfg.total_len)
+        .map(|_| rng.below(NEEDLE_TOKEN as usize) as u8)
+        .collect();
+    let interior = cfg.total_len - 2 * cfg.margin;
+    let positions: Vec<usize> = rng
+        .choose_distinct(interior, cfg.n_needles.min(interior))
+        .into_iter()
+        .map(|p| p + cfg.margin)
+        .collect();
+    for &p in &positions {
+        prompt[p] = NEEDLE_TOKEN;
+    }
+    NeedlePrompt { prompt, positions }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,6 +166,49 @@ mod tests {
         let span = w.last().unwrap().at_secs;
         let rate = 200.0 / span;
         assert!((rate - 50.0).abs() < 15.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn needles_are_deterministic_and_unambiguous() {
+        let cfg = NeedleConfig::default();
+        let a = generate_needles(&cfg);
+        let b = generate_needles(&cfg);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.positions, b.positions);
+        assert_eq!(a.positions.len(), cfg.n_needles);
+        for w in a.positions.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for (i, &t) in a.prompt.iter().enumerate() {
+            if a.positions.binary_search(&i).is_ok() {
+                assert_eq!(t, NEEDLE_TOKEN);
+            } else {
+                assert!(t < NEEDLE_TOKEN, "filler at {i} collides with the needle token");
+            }
+            if t == NEEDLE_TOKEN {
+                assert!(
+                    (cfg.margin..cfg.total_len - cfg.margin).contains(&i),
+                    "needle at {i} outside the margins"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recall_counts_surviving_positions() {
+        let cfg = NeedleConfig {
+            total_len: 256,
+            n_needles: 8,
+            margin: 16,
+            seed: 3,
+        };
+        let np = generate_needles(&cfg);
+        let all: Vec<u32> = (0..256).collect();
+        assert_eq!(np.recall(&all), 1.0);
+        assert_eq!(np.recall(&[]), 0.0);
+        // Keep exactly half the needles: recall is exactly 0.5.
+        let half: Vec<u32> = np.positions[..4].iter().map(|&p| p as u32).collect();
+        assert_eq!(np.recall(&half), 0.5);
     }
 
     #[test]

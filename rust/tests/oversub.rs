@@ -298,3 +298,113 @@ fn cancel_of_parked_victim_mid_storm_restores_baseline() {
     assert_eq!(coord.kv_used_blocks(), 0, "blocks back to baseline");
     assert_eq!(coord.backend.session_count(), 0, "backend sessions all dropped");
 }
+
+/// A pruned (retention-pressed) session that loses its blocks to
+/// preemption resumes by replaying only its surviving rows: the parked
+/// survivor positions are re-reserved with their original RoPE positions,
+/// every token streamed before the park is preserved verbatim, and the
+/// storm still returns the allocator to baseline.  Retain-all neighbours
+/// stay bit-identical to the uncontended reference throughout.
+#[test]
+fn pruned_session_preempts_and_resumes_via_survivor_replay() {
+    use rap::kvcache::retention::{Press, RetentionSpec};
+
+    const COMPETITORS: usize = 3;
+    const COMP_NEW: usize = 120;
+    const BIG_PROMPT: usize = 680; // crosses the press floor mid-prefill
+    const BIG_NEW: usize = 120;
+    const BIG_ID: u64 = 9;
+    // Retain-all worst case is ~80 blocks (competitors 30 + big 50); the
+    // press holds the big session near 32-40, so everything fits only
+    // because pruning and preemption both work.
+    const TIGHT_BLOCKS: usize = 52;
+
+    let engine = synth_engine(Method::Rap, 37);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+
+    // Uncontended reference for the retain-all competitors.
+    let comp_prompts: Vec<Vec<u8>> = (0..COMPETITORS).map(|i| prompt(32, 80 + i)).collect();
+    let expected: Vec<Vec<u8>> = {
+        let mut backend = RustBackend::new(&engine, 1024);
+        let mut kv = PagedKvCache::with_storage(shape.clone(), 64 << 20);
+        comp_prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| generate_once(&mut backend, &mut kv, 800 + i as u64, p, COMP_NEW).unwrap())
+            .collect()
+    };
+
+    let backend = RustBackend::new(&engine, 1024);
+    let mut coord = Coordinator::new(
+        backend,
+        shape.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: COMPETITORS + 1,
+                buckets: vec![1, 4],
+                max_queue: 16,
+                prefill_chunk_tokens: 128,
+                // Env-independent under the CI retention matrix: only the
+                // big session is pressed, by its own request-level spec.
+                default_retention: None,
+                ..Default::default()
+            },
+            kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * TIGHT_BLOCKS,
+        },
+    );
+    // Competitors first (lower seq), the pruned session last: preemption
+    // always parks the youngest running session, so once decode growth
+    // exhausts the budget the pruned session is the victim.
+    for (i, p) in comp_prompts.iter().enumerate() {
+        coord.try_submit(Request::new(i as u64, p.clone(), COMP_NEW)).unwrap();
+    }
+    coord.tick().unwrap();
+    let spec = RetentionSpec { press: Press::Window, ratio: 0.5 };
+    coord
+        .try_submit(Request::new(BIG_ID, prompt(BIG_PROMPT, 90), BIG_NEW).with_retention(spec))
+        .unwrap();
+
+    let mut big_tokens: Vec<u8> = Vec::new();
+    let mut big_preempted = false;
+    let mut big_resumed = false;
+    let mut evicted_at_preemption = 0u64;
+    let mut responses = Vec::new();
+    let mut ticks = 0;
+    while responses.len() < COMPETITORS + 1 {
+        for e in coord.tick().unwrap() {
+            match e {
+                Event::Token { id: BIG_ID, token } => big_tokens.push(token),
+                Event::Preempted { id: BIG_ID } => {
+                    big_preempted = true;
+                    evicted_at_preemption = coord.kv_evicted_tokens();
+                }
+                Event::Resumed { id: BIG_ID } => big_resumed = true,
+                Event::Finished { response, .. } => responses.push(response),
+                _ => {}
+            }
+        }
+        ticks += 1;
+        assert!(ticks < 5000, "storm did not converge");
+    }
+
+    assert!(big_preempted, "the pruned session must be the preemption victim");
+    assert!(big_resumed, "the parked pruned session must resume");
+    assert!(evicted_at_preemption > 0, "the victim was pruned before it was parked");
+    assert!(coord.metrics.retention_presses >= 1);
+    assert!(coord.metrics.resumes >= 1);
+
+    responses.sort_by_key(|r| r.id);
+    for (r, e) in responses.iter().zip(&expected) {
+        assert_eq!(r.metrics.finish_reason, FinishReason::Length, "session {}", r.id);
+        assert_eq!(&r.generated, e, "retain-all competitor {} must stay bit-identical", r.id);
+    }
+    let big = responses.iter().find(|r| r.id == BIG_ID).unwrap();
+    assert_eq!(big.metrics.finish_reason, FinishReason::Length);
+    assert_eq!(big.generated.len(), BIG_NEW);
+    assert_eq!(
+        big.generated, big_tokens,
+        "every streamed token (pre- and post-park) appears once, in order"
+    );
+    assert_eq!(coord.kv_used_blocks(), 0, "blocks back to baseline");
+    assert_eq!(coord.backend.session_count(), 0, "backend sessions all dropped");
+}

@@ -5,6 +5,7 @@ use rap::config::Method;
 use rap::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, FinishReason, Request, Sampler, SamplingParams,
 };
+use rap::kvcache::retention::{Press, RetentionSpec};
 use rap::kvcache::CacheShape;
 use rap::manifest::Manifest;
 use rap::model::backend::RustBackend;
@@ -460,6 +461,97 @@ fn cancel_mid_flight_releases_blocks_even_with_shared_prefix() {
     assert_eq!(coord.metrics.cancelled, 2);
 }
 
+/// Retention under serving: a pressed session's evicted blocks return to
+/// the free pool mid-flight, cancelling it restores `kv_used_blocks()` to
+/// the pre-admission value, and the press never evicts blocks a second
+/// session shares (refcount > 1 stays resident until release).
+#[test]
+fn retention_eviction_returns_blocks_and_respects_shared_prefix() {
+    let engine = synth_engine(Method::Rap, 29);
+    let shape = CacheShape::of(&engine.cfg, &engine.spec);
+    let backend = RustBackend::new(&engine, 1024);
+    let mut coord = Coordinator::new(
+        backend,
+        shape,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_sessions: 4,
+                buckets: vec![1, 4],
+                max_queue: 16,
+                prefill_chunk_tokens: 128,
+                // Env-independent: the CI retention matrix sets
+                // RAP_RETENTION, but this test manages specs per request.
+                default_retention: None,
+                ..Default::default()
+            },
+            kv_budget_bytes: 64 << 20,
+        },
+    );
+    let spec = RetentionSpec { press: Press::Window, ratio: 0.5 };
+
+    // Session 1: long prompt under a window press — the context crosses
+    // the press floor during prefill, so blocks are evicted mid-flight.
+    assert_eq!(coord.kv_used_blocks(), 0);
+    assert!(coord.submit(Request::new(1, synth_prompt(792, 1), 24).with_retention(spec)));
+    let mut ticks = 0;
+    while coord.kv_evicted_tokens() == 0 {
+        coord.tick().unwrap();
+        ticks += 1;
+        assert!(ticks < 64, "window press never fired on a 792-token context");
+    }
+    assert!(coord.metrics.retention_presses >= 1);
+    assert!(coord.kv_used_blocks() > 0);
+    let r1 = coord.cancel(1).expect("session 1 is live");
+    assert_eq!(r1.metrics.finish_reason, FinishReason::Cancelled);
+    assert_eq!(
+        coord.kv_used_blocks(),
+        0,
+        "cancel of a mid-flight-evicted session returns every block (evicted and live)"
+    );
+
+    // Session 3 (retain-all) establishes a 256-token shared prefix and
+    // decodes past its last block-boundary allocation (792 + 24 tokens
+    // fill exactly 51 blocks, the last allocated at the 9th decode token),
+    // so its footprint is frozen before the baseline is read.
+    let common = synth_prompt(256, 5);
+    let mut p3 = common.clone();
+    p3.extend(synth_prompt(536, 6));
+    let mut p4 = common.clone();
+    p4.extend(synth_prompt(536, 7));
+    assert!(coord.submit(Request::new(3, p3, 24)));
+    for _ in 0..16 {
+        coord.tick().unwrap();
+    }
+    let baseline = coord.kv_used_blocks();
+    assert!(baseline > 0, "session 3 decoding");
+
+    // Session 4 attaches the shared prefix and presses.  The press may
+    // only evict its private rows: the shared blocks are refcount 2.
+    let evicted_before = coord.kv_evicted_tokens();
+    assert!(coord.submit(Request::new(4, p4, 24).with_retention(spec)));
+    let mut ticks = 0;
+    while coord.kv_evicted_tokens() == evicted_before {
+        coord.tick().unwrap();
+        ticks += 1;
+        assert!(ticks < 64, "press never fired on the sharing session");
+    }
+    assert!(coord.metrics.prefix_hits >= 1, "session 4 attached the prefix");
+    let pv = coord.kv_row_positions(4).expect("pressed session has an explicit map");
+    let head: Vec<u32> = (0..256).collect();
+    assert_eq!(&pv[..256], head.as_slice(), "shared refcount-2 blocks survive the press");
+
+    // Cancel the sharer: exactly its private (and evicted-then-freed)
+    // blocks come back; the shared prefix stays under session 3.
+    let r4 = coord.cancel(4).expect("session 4 is live");
+    assert_eq!(r4.metrics.finish_reason, FinishReason::Cancelled);
+    assert_eq!(coord.kv_used_blocks(), baseline, "back to the pre-admission baseline");
+
+    // Session 3 was never pressed and still completes in full.
+    let responses = coord.run_to_completion().unwrap();
+    assert!(responses.iter().any(|r| r.id == 3 && r.generated.len() == 24));
+    assert_eq!(coord.kv_used_blocks(), 0);
+}
+
 /// TCP v2: streamed `{"delta"}` lines reassemble to exactly the one-shot
 /// text for the same greedy request, the summary repeats the full text,
 /// and the first delta arrives before the generation completes.
@@ -542,6 +634,71 @@ fn tcp_queue_full_rejected_immediately() {
         t0.elapsed() < std::time::Duration::from_secs(10),
         "rejection must be immediate, not a timeout"
     );
+    handle.shutdown();
+}
+
+/// TCP: malformed `retention` fields are refused before admission with a
+/// structured `{"error": "bad_request", "field": ...}` line naming the
+/// offending field; a well-formed retention spec still serves.
+#[test]
+fn tcp_retention_bad_request_names_the_field() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let factory = move || -> anyhow::Result<Coordinator<RustBackend<'static>>> {
+        let engine: &'static Engine = Box::leak(Box::new(synth_engine(Method::Rap, 31)));
+        let shape = CacheShape::of(&engine.cfg, &engine.spec);
+        let backend = RustBackend::new(engine, 128);
+        Ok(Coordinator::new(
+            backend,
+            shape,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_sessions: 2,
+                    buckets: vec![1],
+                    max_queue: 8,
+                    ..Default::default()
+                },
+                kv_budget_bytes: 16 << 20,
+            },
+        ))
+    };
+    let handle = serve("127.0.0.1:0", factory, 2).unwrap();
+    let addr = handle.addr;
+
+    let send_raw = |raw: &str| -> rap::util::json::Value {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        writeln!(stream, "{raw}").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        rap::util::json::parse(line.trim()).unwrap()
+    };
+
+    // Unknown policy: refused at parse time, before admission.
+    let r =
+        send_raw(r#"{"prompt": "x", "max_new": 4, "retention": {"policy": "lru", "ratio": 0.5}}"#);
+    assert_eq!(r.get("error").and_then(|e| e.as_str()), Some("bad_request"), "{r:?}");
+    assert_eq!(r.get("field").and_then(|f| f.as_str()), Some("retention.policy"));
+
+    // A retention object with no policy at all is equally refused.
+    let r = send_raw(r#"{"prompt": "x", "max_new": 4, "retention": {}}"#);
+    assert_eq!(r.get("error").and_then(|e| e.as_str()), Some("bad_request"), "{r:?}");
+    assert_eq!(r.get("field").and_then(|f| f.as_str()), Some("retention.policy"));
+
+    // Ratio outside (0, 1].
+    let r = send_raw(
+        r#"{"prompt": "x", "max_new": 4, "retention": {"policy": "window", "ratio": 1.5}}"#,
+    );
+    assert_eq!(r.get("error").and_then(|e| e.as_str()), Some("bad_request"), "{r:?}");
+    assert_eq!(r.get("field").and_then(|f| f.as_str()), Some("retention.ratio"));
+
+    // A well-formed spec is admitted and serves (the context is far below
+    // the press floor, so the reply is the plain one-shot shape).
+    let r = send_raw(
+        r#"{"prompt": "hello ", "max_new": 4, "retention": {"policy": "window", "ratio": 0.5}}"#,
+    );
+    assert!(r.get("error").is_none(), "valid retention must serve: {r:?}");
+    assert_eq!(r.get("tokens").and_then(|t| t.as_usize()), Some(4));
     handle.shutdown();
 }
 
