@@ -75,6 +75,7 @@ fn run(
                 prefill_chunk_tokens: 1024,
                 reserve_worst_case,
                 default_retention: None,
+                default_speculative: None,
             },
             kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * blocks,
         },

@@ -23,6 +23,7 @@ use std::collections::VecDeque;
 use crate::coordinator::request::{Request, RequestId};
 use crate::kvcache::retention::RetentionSpec;
 use crate::kvcache::PagedKvCache;
+use crate::speculate::SpeculativeSpec;
 
 /// One admitted request plus its prefix-cache outcome.
 #[derive(Debug)]
@@ -63,6 +64,12 @@ pub struct BatcherConfig {
     /// default when `RAP_RETENTION` is unset) = retain-all, which is
     /// bit-identical to the pre-retention stack.
     pub default_retention: Option<RetentionSpec>,
+    /// Fleet-wide speculative-decode default applied at admission to
+    /// requests that did not carry their own `speculative` field.  `None`
+    /// (the default when `RAP_SPECULATIVE` is unset) = plain one-token
+    /// decode.  Output is unchanged either way — the knob only changes
+    /// how many sampler draws each backend call covers.
+    pub default_speculative: Option<SpeculativeSpec>,
 }
 
 impl Default for BatcherConfig {
@@ -74,6 +81,7 @@ impl Default for BatcherConfig {
             prefill_chunk_tokens: 128,
             reserve_worst_case: false,
             default_retention: RetentionSpec::from_env(),
+            default_speculative: SpeculativeSpec::from_env(),
         }
     }
 }
@@ -131,6 +139,7 @@ impl Batcher {
         while self.running.len() + admitted.len() < self.cfg.max_sessions {
             let Some(req) = self.queue.front() else { break };
             let retention = req.retention.or(self.cfg.default_retention);
+            let speculative = req.speculative.or(self.cfg.default_speculative);
             // Zero-token requests complete at admission without touching
             // the allocator: reserving (and zeroing) max_new blocks just
             // to release them in the same tick would let an empty prompt
@@ -138,6 +147,7 @@ impl Batcher {
             if req.prompt.is_empty() {
                 let mut req = self.queue.pop_front().unwrap();
                 req.retention = retention;
+                req.speculative = speculative;
                 admitted.push(Admission { req, matched_tokens: 0, shared_blocks: 0 });
                 continue;
             }
@@ -150,6 +160,7 @@ impl Batcher {
                 Ok(m) => {
                     let mut req = self.queue.pop_front().unwrap();
                     req.retention = retention;
+                    req.speculative = speculative;
                     admitted.push(Admission {
                         req,
                         matched_tokens: m.matched_tokens,
@@ -396,6 +407,24 @@ mod tests {
         assert_eq!(adm.len(), 2);
         assert_eq!(adm[0].req.retention, Some(fleet), "default fills the gap");
         assert_eq!(adm[1].req.retention, Some(own), "per-request wins");
+    }
+
+    #[test]
+    fn admit_fills_in_fleet_default_speculative() {
+        use crate::speculate::{DraftPolicy, SpeculativeSpec};
+        let fleet = SpeculativeSpec { policy: DraftPolicy::Ngram, k: 4 };
+        let own = SpeculativeSpec { policy: DraftPolicy::Ngram, k: 8 };
+        let mut b = Batcher::new(BatcherConfig {
+            default_speculative: Some(fleet),
+            ..Default::default()
+        });
+        let mut kv = kv(100);
+        assert!(b.submit(req(1, 8)));
+        assert!(b.submit(req(2, 8).with_speculative(own)));
+        let adm = b.admit(&mut kv);
+        assert_eq!(adm.len(), 2);
+        assert_eq!(adm[0].req.speculative, Some(fleet), "default fills the gap");
+        assert_eq!(adm[1].req.speculative, Some(own), "per-request wins");
     }
 
     #[test]

@@ -112,6 +112,23 @@ impl<B: Backend> Backend for FaultBackend<B> {
         self.inner.decode_batch(kv, entries)
     }
 
+    fn verify_chunk(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        tokens: &[u8],
+        pos0: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.maybe_slow();
+        // One decode-fault draw per verify chunk — the whole chunk is one
+        // decode step, and the fault fires before the inner backend sees
+        // any of it (no KV row written, clean retry).
+        if self.decode.fires() {
+            return Err(anyhow::Error::new(self.decode.fault()));
+        }
+        self.inner.verify_chunk(kv, session, tokens, pos0)
+    }
+
     fn drop_session(&mut self, session: RequestId) {
         self.inner.drop_session(session);
     }

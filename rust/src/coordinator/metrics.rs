@@ -17,6 +17,14 @@ pub struct RequestMetrics {
     /// occupancy-normalised number lives in
     /// `AggregateMetrics::decode_per_token_shared`).
     pub decode_ms_per_token: f64,
+    /// Mean wall time per *decode step* (one backend call: a single-token
+    /// round or one speculative verify chunk).  Equal to
+    /// `decode_ms_per_token` for plain decode; under speculation a step
+    /// emits several tokens, so this stays at the per-call latency while
+    /// `decode_ms_per_token` drops below it — the ratio is the realised
+    /// speedup.  (The v1 accounting billed a multi-token step once per
+    /// emitted token, over-counting decode wall time m×.)
+    pub decode_ms_per_step: f64,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
     pub total_ms: f64,
@@ -99,6 +107,22 @@ pub struct AggregateMetrics {
     pub retention_presses: u64,
     /// Token rows evicted by retention presses across all sessions.
     pub retention_evicted_tokens: u64,
+    /// Speculative steps executed (one verify chunk each).
+    pub spec_steps: u64,
+    /// Draft tokens submitted for verification across all spec steps.
+    pub spec_drafted_tokens: u64,
+    /// Draft tokens the verifier confirmed (accepted prefix lengths).
+    pub spec_accepted_tokens: u64,
+    /// KV rows written for rejected draft suffixes and rolled back via
+    /// `truncate_rows` (returned to the pool the same tick).
+    pub spec_rolled_back_rows: u64,
+    /// Tokens emitted per speculative step (accepted draft + the bonus
+    /// token) — the headline acceptance metric; > 1 means speculation
+    /// beat plain decode on call count.
+    pub spec_tokens_per_step: Welford,
+    /// Per-request mean decode wall per step, one sample per finished
+    /// request that decoded (companion to `decode_per_token`).
+    pub decode_per_step: Welford,
 }
 
 impl AggregateMetrics {
@@ -107,6 +131,7 @@ impl AggregateMetrics {
         self.ttft.add(m.ttft_ms);
         if m.generated_tokens > 0 {
             self.decode_per_token.add(m.decode_ms_per_token);
+            self.decode_per_step.add(m.decode_ms_per_step);
         }
         self.queue.add(m.queue_ms);
         self.total_tokens += (m.prompt_tokens + m.generated_tokens) as u64;
@@ -143,7 +168,9 @@ impl AggregateMetrics {
              prefix cache: {}/{} hits ({:.0}%)  saved blocks={}  mean matched={:.0} tok\n\
              pressure: preemptions={} resumes={} timeouts={} oom_truncations={} \
              backend_retries={} alloc_defers={} too_large={}\n\
-             retention: presses={} evicted_tokens={}",
+             retention: presses={} evicted_tokens={}\n\
+             speculative: steps={} drafted={} accepted={} rolled_back_rows={} \
+             tokens/step={:.2}  decode: mean {:.2} ms/step",
             self.requests,
             self.rejected,
             self.cancelled,
@@ -178,6 +205,12 @@ impl AggregateMetrics {
             self.rejected_too_large,
             self.retention_presses,
             self.retention_evicted_tokens,
+            self.spec_steps,
+            self.spec_drafted_tokens,
+            self.spec_accepted_tokens,
+            self.spec_rolled_back_rows,
+            self.spec_tokens_per_step.mean(),
+            self.decode_per_step.mean(),
         )
     }
 }
@@ -193,6 +226,7 @@ mod tests {
             queue_ms: 1.0,
             ttft_ms: 10.0,
             decode_ms_per_token: 2.0,
+            decode_ms_per_step: 4.0,
             prompt_tokens: 5,
             generated_tokens: 10,
             total_ms: 30.0,
@@ -202,6 +236,7 @@ mod tests {
             queue_ms: 3.0,
             ttft_ms: 20.0,
             decode_ms_per_token: 4.0,
+            decode_ms_per_step: 8.0,
             prompt_tokens: 5,
             generated_tokens: 10,
             total_ms: 60.0,
@@ -210,6 +245,7 @@ mod tests {
         assert_eq!(a.requests, 2);
         assert_eq!(a.total_tokens, 30);
         assert!((a.ttft.mean() - 15.0).abs() < 1e-9);
+        assert!((a.decode_per_step.mean() - 6.0).abs() < 1e-9);
         a.wall = Duration::from_secs(3);
         assert!((a.throughput_tps() - 10.0).abs() < 1e-9);
     }
@@ -249,6 +285,23 @@ mod tests {
         let report = a.report();
         assert!(report.contains("presses=3"), "{report}");
         assert!(report.contains("evicted_tokens=4096"), "{report}");
+    }
+
+    #[test]
+    fn report_shows_speculative_counters() {
+        let mut a = AggregateMetrics {
+            spec_steps: 4,
+            spec_drafted_tokens: 12,
+            spec_accepted_tokens: 9,
+            spec_rolled_back_rows: 3,
+            ..AggregateMetrics::default()
+        };
+        a.spec_tokens_per_step.add(3.0);
+        a.spec_tokens_per_step.add(2.0);
+        let report = a.report();
+        assert!(report.contains("speculative: steps=4 drafted=12 accepted=9"), "{report}");
+        assert!(report.contains("rolled_back_rows=3"), "{report}");
+        assert!(report.contains("tokens/step=2.50"), "{report}");
     }
 
     #[test]

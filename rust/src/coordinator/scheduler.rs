@@ -68,6 +68,9 @@ use crate::coordinator::sampling::Sampler;
 use crate::faults::{FaultPlan, InjectedFault};
 use crate::kvcache::retention::Press;
 use crate::kvcache::{CacheShape, KvStorageMode, PagedKvCache, BLOCK_TOKENS};
+use crate::speculate::accept::accept_step;
+use crate::speculate::draft::{Drafter, NgramDrafter};
+use crate::speculate::verify::draft_budget;
 
 /// Consecutive injected backend failures tolerated before the scheduler
 /// stops treating them as transient and propagates the error.  Far above
@@ -143,6 +146,29 @@ pub trait Backend {
         kv: &mut PagedKvCache,
         entries: &[(RequestId, u8, usize)],
     ) -> Result<Vec<Vec<f32>>>;
+    /// Verify a speculative draft: feed `tokens` — the session's last
+    /// emitted token followed by its draft — at logical positions
+    /// `pos0, pos0 + 1, ..`, writing their KV rows, and return one logits
+    /// row per fed token (row `i` names the token after the stream
+    /// through `tokens[i]`).  The caller has already reserved the rows
+    /// and rolls rejected ones back afterwards.  The default runs the
+    /// feed as sequential single-token decode steps — semantically
+    /// identical, no speedup; backends with a blocked multi-token
+    /// forward override it (see `RustBackend::verify_chunk`).
+    fn verify_chunk(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        tokens: &[u8],
+        pos0: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut rows = Vec::with_capacity(tokens.len());
+        for (i, &t) in tokens.iter().enumerate() {
+            let mut lg = self.decode_batch(kv, &[(session, t, pos0 + i)])?;
+            rows.push(lg.pop().ok_or_else(|| anyhow!("decode_batch returned no logits"))?);
+        }
+        Ok(rows)
+    }
     /// Drop a finished session's state (its KV blocks are released by the
     /// coordinator via the batcher).
     fn drop_session(&mut self, session: RequestId);
@@ -179,7 +205,15 @@ struct Running {
     ttft_ms: f64,
     queue_ms: f64,
     decode_ms: f64,
+    /// Decode steps billed to `decode_ms` (backend calls: single-token
+    /// rounds and speculative verify chunks each count once) — a
+    /// multi-token accepted step must not be billed per emitted token.
+    decode_steps: u64,
     started: Instant,
+    /// Self-drafting state for a `req.speculative` session (built at
+    /// prefill completion, rebuilt from `prompt ++ generated` on resume).
+    /// Advisory only: a lost drafter can never change emitted tokens.
+    drafter: Option<NgramDrafter>,
     /// Set the instant a finish condition is met (length / stop); the
     /// end-of-tick sweep releases the session and emits `Finished`.
     finish: Option<FinishReason>,
@@ -197,6 +231,7 @@ struct ParkedSession {
     ttft_ms: f64,
     queue_ms: f64,
     decode_ms: f64,
+    decode_steps: u64,
     started: Instant,
     /// Logical positions of the KV rows that survived this session's
     /// retention presses, captured at preemption (restricted to the replay
@@ -213,6 +248,7 @@ struct ResumeCtx {
     generated: Vec<u8>,
     ttft_ms: f64,
     decode_ms: f64,
+    decode_steps: u64,
     /// Logical decode position to restore (`prompt + generated - 1`); for
     /// retain-all resumes this equals the replay feed length, for pruned
     /// resumes it exceeds the (survivor-only) feed length.
@@ -241,6 +277,19 @@ fn finish_check(req: &Request, generated: &[u8], pos: usize, s_max: usize) -> Op
     } else {
         None
     }
+}
+
+/// How a speculative step for one session resolved this tick.
+enum SpecStep {
+    /// The verify chunk ran; tokens were emitted and rows rolled back.
+    Done,
+    /// No step was possible (no draft, budget 0, allocation refused) —
+    /// the session joins this tick's plain decode round.
+    Fallback,
+    /// A transient backend fault consumed the attempt; the session sits
+    /// this round out and retries next tick (mirrors the plain round's
+    /// fault handling — nothing advanced).
+    Skipped,
 }
 
 /// An admitted request whose prompt (or, on resume, prompt + replayed
@@ -293,6 +342,11 @@ pub struct Coordinator<B: Backend> {
     stalled_chunks: u64,
     /// Monotonic admission counter feeding `Running::seq`.
     admission_seq: u64,
+    /// Reusable scratch for speculative steps (draft tokens and the
+    /// verify feed) — taken and returned per step, never reallocated in
+    /// steady state.
+    draft_buf: Vec<u8>,
+    feed_buf: Vec<u8>,
     /// Injected backend failures since the last successful call (circuit
     /// breaker: past `MAX_CONSECUTIVE_BACKEND_FAULTS` they propagate).
     consecutive_backend_faults: u32,
@@ -329,6 +383,8 @@ impl<B: Backend> Coordinator<B> {
             finished: Vec::new(),
             stalled_chunks: 0,
             admission_seq: 0,
+            draft_buf: Vec::new(),
+            feed_buf: Vec::new(),
             consecutive_backend_faults: 0,
         }
     }
@@ -438,6 +494,7 @@ impl<B: Backend> Coordinator<B> {
                                 generated: parked.generated,
                                 ttft_ms: parked.ttft_ms,
                                 decode_ms: parked.decode_ms,
+                                decode_steps: parked.decode_steps,
                                 pos: resume_pos,
                                 survivors: parked.survivors,
                             }),
@@ -478,6 +535,7 @@ impl<B: Backend> Coordinator<B> {
                             generated: parked.generated,
                             ttft_ms: parked.ttft_ms,
                             decode_ms: parked.decode_ms,
+                            decode_steps: parked.decode_steps,
                             pos: feed_len,
                             survivors: None,
                         }),
@@ -508,6 +566,7 @@ impl<B: Backend> Coordinator<B> {
                     queue_ms,
                     ttft_ms: queue_ms,
                     decode_ms_per_token: 0.0,
+                    decode_ms_per_step: 0.0,
                     prompt_tokens: 0,
                     generated_tokens: 0,
                     total_ms: queue_ms,
@@ -639,6 +698,19 @@ impl<B: Backend> Coordinator<B> {
                     // same number of times in both histories.
                     drop(logits);
                     let id = p.req.id;
+                    // Drafter state is advisory (acceptance re-samples
+                    // every token from verifier logits), so a preempted
+                    // session simply rebuilds its n-gram index from the
+                    // stream it has — deterministic, and bit-identity
+                    // never depends on it.
+                    let drafter = p.req.speculative.map(|_| {
+                        let mut d = NgramDrafter::with_capacity(
+                            p.req.prompt.len() + p.req.max_new,
+                        );
+                        d.observe(&p.req.prompt);
+                        d.observe(&ctx.generated);
+                        d
+                    });
                     self.running.insert(
                         id,
                         Running {
@@ -652,7 +724,9 @@ impl<B: Backend> Coordinator<B> {
                             ttft_ms: ctx.ttft_ms,
                             queue_ms: p.queue_ms,
                             decode_ms: ctx.decode_ms,
+                            decode_steps: ctx.decode_steps,
                             started: p.started,
+                            drafter,
                             finish: None,
                             req: p.req,
                         },
@@ -663,6 +737,12 @@ impl<B: Backend> Coordinator<B> {
                 }
                 let pos = p.req.prompt.len();
                 let ttft_ms = p.queue_ms + p.started.elapsed().as_secs_f64() * 1e3;
+                let drafter = p.req.speculative.map(|_| {
+                    let mut d =
+                        NgramDrafter::with_capacity(p.req.prompt.len() + p.req.max_new);
+                    d.observe(&p.req.prompt);
+                    d
+                });
                 let mut r = Running {
                     sampler: Sampler::new(&p.req.sampling),
                     generated: Vec::with_capacity(p.req.max_new),
@@ -671,7 +751,9 @@ impl<B: Backend> Coordinator<B> {
                     ttft_ms,
                     queue_ms: p.queue_ms,
                     decode_ms: 0.0,
+                    decode_steps: 0,
                     started: p.started,
+                    drafter,
                     finish: None,
                     req: p.req,
                 };
@@ -685,6 +767,9 @@ impl<B: Backend> Coordinator<B> {
                     // before any decode round — this is the streamed TTFT.
                     let first = r.sampler.sample(&logits) as u8;
                     r.generated.push(first);
+                    if let Some(d) = r.drafter.as_mut() {
+                        d.observe(std::slice::from_ref(&first));
+                    }
                     out.push(Event::Token { id: r.req.id, token: first });
                     r.finish = finish_check(&r.req, &r.generated, r.pos, s_max);
                 }
@@ -748,7 +833,25 @@ impl<B: Backend> Coordinator<B> {
         // backend consumes at `pos`; its logits sample the *next* token.
         // A finished request therefore never pays for the trailing decode
         // step whose logits the v1 loop used to throw away.
-        for group in self.batcher.decode_batches(&runnable) {
+        //
+        // Speculative sessions run first, one verify chunk each: draft →
+        // batched verify → deterministic accept → rejected-row rollback.
+        // A session whose step cannot run this tick (no draft, budget 0,
+        // allocation refused) degrades to the plain round below — it is
+        // never worse off than a non-speculative session.
+        let mut plain: Vec<RequestId> = Vec::with_capacity(runnable.len());
+        for &id in &runnable {
+            let r = &self.running[&id];
+            if r.req.speculative.is_none() || r.drafter.is_none() {
+                plain.push(id);
+                continue;
+            }
+            match self.speculative_step(id, s_max, &mut out)? {
+                SpecStep::Done | SpecStep::Skipped => {}
+                SpecStep::Fallback => plain.push(id),
+            }
+        }
+        for group in self.batcher.decode_batches(&plain) {
             let entries: Vec<(RequestId, u8, usize)> = group
                 .iter()
                 .map(|id| {
@@ -789,8 +892,15 @@ impl<B: Backend> Coordinator<B> {
                 // size under-reported per-request decode latency by the
                 // occupancy factor.
                 r.decode_ms += step_ms;
+                r.decode_steps += 1;
                 let token = r.sampler.sample(&lg) as u8;
                 r.generated.push(token);
+                // A speculative session that fell back this tick still
+                // feeds its n-gram index, so the next draft sees the
+                // whole stream.
+                if let Some(d) = r.drafter.as_mut() {
+                    d.observe(std::slice::from_ref(&token));
+                }
                 out.push(Event::Token { id: *id, token });
                 r.finish = finish_check(&r.req, &r.generated, r.pos, s_max);
             }
@@ -840,10 +950,18 @@ impl<B: Backend> Coordinator<B> {
             let m = RequestMetrics {
                 queue_ms: r.queue_ms,
                 ttft_ms: r.ttft_ms,
+                // decode_ms bills each backend call once, so this really
+                // is wall-per-accepted-token under speculation (and
+                // unchanged for plain decode, where steps == tokens - 1).
                 decode_ms_per_token: if r.generated.is_empty() {
                     0.0
                 } else {
                     r.decode_ms / r.generated.len() as f64
+                },
+                decode_ms_per_step: if r.decode_steps == 0 {
+                    0.0
+                } else {
+                    r.decode_ms / r.decode_steps as f64
                 },
                 prompt_tokens: r.req.prompt.len(),
                 generated_tokens: r.generated.len(),
@@ -861,6 +979,124 @@ impl<B: Backend> Coordinator<B> {
             out.push(Event::Finished { id, response: resp });
         }
         Ok(out)
+    }
+
+    /// One speculative decode step for `id` (see the phase-4 loop): draft
+    /// from the session's own n-gram index, verify the whole draft in one
+    /// blocked `Backend::verify_chunk` call, accept the longest prefix the
+    /// verifier agrees with through the request's own seeded sampler, and
+    /// truncate the rejected suffix's KV rows back to the pool.  Output is
+    /// bit-identical to plain decode by construction — the draft only
+    /// decides how many sampler draws one backend call covers.
+    fn speculative_step(
+        &mut self,
+        id: RequestId,
+        s_max: usize,
+        out: &mut Vec<Event>,
+    ) -> Result<SpecStep> {
+        let r = &self.running[&id];
+        let spec = r.req.speculative.expect("phase 4 checked the knob");
+        let (pos, gen_len, max_new) = (r.pos, r.generated.len(), r.req.max_new);
+        let ret = r.req.retention;
+        let retention = ret.as_ref().map(|s| (s, self.kv.session_tokens(id), pos));
+        let n = draft_budget(spec.k, gen_len, max_new, pos, s_max, retention);
+        if n == 0 {
+            return Ok(SpecStep::Fallback);
+        }
+
+        let mut draft = std::mem::take(&mut self.draft_buf);
+        let got = {
+            let r = self.running.get_mut(&id).unwrap();
+            r.drafter.as_mut().expect("phase 4 checked the drafter").draft(&mut draft, n)
+        };
+        if got == 0 {
+            self.draft_buf = draft;
+            return Ok(SpecStep::Fallback);
+        }
+
+        // Reserve rows for the draft's positions `pos + 1 ..= pos + got`
+        // (the grow phase already reserved `pos`'s row).  Any refusal —
+        // including an injected alloc fault — only degrades this step to
+        // plain decode: speculation never preempts another session.
+        let row0 = self.kv.row_index_of(id, pos).unwrap_or(pos);
+        if self.kv.ensure_tokens(id, pos + 1 + got).is_err() {
+            // Partial growth would leave a pruned session's position map
+            // reaching past `pos`; truncating restores the exact
+            // pre-draft tail either way.
+            self.kv.truncate_rows(id, row0 + 1)?;
+            self.draft_buf = draft;
+            return Ok(SpecStep::Fallback);
+        }
+
+        // Feed = [last_emitted, d_1 .. d_got] at positions pos .. pos+got.
+        let mut feed = std::mem::take(&mut self.feed_buf);
+        feed.clear();
+        feed.push(*self.running[&id].generated.last().expect("runnable implies >= 1 token"));
+        feed.extend_from_slice(&draft[..got]);
+
+        let t0 = Instant::now();
+        let logits = match self.backend.verify_chunk(&mut self.kv, id, &feed, pos) {
+            Ok(l) => {
+                self.consecutive_backend_faults = 0;
+                l
+            }
+            Err(e)
+                if e.downcast_ref::<InjectedFault>().is_some()
+                    && self.consecutive_backend_faults < MAX_CONSECUTIVE_BACKEND_FAULTS =>
+            {
+                // Transient: the fault fired before the backend ran, so no
+                // position advanced — drop the draft rows and retry (or
+                // fall back) next tick.
+                self.consecutive_backend_faults += 1;
+                self.metrics.backend_retries += 1;
+                self.kv.truncate_rows(id, row0 + 1)?;
+                self.draft_buf = draft;
+                self.feed_buf = feed;
+                return Ok(SpecStep::Skipped);
+            }
+            Err(e) => return Err(e),
+        };
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let r = self.running.get_mut(&id).unwrap();
+        let outcome = {
+            let Running { sampler, generated, req, .. } = &mut *r;
+            accept_step(&draft[..got], &logits, sampler, generated, pos, |g, p| {
+                finish_check(req, g, p, s_max)
+            })
+        };
+        r.pos += outcome.emitted;
+        // One verify call is one decode step: bill its wall time once —
+        // not once per emitted token, which over-counted decode_ms by the
+        // acceptance factor.
+        r.decode_ms += step_ms;
+        r.decode_steps += 1;
+        r.finish = outcome.finish;
+        let first_new = r.generated.len() - outcome.emitted;
+        for i in first_new..r.generated.len() {
+            out.push(Event::Token { id, token: r.generated[i] });
+        }
+        {
+            let Running { drafter, generated, .. } = &mut *r;
+            if let Some(d) = drafter.as_mut() {
+                d.observe(&generated[first_new..]);
+            }
+        }
+        // Roll back the rejected suffix: rows `row0 .. row0 + emitted`
+        // hold exactly the tokens the stream actually consumed (the fed
+        // token at `pos` plus the accepted draft); everything past them
+        // is KV for a continuation that never happened.  Truncation
+        // restores `kv_used_blocks()` to what plain decode would show.
+        self.kv.truncate_rows(id, row0 + outcome.emitted)?;
+        self.metrics.spec_steps += 1;
+        self.metrics.spec_drafted_tokens += got as u64;
+        self.metrics.spec_accepted_tokens += outcome.accepted_draft as u64;
+        self.metrics.spec_rolled_back_rows += (got + 1 - outcome.emitted) as u64;
+        self.metrics.spec_tokens_per_step.add(outcome.emitted as f64);
+        self.metrics.decode_per_token_shared.add(step_ms / outcome.emitted as f64);
+        self.draft_buf = draft;
+        self.feed_buf = feed;
+        Ok(SpecStep::Done)
     }
 
     /// Preempt one admission to free KV blocks for older sessions.
@@ -889,6 +1125,7 @@ impl<B: Backend> Coordinator<B> {
                     ttft_ms: ctx.ttft_ms,
                     queue_ms: p.queue_ms,
                     decode_ms: ctx.decode_ms,
+                    decode_steps: ctx.decode_steps,
                     started: p.started,
                     survivors: ctx.survivors,
                 });
@@ -929,6 +1166,7 @@ impl<B: Backend> Coordinator<B> {
             ttft_ms: r.ttft_ms,
             queue_ms: r.queue_ms,
             decode_ms: r.decode_ms,
+            decode_steps: r.decode_steps,
             started: r.started,
             survivors,
         });
@@ -972,34 +1210,50 @@ impl<B: Backend> Coordinator<B> {
     /// terminal response carrying any tokens generated so far, or `None`
     /// for an unknown (or already finished) id.
     fn teardown(&mut self, id: RequestId, reason: FinishReason) -> Option<Response> {
-        let (req, generated, queue_ms, ttft_ms, decode_ms, started) =
+        let (req, generated, queue_ms, ttft_ms, decode_ms, decode_steps, started) =
             if let Some(req) = self.batcher.remove_queued(id) {
                 // Queued requests hold no reservation and no backend state.
                 let queue_ms = req
                     .arrival
                     .map(|a| a.elapsed().as_secs_f64() * 1e3)
                     .unwrap_or(0.0);
-                (req, Vec::new(), queue_ms, 0.0, 0.0, None)
+                (req, Vec::new(), queue_ms, 0.0, 0.0, 0, None)
             } else if let Some(i) = self.prefilling.iter().position(|p| p.req.id == id) {
                 let p = self.prefilling.remove(i).unwrap();
                 self.batcher.finish(id, &mut self.kv);
                 self.backend.drop_session(id);
                 // A resumed session torn down mid-recompute still returns
                 // the tokens it generated before preemption.
-                let (generated, ttft, decode_ms) = match p.resume {
-                    Some(c) => (c.generated, c.ttft_ms, c.decode_ms),
-                    None => (Vec::new(), 0.0, 0.0),
+                let (generated, ttft, decode_ms, decode_steps) = match p.resume {
+                    Some(c) => (c.generated, c.ttft_ms, c.decode_ms, c.decode_steps),
+                    None => (Vec::new(), 0.0, 0.0, 0),
                 };
-                (p.req, generated, p.queue_ms, ttft, decode_ms, Some(p.started))
+                (p.req, generated, p.queue_ms, ttft, decode_ms, decode_steps, Some(p.started))
             } else if let Some(r) = self.running.remove(&id) {
                 self.batcher.finish(id, &mut self.kv);
                 self.backend.drop_session(id);
-                (r.req, r.generated, r.queue_ms, r.ttft_ms, r.decode_ms, Some(r.started))
+                (
+                    r.req,
+                    r.generated,
+                    r.queue_ms,
+                    r.ttft_ms,
+                    r.decode_ms,
+                    r.decode_steps,
+                    Some(r.started),
+                )
             } else if let Some(i) = self.preempted.iter().position(|p| p.req.id == id) {
                 // Parked sessions hold no KV blocks and no backend state —
                 // preemption already released both.
                 let p = self.preempted.remove(i).unwrap();
-                (p.req, p.generated, p.queue_ms, p.ttft_ms, p.decode_ms, Some(p.started))
+                (
+                    p.req,
+                    p.generated,
+                    p.queue_ms,
+                    p.ttft_ms,
+                    p.decode_ms,
+                    p.decode_steps,
+                    Some(p.started),
+                )
             } else {
                 return None;
             };
@@ -1010,6 +1264,11 @@ impl<B: Backend> Coordinator<B> {
                 0.0
             } else {
                 decode_ms / generated.len() as f64
+            },
+            decode_ms_per_step: if decode_steps == 0 {
+                0.0
+            } else {
+                decode_ms / decode_steps as f64
             },
             prompt_tokens: req.prompt.len(),
             generated_tokens: generated.len(),
@@ -1158,6 +1417,8 @@ mod tests {
         sessions: std::collections::BTreeMap<RequestId, usize>,
         decode_calls: usize,
         batch_sizes: Vec<usize>,
+        verify_calls: usize,
+        verify_fed_tokens: usize,
     }
 
     impl ToyBackend {
@@ -1167,6 +1428,8 @@ mod tests {
                 sessions: Default::default(),
                 decode_calls: 0,
                 batch_sizes: vec![],
+                verify_calls: 0,
+                verify_fed_tokens: 0,
             }
         }
 
@@ -1199,6 +1462,19 @@ mod tests {
             self.batch_sizes.push(entries.len());
             Ok(entries.iter().map(|&(_, t, _)| Self::logits_for(t)).collect())
         }
+        fn verify_chunk(
+            &mut self,
+            _kv: &mut PagedKvCache,
+            _session: RequestId,
+            tokens: &[u8],
+            _pos0: usize,
+        ) -> Result<Vec<Vec<f32>>> {
+            // One blocked call for the whole feed — row i names the token
+            // after tokens[i], exactly what sequential decode would say.
+            self.verify_calls += 1;
+            self.verify_fed_tokens += tokens.len();
+            Ok(tokens.iter().map(|&t| Self::logits_for(t)).collect())
+        }
         fn drop_session(&mut self, session: RequestId) {
             self.sessions.remove(&session);
         }
@@ -1219,6 +1495,11 @@ mod tests {
                     max_sessions,
                     buckets: vec![1, 4],
                     max_queue: 100,
+                    // Env-independent: the CI speculative matrix sets
+                    // RAP_SPECULATIVE, but ToyBackend's periodic chain
+                    // would then speculate in every test; tests opt in
+                    // per request instead.
+                    default_speculative: None,
                     ..Default::default()
                 },
                 kv_budget_bytes: 16 << 20,
@@ -1414,6 +1695,7 @@ mod tests {
                     prefill_chunk_tokens: 256,
                     reserve_worst_case: false,
                     default_retention: None,
+                    default_speculative: None,
                 },
                 kv_budget_bytes: 64 << 20,
             },
@@ -1547,6 +1829,7 @@ mod tests {
                     prefill_chunk_tokens: 256,
                     reserve_worst_case: false,
                     default_retention: None,
+                    default_speculative: None,
                 },
                 kv_budget_bytes: 64 << 20,
             },
@@ -1605,6 +1888,8 @@ mod tests {
                     max_sessions,
                     buckets: vec![1, 4],
                     max_queue: 100,
+                    // See `coordinator`: speculation is opt-in per request.
+                    default_speculative: None,
                     ..Default::default()
                 },
                 kv_budget_bytes: blocks * 8192,
@@ -1794,5 +2079,66 @@ mod tests {
         );
         assert_eq!(c.kv_used_blocks(), 0);
         assert_eq!(c.backend.inner().sessions.len(), 0);
+    }
+
+    #[test]
+    fn speculative_output_matches_plain_with_fewer_backend_calls() {
+        use crate::speculate::SpeculativeSpec;
+        let mut plain = coordinator(2);
+        plain.submit(Request::new(1, vec![1, 2, 3], 16));
+        let pr = plain.run_to_completion().unwrap();
+
+        let mut spec = coordinator(2);
+        spec.submit(
+            Request::new(1, vec![1, 2, 3], 16)
+                .with_speculative(SpeculativeSpec::parse("ngram:4").unwrap()),
+        );
+        let sr = spec.run_to_completion().unwrap();
+
+        assert_eq!(pr[0].generated, sr[0].generated, "speculation never changes output");
+        // ToyBackend's chain is periodic mod 7, so once the stream wraps
+        // the n-gram drafter predicts it perfectly: several accepted
+        // tokens per verify chunk, far fewer backend calls than tokens.
+        assert!(spec.metrics.spec_steps > 0, "drafter must fire on a periodic stream");
+        assert!(spec.metrics.spec_accepted_tokens > 0);
+        assert!(
+            spec.backend.verify_calls + spec.backend.decode_calls
+                < plain.backend.decode_calls,
+            "verify={} decode={} vs plain decode={}",
+            spec.backend.verify_calls,
+            spec.backend.decode_calls,
+            plain.backend.decode_calls
+        );
+        assert_eq!(spec.metrics.spec_steps, spec.backend.verify_calls as u64);
+        assert_eq!(spec.kv_used_blocks(), 0);
+        // Multi-token steps are billed per backend call, not per token.
+        let m = &sr[0].metrics;
+        assert!(m.decode_ms_per_step >= m.decode_ms_per_token);
+    }
+
+    #[test]
+    fn rejected_draft_rolls_back_and_output_is_unchanged() {
+        use crate::speculate::SpeculativeSpec;
+        // Prompt [2, 3, 9, 2]: the first emitted token is 3, so the
+        // stream's suffix [2, 3] matches the prompt's head — which was
+        // followed by 9, not the chain's true 4.  The first speculative
+        // step drafts [9, 2, 3], the verifier rejects everything, and the
+        // three dead rows roll back.
+        let mut plain = coordinator(2);
+        plain.submit(Request::new(1, vec![2, 3, 9, 2], 8));
+        let pr = plain.run_to_completion().unwrap();
+        assert_eq!(pr[0].generated, vec![3, 4, 5, 6, 0, 1, 2, 3]);
+
+        let mut spec = coordinator(2);
+        spec.submit(
+            Request::new(1, vec![2, 3, 9, 2], 8)
+                .with_speculative(SpeculativeSpec::parse("ngram:4").unwrap()),
+        );
+        let sr = spec.run_to_completion().unwrap();
+        assert_eq!(sr[0].generated, pr[0].generated, "rejected drafts cost rows, not tokens");
+        assert!(spec.metrics.spec_steps >= 1);
+        assert_eq!(spec.metrics.spec_accepted_tokens, 0, "the misleading draft never matches");
+        assert!(spec.metrics.spec_rolled_back_rows >= 3, "all dead draft rows returned");
+        assert_eq!(spec.kv_used_blocks(), 0, "rollback leaves no stranded blocks");
     }
 }

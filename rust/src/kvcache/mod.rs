@@ -1714,6 +1714,60 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Drop `session`'s trailing rows so exactly `keep_rows` remain — the
+    /// speculative-decode rollback path.  A rejected draft leaves KV rows
+    /// at the table's tail holding tokens that were never emitted; this
+    /// truncates them, returns fully drained blocks to the pool, and
+    /// clamps the written watermark, restoring the footprint the session
+    /// would have had without the draft.
+    ///
+    /// Unlike [`PagedKvCache::apply_retention`] this never moves a row,
+    /// never flips an identity session to an explicit position map, and
+    /// never touches the press counters: it is pure tail rollback.  The
+    /// tail being dropped is always session-private decode territory, so
+    /// shared prefix blocks, trie registrations, and pending
+    /// copy-on-write destinations must all sit below `keep_rows` — bailed
+    /// on otherwise.  Steady state allocates nothing.
+    pub fn truncate_rows(&mut self, session: u64, keep_rows: usize) -> Result<()> {
+        let Some(a) = self.tables.get_mut(&session) else {
+            bail!("truncate_rows on unknown session {session}")
+        };
+        let rows = a.tokens;
+        if keep_rows > rows {
+            bail!("truncate_rows({keep_rows}) beyond session {session}'s {rows} resident rows");
+        }
+        if keep_rows == rows {
+            return Ok(());
+        }
+        let needed = keep_rows.div_ceil(BLOCK_TOKENS);
+        if needed < a.trie_path.len() || needed < a.shared_blocks {
+            bail!("truncate_rows would drop shared prefix blocks of session {session}");
+        }
+        if a.cow.as_ref().is_some_and(|c| !c.done && needed <= c.dst_index) {
+            bail!("truncate_rows would drop session {session}'s pending copy-on-write block");
+        }
+        a.tokens = keep_rows;
+        a.filled = a.filled.min(keep_rows);
+        if let Some(pv) = a.positions.as_mut() {
+            pv.truncate(keep_rows);
+            a.next_pos = pv.last().map(|&p| p as usize + 1).unwrap_or(0);
+        }
+        if a.track_scores {
+            a.row_scores.truncate(keep_rows);
+        }
+        // End the per-session borrow before touching the refcounts.
+        let extra = a.blocks.len().saturating_sub(needed);
+        for _ in 0..extra {
+            let block = self
+                .tables
+                .get_mut(&session)
+                .and_then(|a| a.blocks.pop())
+                .expect("tail block present");
+            self.dec_block(block);
+        }
+        Ok(())
+    }
+
     /// Run a retention press over `session`: plan a keep set under `spec`
     /// (budget, protected prefix, unwritten rows and the recency window
     /// all honoured) and compact if it evicts anything.  `written_upto` is
@@ -2321,6 +2375,79 @@ mod tests {
         assert!(c.reserve(1, BLOCK_TOKENS).is_err());
         assert_eq!(c.alloc_faults_injected(), 1);
         c.release(1);
+    }
+
+    #[test]
+    fn truncate_rows_returns_drained_blocks_without_pressing() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 8);
+        c.reserve(1, BLOCK_TOKENS + 2).unwrap();
+        let baseline = c.used_blocks();
+        // A draft grows the tail by a couple of blocks...
+        c.ensure_tokens(1, BLOCK_TOKENS * 3 + 4).unwrap();
+        assert!(c.used_blocks() > baseline);
+        // ...and rejection rolls it back exactly.
+        c.truncate_rows(1, BLOCK_TOKENS + 2).unwrap();
+        assert_eq!(c.used_blocks(), baseline);
+        assert_eq!(c.session_tokens(1), BLOCK_TOKENS + 2);
+        assert_eq!(c.logical_tokens(1), BLOCK_TOKENS + 2, "identity map survives");
+        assert!(c.row_positions(1).is_none(), "no position map materialized");
+        assert_eq!(c.presses(), 0, "rollback is not a press");
+        assert_eq!(c.evicted_tokens(), 0);
+        // Truncating to the current size is a no-op; overshooting bails.
+        c.truncate_rows(1, BLOCK_TOKENS + 2).unwrap();
+        assert!(c.truncate_rows(1, BLOCK_TOKENS * 4).is_err());
+        assert!(c.truncate_rows(99, 0).is_err(), "unknown session");
+        c.release(1);
+        assert_eq!(c.used_blocks(), 0);
+    }
+
+    #[test]
+    fn truncate_rows_on_a_pruned_session_restores_the_position_map() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 16);
+        let rows = BLOCK_TOKENS * 4;
+        c.reserve(1, rows).unwrap();
+        fill_rows(&mut c, 1, rows, 1.5);
+        // Press out the middle so the session carries an explicit map.
+        let keep: Vec<usize> = (0..8).chain(rows - 24..rows).collect();
+        c.apply_retention(1, &keep).unwrap();
+        let kept = keep.len();
+        assert_eq!(c.session_tokens(1), kept);
+        assert_eq!(c.logical_tokens(1), rows);
+        let baseline = c.used_blocks();
+        // Draft rows append at the tail with fresh logical positions...
+        c.ensure_tokens(1, kept + 5).unwrap();
+        assert_eq!(c.logical_tokens(1), rows + 5);
+        // ...rollback drops them and restores next_pos from the survivors.
+        c.truncate_rows(1, kept).unwrap();
+        assert_eq!(c.used_blocks(), baseline);
+        assert_eq!(c.session_tokens(1), kept);
+        assert_eq!(c.logical_tokens(1), rows);
+        let pv = c.row_positions(1).unwrap();
+        assert_eq!(pv.len(), kept);
+        assert_eq!(*pv.last().unwrap() as usize, rows - 1);
+        c.release(1);
+    }
+
+    #[test]
+    fn truncate_rows_refuses_to_drop_shared_prefix_blocks() {
+        let sh = shape(8, 8);
+        let mut c = PagedKvCache::with_storage(sh.clone(), sh.bytes_per_block() * 16);
+        let prompt = ptokens(BLOCK_TOKENS * 2, 3);
+        c.reserve_prefix(1, &prompt, prompt.len() + 4).unwrap();
+        fill_rows(&mut c, 1, prompt.len(), 2.0);
+        // A second session attaches the shared prefix read-only.
+        c.reserve_prefix(2, &prompt, prompt.len() + 4).unwrap();
+        assert!(
+            c.truncate_rows(1, BLOCK_TOKENS).is_err(),
+            "tail rollback must never reach into trie-registered blocks"
+        );
+        // The session's private tail can still roll back.
+        c.truncate_rows(1, prompt.len() + 1).unwrap();
+        assert_eq!(c.session_tokens(1), prompt.len() + 1);
+        c.release(1);
+        c.release(2);
     }
 
     #[test]

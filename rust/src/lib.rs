@@ -33,6 +33,7 @@ pub mod rope;
 pub mod router;
 pub mod runtime;
 pub mod server;
+pub mod speculate;
 pub mod tensor;
 pub mod util;
 pub mod workload;

@@ -60,8 +60,11 @@ fn print_usage() {
            serve     --model M --variant V [--addr HOST:PORT] [--sessions N]\n\
                      (API v2: per-token streaming, seeded sampling, stop\n\
                       sequences, {{\"cancel\": id}}, per-request KV retention\n\
-                      {{\"retention\": {{\"policy\", \"ratio\"}}}}; v1 one-shot\n\
-                      still served)\n\
+                      {{\"retention\": {{\"policy\", \"ratio\"}}}}, per-request\n\
+                      speculative decode {{\"speculative\": {{\"policy\":\n\
+                      \"ngram\", \"k\": N}}}} (self-drafted, output-identical;\n\
+                      fleet default via RAP_SPECULATIVE=ngram:K); v1\n\
+                      one-shot still served)\n\
            route     --replicas H:P,H:P [--addr HOST:PORT] [--policy affinity]\n\
                      (fronts `serve` replicas: prefix-affinity or\n\
                       least-loaded/random routing, health probing, bounded\n\
@@ -197,15 +200,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "listening on {} — serving API v2, one JSON object per line:\n\
          \x20 {{\"prompt\", \"max_new\", \"stream\", \"temperature\", \"top_k\", \"top_p\", \
-         \"seed\", \"stop\", \"retention\"}}\n\
+         \"seed\", \"stop\", \"retention\", \"speculative\"}}\n\
          \x20 streaming replies: {{\"delta\"}} lines then a {{\"done\", \"finish_reason\"}} \
          summary; {{\"cancel\": id}} tears a request down mid-flight\n\
          \x20 retention: {{\"policy\": \"window\"|\"l2norm\"|\"attn-score\"|\
          \"anchor-reservoir\", \"ratio\": (0,1]}} prunes the request's KV \
          cache to ratio x context once it clears the press floor\n\
+         \x20 speculative: {{\"policy\": \"ngram\", \"k\": 1..=32}} self-drafts k \
+         tokens per step and verifies them in one batched pass — output is \
+         bit-identical to plain decode (fleet default: RAP_SPECULATIVE=ngram:K)\n\
          \x20 rejected before admission as {{\"error\": \"bad_request\", \"field\": \
-         \"retention.policy\"}} (unknown policy) or \"retention.ratio\" \
-         (ratio outside (0,1])\n\
+         \"retention.policy\"}} (unknown policy), \"retention.ratio\" \
+         (ratio outside (0,1]), \"speculative.policy\", or \"speculative.k\"\n\
          \x20 (v1 one-shot requests still answered in the old shape)",
         handle.addr
     );

@@ -217,6 +217,49 @@ impl<'a> Backend for RustBackend<'a> {
             .collect())
     }
 
+    fn verify_chunk(
+        &mut self,
+        kv: &mut PagedKvCache,
+        session: RequestId,
+        tokens: &[u8],
+        pos0: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        if !self.sessions.contains(&session) {
+            anyhow::bail!("unknown session {session}");
+        }
+        let n = tokens.len();
+        if self.quantize_kv && !kv.storage_mode().is_packed() {
+            // The int4 round-trip over f32 storage breaks chunk/decode
+            // bit-identity: prefill rounds a row before its own chunk's
+            // attention reads it, decode rounds *after* the step that
+            // wrote it.  Re-run the feed token-by-token instead — exact,
+            // just not batched.  The caller pre-reserved the draft rows;
+            // drop them first so each decode step regrows its own row
+            // (a pruned session's decode requires its last resident row
+            // to be the previous logical position).
+            let row0 = kv.row_index_of(session, pos0).unwrap_or(pos0);
+            kv.truncate_rows(session, row0)?;
+            let mut rows = Vec::with_capacity(n);
+            for (i, &t) in tokens.iter().enumerate() {
+                let mut lg = self.decode_batch(kv, &[(session, t, pos0 + i)])?;
+                rows.push(lg.pop().expect("decode_batch returns one row per entry"));
+            }
+            return Ok(rows);
+        }
+        kv.ensure_tokens(session, pos0 + n)?;
+        let row0 = kv.row_index_of(session, pos0).unwrap_or(pos0);
+        self.engine.verify_chunk_paged(
+            session,
+            tokens,
+            row0,
+            kv,
+            &mut self.prefill_ws,
+            self.quantize_kv,
+        )?;
+        kv.note_filled(session, row0 + n);
+        Ok((0..n).map(|i| self.prefill_ws.verify_logits_row(i).to_vec()).collect())
+    }
+
     fn drop_session(&mut self, session: RequestId) {
         self.sessions.remove(&session);
     }

@@ -428,6 +428,10 @@ pub struct PrefillWorkspace {
     scores: Vec<f32>,
     /// Final-token logits (filled when the chunk closes the prompt).
     logits: Vec<f32>,
+    /// Per-row logits [T, vocab] (filled by `verify_chunk_paged`; grows
+    /// on first use so plain prefill never pays for it).
+    verify_logits: Vec<f32>,
+    vocab: usize,
 }
 
 impl PrefillWorkspace {
@@ -462,6 +466,8 @@ impl PrefillWorkspace {
             recon_v: vec![0.0; recon_v_n],
             scores: vec![0.0; kernel_threads() * s_max],
             logits: vec![0.0; cfg.vocab],
+            verify_logits: Vec::new(),
+            vocab: cfg.vocab,
         }
     }
 
@@ -474,6 +480,12 @@ impl PrefillWorkspace {
     /// run with `want_logits`.
     pub fn logits(&self) -> &[f32] {
         &self.logits
+    }
+
+    /// Logits of verify row `i`, valid after `verify_chunk_paged` ran a
+    /// chunk of more than `i` tokens.
+    pub fn verify_logits_row(&self, i: usize) -> &[f32] {
+        &self.verify_logits[i * self.vocab..(i + 1) * self.vocab]
     }
 
     fn ensure(&mut self, n: usize) {
@@ -1522,6 +1534,84 @@ impl Engine {
         if want_logits {
             let PrefillWorkspace { x, h, logits, .. } = ws;
             self.logits_into(&x[(n - 1) * d..n * d], &mut h[..d], logits);
+        }
+        Ok(())
+    }
+
+    /// Speculative verification: feed `tokens` (the session's last
+    /// emitted token followed by its draft) at rows `[row0, row0 + len)`
+    /// through the blocked chunk kernel, writing their KV rows exactly as
+    /// [`Engine::prefill_chunk_paged`] would, but computing the
+    /// vocabulary head for **every** row — `len` next-token distributions
+    /// in one block-parallel call instead of `len` sequential decode
+    /// steps.  Row `i`'s logits condition on the stream through
+    /// `tokens[i]`; read them back with
+    /// [`PrefillWorkspace::verify_logits_row`].
+    ///
+    /// Per-row arithmetic is the chunk kernel's, which is bit-identical
+    /// to token-by-token decode (`tests/prefill.rs` pins this), so with
+    /// f32 KV storage — or packed-int4 storage, which quantizes rows on
+    /// write in both paths — the verify logits equal sequential decode's
+    /// bit for bit.  The `quantize_kv` *round-trip* over f32 storage is
+    /// the one exception (prefill rounds a row before its own attention
+    /// reads it, decode after), which is why `RustBackend::verify_chunk`
+    /// falls back to the sequential loop in that mode.
+    pub fn verify_chunk_paged(
+        &self,
+        session: u64,
+        tokens: &[u8],
+        row0: usize,
+        kv: &mut PagedKvCache,
+        ws: &mut PrefillWorkspace,
+        quantize_kv: bool,
+    ) -> Result<()> {
+        let n = tokens.len();
+        if n == 0 {
+            return Ok(());
+        }
+        if kv.storage_mode().is_packed()
+            && (self.spec.method.reconstructs_k() || self.spec.method.reconstructs_v())
+        {
+            bail!(
+                "packed-int4 KV storage cannot back {:?}: reconstruction reads f32 latent rows",
+                self.spec.method
+            );
+        }
+        if row0 + n > ws.s_max {
+            bail!("session {session}: verify end {} exceeds workspace s_max {}", row0 + n, ws.s_max);
+        }
+        if kv.session_tokens(session) < row0 + n {
+            bail!(
+                "session {session}: verify end {} beyond its {}-token reservation",
+                row0 + n,
+                kv.session_tokens(session)
+            );
+        }
+        ws.ensure(n);
+        if ws.verify_logits.len() < n * ws.vocab {
+            ws.verify_logits.resize(n * ws.vocab, 0.0);
+        }
+        let d = self.cfg.d_model;
+        for (i, &t) in tokens.iter().enumerate() {
+            self.embed_into(t, &mut ws.x[i * d..(i + 1) * d]);
+        }
+        let (pages, store) = kv.tables_and_ptrs()?;
+        let sv = pages
+            .view(session)
+            .ok_or_else(|| anyhow::anyhow!("session {session} has no page table"))?;
+        for (l, layer) in self.layers.iter().enumerate() {
+            // SAFETY: one live view per session; the chunk's attention
+            // workers only share it read-only after its writes complete.
+            let mut view = unsafe { store.session_layer(l, &sv) };
+            self.prefill_chunk_layer(l, layer, n, row0, &mut view, ws, quantize_kv);
+        }
+        let PrefillWorkspace { x, h, verify_logits, vocab, .. } = ws;
+        for i in 0..n {
+            self.logits_into(
+                &x[i * d..(i + 1) * d],
+                &mut h[..d],
+                &mut verify_logits[i * *vocab..(i + 1) * *vocab],
+            );
         }
         Ok(())
     }

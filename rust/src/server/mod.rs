@@ -8,11 +8,22 @@
 //!       "temperature": 0.8, "top_k": 40,     // sampling (0 temp = greedy,
 //!       "top_p": 0.95, "seed": 7,            //  bit-identical to v1)
 //!       "stop": ["\n\n", "END"],             // byte-level stop sequences
-//!       "deadline_ms": 5000}                 // optional wall-clock budget
+//!       "deadline_ms": 5000,                 // optional wall-clock budget
+//!       "retention": {"policy": "window", "ratio": 0.5},  // KV press
+//!       "speculative": {"policy": "ngram", "k": 4}}       // spec decode
+//!
+//! `speculative` turns on self-drafting speculative decode for the
+//! request: up to `k` n-gram-drafted tokens are verified per backend
+//! call, and the emitted bytes are **bit-identical** to plain decode for
+//! greedy and seeded sampling alike (acceptance re-samples every token
+//! from the verifier's logits through the request's own seeded stream).
+//! Omitting it picks up the fleet default (`RAP_SPECULATIVE`, e.g.
+//! `ngram:4`), if any.
 //!
 //! Malformed sampling parameters (NaN/negative temperature, `top_p`
 //! outside (0, 1], `max_new` beyond any servable length, negative
-//! `deadline_ms`) are answered immediately with
+//! `deadline_ms`), an unknown `retention`/`speculative` policy, or a
+//! `speculative.k` outside `[1, 32]` are answered immediately with
 //! `{"error": "bad_request", "field": "..."}` — nothing is submitted.
 //!
 //! Streaming (`"stream": true`) responses are incremental:
@@ -89,6 +100,7 @@ use crate::coordinator::{
     SubmitError,
 };
 use crate::kvcache::retention::{Press, RetentionSpec};
+use crate::speculate::{DraftPolicy, SpeculativeSpec, DEFAULT_DRAFT_K, MAX_DRAFT_K};
 use crate::util::json::{self, Value};
 use crate::util::threadpool::ThreadPool;
 
@@ -529,6 +541,27 @@ fn parse_request(v: &Value, id: RequestId) -> Result<Request, &'static str> {
         }
         None => None,
     };
+    // Optional speculative-decode spec, validated the same way:
+    // `{"policy": "ngram", "k": 4}`.  `policy` is required; `k` defaults
+    // to `DEFAULT_DRAFT_K` and must stay in `[1, MAX_DRAFT_K]`.  Omitted
+    // object = the fleet default (`RAP_SPECULATIVE`), or plain decode.
+    let speculative = match v.get("speculative") {
+        Some(s) => {
+            let policy = match s.get("policy").and_then(|p| p.as_str()).map(DraftPolicy::parse) {
+                Some(Some(p)) => p,
+                _ => return Err("speculative.policy"), // missing or unknown
+            };
+            let k = match s.get("k") {
+                Some(k) => match k.as_usize() {
+                    Some(k) if (1..=MAX_DRAFT_K).contains(&k) => k,
+                    _ => return Err("speculative.k"), // 0, negative, or absurd
+                },
+                None => DEFAULT_DRAFT_K,
+            };
+            Some(SpeculativeSpec { policy, k })
+        }
+        None => None,
+    };
     let mut req = Request::new(id, prompt, max_new)
         .with_sampling(sampling)
         .with_stop(stop)
@@ -538,6 +571,9 @@ fn parse_request(v: &Value, id: RequestId) -> Result<Request, &'static str> {
     }
     if let Some(spec) = retention {
         req = req.with_retention(spec);
+    }
+    if let Some(spec) = speculative {
+        req = req.with_speculative(spec);
     }
     Ok(req)
 }
@@ -1234,6 +1270,56 @@ mod tests {
         )
         .unwrap();
         assert!(parse_request(&v, 1).is_ok());
+    }
+
+    #[test]
+    fn parse_request_reads_speculative() {
+        let v = json::parse(r#"{"prompt": "x", "speculative": {"policy": "ngram", "k": 8}}"#)
+            .unwrap();
+        let spec = parse_request(&v, 1).unwrap().speculative.expect("speculative parsed");
+        assert_eq!(spec.policy, DraftPolicy::Ngram);
+        assert_eq!(spec.k, 8);
+        // Omitted k defaults; omitted object = no per-request override.
+        let v = json::parse(r#"{"prompt": "x", "speculative": {"policy": "ngram"}}"#).unwrap();
+        assert_eq!(parse_request(&v, 1).unwrap().speculative.map(|s| s.k), Some(DEFAULT_DRAFT_K));
+        let v = json::parse(r#"{"prompt": "x"}"#).unwrap();
+        assert!(parse_request(&v, 1).unwrap().speculative.is_none());
+        // Boundary k values stay valid.
+        for k in [1, MAX_DRAFT_K] {
+            let v = json::parse(&format!(
+                r#"{{"prompt": "x", "speculative": {{"policy": "ngram", "k": {k}}}}}"#
+            ))
+            .unwrap();
+            assert!(parse_request(&v, 1).is_ok());
+        }
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_speculative() {
+        let cases = [
+            (r#"{"prompt": "x", "speculative": {}}"#, "speculative.policy"),
+            (r#"{"prompt": "x", "speculative": {"k": 4}}"#, "speculative.policy"),
+            (
+                r#"{"prompt": "x", "speculative": {"policy": "medusa"}}"#,
+                "speculative.policy",
+            ),
+            (
+                r#"{"prompt": "x", "speculative": {"policy": "ngram", "k": 0}}"#,
+                "speculative.k",
+            ),
+            (
+                r#"{"prompt": "x", "speculative": {"policy": "ngram", "k": -2}}"#,
+                "speculative.k",
+            ),
+            (
+                r#"{"prompt": "x", "speculative": {"policy": "ngram", "k": 33}}"#,
+                "speculative.k",
+            ),
+        ];
+        for (body, field) in cases {
+            let v = json::parse(body).unwrap();
+            assert_eq!(parse_request(&v, 1).unwrap_err(), field, "body {body}");
+        }
     }
 
     #[test]

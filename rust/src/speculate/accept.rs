@@ -1,0 +1,157 @@
+//! Deterministic acceptance of a verified draft.
+//!
+//! The verify chunk fed `[last_emitted, d_1 .. d_n]` and returned
+//! `n + 1` logits rows; row `i` is the model's next-token distribution
+//! after consuming the stream through the `i`-th fed token — exactly
+//! the logits the non-speculative run would compute one step at a time.
+//! Acceptance therefore never trusts the draft: it draws each emitted
+//! token from those verifier logits through the request's own seeded
+//! [`Sampler`] stream (one draw per emitted token, greedy short-circuits
+//! to argmax with zero draws), and the draft only decides how far the
+//! single verify call reaches.  The emitted token sequence — and the
+//! RNG stream position — is bit-identical to sequential decode by
+//! construction, for greedy AND sampled requests; this is the exact
+//! per-request-seed contract every prior PR preserved, and the
+//! strong-form equivalent of rejection sampling against the verifier
+//! (the emitted token *is* the target-distribution sample).
+//!
+//! The step stops at the first token that (a) finishes the request, or
+//! (b) diverges from the fed draft — later fed rows then hold KV for a
+//! context that never happened and are rolled back by the scheduler via
+//! [`crate::kvcache::PagedKvCache::truncate_rows`].
+
+use crate::coordinator::request::FinishReason;
+use crate::coordinator::sampling::Sampler;
+
+/// What one speculative step produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepOutcome {
+    /// Tokens emitted (and appended to `generated`) this step; at least
+    /// 1, at most `draft.len() + 1` (all drafts accepted + bonus).
+    pub emitted: usize,
+    /// Leading draft tokens the verifier confirmed.
+    pub accepted_draft: usize,
+    /// Finish condition hit mid-step, if any.
+    pub finish: Option<FinishReason>,
+}
+
+/// Run the acceptance loop for one verified draft.
+///
+/// `logits[i]` must be the verifier's distribution after the `i`-th fed
+/// token (`logits.len() == draft.len() + 1`); `pos0` is the logical
+/// position the first fed token sat at, so the token emitted from
+/// `logits[i]` lands at position `pos0 + i + 1`.  `finish` is consulted
+/// after every emitted token (stop sequences, length caps) — sampling
+/// halts immediately on a hit, so the RNG stream never advances past
+/// the finishing token.
+pub fn accept_step(
+    draft: &[u8],
+    logits: &[Vec<f32>],
+    sampler: &mut Sampler,
+    generated: &mut Vec<u8>,
+    pos0: usize,
+    finish: impl Fn(&[u8], usize) -> Option<FinishReason>,
+) -> StepOutcome {
+    assert_eq!(logits.len(), draft.len() + 1, "one logits row per fed token");
+    let mut out = StepOutcome { emitted: 0, accepted_draft: 0, finish: None };
+    for (i, lg) in logits.iter().enumerate() {
+        let token = sampler.sample(lg) as u8;
+        generated.push(token);
+        out.emitted += 1;
+        out.finish = finish(generated, pos0 + out.emitted);
+        if out.finish.is_some() {
+            break;
+        }
+        if i < draft.len() && token == draft[i] {
+            // The fed row at pos0 + i + 1 holds this very token: its KV
+            // is already correct, so the next logits row stays valid.
+            out.accepted_draft += 1;
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sampling::SamplingParams;
+
+    /// One-hot logits naming `t` (greedy sampler emits `t`).
+    fn one_hot(t: u8) -> Vec<f32> {
+        let mut v = vec![0.0f32; 256];
+        v[t as usize] = 1.0;
+        v
+    }
+
+    fn greedy() -> Sampler {
+        Sampler::new(&SamplingParams::greedy())
+    }
+
+    #[test]
+    fn full_acceptance_emits_bonus_token() {
+        let draft = [5u8, 6, 7];
+        let logits: Vec<Vec<f32>> = [5u8, 6, 7, 8].iter().map(|&t| one_hot(t)).collect();
+        let mut generated = vec![4u8];
+        let out = accept_step(&draft, &logits, &mut greedy(), &mut generated, 10, |_, _| None);
+        assert_eq!(out, StepOutcome { emitted: 4, accepted_draft: 3, finish: None });
+        assert_eq!(generated, vec![4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn divergence_stops_after_the_corrected_token() {
+        // Verifier says 5 then 9; draft said 5 then 6.
+        let draft = [5u8, 6, 7];
+        let logits: Vec<Vec<f32>> = [5u8, 9, 7, 8].iter().map(|&t| one_hot(t)).collect();
+        let mut generated = Vec::new();
+        let out = accept_step(&draft, &logits, &mut greedy(), &mut generated, 0, |_, _| None);
+        assert_eq!(out, StepOutcome { emitted: 2, accepted_draft: 1, finish: None });
+        assert_eq!(generated, vec![5, 9], "token 9 replaces the rejected draft");
+    }
+
+    #[test]
+    fn immediate_divergence_still_emits_one_token() {
+        let draft = [5u8];
+        let logits = vec![one_hot(7), one_hot(8)];
+        let mut generated = Vec::new();
+        let out = accept_step(&draft, &logits, &mut greedy(), &mut generated, 0, |_, _| None);
+        assert_eq!(out, StepOutcome { emitted: 1, accepted_draft: 0, finish: None });
+        assert_eq!(generated, vec![7]);
+    }
+
+    #[test]
+    fn finish_mid_step_halts_sampling() {
+        let draft = [5u8, 6, 7];
+        let logits: Vec<Vec<f32>> = [5u8, 6, 7, 8].iter().map(|&t| one_hot(t)).collect();
+        let mut generated = Vec::new();
+        // Length cap of 2 generated tokens.
+        let out = accept_step(&draft, &logits, &mut greedy(), &mut generated, 0, |g, _| {
+            (g.len() >= 2).then_some(FinishReason::Length)
+        });
+        assert_eq!(
+            out,
+            StepOutcome { emitted: 2, accepted_draft: 1, finish: Some(FinishReason::Length) }
+        );
+        assert_eq!(generated, vec![5, 6]);
+    }
+
+    #[test]
+    fn sampled_stream_matches_sequential_draws() {
+        // The acceptance loop must consume exactly one RNG draw per
+        // emitted token, in order — the whole bit-identity contract.
+        let params = SamplingParams { temperature: 0.9, top_k: 8, top_p: 0.95, seed: 42 };
+        let logits: Vec<Vec<f32>> =
+            (0..4).map(|i| (0..64).map(|j| ((i * 31 + j * 7) % 13) as f32 * 0.3).collect()).collect();
+        let mut seq = Sampler::new(&params);
+        let expect: Vec<u8> = logits.iter().map(|lg| seq.sample(lg) as u8).collect();
+        // Draft exactly the expected chain so everything is accepted.
+        let draft = expect[..3].to_vec();
+        let mut spec = Sampler::new(&params);
+        let mut generated = Vec::new();
+        let out = accept_step(&draft, &logits, &mut spec, &mut generated, 0, |_, _| None);
+        assert_eq!(out.emitted, 4);
+        assert_eq!(out.accepted_draft, 3);
+        assert_eq!(generated, expect);
+    }
+}

@@ -1,0 +1,217 @@
+//! Self-drafting: propose continuation tokens from the session's own
+//! token stream, no second model.
+//!
+//! [`NgramDrafter`] is prompt-lookup decoding: a hash-indexed n-gram
+//! table over `prompt + generated`, updated in O(1) per observed token.
+//! When the current suffix n-gram occurred earlier in the stream, the
+//! tokens that followed that occurrence become the draft — on
+//! repetitive text (code, structured transcripts, copied spans) the
+//! verifier then accepts several of them per step for free.
+//!
+//! Drafter state is *advisory only*: a wrong draft costs one wasted
+//! verify chunk, never a wrong token, because acceptance re-samples
+//! every emitted token from the verifier's logits (see
+//! [`super::accept`]).  That is what lets a preempted session simply
+//! rebuild its drafter from `prompt + generated` on resume.
+
+/// Proposes draft tokens for one session; observed tokens arrive in
+/// stream order (prompt first, then each emitted token).
+pub trait Drafter {
+    /// Feed newly appended stream tokens (incremental; never re-feed).
+    fn observe(&mut self, tokens: &[u8]);
+    /// Propose up to `k` continuation tokens into `out` (cleared first);
+    /// returns the number proposed.  Zero means "no draft this step".
+    fn draft(&mut self, out: &mut Vec<u8>, k: usize) -> usize;
+    /// Forget everything (session rollback to an empty stream).
+    fn reset(&mut self);
+}
+
+/// Gram orders indexed, shortest to longest; drafting prefers the
+/// longest order with a live prior occurrence (more context, higher
+/// acceptance).
+const ORDERS: [usize; 2] = [2, 3];
+
+/// Hash-table slots per order (power of two).  Collisions are verified
+/// against the actual stream bytes, so a collision only costs a missed
+/// draft, never a wrong one.
+const TABLE_SLOTS: usize = 1 << 12;
+
+const NONE: u32 = u32::MAX;
+
+/// Prompt/self n-gram drafter: for each indexed order, `table[h]` holds
+/// the end index (exclusive) of the most recent occurrence of the gram
+/// hashing to `h`, and `cursor` holds the *previous* occurrence of the
+/// stream's current suffix gram — captured at observe time, so drafting
+/// is O(orders) with no probing.
+pub struct NgramDrafter {
+    ctx: Vec<u8>,
+    /// `tables[oi][h]` = end index of the latest gram of order
+    /// `ORDERS[oi]` hashing to `h` (NONE = never seen).
+    tables: Vec<Vec<u32>>,
+    /// Prior occurrence (end index) of the current suffix gram per
+    /// order, i.e. the table value displaced by the latest insert.
+    cursor: [u32; ORDERS.len()],
+}
+
+fn gram_hash(gram: &[u8]) -> usize {
+    // FNV-1a, masked to the table size.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in gram {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h as usize) & (TABLE_SLOTS - 1)
+}
+
+impl NgramDrafter {
+    /// `capacity` pre-reserves the stream buffer (prompt + max_new keeps
+    /// the steady state allocation-free; growth beyond it is amortized).
+    pub fn with_capacity(capacity: usize) -> NgramDrafter {
+        NgramDrafter {
+            ctx: Vec::with_capacity(capacity),
+            tables: ORDERS.iter().map(|_| vec![NONE; TABLE_SLOTS]).collect(),
+            cursor: [NONE; ORDERS.len()],
+        }
+    }
+
+    /// Tokens observed so far.
+    pub fn len(&self) -> usize {
+        self.ctx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ctx.is_empty()
+    }
+
+    fn observe_one(&mut self, t: u8) {
+        self.ctx.push(t);
+        let n = self.ctx.len();
+        for (oi, &g) in ORDERS.iter().enumerate() {
+            if n < g {
+                self.cursor[oi] = NONE;
+                continue;
+            }
+            let h = gram_hash(&self.ctx[n - g..n]);
+            self.cursor[oi] = self.tables[oi][h];
+            self.tables[oi][h] = n as u32;
+        }
+    }
+}
+
+impl Drafter for NgramDrafter {
+    fn observe(&mut self, tokens: &[u8]) {
+        for &t in tokens {
+            self.observe_one(t);
+        }
+    }
+
+    fn draft(&mut self, out: &mut Vec<u8>, k: usize) -> usize {
+        out.clear();
+        let n = self.ctx.len();
+        if k == 0 {
+            return 0;
+        }
+        for oi in (0..ORDERS.len()).rev() {
+            let g = ORDERS[oi];
+            let e = self.cursor[oi];
+            if e == NONE || n < g {
+                continue;
+            }
+            let e = e as usize;
+            debug_assert!(e < n, "cursor holds a PRIOR occurrence");
+            // Hash collision guard: the candidate must really match the
+            // current suffix gram.
+            if self.ctx[e - g..e] != self.ctx[n - g..n] {
+                continue;
+            }
+            let take = k.min(n - e);
+            out.extend_from_slice(&self.ctx[e..e + take]);
+            return take;
+        }
+        0
+    }
+
+    fn reset(&mut self) {
+        self.ctx.clear();
+        for t in &mut self.tables {
+            t.fill(NONE);
+        }
+        self.cursor = [NONE; ORDERS.len()];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drafted(stream: &[u8], k: usize) -> Vec<u8> {
+        let mut d = NgramDrafter::with_capacity(stream.len());
+        d.observe(stream);
+        let mut out = Vec::new();
+        d.draft(&mut out, k);
+        out
+    }
+
+    #[test]
+    fn repeated_phrase_is_drafted() {
+        // ...a b c d e ... a b  ->  expects c d e next.
+        let stream = [1, 2, 3, 4, 5, 9, 9, 1, 2];
+        assert_eq!(drafted(&stream, 3), vec![3, 4, 5]);
+        assert_eq!(drafted(&stream, 2), vec![3, 4]);
+    }
+
+    #[test]
+    fn longest_order_wins() {
+        // Suffix [7, 1, 2]: the 3-gram occurred earlier followed by 8,
+        // while the latest 2-gram [1, 2] occurrence (inside this very
+        // suffix) must not shadow it.
+        let stream = [7, 1, 2, 8, 0, 7, 1, 2];
+        assert_eq!(drafted(&stream, 1), vec![8]);
+    }
+
+    #[test]
+    fn novel_suffix_drafts_nothing() {
+        assert!(drafted(&[1, 2, 3, 4, 5], 4).is_empty());
+        assert!(drafted(&[], 4).is_empty());
+        assert!(drafted(&[1], 4).is_empty());
+    }
+
+    #[test]
+    fn draft_never_exceeds_available_continuation() {
+        // [5, 6] recurs immediately before the suffix: only the tokens
+        // between the prior occurrence and the present exist to copy.
+        let stream = [5, 6, 5, 6];
+        assert_eq!(drafted(&stream, 8), vec![5, 6]);
+    }
+
+    #[test]
+    fn incremental_observe_matches_batch_observe() {
+        let stream: Vec<u8> = (0..200).map(|i| (i % 23) as u8).collect();
+        let mut inc = NgramDrafter::with_capacity(stream.len());
+        for &t in &stream {
+            inc.observe(&[t]);
+        }
+        let mut batch = NgramDrafter::with_capacity(stream.len());
+        batch.observe(&stream);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        inc.draft(&mut a, 8);
+        batch.draft(&mut b, 8);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "periodic stream must draft");
+    }
+
+    #[test]
+    fn reset_forgets_the_stream() {
+        let mut d = NgramDrafter::with_capacity(16);
+        d.observe(&[1, 2, 3, 1, 2]);
+        let mut out = Vec::new();
+        assert!(d.draft(&mut out, 4) > 0);
+        d.reset();
+        assert_eq!(d.len(), 0);
+        assert_eq!(d.draft(&mut out, 4), 0);
+        // Rebuilding after reset behaves like a fresh drafter.
+        d.observe(&[1, 2, 3, 1, 2]);
+        assert!(d.draft(&mut out, 4) > 0);
+        assert_eq!(out, vec![3, 1, 2]);
+    }
+}

@@ -1,0 +1,108 @@
+//! Speculative decode over the latent KV cache.
+//!
+//! RAP keeps attention in latent widths with no reconstruction, so
+//! scoring `k` tokens in one forward pass costs barely more than one —
+//! the blocked chunk kernel behind `Backend::prefill_chunk` is already a
+//! batched multi-token forward.  This module claims that headroom with
+//! self-drafting speculative decode, in three pieces:
+//!
+//! * [`draft`] — [`draft::Drafter`] implementations proposing up to `k`
+//!   continuation tokens per step from the session's own stream (prompt
+//!   n-gram lookup: zero extra model weights, built incrementally).
+//! * [`verify`] — the per-step draft budget: how many drafted tokens a
+//!   session may submit for verification this tick without crossing a
+//!   finish bound or perturbing a retention press's firing schedule.
+//! * [`accept`] — deterministic acceptance: every emitted token is drawn
+//!   from the *verifier's* logits through the request's own seeded
+//!   [`crate::coordinator::sampling::Sampler`] stream, so the emitted
+//!   text is bit-identical to the non-speculative run by construction
+//!   (greedy short-circuits to argmax; the draft only decides how many
+//!   of those draws one verify call can cover).
+//!
+//! Rejected draft rows are rolled back with
+//! [`crate::kvcache::PagedKvCache::truncate_rows`], returning drained
+//! blocks to the pool so the resident footprint after every step equals
+//! the non-speculative run's.
+
+pub mod accept;
+pub mod draft;
+pub mod verify;
+
+/// Largest draft length a request may ask for; bounds both the wire
+/// field and the verify chunk scratch.
+pub const MAX_DRAFT_K: usize = 32;
+
+/// Draft length used when a spec names a policy without `:k`.
+pub const DEFAULT_DRAFT_K: usize = 4;
+
+/// Drafting policy for one session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftPolicy {
+    /// Prompt/self n-gram lookup over `prompt + generated`.
+    Ngram,
+}
+
+impl DraftPolicy {
+    /// Parse the wire/env name (`ngram`).
+    pub fn parse(name: &str) -> Option<DraftPolicy> {
+        match name {
+            "ngram" => Some(DraftPolicy::Ngram),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DraftPolicy::Ngram => "ngram",
+        }
+    }
+}
+
+/// Per-request speculative-decode policy: draft up to `k` tokens per
+/// step under `policy`, verify them in one blocked forward call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpeculativeSpec {
+    pub policy: DraftPolicy,
+    /// Max draft tokens per step, in `[1, MAX_DRAFT_K]`.
+    pub k: usize,
+}
+
+impl SpeculativeSpec {
+    /// Parse `"<policy>:<k>"` (e.g. `ngram:4`).  A bare policy name
+    /// defaults to [`DEFAULT_DRAFT_K`].
+    pub fn parse(s: &str) -> Option<SpeculativeSpec> {
+        let (name, k) = match s.split_once(':') {
+            Some((n, k)) => (n, k.parse::<usize>().ok()?),
+            None => (s, DEFAULT_DRAFT_K),
+        };
+        if k == 0 || k > MAX_DRAFT_K {
+            return None;
+        }
+        Some(SpeculativeSpec { policy: DraftPolicy::parse(name)?, k })
+    }
+
+    /// Default policy from the `RAP_SPECULATIVE` environment variable
+    /// (`None` when unset or unparsable — plain one-token decode).
+    pub fn from_env() -> Option<SpeculativeSpec> {
+        std::env::var("RAP_SPECULATIVE").ok().as_deref().and_then(SpeculativeSpec::parse)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        let s = SpeculativeSpec::parse("ngram:4").unwrap();
+        assert_eq!(s.policy, DraftPolicy::Ngram);
+        assert_eq!(s.k, 4);
+        assert_eq!(SpeculativeSpec::parse("ngram").unwrap().k, DEFAULT_DRAFT_K);
+        assert_eq!(SpeculativeSpec::parse("ngram:32").unwrap().k, MAX_DRAFT_K);
+        assert!(SpeculativeSpec::parse("ngram:0").is_none());
+        assert!(SpeculativeSpec::parse("ngram:33").is_none());
+        assert!(SpeculativeSpec::parse("ngram:four").is_none());
+        assert!(SpeculativeSpec::parse("medusa:4").is_none());
+        assert!(SpeculativeSpec::parse("").is_none());
+    }
+}

@@ -1,0 +1,94 @@
+//! Per-step draft budgeting for batched latent verification.
+//!
+//! One speculative step feeds `[last_emitted, d_1 .. d_n]` — `n + 1`
+//! tokens — through the blocked chunk kernel and may emit up to `n + 1`
+//! tokens (`n` accepted drafts plus the bonus token from the final
+//! logits row).  [`draft_budget`] computes the largest safe `n` for the
+//! coming step; the invariants it protects are exactly the ones the
+//! bit-identity propchecks (`tests/speculative.rs`) pin:
+//!
+//! * never feed a row at or beyond the backend's `s_max`;
+//! * never draft more tokens than the request may still emit;
+//! * never let a retention press fire *mid-draft*: the non-speculative
+//!   run presses between single-token steps, so a step that would cross
+//!   the press threshold runs token-by-token instead (the press then
+//!   fires at exactly the same logical length in both runs);
+//! * never speculate under an [`Press::AttnScore`] press at all — its
+//!   keep set ranks rows by decode-fed attention mass, and a verify
+//!   chunk's rejected query rows would pollute that stream.
+
+use crate::kvcache::retention::{press_due, Press, RetentionSpec};
+
+/// How far one speculative step may draft, given where the session
+/// stands.  Returns 0 when the step must fall back to plain decode.
+///
+/// * `k` — the request's configured draft length.
+/// * `generated` / `max_new` — tokens emitted so far and the cap.
+/// * `pos` — the logical position the next token will be fed at.
+/// * `s_max` — backend context bound (rows must stay below it).
+/// * `retention` — the session's press, with its current physical row
+///   count and logical length, when one is active.
+pub fn draft_budget(
+    k: usize,
+    generated: usize,
+    max_new: usize,
+    pos: usize,
+    s_max: usize,
+    retention: Option<(&RetentionSpec, usize, usize)>,
+) -> usize {
+    // A step emits at most n + 1 tokens and writes rows for logical
+    // positions pos .. pos + n (all < s_max).
+    let mut n = k
+        .min(max_new.saturating_sub(generated).saturating_sub(1))
+        .min(s_max.saturating_sub(pos).saturating_sub(1));
+    if let Some((spec, rows, logical)) = retention {
+        if spec.press == Press::AttnScore {
+            return 0;
+        }
+        // rows - budget(logical) grows by at most one per emitted token,
+        // so "not due at the window's end" implies not due anywhere
+        // inside it; shrink until the whole window is press-free.
+        while n > 0 && press_due(spec, rows + n + 1, logical + n + 1) {
+            n -= 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::retention::{MIN_TOKENS, SLACK_TOKENS};
+
+    #[test]
+    fn caps_at_request_and_context_bounds() {
+        assert_eq!(draft_budget(4, 0, 64, 10, 1024, None), 4);
+        // Only 3 tokens may still be emitted: draft at most 2.
+        assert_eq!(draft_budget(4, 61, 64, 10, 1024, None), 2);
+        // One token left: speculation cannot help.
+        assert_eq!(draft_budget(4, 63, 64, 10, 1024, None), 0);
+        // Rows pos..pos+n must stay below s_max.
+        assert_eq!(draft_budget(4, 0, 64, 1021, 1024, None), 2);
+        assert_eq!(draft_budget(4, 0, 64, 1023, 1024, None), 0);
+        assert_eq!(draft_budget(4, 0, 64, 2048, 1024, None), 0);
+    }
+
+    #[test]
+    fn attn_score_press_disables_speculation() {
+        let spec = RetentionSpec { press: Press::AttnScore, ratio: 0.5 };
+        assert_eq!(draft_budget(4, 0, 64, 10, 1024, Some((&spec, 10, 10))), 0);
+    }
+
+    #[test]
+    fn press_window_is_never_crossed_mid_draft() {
+        let spec = RetentionSpec { press: Press::Window, ratio: 0.5 };
+        // Far from the press threshold: full draft.
+        let rows = MIN_TOKENS;
+        assert_eq!(draft_budget(4, 0, 4096, rows, 1 << 20, Some((&spec, rows, rows))), 4);
+        // Right at the threshold: a press would fire within any draft
+        // window, so the step degrades to plain decode.
+        let rows = 2 * (MIN_TOKENS + SLACK_TOKENS);
+        assert!(press_due(&spec, rows + 1, rows + 1));
+        assert_eq!(draft_budget(4, 0, 4096, rows, 1 << 20, Some((&spec, rows, rows))), 0);
+    }
+}

@@ -13,9 +13,12 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use rap::config::Method;
+use rap::coordinator::{Sampler, SamplingParams};
 use rap::kvcache::{quant, CacheShape, KvLayerView, KvStorageMode, PagedKvCache};
 use rap::model::synth::synth_engine;
 use rap::model::{BatchWorkspace, PrefillWorkspace};
+use rap::speculate::accept::accept_step;
+use rap::speculate::draft::{Drafter, NgramDrafter};
 
 struct CountingAlloc;
 
@@ -204,6 +207,79 @@ fn steady_state_paged_decode_allocates_nothing() {
             "{method:?}: steady-state quantized chunked prefill must not allocate"
         );
         kv.release(2);
+
+        // Speculative decode hot loop — drafter observe/draft, blocked
+        // verification through the chunk kernel, greedy acceptance —
+        // must also run allocation-free at steady state: the drafter's
+        // stream buffer and tables are pre-reserved, verify logits live
+        // in the workspace's grow-only scratch, and the draft/feed/row
+        // buffers are reused across steps.  The drafter is fed a
+        // synthetic period-8 stream so it deterministically proposes
+        // k=4 every step, pinning the full-width verify path; emitted
+        // tokens still come from the verifier's real logits.
+        kv.reserve(4, s_max).unwrap();
+        let sprompt: Vec<u8> = (0..64).map(|i| (i % 8) as u8).collect();
+        engine
+            .prefill_chunk_paged(4, &sprompt, 0, &mut kv, &mut prefill_ws, false, false)
+            .unwrap();
+        let mut drafter = NgramDrafter::with_capacity(s_max);
+        drafter.observe(&sprompt);
+        let mut sampler = Sampler::new(&SamplingParams::greedy());
+        let mut generated: Vec<u8> = Vec::with_capacity(s_max);
+        generated.push(0); // first "emitted" token; its KV row is unwritten
+        let mut draft_buf: Vec<u8> = Vec::with_capacity(8);
+        let mut feed_buf: Vec<u8> = Vec::with_capacity(8);
+        // One 1-row warmup verify sizes the workspace's verify scratch
+        // and tells us the vocab width for the per-row copy buffers.
+        engine
+            .verify_chunk_paged(4, &sprompt[..1], 64, &mut kv, &mut prefill_ws, false)
+            .unwrap();
+        let vocab = prefill_ws.verify_logits_row(0).len();
+        let mut logits_bufs: Vec<Vec<f32>> = (0..5).map(|_| vec![0.0f32; vocab]).collect();
+        let mut vpos = 64usize;
+        let mut spec_step = |vpos: &mut usize, kv: &mut PagedKvCache, ws: &mut PrefillWorkspace| {
+            let got = drafter.draft(&mut draft_buf, 4);
+            assert_eq!(got, 4, "period-8 drafter stream always proposes k");
+            feed_buf.clear();
+            feed_buf.push(*generated.last().unwrap());
+            feed_buf.extend_from_slice(&draft_buf);
+            engine.verify_chunk_paged(4, &feed_buf, *vpos, kv, ws, false).unwrap();
+            for i in 0..feed_buf.len() {
+                logits_bufs[i].copy_from_slice(ws.verify_logits_row(i));
+            }
+            let out = accept_step(
+                &draft_buf,
+                &logits_bufs[..feed_buf.len()],
+                &mut sampler,
+                &mut generated,
+                *vpos,
+                |_, _| None,
+            );
+            // Advance the synthetic drafter stream by the emitted width;
+            // rejected rows just get overwritten at the next step (the
+            // coordinator's truncate_rows block accounting is covered in
+            // tests/speculative.rs).
+            for p in *vpos..*vpos + out.emitted {
+                drafter.observe(&[(p % 8) as u8]);
+            }
+            *vpos += out.emitted;
+        };
+        for _ in 0..4 {
+            spec_step(&mut vpos, &mut kv, &mut prefill_ws);
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..16 {
+            spec_step(&mut vpos, &mut kv, &mut prefill_ws);
+        }
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "{method:?}: steady-state draft/verify/accept must not allocate"
+        );
+        drop(spec_step);
+        assert!(generated.len() > 16, "every step emits at least one token");
+        kv.release(4);
 
         // Packed-int4 storage (methods that never reconstruct): decode and
         // prefill quantize on write into nibble-packed blocks and attend

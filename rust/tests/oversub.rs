@@ -59,6 +59,11 @@ fn oversub_config(shape: &CacheShape, blocks: usize) -> CoordinatorConfig {
             max_sessions: SESSIONS,
             buckets: vec![1, 4, 8],
             max_queue: 64,
+            // Env-independent: these tests choreograph preemption victims
+            // on an exact block budget; transient draft rows under the CI
+            // speculative matrix would shift who gets parked when.
+            // Speculation x faults is covered by tests/speculative.rs.
+            default_speculative: None,
             ..Default::default()
         },
         kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * blocks,
@@ -240,6 +245,9 @@ fn cancel_of_parked_victim_mid_storm_restores_baseline() {
                 max_sessions: TIGHT_SESSIONS,
                 buckets: vec![1, 4, 8],
                 max_queue: 64,
+                // Env-independent: see `oversub_config` — exact preemption
+                // timing is the point of this test.
+                default_speculative: None,
                 ..Default::default()
             },
             kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * TIGHT_BLOCKS,
@@ -346,7 +354,10 @@ fn pruned_session_preempts_and_resumes_via_survivor_replay() {
                 prefill_chunk_tokens: 128,
                 // Env-independent under the CI retention matrix: only the
                 // big session is pressed, by its own request-level spec.
+                // Same for the speculative matrix: preemption must pick
+                // the pruned session, not whoever drafted rows this tick.
                 default_retention: None,
+                default_speculative: None,
                 ..Default::default()
             },
             kv_budget_bytes: shape.bytes_per_token() * BLOCK_TOKENS * TIGHT_BLOCKS,

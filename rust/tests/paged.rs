@@ -97,6 +97,10 @@ fn scheduler_batched_decode_bit_identical_to_sequential() {
                     max_sessions: SESSIONS,
                     buckets: vec![1, 4, 8],
                     max_queue: 64,
+                    // Env-independent: under the CI speculative matrix every
+                    // session would take the one-at-a-time verify path and
+                    // starve the plain decode batches this test measures.
+                    default_speculative: None,
                     ..Default::default()
                 },
                 kv_budget_bytes: 16 << 20,

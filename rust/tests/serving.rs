@@ -326,6 +326,10 @@ fn batched_seeded_sampling_matches_sequential_and_greedy_matches_argmax() {
                 max_sessions: SESSIONS,
                 buckets: vec![1, 4, 8],
                 max_queue: 64,
+                // Env-independent: the CI speculative matrix would route
+                // sessions through one-at-a-time verify steps and starve
+                // the plain decode batches whose occupancy is asserted.
+                default_speculative: None,
                 ..Default::default()
             },
             kv_budget_bytes: 16 << 20,
@@ -398,6 +402,10 @@ fn cancel_mid_flight_releases_blocks_even_with_shared_prefix() {
                 buckets: vec![1, 4],
                 max_queue: 16,
                 prefill_chunk_tokens: 32,
+                // Env-independent: the block-baseline equalities below
+                // assume one token per tick freezes session 1's footprint;
+                // the CI speculative matrix would emit several per tick.
+                default_speculative: None,
                 ..Default::default()
             },
             kv_budget_bytes: 32 << 20,
@@ -481,7 +489,10 @@ fn retention_eviction_returns_blocks_and_respects_shared_prefix() {
                 prefill_chunk_tokens: 128,
                 // Env-independent: the CI retention matrix sets
                 // RAP_RETENTION, but this test manages specs per request.
+                // Same for the speculative matrix: session 3's footprint
+                // is frozen by a tick-counted one-token-per-tick argument.
                 default_retention: None,
+                default_speculative: None,
                 ..Default::default()
             },
             kv_budget_bytes: 64 << 20,
@@ -699,6 +710,44 @@ fn tcp_retention_bad_request_names_the_field() {
     );
     assert!(r.get("error").is_none(), "valid retention must serve: {r:?}");
     assert_eq!(r.get("tokens").and_then(|t| t.as_usize()), Some(4));
+
+    // Speculative specs ride the same parse-time validation: unknown or
+    // missing policy, and k outside [1, 32], are refused before admission
+    // with the offending field named.
+    let r = send_raw(
+        r#"{"prompt": "x", "max_new": 4, "speculative": {"policy": "medusa", "k": 4}}"#,
+    );
+    assert_eq!(r.get("error").and_then(|e| e.as_str()), Some("bad_request"), "{r:?}");
+    assert_eq!(r.get("field").and_then(|f| f.as_str()), Some("speculative.policy"));
+
+    let r = send_raw(r#"{"prompt": "x", "max_new": 4, "speculative": {}}"#);
+    assert_eq!(r.get("error").and_then(|e| e.as_str()), Some("bad_request"), "{r:?}");
+    assert_eq!(r.get("field").and_then(|f| f.as_str()), Some("speculative.policy"));
+
+    let r = send_raw(
+        r#"{"prompt": "x", "max_new": 4, "speculative": {"policy": "ngram", "k": 0}}"#,
+    );
+    assert_eq!(r.get("error").and_then(|e| e.as_str()), Some("bad_request"), "{r:?}");
+    assert_eq!(r.get("field").and_then(|f| f.as_str()), Some("speculative.k"));
+
+    let r = send_raw(
+        r#"{"prompt": "x", "max_new": 4, "speculative": {"policy": "ngram", "k": 64}}"#,
+    );
+    assert_eq!(r.get("error").and_then(|e| e.as_str()), Some("bad_request"), "{r:?}");
+    assert_eq!(r.get("field").and_then(|f| f.as_str()), Some("speculative.k"));
+
+    // A well-formed speculative request serves, bit-identical to plain
+    // decode (the text matches the non-speculative request above it).
+    let plain = send_raw(r#"{"prompt": "hello ", "max_new": 4}"#);
+    let spec = send_raw(
+        r#"{"prompt": "hello ", "max_new": 4, "speculative": {"policy": "ngram", "k": 4}}"#,
+    );
+    assert!(spec.get("error").is_none(), "valid speculative must serve: {spec:?}");
+    assert_eq!(
+        spec.get("text").and_then(|t| t.as_str()),
+        plain.get("text").and_then(|t| t.as_str()),
+        "speculative output must match plain decode"
+    );
     handle.shutdown();
 }
 
